@@ -1,0 +1,128 @@
+//! End-to-end flagship run (EXPERIMENTS.md §E2E): train a MoE LM on the
+//! synthetic corpus through the AOT train-step artifact, log the loss
+//! curve, collect calibration statistics, STUN-prune at the paper's
+//! headline 40% sparsity, and compare against unstructured-only pruning at
+//! matched sparsity — the Fig. 1 protocol on a real (small) workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_stun [-- --config moe-8x --steps 200]
+//! ```
+
+use stun::prelude::*;
+use stun::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
+use stun::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let config = args.str_or("config", "moe-8x");
+    let steps = args.usize_or("steps", 200)?;
+    let sparsity = args.f64_or("sparsity", 0.4)?;
+
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, format!("artifacts/{config}"))?;
+    let cfg = bundle.config.clone();
+    println!(
+        "== e2e: {} ({} params, {}x{} experts) ==",
+        cfg.name,
+        cfg.param_count(),
+        cfg.n_layers,
+        cfg.n_experts
+    );
+
+    // ---- 1. train ---------------------------------------------------------
+    let mut params = ParamSet::init(&cfg, 42);
+    let mut corpus = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 42));
+    let trainer = Trainer::new(stun::train::TrainConfig {
+        steps,
+        ..Default::default()
+    });
+    let log = trainer.train(&bundle, &mut params, &mut corpus)?;
+    println!("loss curve (step,loss):\n{}", log.render());
+    println!(
+        "trained {steps} steps in {:.1}s ({:.2} steps/s)",
+        log.seconds,
+        steps as f64 / log.seconds
+    );
+
+    // ---- 2. evaluate the dense model --------------------------------------
+    let h = EvalHarness::new(&bundle, &params)?;
+    let dense_report = h.full_report(11, 24, 24, 2)?;
+    let mut held_out =
+        CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 999));
+    let dense_ppl = h.perplexity(&mut held_out, 4)?;
+    drop(h);
+
+    // ---- 3. STUN vs unstructured-only at matched total sparsity -----------
+    let mut calib = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 4242));
+    let mut stun_params = params.clone();
+    let stun_report = StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: sparsity,
+        calib_batches: 4,
+    }
+    .run(&bundle, &mut stun_params, &mut calib)?;
+    println!(
+        "STUN: expert stage {:.1}% sparsity (0 decision fwd passes), final {:.1}%",
+        stun_report.expert_stage_sparsity * 100.0,
+        stun_report.final_sparsity * 100.0
+    );
+
+    let mut owl_params = params.clone();
+    StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.0,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig {
+            method: UnstructuredMethod::Owl,
+            ..Default::default()
+        },
+        total_sparsity: sparsity,
+        calib_batches: 4,
+    }
+    .run(&bundle, &mut owl_params, &mut calib)?;
+
+    // ---- 4. report ---------------------------------------------------------
+    let stun_h = EvalHarness::new(&bundle, &stun_params)?;
+    let stun_rep = stun_h.full_report(11, 24, 24, 2)?;
+    let stun_ppl = stun_h.perplexity(&mut held_out, 4)?;
+    drop(stun_h);
+    let owl_h = EvalHarness::new(&bundle, &owl_params)?;
+    let owl_rep = owl_h.full_report(11, 24, 24, 2)?;
+    let owl_ppl = owl_h.perplexity(&mut held_out, 4)?;
+    drop(owl_h);
+
+    println!(
+        "\n{:<20} {:>8} {:>10} {:>10}",
+        "task",
+        "dense",
+        "STUN",
+        "OWL-only"
+    );
+    for i in 0..dense_report.rows.len() {
+        println!(
+            "{:<20} {:8.1} {:10.1} {:10.1}",
+            dense_report.rows[i].0, dense_report.rows[i].1, stun_rep.rows[i].1, owl_rep.rows[i].1
+        );
+    }
+    println!(
+        "{:<20} {:8.1} {:10.1} {:10.1}",
+        "Avg(mc)",
+        dense_report.mc_average(),
+        stun_rep.mc_average(),
+        owl_rep.mc_average()
+    );
+    println!("{:<20} {dense_ppl:8.2} {stun_ppl:10.2} {owl_ppl:10.2}", "perplexity");
+    println!(
+        "\nheadline: at {:.0}% sparsity STUN keeps {:.1} GSM8K-proxy vs {:.1} for unstructured-only",
+        sparsity * 100.0,
+        stun_rep.rows[0].1,
+        owl_rep.rows[0].1
+    );
+    println!("e2e OK");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Quickstart: load artifacts, train a tiny MoE for a handful of steps,
+//! STUN-prune it, and evaluate — in under a minute on one CPU core.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use stun::prelude::*;
+use stun::pruning::unstructured::UnstructuredConfig;
+use stun::runtime;
+
+fn main() -> Result<()> {
+    // 1. PJRT engine + the `tiny` artifact bundle (AOT-compiled by
+    //    `make artifacts`; python never runs again after that).
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, "artifacts/tiny")?;
+    let cfg = bundle.config.clone();
+    println!(
+        "model: {} ({} params, {} layers x {} experts)",
+        cfg.name,
+        cfg.param_count(),
+        cfg.n_layers,
+        cfg.n_experts
+    );
+
+    // 2. Train briefly on the synthetic corpus.
+    let mut params = ParamSet::init(&cfg, 42);
+    let mut corpus = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 42));
+    let trainer = Trainer::new(stun::train::TrainConfig {
+        steps: 120,
+        ..Default::default()
+    });
+    let log = trainer.train(&bundle, &mut params, &mut corpus)?;
+    println!(
+        "trained 120 steps in {:.1}s: loss {:.2} -> {:.2}",
+        log.seconds,
+        log.first_loss(),
+        log.last_loss()
+    );
+
+    // 3. Prove the three layers compose: run the *Pallas-kernel* variant
+    //    of the loss graph and compare against the reference-path variant.
+    let (tokens, targets) = corpus.batch(cfg.eval_batch);
+    let mut args = runtime::params_to_literals(&params)?;
+    args.push(runtime::expert_mask_literal(&params)?);
+    args.push(runtime::int_tensor_to_literal(&tokens)?);
+    args.push(runtime::int_tensor_to_literal(&targets)?);
+    let ref_loss = runtime::literal_to_f32(&bundle.artifact("fwd_loss")?.run(&args)?[0])?;
+    let kern_loss =
+        runtime::literal_to_f32(&bundle.artifact("fwd_loss_kernel")?.run(&args)?[0])?;
+    println!("loss via jnp reference path : {ref_loss:.6}");
+    println!("loss via Pallas kernel path : {kern_loss:.6}");
+    assert!(
+        (ref_loss - kern_loss).abs() < 1e-3,
+        "kernel and reference paths disagree"
+    );
+
+    // 4. STUN: expert-prune 25% of experts, then OWL to 40% total sparsity.
+    let before = EvalHarness::new(&bundle, &params)?.full_report(7, 16, 16, 1)?;
+    let mut pruned = params.clone();
+    let pipeline = StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: 0.4,
+        calib_batches: 2,
+    };
+    let report = pipeline.run(&bundle, &mut pruned, &mut corpus)?;
+    println!(
+        "STUN: expert stage {:.1}% -> final {:.1}% sparsity ({} experts pruned, {} decision fwd passes)",
+        report.expert_stage_sparsity * 100.0,
+        report.final_sparsity * 100.0,
+        report.expert_report.as_ref().map(|r| r.experts_pruned).unwrap_or(0),
+        report.expert_report.as_ref().map(|r| r.decision_forward_passes).unwrap_or(0),
+    );
+
+    // 5. Evaluate before/after.
+    let after = EvalHarness::new(&bundle, &pruned)?.full_report(7, 16, 16, 1)?;
+    println!("\n{:<20} {:>8} {:>8}", "task", "dense", "stun@40%");
+    for ((name, a), (_, b)) in before.rows.iter().zip(&after.rows) {
+        println!("{name:<20} {a:8.1} {b:8.1}");
+    }
+    println!(
+        "{:<20} {:8.1} {:8.1}",
+        "Avg(mc)",
+        before.mc_average(),
+        after.mc_average()
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

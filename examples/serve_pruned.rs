@@ -1,0 +1,79 @@
+//! Serving demo: the coordinator answers a burst of generation requests
+//! with continuous batching, on the dense model vs the STUN-pruned model,
+//! under a fixed expert-memory budget — the deployment win that motivates
+//! MoE pruning in the paper's introduction.
+//!
+//! ```bash
+//! cargo run --release --example serve_pruned [-- --config tiny --requests 24]
+//! ```
+
+use std::time::Duration;
+use stun::coordinator::{burst_workload, Batcher, ExpertStore};
+use stun::prelude::*;
+use stun::pruning::unstructured::UnstructuredConfig;
+use stun::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let config = args.str_or("config", "tiny");
+    let n_requests = args.usize_or("requests", 24)?;
+
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, format!("artifacts/{config}"))?;
+    let cfg = bundle.config.clone();
+
+    // a lightly-trained model (serving quality is not the point here)
+    let mut params = ParamSet::init(&cfg, 42);
+    let mut corpus = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 42));
+    Trainer::new(stun::train::TrainConfig {
+        steps: args.usize_or("steps", 60)?,
+        ..Default::default()
+    })
+    .train(&bundle, &mut params, &mut corpus)?;
+
+    // STUN-pruned variant
+    let mut pruned = params.clone();
+    StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: 0.4,
+        calib_batches: 2,
+    }
+    .run(&bundle, &mut pruned, &mut corpus)?;
+
+    // memory budget sized to the pruned working set: the dense model
+    // must page experts, the pruned one fits
+    let budget = ExpertStore::working_set(&pruned);
+    println!(
+        "expert slots: {budget} (dense needs {}, pruned needs {})\n",
+        ExpertStore::working_set(&params),
+        ExpertStore::working_set(&pruned)
+    );
+
+    println!(
+        "{:<12} {:>8} {:>9} {:>12} {:>8} {:>10} {:>10}",
+        "model", "experts", "tok/s", "tok/s(eff)", "swaps", "p50", "p95"
+    );
+    for (label, ps) in [("dense", &params), ("stun-pruned", &pruned)] {
+        let store = ExpertStore::new(budget, Duration::from_micros(200));
+        let mut batcher = Batcher::new(&bundle, ps, store)?;
+        let queue = burst_workload(&cfg, n_requests, 8, 17);
+        let (responses, m) = batcher.serve(queue)?;
+        assert_eq!(responses.len(), n_requests);
+        println!(
+            "{:<12} {:>8} {:>9.1} {:>12.1} {:>8} {:>10.1?} {:>10.1?}",
+            label,
+            ExpertStore::working_set(ps),
+            m.tokens_per_sec(),
+            m.effective_tokens_per_sec(),
+            m.expert_swaps,
+            m.p50_latency,
+            m.p95_latency
+        );
+    }
+    println!("\nserve_pruned OK");
+    Ok(())
+}

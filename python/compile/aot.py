@@ -1,0 +1,280 @@
+"""AOT compiler: lower every L2 graph to HLO *text* artifacts.
+
+Emits, per model config, ``artifacts/<config>/<artifact>.hlo.txt`` plus a
+``manifest.json`` describing the exact input/output ordering so the Rust
+runtime can drive the executables blind.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <=
+INT_MAX``). The HLO text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs tiny,moe-8x,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Token count for the layer_recon artifact (reconstruction-loss probe used
+# by the combinatorial Lu et al. baseline and STUN's validation loop).
+RECON_TOKENS = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def artifact_defs(cfg: ModelConfig, use_kernels=False):
+    """Build {artifact_name: (callable, input_sds, input_specs, output_specs)}.
+
+    Every callable takes a flat ``*args`` list in exactly the manifest
+    order; outputs are flat tuples in manifest order.
+
+    ``use_kernels`` selects the Pallas-kernel MoE path vs the numerically
+    identical jnp reference. Default artifacts ship the reference path: on
+    single-core CPU PJRT the interpret-mode Pallas grid loop lowers to a
+    sequential HLO ``while`` that blocks XLA's fusion/parallelism (2.6x
+    slower end to end — measured in EXPERIMENTS.md §Perf). The
+    ``fwd_loss_kernel`` artifact keeps the kernel path compiled into the
+    eval route to prove all three layers compose (exercised by the Rust
+    runtime tests and the quickstart example).
+    """
+    specs = model.param_specs(cfg)
+    n_params = len(specs)
+    l, e, d, f, v = cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff, cfg.vocab
+    s, be, bt = cfg.seq, cfg.eval_batch, cfg.train_batch
+
+    param_sds = [_sds(shape) for _, shape in specs]
+    param_specs_json = [_spec(n, sh) for n, sh in specs]
+    mask_sds = _sds((l, e))
+    mask_spec = _spec("expert_mask", (l, e))
+
+    defs = {}
+
+    def fwd_logits_factory(batch):
+        def fwd_logits(*args):
+            params, rest = list(args[:n_params]), args[n_params:]
+            expert_mask, tokens = rest
+            return (model.forward(cfg, params, expert_mask, tokens, use_kernels=use_kernels),)
+
+        ins = param_sds + [mask_sds, _sds((batch, s), I32)]
+        in_specs = param_specs_json + [mask_spec, _spec("tokens", (batch, s), "i32")]
+        outs = [_spec("logits", (batch, s, v))]
+        return fwd_logits, ins, in_specs, outs
+
+    defs["fwd_logits"] = fwd_logits_factory(be)
+    defs["fwd_logits_b1"] = fwd_logits_factory(1)
+
+    def fwd_loss(*args):
+        params, rest = list(args[:n_params]), args[n_params:]
+        expert_mask, tokens, targets = rest
+        mean, (total, count, tok_logp) = model.loss_fn(
+            cfg, params, expert_mask, tokens, targets, use_kernels=use_kernels
+        )
+        return mean, total, count, tok_logp
+
+    defs["fwd_loss"] = (
+        fwd_loss,
+        param_sds + [mask_sds, _sds((be, s), I32), _sds((be, s), I32)],
+        param_specs_json
+        + [mask_spec, _spec("tokens", (be, s), "i32"), _spec("targets", (be, s), "i32")],
+        [
+            _spec("mean_loss", ()),
+            _spec("total_nll", ()),
+            _spec("token_count", ()),
+            _spec("tok_logp", (be, s)),
+        ],
+    )
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        m_state = list(args[n_params : 2 * n_params])
+        v_state = list(args[2 * n_params : 3 * n_params])
+        step, lr, tokens, targets = args[3 * n_params :]
+        new_p, new_m, new_v, loss = model.train_step(
+            cfg, params, m_state, v_state, step, lr, tokens, targets,
+            use_kernels=use_kernels,
+        )
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    defs["train_step"] = (
+        train_step,
+        param_sds * 3
+        + [_sds(()), _sds(()), _sds((bt, s), I32), _sds((bt, s), I32)],
+        param_specs_json
+        + [_spec("m." + n, sh) for n, sh in specs]
+        + [_spec("v." + n, sh) for n, sh in specs]
+        + [
+            _spec("step", ()),
+            _spec("lr", ()),
+            _spec("tokens", (bt, s), "i32"),
+            _spec("targets", (bt, s), "i32"),
+        ],
+        param_specs_json
+        + [_spec("m." + n, sh) for n, sh in specs]
+        + [_spec("v." + n, sh) for n, sh in specs]
+        + [_spec("loss", ())],
+    )
+
+    def router_probe(*args):
+        params, rest = list(args[:n_params]), args[n_params:]
+        expert_mask, tokens = rest
+        return (model.router_probe(cfg, params, expert_mask, tokens, use_kernels=use_kernels),)
+
+    defs["router_probe"] = (
+        router_probe,
+        param_sds + [mask_sds, _sds((be, s), I32)],
+        param_specs_json + [mask_spec, _spec("tokens", (be, s), "i32")],
+        [_spec("router_probs", (l, be * s, e))],
+    )
+
+    def actnorm_probe(*args):
+        params, rest = list(args[:n_params]), args[n_params:]
+        expert_mask, tokens = rest
+        return model.actnorm_probe(cfg, params, expert_mask, tokens, use_kernels=use_kernels)
+
+    defs["actnorm_probe"] = (
+        actnorm_probe,
+        param_sds + [mask_sds, _sds((be, s), I32)],
+        param_specs_json + [mask_spec, _spec("tokens", (be, s), "i32")],
+        [
+            _spec("attn_in_sq", (l, d)),
+            _spec("moe_in_sq", (l, e, d)),
+            _spec("moe_hid_sq", (l, e, f)),
+            _spec("head_in_sq", (d,)),
+        ],
+    )
+
+    def hidden_probe(*args):
+        params, rest = list(args[:n_params]), args[n_params:]
+        expert_mask, tokens = rest
+        return (model.hidden_probe(cfg, params, expert_mask, tokens, use_kernels=use_kernels),)
+
+    defs["hidden_probe"] = (
+        hidden_probe,
+        param_sds + [mask_sds, _sds((be, s), I32)],
+        param_specs_json + [mask_spec, _spec("tokens", (be, s), "i32")],
+        [_spec("moe_inputs", (l, be * s, d))],
+    )
+
+    def layer_recon(router_w, w1, w2, expert_mask, x):
+        return (model.layer_recon(cfg, router_w, w1, w2, expert_mask, x, use_kernels=use_kernels),)
+
+    defs["layer_recon"] = (
+        layer_recon,
+        [
+            _sds((e, d)),
+            _sds((e, d, f)),
+            _sds((e, f, d)),
+            _sds((e,)),
+            _sds((RECON_TOKENS, d)),
+        ],
+        [
+            _spec("router", (e, d)),
+            _spec("w1", (e, d, f)),
+            _spec("w2", (e, f, d)),
+            _spec("expert_mask", (e,)),
+            _spec("x", (RECON_TOKENS, d)),
+        ],
+        [_spec("y", (RECON_TOKENS, d))],
+    )
+
+    def fwd_loss_kernel(*args):
+        params, rest = list(args[:n_params]), args[n_params:]
+        expert_mask, tokens, targets = rest
+        mean, (total, count, tok_logp) = model.loss_fn(
+            cfg, params, expert_mask, tokens, targets, use_kernels=True
+        )
+        return mean, total, count, tok_logp
+
+    defs["fwd_loss_kernel"] = (
+        fwd_loss_kernel,
+        list(defs["fwd_loss"][1]),
+        list(defs["fwd_loss"][2]),
+        list(defs["fwd_loss"][3]),
+    )
+
+    return defs
+
+
+def compile_config(cfg: ModelConfig, out_dir: str, only=None) -> dict:
+    """Lower all artifacts for one config; returns the manifest dict."""
+    cfg_dir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    manifest = {
+        "config": cfg.to_dict(),
+        "params": [_spec(n, sh) for n, sh in model.param_specs(cfg)],
+        "recon_tokens": RECON_TOKENS,
+        "artifacts": {},
+    }
+    for name, (fn, in_sds, in_specs, out_specs) in artifact_defs(cfg).items():
+        if only and name not in only:
+            continue
+        # keep_unused=True: probe graphs don't consume every parameter
+        # (e.g. hidden_probe never touches lm_head); without it jax DCEs
+        # those inputs out of the HLO and the manifest arity lies to Rust.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_sds)
+        text = to_hlo_text(lowered)
+        path = os.path.join(cfg_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": in_specs,
+            "outputs": out_specs,
+        }
+        print(f"  {cfg.name}/{name}: {len(text)} chars, "
+              f"{len(in_specs)} inputs, {len(out_specs)} outputs")
+    with open(os.path.join(cfg_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(CONFIGS),
+        help="comma-separated config names (default: all)",
+    )
+    ap.add_argument("--artifacts", default=None,
+                    help="comma-separated artifact names (default: all)")
+    args = ap.parse_args()
+
+    only = set(args.artifacts.split(",")) if args.artifacts else None
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"[aot] lowering config {name}")
+        compile_config(cfg, args.out_dir, only=only)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Model configurations shared by the AOT compiler, tests, and (via
+``manifest.json``) the Rust coordinator.
+
+Each config describes one MoE transformer used to reproduce a row of the
+paper's evaluation:
+
+* ``moe-32x``  — many small experts  (Arctic-like regime, Fig. 1 / Fig. 2a)
+* ``moe-8x``   — 8 mid-size experts  (Mixtral-8x7B-like, Tab. 1/2, Fig. 2b)
+* ``moe-4l``   — few large experts   (Mixtral-8x22B-like, Fig. 2c)
+* ``dense``    — E=1 degenerate MoE  (non-MoE model for Fig. 3)
+* ``tiny``     — smoke-test config for unit tests and the quickstart example
+
+The three MoE configs hold total expert parameters constant
+(E * F = 4096 columns) so that Fig. 2's "gap grows with more, smaller
+experts" comparison is at matched capacity, as in the paper.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int  # vocabulary size (includes PAD=0)
+    seq: int  # maximum sequence length
+    d_model: int
+    n_heads: int
+    d_ff: int  # per-expert FFN hidden size
+    n_experts: int
+    top_k: int
+    n_layers: int
+
+    # Batch shapes baked into the AOT artifacts. HLO is shape-static, so the
+    # Rust side pads batches up to these sizes.
+    eval_batch: int = 8
+    train_batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        ModelConfig(
+            name="tiny",
+            vocab=256,
+            seq=64,
+            d_model=64,
+            n_heads=2,
+            d_ff=64,
+            n_experts=4,
+            top_k=2,
+            n_layers=2,
+        ),
+        ModelConfig(
+            name="moe-32x",
+            vocab=512,
+            seq=128,
+            d_model=128,
+            n_heads=4,
+            d_ff=128,
+            n_experts=32,
+            top_k=2,
+            n_layers=4,
+        ),
+        ModelConfig(
+            name="moe-8x",
+            vocab=512,
+            seq=128,
+            d_model=128,
+            n_heads=4,
+            d_ff=512,
+            n_experts=8,
+            top_k=2,
+            n_layers=4,
+        ),
+        ModelConfig(
+            name="moe-4l",
+            vocab=512,
+            seq=128,
+            d_model=128,
+            n_heads=4,
+            d_ff=1024,
+            n_experts=4,
+            top_k=2,
+            n_layers=4,
+        ),
+        ModelConfig(
+            name="dense",
+            vocab=512,
+            seq=128,
+            d_model=128,
+            n_heads=4,
+            d_ff=1024,
+            n_experts=1,
+            top_k=1,
+            n_layers=4,
+        ),
+    ]
+}

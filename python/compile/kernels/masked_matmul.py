@@ -1,0 +1,57 @@
+"""Pallas kernel for sparsity-masked matmul: ``x @ (w * mask)``.
+
+This is the execution path for *unstructured* pruning (STUN stage 2). The
+paper's limitation section notes unstructured sparsity needs specialised
+hardware for FLOP savings; like the paper we claim parameter/memory
+sparsity and execute dense-compute-sparse-values, with the 0/1 mask fused
+into the matmul tile so masked weights never leave VMEM unmasked.
+
+Grid is (M-tiles, N-tiles); the full K dimension rides inside the tile
+(model dims here are small enough that a (K, BN) weight slab fits VMEM —
+for larger K this would gain a k-loop with an accumulator).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...] * m_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def masked_matmul(x, w, mask, *, block_m=64, block_n=64, interpret=True):
+    """Compute ``x @ (w * mask)``.
+
+    Args:
+      x:    [M, K] f32.
+      w:    [K, N] f32.
+      mask: [K, N] f32 0/1 sparsity mask.
+      block_m, block_n: output tile sizes; must divide M and N.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns: [M, N] f32.
+    """
+    m_dim, k_dim = x.shape
+    _, n_dim = w.shape
+    if m_dim % block_m != 0 or n_dim % block_n != 0:
+        raise ValueError(
+            f"M={m_dim}, N={n_dim} not divisible by blocks ({block_m},{block_n})"
+        )
+
+    grid = (m_dim // block_m, n_dim // block_n)
+    return pl.pallas_call(
+        _masked_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((k_dim, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((k_dim, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), x.dtype),
+        interpret=interpret,
+    )(x, w, mask)

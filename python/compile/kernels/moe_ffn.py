@@ -1,0 +1,131 @@
+"""Pallas kernel for the MoE hot-spot: the gated stacked-expert FFN.
+
+This is the paper's compute bottleneck — every token flows through top-k
+expert MLPs (Eq. 3). The kernel computes
+
+    out[t] = sum_e gates[t, e] * relu(x[t] @ w1[e]) @ w2[e]
+
+with a 2-D grid over (token-block, expert) and VMEM-tiled BlockSpecs.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the expert loop is the
+*innermost* grid dimension so the output block for a given token tile is
+revisited on consecutive grid steps — the accumulation pattern Mosaic keeps
+resident in VMEM. Each step streams one expert's (D, F) / (F, D) weight
+pair HBM→VMEM and issues two MXU matmuls. Gating is applied as a cheap VPU
+broadcast-multiply on the accumulate.
+
+The kernel runs under ``interpret=True`` here (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is pinned to ``ref.moe_ffn_ref`` by the
+pytest suite, and real-TPU efficiency is *estimated* from the BlockSpec
+footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, w1_ref, w2_ref, g_ref, o_ref):
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # [BT, D] @ [D, F] -> [BT, F]  (MXU matmul #1, then VPU relu)
+    h = jnp.maximum(jnp.dot(x_ref[...], w1_ref[0]), 0.0)
+    # [BT, F] @ [F, D] -> [BT, D]  (MXU matmul #2), gated accumulate
+    o_ref[...] += g_ref[...] * jnp.dot(h, w2_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def moe_ffn(x, w1, w2, gates, *, block_t=64, interpret=True):
+    """Gated stacked-expert FFN (see module docstring).
+
+    Args:
+      x:     [T, D] f32 — MoE block input (flattened batch*seq tokens).
+      w1:    [E, D, F] f32 — stacked expert up-projections.
+      w2:    [E, F, D] f32 — stacked expert down-projections.
+      gates: [T, E] f32 — top-k-masked routing coefficients (Eq. 3).
+      block_t: token-tile size; must divide T.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns: [T, D] f32.
+    """
+    t_tokens, d_model = x.shape
+    n_experts, _, d_ff = w1.shape
+    if t_tokens % block_t != 0:
+        raise ValueError(f"T={t_tokens} not divisible by block_t={block_t}")
+
+    grid = (t_tokens // block_t, n_experts)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_model), lambda t, e: (t, 0)),
+            pl.BlockSpec((1, d_model, d_ff), lambda t, e: (e, 0, 0)),
+            pl.BlockSpec((1, d_ff, d_model), lambda t, e: (e, 0, 0)),
+            pl.BlockSpec((block_t, 1), lambda t, e: (t, e)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d_model), lambda t, e: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_tokens, d_model), x.dtype),
+        interpret=interpret,
+    )(x, w1, w2, gates)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.
+#
+# Pallas interpret-mode kernels cannot be traced by jax.grad (program_id has
+# no JVP rule), so the train_step artifact goes through this custom_vjp: the
+# forward pass runs the kernel, the backward pass is the closed-form gradient
+# of the gated stacked-expert FFN written in jnp (residuals are the inputs;
+# the expert hidden activations are recomputed, trading FLOPs for memory
+# exactly like flash-style kernels do).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def moe_ffn_op(x, w1, w2, gates):
+    """Differentiable gated stacked-expert FFN backed by the Pallas kernel."""
+    block_t = min(64, x.shape[0])
+    return moe_ffn(x, w1, w2, gates, block_t=block_t)
+
+
+def _moe_ffn_fwd(x, w1, w2, gates):
+    return moe_ffn_op(x, w1, w2, gates), (x, w1, w2, gates)
+
+
+def _moe_ffn_bwd(res, gbar):
+    x, w1, w2, gates = res
+    h = jnp.einsum("td,edf->etf", x, w1)  # pre-activation, recomputed
+    a = jnp.maximum(h, 0.0)
+    y = jnp.einsum("etf,efd->etd", a, w2)
+    # d gates[t,e] = <gbar[t], y_e[t]>
+    d_gates = jnp.einsum("td,etd->te", gbar, y)
+    # d y_e[t] = gates[t,e] * gbar[t]
+    dy = jnp.einsum("te,td->etd", gates, gbar)
+    d_w2 = jnp.einsum("etf,etd->efd", a, dy)
+    da = jnp.einsum("etd,efd->etf", dy, w2)
+    dh = da * (h > 0.0)
+    d_w1 = jnp.einsum("td,etf->edf", x, dh)
+    d_x = jnp.einsum("etf,edf->td", dh, w1)
+    return d_x, d_w1, d_w2, d_gates
+
+
+moe_ffn_op.defvjp(_moe_ffn_fwd, _moe_ffn_bwd)
+
+
+def vmem_footprint_bytes(d_model, d_ff, block_t, dtype_bytes=4):
+    """Static VMEM footprint estimate of one grid step, for DESIGN.md §Perf.
+
+    x-tile + w1-slab + w2-slab + gate-col + out-tile (+ h scratch).
+    """
+    x_tile = block_t * d_model
+    w_slabs = 2 * d_model * d_ff
+    gate = block_t
+    out_tile = block_t * d_model
+    h_scratch = block_t * d_ff
+    return dtype_bytes * (x_tile + w_slabs + gate + out_tile + h_scratch)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference here, written in
+plain ``jax.numpy`` with no Pallas imports. The pytest suite sweeps shapes
+and asserts ``assert_allclose(kernel(...), ref(...))``; the L2 model is also
+testable against these references by swapping ``use_kernels=False``.
+"""
+
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x, w1, w2, gates):
+    """Gated stacked-expert FFN.
+
+    out[t] = sum_e gates[t, e] * relu(x[t] @ w1[e]) @ w2[e]
+
+    Args:
+      x:     [T, D]   token activations (MoE block input, post-LN).
+      w1:    [E, D, F] stacked expert up-projections.
+      w2:    [E, F, D] stacked expert down-projections.
+      gates: [T, E]   routing coefficients r_i(x) masked to the top-k set
+                      (zero for non-selected experts), paper Eq. 3.
+
+    Returns: [T, D].
+    """
+    h = jnp.maximum(jnp.einsum("td,edf->etf", x, w1), 0.0)
+    y = jnp.einsum("etf,efd->etd", h, w2)
+    return jnp.einsum("te,etd->td", gates, y)
+
+
+def masked_matmul_ref(x, w, mask):
+    """x @ (w * mask) — the unstructured-sparsity execution path.
+
+    Args:
+      x:    [M, K]
+      w:    [K, N]
+      mask: [K, N] 0/1 sparsity mask (Wanda / OWL / magnitude output).
+    """
+    return x @ (w * mask)
+
+
+def wanda_score_ref(w, xnorm):
+    """Wanda importance score  S_ij = |W_ij| * ||X_j||_2  (Sun et al. 2024).
+
+    Args:
+      w:     [K, N] weight matrix (inputs on axis 0).
+      xnorm: [K]    L2 norm of each input feature over the calibration set.
+
+    Returns: [K, N] scores; pruning removes the lowest scores within each
+    per-output comparison group (axis 0 columns), done on the Rust side.
+    """
+    return jnp.abs(w) * xnorm[:, None]

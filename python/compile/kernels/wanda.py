@@ -1,0 +1,52 @@
+"""Pallas kernel for the Wanda importance score: ``|W| * ||X||``.
+
+Wanda (Sun et al. 2024) scores each weight by its magnitude times the L2
+norm of its input feature over a calibration set; STUN uses it (and OWL,
+which reuses the same scores with layerwise sparsity allocation) as the
+unstructured second stage. The score computation itself is
+embarrassingly parallel — one VPU multiply per weight with the norm vector
+broadcast along output columns — so the kernel is a single-pass tile sweep.
+
+The norms arrive from the ``actnorm_probe`` artifact (sum of squares over
+calibration batches, accumulated and square-rooted on the Rust side).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wanda_kernel(w_ref, n_ref, o_ref):
+    o_ref[...] = jnp.abs(w_ref[...]) * n_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def wanda_score(w, xnorm, *, block_k=64, interpret=True):
+    """Compute Wanda scores ``S = |W| * xnorm[:, None]``.
+
+    Args:
+      w:     [K, N] f32 weight matrix (inputs on axis 0).
+      xnorm: [K] f32 input-feature L2 norms.
+      block_k: row-tile size; must divide K.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns: [K, N] f32 scores.
+    """
+    k_dim, n_dim = w.shape
+    if k_dim % block_k != 0:
+        raise ValueError(f"K={k_dim} not divisible by block_k={block_k}")
+
+    grid = (k_dim // block_k,)
+    return pl.pallas_call(
+        _wanda_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, n_dim), lambda i: (i, 0)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_k, n_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_dim, n_dim), w.dtype),
+        interpret=interpret,
+    )(w, xnorm)

@@ -1,0 +1,338 @@
+"""L2: the MoE transformer compute graph (build-time JAX, AOT→HLO).
+
+This file defines every computation the Rust coordinator executes through
+PJRT. Parameters travel as a *flat ordered list* of arrays whose order is
+fixed by :func:`param_specs`; ``aot.py`` writes that order into
+``manifest.json`` so the Rust side can lay out checkpoints identically.
+
+Architecture (pre-LN decoder):
+
+    h = embed[tokens] + pos_embed
+    for each layer:
+        h += attn(rmsnorm(h))                  (causal MHA, jnp)
+        h += moe(rmsnorm(h))                   (top-k router + Pallas FFN)
+    logits = rmsnorm(h) @ lm_head
+
+MoE routing follows the paper exactly (Eq. 1–3): r(x) = softmax(W x),
+T = topk(r), out = Σ_{i∈T} r_i(x) E_i(x) — *no* renormalisation over the
+top-k set. Expert pruning is executed via a per-layer ``expert_mask``
+input: pruned experts get −1e9 added to their router logit, so the softmax
+renormalises over survivors — numerically identical to physically removing
+the expert (DESIGN.md §Pruned-model execution).
+
+Unstructured pruning needs no graph support: masks are applied to the
+weights host-side (W⊙M gives identical numerics to a masked matmul).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.moe_ffn import moe_ffn_op
+from .kernels import ref
+
+NEG_INF = -1e9
+PAD_ID = 0  # token id 0 is padding; loss positions with target==PAD are masked
+
+# AdamW hyperparameters baked into the train_step artifact (lr arrives as a
+# runtime scalar input so Rust owns the schedule).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+# --------------------------------------------------------------------------
+# Parameter layout — the Python<->Rust contract.
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the canonical flat parameter layout."""
+    d, f, e, v, s = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.vocab, cfg.seq
+    specs = [("embed", (v, d)), ("pos_embed", (s, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"layer{i}.ln1", (d,)),
+            (f"layer{i}.wqkv", (d, 3 * d)),
+            (f"layer{i}.wo", (d, d)),
+            (f"layer{i}.ln2", (d,)),
+            (f"layer{i}.router", (e, d)),
+            (f"layer{i}.w1", (e, d, f)),
+            (f"layer{i}.w2", (e, f, d)),
+        ]
+    specs += [("ln_f", (d,)), ("lm_head", (d, v))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key):
+    """Scaled-normal init mirroring rust/src/model (same fan-in scaling;
+    values differ — checkpoints, not seeds, are the interchange format)."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    """Flat param list -> dict keyed by spec name."""
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+# --------------------------------------------------------------------------
+# Building blocks.
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def causal_attention(cfg: ModelConfig, h, wqkv, wo):
+    """Standard causal multi-head attention. [B,S,D] -> [B,S,D]."""
+    b, s, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    qkv = h @ wqkv  # [B,S,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(x):
+        return x.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(causal[None, None] > 0, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo
+
+
+def router_probs(x, router_w, expert_mask):
+    """Paper Eq. 1: r(x) = softmax(W x), with pruned experts masked to −inf.
+
+    Args:
+      x: [T, D] tokens; router_w: [E, D]; expert_mask: [E] (1=keep, 0=pruned).
+    Returns: [T, E] routing probabilities (≈0 for pruned experts; the
+    softmax renormalises over survivors, matching physical removal).
+    """
+    logits = x @ router_w.T + (expert_mask - 1.0) * (-NEG_INF)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def topk_gates(probs, top_k):
+    """Paper Eq. 2–3: zero out all but the top-k probabilities (no renorm).
+
+    Implemented as `top_k` iterations of argmax+mask rather than
+    ``jax.lax.top_k``: jax ≥ 0.6 lowers the latter to the HLO ``TopK`` op
+    with a ``largest`` attribute that xla_extension 0.5.1's text parser
+    rejects. k is 1–2 here, so the unrolled form is also cheap.
+    """
+    gates = jnp.zeros_like(probs)
+    remaining = probs
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)
+        onehot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
+        gates = gates + onehot * probs
+        remaining = remaining - onehot * 2.0  # probs ≤ 1, so never re-picked
+    return gates
+
+
+# --------------------------------------------------------------------------
+# Forward / loss.
+# --------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, flat_params, expert_mask, tokens, use_kernels=True,
+            collect=None):
+    """Full forward pass.
+
+    Args:
+      flat_params: list of arrays ordered by :func:`param_specs`.
+      expert_mask: [L, E] f32, 1=keep 0=pruned.
+      tokens: [B, S] i32.
+      use_kernels: route the MoE FFN through the Pallas kernel (the shipped
+        artifacts do); False uses the pure-jnp reference (tests).
+      collect: optional dict populated with probe tensors (router probs,
+        activation square-sums) — used by the probe artifacts.
+
+    Returns: logits [B, S, V].
+    """
+    p = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    h = p["embed"][tokens] + p["pos_embed"][None, :s]
+    for i in range(cfg.n_layers):
+        a_in = rmsnorm(h, p[f"layer{i}.ln1"])
+        if collect is not None:
+            collect.setdefault("attn_in_sq", []).append(
+                jnp.sum(jnp.square(a_in), axis=(0, 1))
+            )
+        h = h + causal_attention(cfg, a_in, p[f"layer{i}.wqkv"], p[f"layer{i}.wo"])
+
+        m_in = rmsnorm(h, p[f"layer{i}.ln2"])
+        x = m_in.reshape(b * s, cfg.d_model)
+        if collect is not None:
+            collect.setdefault("moe_inputs", []).append(x)
+        probs = router_probs(x, p[f"layer{i}.router"], expert_mask[i])
+        gates = topk_gates(probs, cfg.top_k)
+        if collect is not None:
+            collect.setdefault("router_probs", []).append(probs)
+            # Wanda norms for expert weights: routed-token square-sums only
+            # (tokens an expert never sees shouldn't count toward its norms).
+            sel = (gates > 0).astype(x.dtype)
+            collect.setdefault("moe_in_sq", []).append(
+                jnp.einsum("te,td->ed", sel, jnp.square(x))
+            )
+            hidden = jnp.maximum(jnp.einsum("td,edf->etf", x, p[f"layer{i}.w1"]), 0.0)
+            collect.setdefault("moe_hid_sq", []).append(
+                jnp.einsum("te,etf->ef", sel, jnp.square(hidden))
+            )
+        if use_kernels:
+            moe_out = moe_ffn_op(x, p[f"layer{i}.w1"], p[f"layer{i}.w2"], gates)
+        else:
+            moe_out = ref.moe_ffn_ref(x, p[f"layer{i}.w1"], p[f"layer{i}.w2"], gates)
+        h = h + moe_out.reshape(b, s, cfg.d_model)
+
+    h = rmsnorm(h, p["ln_f"])
+    if collect is not None:
+        collect.setdefault("head_in_sq", []).append(
+            jnp.sum(jnp.square(h), axis=(0, 1))
+        )
+    return h @ p["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, flat_params, expert_mask, tokens, targets,
+            use_kernels=True):
+    """Cross-entropy over non-PAD target positions.
+
+    Returns (mean_loss, (total, count, per_token)) so the Rust eval harness
+    can aggregate exact perplexity across ragged batches and score
+    multiple-choice answers from per-token log-likelihoods.
+    """
+    logits = forward(cfg, flat_params, expert_mask, tokens, use_kernels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    weights = (targets != PAD_ID).astype(jnp.float32)
+    total = -jnp.sum(tok_logp * weights)
+    count = jnp.maximum(jnp.sum(weights), 1.0)
+    return total / count, (total, count, tok_logp * weights)
+
+
+# --------------------------------------------------------------------------
+# Training step (AdamW).
+# --------------------------------------------------------------------------
+
+
+def train_step(cfg: ModelConfig, flat_params, m_state, v_state, step, lr,
+               tokens, targets, use_kernels=True):
+    """One AdamW step. Returns (new_params, new_m, new_v, loss).
+
+    ``step`` is the 1-based step counter (f32 scalar) for bias correction;
+    ``lr`` is the current learning rate — both supplied by the Rust trainer
+    so the schedule lives on the coordinator side.
+    """
+
+    def scalar_loss(ps):
+        # expert_mask is all-ones during training (train dense, prune later)
+        mask = jnp.ones((cfg.n_layers, cfg.n_experts), jnp.float32)
+        return loss_fn(cfg, ps, mask, tokens, targets, use_kernels)[0]
+
+    loss, grads = jax.value_and_grad(scalar_loss)(flat_params)
+    b1c = 1.0 - ADAM_B1**step
+    b2c = 1.0 - ADAM_B2**step
+    new_params, new_m, new_v = [], [], []
+    for (name, _), p_arr, g, m_arr, v_arr in zip(
+        param_specs(cfg), flat_params, grads, m_state, v_state
+    ):
+        m_new = ADAM_B1 * m_arr + (1.0 - ADAM_B1) * g
+        v_new = ADAM_B2 * v_arr + (1.0 - ADAM_B2) * jnp.square(g)
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + ADAM_EPS)
+        if not name.endswith(("ln1", "ln2", "ln_f")):
+            update = update + WEIGHT_DECAY * p_arr
+        new_params.append(p_arr - lr * update)
+        new_m.append(m_new)
+        new_v.append(v_new)
+    return new_params, new_m, new_v, loss
+
+
+# --------------------------------------------------------------------------
+# Probe graphs (coactivation + Wanda norms) and the reconstruction probe.
+# --------------------------------------------------------------------------
+
+
+def router_probe(cfg: ModelConfig, flat_params, expert_mask, tokens,
+                 use_kernels=True):
+    """Router probabilities per layer: [L, B*S, E].
+
+    Rust accumulates coactivation statistics a_{i,j} (Eq. 10) and expert
+    load from these.
+    """
+    collect = {}
+    forward(cfg, flat_params, expert_mask, tokens, use_kernels, collect=collect)
+    return jnp.stack(collect["router_probs"])
+
+
+def actnorm_probe(cfg: ModelConfig, flat_params, expert_mask, tokens,
+                  use_kernels=True):
+    """Per-weight-matrix input square-sums for Wanda/OWL.
+
+    Returns (attn_in_sq [L,D], moe_in_sq [L,E,D], moe_hid_sq [L,E,F],
+    head_in_sq [D]). Sums of squares over this batch; Rust accumulates
+    across calibration batches and takes sqrt at the end.
+    """
+    collect = {}
+    forward(cfg, flat_params, expert_mask, tokens, use_kernels, collect=collect)
+    return (
+        jnp.stack(collect["attn_in_sq"]),
+        jnp.stack(collect["moe_in_sq"]),
+        jnp.stack(collect["moe_hid_sq"]),
+        collect["head_in_sq"][0],
+    )
+
+
+def hidden_probe(cfg: ModelConfig, flat_params, expert_mask, tokens,
+                 use_kernels=True):
+    """Per-layer MoE block inputs: [L, B*S, D].
+
+    The combinatorial expert-pruning baseline (Lu et al. 2024) replays
+    these activations through ``layer_recon`` for every candidate expert
+    subset; STUN's validation loop reuses them to measure Eq. 4 once.
+    """
+    collect = {}
+    forward(cfg, flat_params, expert_mask, tokens, use_kernels, collect=collect)
+    return jnp.stack(collect["moe_inputs"])
+
+
+def layer_recon(cfg: ModelConfig, router_w, w1, w2, expert_mask, x,
+                use_kernels=True):
+    """Single MoE layer output M(x; θ−θ_S) for reconstruction loss (Eq. 4).
+
+    The combinatorial baseline (Lu et al. 2024) calls this once per expert
+    subset S; the forward-pass counter around these calls measures the
+    paper's O(kⁿ/√n) vs O(1) complexity claim.
+    """
+    probs = router_probs(x, router_w, expert_mask)
+    gates = topk_gates(probs, cfg.top_k)
+    if use_kernels:
+        return moe_ffn_op(x, w1, w2, gates)
+    return ref.moe_ffn_ref(x, w1, w2, gates)
+
+
+# --------------------------------------------------------------------------
+# Convenience jitted entry point (tests; aot.py lowers its own closures).
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def jit_forward(cfg: ModelConfig, flat_params, expert_mask, tokens):
+    return forward(cfg, flat_params, expert_mask, tokens)

@@ -1,0 +1,186 @@
+# L1 correctness: Pallas kernels vs pure-jnp oracles — the CORE signal.
+#
+# hypothesis sweeps shapes; fixed-seed numpy generates data. Tolerances are
+# scale-aware (f32 accumulation order differs between the kernel's
+# sequential expert loop and the reference einsum).
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.moe_ffn import moe_ffn, moe_ffn_op, vmem_footprint_bytes
+from compile.kernels.masked_matmul import masked_matmul
+from compile.kernels.wanda import wanda_score
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-3):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- moe_ffn
+
+
+class TestMoeFfn:
+    @pytest.mark.parametrize("t,d,e,f,bt", [
+        (64, 32, 2, 48, 32),
+        (128, 64, 4, 96, 64),
+        (128, 64, 8, 32, 64),
+        (64, 16, 1, 16, 64),   # degenerate dense config
+        (192, 48, 3, 64, 64),  # non-power-of-two dims
+    ])
+    def test_matches_ref(self, t, d, e, f, bt):
+        x, w1, w2 = randn(t, d), randn(e, d, f), randn(e, f, d)
+        gates = jnp.asarray(RNG.random(size=(t, e)), jnp.float32)
+        assert_close(moe_ffn(x, w1, w2, gates, block_t=bt),
+                     ref.moe_ffn_ref(x, w1, w2, gates))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t_blocks=st.integers(1, 4),
+        bt=st.sampled_from([16, 32, 64]),
+        d=st.sampled_from([8, 32, 64]),
+        e=st.integers(1, 8),
+        f=st.sampled_from([16, 64]),
+    )
+    def test_shape_sweep(self, t_blocks, bt, d, e, f):
+        t = t_blocks * bt
+        x, w1, w2 = randn(t, d), randn(e, d, f), randn(e, f, d)
+        gates = jnp.asarray(RNG.random(size=(t, e)), jnp.float32)
+        assert_close(moe_ffn(x, w1, w2, gates, block_t=bt),
+                     ref.moe_ffn_ref(x, w1, w2, gates))
+
+    def test_zero_gates_give_zero_output(self):
+        x, w1, w2 = randn(64, 32), randn(4, 32, 48), randn(4, 48, 32)
+        gates = jnp.zeros((64, 4), jnp.float32)
+        out = moe_ffn(x, w1, w2, gates, block_t=32)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_single_expert_gate_selects_that_expert(self):
+        x, w1, w2 = randn(32, 16), randn(3, 16, 24), randn(3, 24, 16)
+        gates = jnp.zeros((32, 3), jnp.float32).at[:, 1].set(1.0)
+        expect = jnp.maximum(x @ w1[1], 0.0) @ w2[1]
+        assert_close(moe_ffn(x, w1, w2, gates, block_t=32), expect)
+
+    def test_gate_linearity(self):
+        # out(alpha * g) == alpha * out(g): Eq. 3 is linear in the gates.
+        x, w1, w2 = randn(64, 32), randn(4, 32, 32), randn(4, 32, 32)
+        g = jnp.asarray(RNG.random(size=(64, 4)), jnp.float32)
+        a = moe_ffn(x, w1, w2, 2.5 * g, block_t=32)
+        b = 2.5 * moe_ffn(x, w1, w2, g, block_t=32)
+        assert_close(a, b)
+
+    def test_indivisible_block_raises(self):
+        x, w1, w2 = randn(60, 16), randn(2, 16, 16), randn(2, 16, 16)
+        g = jnp.ones((60, 2), jnp.float32)
+        with pytest.raises(ValueError):
+            moe_ffn(x, w1, w2, g, block_t=64)
+
+    def test_custom_vjp_matches_ref_grads(self):
+        import jax
+
+        x, w1, w2 = randn(64, 16), randn(3, 16, 24), randn(3, 24, 16)
+        g = jnp.asarray(RNG.random(size=(64, 3)), jnp.float32)
+
+        def f_kernel(x, w1, w2, g):
+            return jnp.sum(jnp.sin(moe_ffn_op(x, w1, w2, g)))
+
+        def f_ref(x, w1, w2, g):
+            return jnp.sum(jnp.sin(ref.moe_ffn_ref(x, w1, w2, g)))
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(x, w1, w2, g)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, w1, w2, g)
+        for a, b in zip(gk, gr):
+            assert_close(a, b)
+
+    def test_vmem_footprint_estimate(self):
+        # The §Perf VMEM model: footprint grows linearly in d_ff and block_t.
+        small = vmem_footprint_bytes(128, 128, 64)
+        big = vmem_footprint_bytes(128, 512, 64)
+        assert big > small
+        # moe-8x tile must fit a TPU core's ~16 MiB VMEM comfortably.
+        assert vmem_footprint_bytes(128, 512, 64) < 16 * 2**20
+
+
+# ---------------------------------------------------------- masked_matmul
+
+
+class TestMaskedMatmul:
+    @pytest.mark.parametrize("m,k,n,bm,bn", [
+        (64, 32, 64, 64, 64),
+        (128, 64, 128, 64, 64),
+        (64, 16, 192, 32, 64),
+    ])
+    def test_matches_ref(self, m, k, n, bm, bn):
+        x, w = randn(m, k), randn(k, n)
+        mask = jnp.asarray((RNG.random(size=(k, n)) > 0.5), jnp.float32)
+        assert_close(masked_matmul(x, w, mask, block_m=bm, block_n=bn),
+                     ref.masked_matmul_ref(x, w, mask))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        mb=st.integers(1, 3), nb=st.integers(1, 3),
+        k=st.sampled_from([8, 32, 64]),
+        density=st.floats(0.0, 1.0),
+    )
+    def test_shape_and_density_sweep(self, mb, nb, k, density):
+        m, n = 32 * mb, 32 * nb
+        x, w = randn(m, k), randn(k, n)
+        mask = jnp.asarray((RNG.random(size=(k, n)) < density), jnp.float32)
+        assert_close(masked_matmul(x, w, mask, block_m=32, block_n=32),
+                     ref.masked_matmul_ref(x, w, mask))
+
+    def test_all_ones_mask_is_plain_matmul(self):
+        x, w = randn(64, 32), randn(32, 64)
+        mask = jnp.ones_like(w)
+        assert_close(masked_matmul(x, w, mask), x @ w)
+
+    def test_all_zeros_mask_gives_zeros(self):
+        x, w = randn(64, 32), randn(32, 64)
+        out = masked_matmul(x, w, jnp.zeros_like(w))
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_masking_host_side_is_equivalent(self):
+        # The identity the artifacts rely on: W⊙M applied host-side equals
+        # the masked kernel — so Rust can bake masks into checkpoints.
+        x, w = randn(64, 32), randn(32, 64)
+        mask = jnp.asarray((RNG.random(size=(32, 64)) > 0.7), jnp.float32)
+        assert_close(masked_matmul(x, w, mask),
+                     masked_matmul(x, w * mask, jnp.ones_like(mask)))
+
+
+# ------------------------------------------------------------ wanda_score
+
+
+class TestWandaScore:
+    @pytest.mark.parametrize("k,n,bk", [(64, 32, 64), (128, 256, 64), (64, 8, 32)])
+    def test_matches_ref(self, k, n, bk):
+        w = randn(k, n)
+        xnorm = jnp.asarray(RNG.random(size=(k,)) + 0.01, jnp.float32)
+        assert_close(wanda_score(w, xnorm, block_k=bk),
+                     ref.wanda_score_ref(w, xnorm), rtol=1e-6, atol=0)
+
+    def test_scores_nonnegative(self):
+        w, xnorm = randn(64, 32), jnp.asarray(RNG.random(size=(64,)), jnp.float32)
+        assert float(wanda_score(w, xnorm).min()) >= 0.0
+
+    def test_zero_norm_kills_row(self):
+        w = randn(64, 32)
+        xnorm = jnp.ones((64,), jnp.float32).at[3].set(0.0)
+        s = wanda_score(w, xnorm)
+        assert float(jnp.abs(s[3]).max()) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(kb=st.integers(1, 4), n=st.sampled_from([4, 32, 128]))
+    def test_shape_sweep(self, kb, n):
+        k = 32 * kb
+        w = randn(k, n)
+        xnorm = jnp.asarray(RNG.random(size=(k,)), jnp.float32)
+        assert_close(wanda_score(w, xnorm, block_k=32),
+                     ref.wanda_score_ref(w, xnorm), rtol=1e-6, atol=0)

@@ -1,0 +1,188 @@
+# L2 correctness: model graph semantics — routing, masking, loss, training.
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+
+CFG = CONFIGS["tiny"]
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def tokens(batch):
+    return jnp.asarray(
+        RNG.integers(1, CFG.vocab, size=(batch, CFG.seq)), jnp.int32
+    )
+
+
+def full_mask():
+    return jnp.ones((CFG.n_layers, CFG.n_experts), jnp.float32)
+
+
+class TestParamLayout:
+    def test_spec_count_and_shapes(self):
+        specs = model.param_specs(CFG)
+        assert len(specs) == 4 + 7 * CFG.n_layers
+        named = dict(specs)
+        assert named["embed"] == (CFG.vocab, CFG.d_model)
+        assert named["layer0.w1"] == (CFG.n_experts, CFG.d_model, CFG.d_ff)
+        assert named["lm_head"] == (CFG.d_model, CFG.vocab)
+
+    def test_init_matches_specs(self, params):
+        for (name, shape), arr in zip(model.param_specs(CFG), params):
+            assert arr.shape == shape, name
+
+
+class TestRouting:
+    def test_probs_sum_to_one(self, params):
+        x = jnp.asarray(RNG.normal(size=(16, CFG.d_model)), jnp.float32)
+        w = params[6]  # layer0.router
+        p = model.router_probs(x, w, jnp.ones(CFG.n_experts))
+        np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, rtol=1e-5)
+
+    def test_masked_expert_gets_zero_prob(self, params):
+        x = jnp.asarray(RNG.normal(size=(16, CFG.d_model)), jnp.float32)
+        mask = jnp.ones(CFG.n_experts).at[2].set(0.0)
+        p = model.router_probs(x, params[6], mask)
+        assert float(p[:, 2].max()) < 1e-12
+        np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, rtol=1e-5)
+
+    def test_topk_gates_keep_k_and_no_renorm(self):
+        probs = jnp.asarray([[0.5, 0.3, 0.15, 0.05]], jnp.float32)
+        g = model.topk_gates(probs, 2)
+        np.testing.assert_allclose(np.asarray(g), [[0.5, 0.3, 0.0, 0.0]], rtol=1e-6)
+
+    def test_mask_equals_physical_removal(self, params):
+        # Core execution identity: masking expert e == a router/expert set
+        # where e never exists. Compare the masked forward against a forward
+        # where the pruned expert's prob is removed pre-softmax by slicing.
+        x = jnp.asarray(RNG.normal(size=(8, CFG.d_model)), jnp.float32)
+        w = params[6]
+        mask = jnp.ones(CFG.n_experts).at[1].set(0.0)
+        p_masked = model.router_probs(x, w, mask)
+        keep = np.array([i for i in range(CFG.n_experts) if i != 1])
+        p_sliced = jax.nn.softmax(x @ w[keep].T, axis=-1)
+        np.testing.assert_allclose(
+            np.asarray(p_masked[:, keep]), np.asarray(p_sliced), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestForward:
+    def test_logits_shape_and_finite(self, params):
+        t = tokens(2)
+        logits = model.forward(CFG, params, full_mask(), t)
+        assert logits.shape == (2, CFG.seq, CFG.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_kernel_and_ref_paths_agree(self, params):
+        t = tokens(2)
+        a = model.forward(CFG, params, full_mask(), t, use_kernels=True)
+        b = model.forward(CFG, params, full_mask(), t, use_kernels=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-3)
+
+    def test_causality(self, params):
+        # Changing a later token must not affect earlier logits.
+        t1 = tokens(1)
+        t2 = t1.at[0, -1].set((int(t1[0, -1]) % (CFG.vocab - 1)) + 1)
+        l1 = model.forward(CFG, params, full_mask(), t1)
+        l2 = model.forward(CFG, params, full_mask(), t2)
+        np.testing.assert_allclose(
+            np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), rtol=1e-4, atol=1e-4
+        )
+
+    def test_expert_mask_changes_output(self, params):
+        t = tokens(1)
+        m = full_mask().at[0, 0].set(0.0).at[1, 2].set(0.0)
+        a = model.forward(CFG, params, full_mask(), t)
+        b = model.forward(CFG, params, m, t)
+        assert float(jnp.abs(a - b).max()) > 1e-6
+
+
+class TestLoss:
+    def test_pad_targets_excluded(self, params):
+        t = tokens(2)
+        tgt = jnp.roll(t, -1, axis=1)
+        tgt_pad = tgt.at[:, CFG.seq // 2 :].set(model.PAD_ID)
+        _, (_, count, _) = model.loss_fn(CFG, params, full_mask(), t, tgt_pad)
+        assert int(count) == 2 * (CFG.seq // 2)
+
+    def test_loss_near_log_vocab_at_init(self, params):
+        t = tokens(4)
+        tgt = jnp.roll(t, -1, axis=1)
+        mean, _ = model.loss_fn(CFG, params, full_mask(), t, tgt)
+        assert abs(float(mean) - np.log(CFG.vocab)) < 1.5
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_repeated_batch(self, params):
+        t = tokens(CFG.train_batch)
+        tgt = jnp.roll(t, -1, axis=1)
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        ps = list(params)
+        losses = []
+        step_fn = jax.jit(
+            lambda ps, m, v, s: model.train_step(
+                CFG, ps, m, v, s, jnp.float32(3e-3), t, tgt
+            )
+        )
+        for step in range(8):
+            ps, m, v, loss = step_fn(ps, m, v, jnp.float32(step + 1))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.1, losses
+
+    def test_shapes_preserved(self, params):
+        t = tokens(CFG.train_batch)
+        tgt = jnp.roll(t, -1, axis=1)
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        new_p, new_m, new_v, loss = model.train_step(
+            CFG, params, m, v, jnp.float32(1), jnp.float32(1e-3), t, tgt
+        )
+        assert len(new_p) == len(params)
+        for a, b in zip(new_p, params):
+            assert a.shape == b.shape
+        assert loss.shape == ()
+
+
+class TestProbes:
+    def test_router_probe_shape_and_simplex(self, params):
+        t = tokens(CFG.eval_batch)
+        probs = model.router_probe(CFG, params, full_mask(), t)
+        assert probs.shape == (
+            CFG.n_layers, CFG.eval_batch * CFG.seq, CFG.n_experts
+        )
+        np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-4)
+
+    def test_actnorm_probe_shapes_nonneg(self, params):
+        t = tokens(CFG.eval_batch)
+        attn_sq, moe_in, moe_hid, head = model.actnorm_probe(
+            CFG, params, full_mask(), t
+        )
+        assert attn_sq.shape == (CFG.n_layers, CFG.d_model)
+        assert moe_in.shape == (CFG.n_layers, CFG.n_experts, CFG.d_model)
+        assert moe_hid.shape == (CFG.n_layers, CFG.n_experts, CFG.d_ff)
+        assert head.shape == (CFG.d_model,)
+        for arr in (attn_sq, moe_in, moe_hid, head):
+            assert float(arr.min()) >= 0.0
+
+    def test_layer_recon_matches_moe_block(self, params):
+        x = jnp.asarray(RNG.normal(size=(64, CFG.d_model)), jnp.float32)
+        router, w1, w2 = params[6], params[7], params[8]
+        mask = jnp.ones(CFG.n_experts)
+        y = model.layer_recon(CFG, router, w1, w2, mask, x)
+        probs = model.router_probs(x, router, mask)
+        gates = model.topk_gates(probs, CFG.top_k)
+        from compile.kernels import ref
+
+        expect = ref.moe_ffn_ref(x, w1, w2, gates)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(expect), rtol=1e-4, atol=1e-3
+        )

@@ -1,0 +1,86 @@
+//! Bench: the paper's complexity claim — O(1) expert pruning vs the
+//! O(kⁿ/√n) combinatorial baseline, measured in *forward passes* (the
+//! paper's "GPU calls") and wall-clock, then extended analytically to
+//! Arctic scale (n = 128, footnote 2).
+//!
+//! Measured part runs the real pruners on the `tiny` (n=4) and `moe-8x`
+//! (n=8) bundles; beyond n=8 the subset counts are exact binomials.
+
+use stun::data::{CorpusConfig, CorpusGenerator};
+use stun::model::ParamSet;
+use stun::pruning::combinatorial::{self, subset_count};
+use stun::pruning::expert::{ExpertPruneConfig, ExpertPruner};
+use stun::report::Protocol;
+use stun::runtime::{self, Engine};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = Engine::new().expect("PJRT engine");
+    println!(
+        "{:<10} {:>4} {:>6} | {:>14} {:>10} | {:>14} {:>10}",
+        "config", "n", "prune", "ours(fwd)", "ours(s)", "comb(fwd)", "comb(s)"
+    );
+
+    for (config, n_prune) in [("tiny", 1), ("tiny", 2), ("moe-8x", 2), ("moe-8x", 4)] {
+        let bundle = stun::report::load_bundle(&engine, config).expect("artifacts");
+        let base = ParamSet::init(&bundle.config, 7);
+
+        // ours — O(1): zero forward passes by construction
+        let mut ours = base.clone();
+        let e0 = runtime::execution_count();
+        let (_, ours_secs) = timed(|| {
+            ExpertPruner::prune(
+                &mut ours,
+                None,
+                &ExpertPruneConfig {
+                    ratio: n_prune as f64 / bundle.config.n_experts as f64,
+                    ..Default::default()
+                },
+            )
+        });
+        let ours_fwd = runtime::execution_count() - e0;
+
+        // combinatorial — C(n, k) layer_recon calls per layer (+1 ref)
+        let mut comb = base.clone();
+        let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+            bundle.config.vocab,
+            bundle.config.seq,
+            proto.eval_seed,
+        ));
+        let inputs = combinatorial::capture_moe_inputs(&bundle, &comb, &mut gen)
+            .expect("moe inputs");
+        let (report, comb_secs) = timed(|| {
+            combinatorial::prune_combinatorial(&bundle, &mut comb, &inputs, n_prune)
+                .expect("combinatorial")
+        });
+
+        println!(
+            "{:<10} {:>4} {:>6} | {:>14} {:>10.3} | {:>14} {:>10.3}",
+            config,
+            bundle.config.n_experts,
+            n_prune,
+            ours_fwd,
+            ours_secs,
+            report.forward_passes,
+            comb_secs
+        );
+    }
+
+    // analytic extension: subsets per layer at the paper's ratios
+    println!("\nanalytic C(n, φn) per layer (forward passes the baseline needs):");
+    for n in [8usize, 16, 32, 64, 128] {
+        let phi20 = (n as f64 * 0.2).round() as usize;
+        let half = n / 2;
+        println!(
+            "  n={n:>3}: φ=0.2 -> {:>40}   φ=0.5 -> {:>40}",
+            subset_count(n, phi20),
+            subset_count(n, half)
+        );
+    }
+    println!(
+        "\npaper footnote 2 (n=128, φ=0.5): {}",
+        subset_count(128, 64)
+    );
+    println!("ours stays at 0 forward passes for every n (router weights only).");
+}

@@ -1,0 +1,13 @@
+//! Bench: Figure 1 — GSM8K-proxy accuracy vs sparsity (STUN vs OWL vs Wanda, many-small-experts config).
+//!
+//! Runs the full experiment protocol and reports wall-clock. Quick-sized
+//! by default; `STUN_BENCH_FULL=1` uses the EXPERIMENTS.md protocol.
+use stun::report::{self, Protocol};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = stun::runtime::Engine::new().expect("PJRT engine");
+    let (table, secs) = timed(|| report::fig1(&engine, &proto).expect("fig1"));
+    println!("\n### fig1_sparsity_sweep ({secs:.1}s)\n{table}");
+}

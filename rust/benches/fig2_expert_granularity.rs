@@ -1,0 +1,13 @@
+//! Bench: Figure 2 — STUN-vs-unstructured gap as expert granularity varies.
+//!
+//! Runs the full experiment protocol and reports wall-clock. Quick-sized
+//! by default; `STUN_BENCH_FULL=1` uses the EXPERIMENTS.md protocol.
+use stun::report::{self, Protocol};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = stun::runtime::Engine::new().expect("PJRT engine");
+    let (table, secs) = timed(|| report::fig2(&engine, &proto).expect("fig2"));
+    println!("\n### fig2_expert_granularity ({secs:.1}s)\n{table}");
+}

@@ -1,0 +1,13 @@
+//! Bench: Figure 3 — non-MoE: structured(5%)+OWL vs OWL-only.
+//!
+//! Runs the full experiment protocol and reports wall-clock. Quick-sized
+//! by default; `STUN_BENCH_FULL=1` uses the EXPERIMENTS.md protocol.
+use stun::report::{self, Protocol};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = stun::runtime::Engine::new().expect("PJRT engine");
+    let (table, secs) = timed(|| report::fig3(&engine, &proto).expect("fig3"));
+    println!("\n### fig3_dense ({secs:.1}s)\n{table}");
+}

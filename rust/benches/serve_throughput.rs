@@ -1,0 +1,66 @@
+//! Bench: coordinator serving throughput — dense vs STUN-pruned model
+//! under a fixed expert-memory budget (the deployment claim behind MoE
+//! pruning), plus batcher scaling over burst sizes.
+
+use std::time::Duration;
+use stun::coordinator::{burst_workload, Batcher, ExpertStore};
+use stun::model::ParamSet;
+use stun::pruning::expert::ExpertPruneConfig;
+use stun::pruning::unstructured::UnstructuredConfig;
+use stun::pruning::StunPipeline;
+use stun::report::{self, Protocol};
+use stun::runtime::Engine;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = Engine::new().expect("PJRT engine");
+
+    // headline comparison on the trained checkpoint
+    let table = report::serving_report(&engine, &proto, 24).expect("serving");
+    println!("### serving: dense vs stun-pruned (trained moe-8x)\n{table}");
+
+    // batcher scaling on the tiny bundle (fast)
+    let bundle = report::load_bundle(&engine, "tiny").expect("artifacts");
+    let params = ParamSet::init(&bundle.config, 7);
+    let mut pruned = params.clone();
+    let mut gen = stun::data::CorpusGenerator::new(stun::data::CorpusConfig::for_vocab(
+        bundle.config.vocab,
+        bundle.config.seq,
+        4242,
+    ));
+    StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: 0.4,
+        calib_batches: 2,
+    }
+    .run(&bundle, &mut pruned, &mut gen)
+    .expect("stun");
+
+    println!("\n### burst-size scaling (tiny)");
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>10}",
+        "requests", "dense tok/s", "pruned tok/s", "d-swaps", "p-swaps"
+    );
+    for n in [4usize, 8, 16, 32] {
+        let capacity = ExpertStore::working_set(&pruned);
+        let mut results = Vec::new();
+        for ps in [&params, &pruned] {
+            let store = ExpertStore::new(capacity, Duration::from_micros(200));
+            let mut batcher = Batcher::new(&bundle, ps, store).expect("batcher");
+            let (_r, m) = batcher.serve(burst_workload(&bundle.config, n, 6, 3)).expect("serve");
+            results.push(m);
+        }
+        println!(
+            "{:>8} {:>12.1} {:>12.1} {:>10} {:>10}",
+            n,
+            results[0].tokens_per_sec(),
+            results[1].tokens_per_sec(),
+            results[0].expert_swaps,
+            results[1].expert_swaps
+        );
+    }
+}

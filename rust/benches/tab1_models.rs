@@ -1,0 +1,13 @@
+//! Bench: Table 1 — STUN vs unstructured-only across model configs and sparsities.
+//!
+//! Runs the full experiment protocol and reports wall-clock. Quick-sized
+//! by default; `STUN_BENCH_FULL=1` uses the EXPERIMENTS.md protocol.
+use stun::report::{self, Protocol};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = stun::runtime::Engine::new().expect("PJRT engine");
+    let (table, secs) = timed(|| report::table1(&engine, &proto).expect("table1"));
+    println!("\n### tab1_models ({secs:.1}s)\n{table}");
+}

@@ -1,0 +1,13 @@
+//! Bench: Table 2 — O(1) expert pruning vs the combinatorial Lu et al. baseline.
+//!
+//! Runs the full experiment protocol and reports wall-clock. Quick-sized
+//! by default; `STUN_BENCH_FULL=1` uses the EXPERIMENTS.md protocol.
+use stun::report::{self, Protocol};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = stun::runtime::Engine::new().expect("PJRT engine");
+    let (table, secs) = timed(|| report::table2(&engine, &proto).expect("table2"));
+    println!("\n### tab2_expert_pruning ({secs:.1}s)\n{table}");
+}

@@ -1,0 +1,13 @@
+//! Bench: Tables 3/4/5 — clustering + selective-reconstruction ablations.
+//!
+//! Runs the full experiment protocol and reports wall-clock. Quick-sized
+//! by default; `STUN_BENCH_FULL=1` uses the EXPERIMENTS.md protocol.
+use stun::report::{self, Protocol};
+use stun::util::bench::timed;
+
+fn main() {
+    let proto = Protocol::bench();
+    let engine = stun::runtime::Engine::new().expect("PJRT engine");
+    let (table, secs) = timed(|| report::table3(&engine, &proto).expect("table3"));
+    println!("\n### tab3_ablations ({secs:.1}s)\n{table}");
+}

@@ -1,0 +1,255 @@
+//! `.stz` checkpoint format — named f32 tensors + a metadata string.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   [8]  b"STZCKPT1"
+//! meta    u32 len + utf8 bytes      (JSON blob: config, step, notes)
+//! count   u32
+//! per tensor:
+//!   name  u16 len + utf8 bytes
+//!   ndim  u8
+//!   dims  ndim × u32
+//!   data  prod(dims) × f32
+//! ```
+//! Tensors keep their insertion order, which for model checkpoints is the
+//! canonical `param_specs` order shared with the Python side.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"STZCKPT1";
+
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub meta: String,
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    tensors: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(meta: impl Into<String>) -> Checkpoint {
+        Checkpoint {
+            meta: meta.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) -> Result<()> {
+        let name = name.into();
+        if self.index.contains_key(&name) {
+            bail!("duplicate tensor name '{name}'");
+        }
+        self.index.insert(name.clone(), self.tensors.len());
+        self.names.push(name);
+        self.tensors.push(t);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.tensors[i])
+    }
+
+    pub fn at(&self, i: usize) -> &Tensor {
+        &self.tensors[i]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names
+            .iter()
+            .map(|s| s.as_str())
+            .zip(self.tensors.iter())
+    }
+
+    pub fn into_tensors(self) -> Vec<(String, Tensor)> {
+        self.names.into_iter().zip(self.tensors).collect()
+    }
+
+    // ------------------------------------------------------------------ IO
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        w.write_all(MAGIC)?;
+        let meta = self.meta.as_bytes();
+        w.write_all(&(meta.len() as u32).to_le_bytes())?;
+        w.write_all(meta)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in self.iter() {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u16).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&[t.shape().len() as u8])?;
+            for &d in t.shape() {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            // bulk-write the f32 payload
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    t.data().as_ptr() as *const u8,
+                    t.data().len() * 4,
+                )
+            };
+            w.write_all(bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut r = BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not an .stz checkpoint", path.display());
+        }
+        let meta_len = read_u32(&mut r)? as usize;
+        let mut meta = vec![0u8; meta_len];
+        r.read_exact(&mut meta)?;
+        let count = read_u32(&mut r)? as usize;
+        let mut ckpt = Checkpoint::new(String::from_utf8(meta)?);
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndim = read_u8(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut data = vec![0f32; n];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+            };
+            r.read_exact(bytes)?;
+            ckpt.push(String::from_utf8(name)?, Tensor::new(&dims, data)?)?;
+        }
+        Ok(ckpt)
+    }
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("stun-ckpt-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.stz", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut rng = Rng::new(3);
+        let mut c = Checkpoint::new(r#"{"step": 100}"#);
+        c.push("embed", Tensor::randn(&[16, 8], &mut rng)).unwrap();
+        c.push("layer0.w1", Tensor::randn(&[4, 8, 12], &mut rng))
+            .unwrap();
+        c.push("scalarish", Tensor::scalar(7.5)).unwrap();
+        let p = tmp("roundtrip");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.meta, c.meta);
+        assert_eq!(back.names(), c.names());
+        for (name, t) in c.iter() {
+            assert_eq!(back.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn insertion_order_is_preserved() {
+        let mut c = Checkpoint::new("");
+        for i in 0..10 {
+            c.push(format!("t{i}"), Tensor::zeros(&[2])).unwrap();
+        }
+        let p = tmp("order");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        let names: Vec<_> = back.names().to_vec();
+        assert_eq!(
+            names,
+            (0..10).map(|i| format!("t{i}")).collect::<Vec<_>>()
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut c = Checkpoint::new("");
+        c.push("x", Tensor::zeros(&[1])).unwrap();
+        assert!(c.push("x", Tensor::zeros(&[1])).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("badmagic");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let mut c = Checkpoint::new("meta");
+        c.push("w", Tensor::ones(&[64, 64])).unwrap();
+        let p = tmp("trunc");
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

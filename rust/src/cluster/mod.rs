@@ -1,0 +1,572 @@
+//! Expert clustering (paper §4.3, Alg. 1) + the DSatur ablation (Appendix).
+//!
+//! All algorithms consume a symmetric **distance** matrix
+//! `d[i][j] = λ₁·‖W_i − W_j‖_F − λ₂·a_{i,j}` (the negation of the paper's
+//! behavioural similarity b, Eq. 8/10 — the printed Alg. 1 mixes the two
+//! sign conventions; we normalise to distances: smaller = more similar)
+//! and return a [`Clustering`]: a cluster id per expert.
+//!
+//! * [`agglomerative`] — complete-linkage agglomerative merging (the
+//!   paper's choice): repeatedly merge the closest pair of clusters whose
+//!   *maximum* cross-pair distance stays below the threshold `t`. The
+//!   termination condition "prevents the experts within each cluster from
+//!   being too dissimilar" (§4.3).
+//! * [`agglomerative_target`] — binary-search the threshold so the number
+//!   of clusters hits a target count (the paper tunes t "based on the
+//!   desired pruning ratio").
+//! * [`dsatur`] — the Appendix baseline (Eq. 15): connect experts with
+//!   d ≤ t, DSatur-colour the *complement* graph; each colour class is
+//!   then a clique in the similarity graph, i.e. a cluster.
+//! * [`kmeans`] — extra ablation on raw feature rows.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Clustering {
+    /// cluster id per item (0..n_clusters).
+    pub assignment: Vec<usize>,
+    pub n_clusters: usize,
+}
+
+impl Clustering {
+    pub fn from_assignment(mut assignment: Vec<usize>) -> Clustering {
+        // compact ids
+        let mut remap = std::collections::HashMap::new();
+        for a in assignment.iter_mut() {
+            let next = remap.len();
+            let id = *remap.entry(*a).or_insert(next);
+            *a = id;
+        }
+        Clustering {
+            n_clusters: remap.len(),
+            assignment,
+        }
+    }
+
+    pub fn members(&self, cluster: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c == cluster)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn clusters(&self) -> Vec<Vec<usize>> {
+        (0..self.n_clusters).map(|c| self.members(c)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assignment.is_empty()
+    }
+}
+
+/// Symmetric distance matrix (row-major n×n).
+#[derive(Clone, Debug)]
+pub struct DistMatrix {
+    pub n: usize,
+    pub d: Vec<f64>,
+}
+
+impl DistMatrix {
+    pub fn new(n: usize) -> DistMatrix {
+        DistMatrix {
+            n,
+            d: vec![0.0; n * n],
+        }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> DistMatrix {
+        let n = rows.len();
+        let mut m = DistMatrix::new(n);
+        for i in 0..n {
+            for j in 0..n {
+                m.d[i * n + j] = rows[i][j];
+            }
+        }
+        m
+    }
+
+    /// Distance matrix from feature vectors (Euclidean).
+    pub fn from_features(feats: &[Vec<f32>]) -> DistMatrix {
+        let n = feats.len();
+        let mut m = DistMatrix::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = crate::tensor::Tensor::fro_dist_slices(&feats[i], &feats[j]);
+                m.set(i, j, d);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.d[i * self.n + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.d[i * self.n + j] = v;
+        self.d[j * self.n + i] = v;
+    }
+
+    /// Paper Eq. 10 combination: λ₁·fro − λ₂·coact (as a distance).
+    pub fn combine(fro: &DistMatrix, coact: &DistMatrix, l1: f64, l2: f64) -> DistMatrix {
+        assert_eq!(fro.n, coact.n);
+        let mut m = DistMatrix::new(fro.n);
+        for k in 0..fro.d.len() {
+            m.d[k] = l1 * fro.d[k] - l2 * coact.d[k];
+        }
+        m
+    }
+
+    pub fn max_offdiag(&self) -> f64 {
+        let mut mx = f64::NEG_INFINITY;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    mx = mx.max(self.get(i, j));
+                }
+            }
+        }
+        mx
+    }
+
+    pub fn min_offdiag(&self) -> f64 {
+        let mut mn = f64::INFINITY;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    mn = mn.min(self.get(i, j));
+                }
+            }
+        }
+        mn
+    }
+}
+
+// --------------------------------------------------------------------------
+// Agglomerative complete-linkage (Alg. 1).
+// --------------------------------------------------------------------------
+
+/// Complete-linkage agglomerative clustering with dissimilarity cap `t`.
+pub fn agglomerative(dist: &DistMatrix, t: f64) -> Clustering {
+    let n = dist.n;
+    let mut assignment: Vec<usize> = (0..n).collect();
+    if n == 0 {
+        return Clustering {
+            assignment,
+            n_clusters: 0,
+        };
+    }
+    // cluster distance = complete linkage (max pairwise member distance)
+    let mut cd = dist.clone();
+    let mut alive: Vec<bool> = vec![true; n];
+    loop {
+        // find the closest pair of live clusters
+        let mut best = (f64::INFINITY, usize::MAX, usize::MAX);
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if !alive[j] {
+                    continue;
+                }
+                let d = cd.get(i, j);
+                if d < best.0 {
+                    best = (d, i, j);
+                }
+            }
+        }
+        let (d, a, b) = best;
+        // Alg. 1 termination: stop when even the closest pair would create
+        // a cluster with internal dissimilarity above t.
+        if d >= t || a == usize::MAX {
+            break;
+        }
+        // merge b into a; complete linkage update
+        for k in 0..n {
+            if alive[k] && k != a && k != b {
+                let v = cd.get(a, k).max(cd.get(b, k));
+                cd.set(a, k, v);
+            }
+        }
+        alive[b] = false;
+        for x in assignment.iter_mut() {
+            if *x == b {
+                *x = a;
+            }
+        }
+    }
+    Clustering::from_assignment(assignment)
+}
+
+/// Complete-linkage merging until exactly `target` clusters remain.
+///
+/// The paper tunes Alg. 1's threshold "based on the desired pruning
+/// ratio"; since the threshold's only role is to stop merging at the
+/// desired cluster count, merge-until-count is the exact closed form of
+/// that tuning (and always realisable, unlike thresholds when the
+/// distance spectrum has plateaus).
+pub fn agglomerative_target(dist: &DistMatrix, target: usize) -> Clustering {
+    let n = dist.n;
+    if target >= n || n == 0 {
+        return Clustering {
+            assignment: (0..n).collect(),
+            n_clusters: n,
+        };
+    }
+    let target = target.max(1);
+    let mut assignment: Vec<usize> = (0..n).collect();
+    let mut cd = dist.clone();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut n_clusters = n;
+    while n_clusters > target {
+        let mut best = (f64::INFINITY, usize::MAX, usize::MAX);
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if alive[j] && cd.get(i, j) < best.0 {
+                    best = (cd.get(i, j), i, j);
+                }
+            }
+        }
+        let (_, a, b) = best;
+        if a == usize::MAX {
+            break;
+        }
+        for k in 0..n {
+            if alive[k] && k != a && k != b {
+                let v = cd.get(a, k).max(cd.get(b, k));
+                cd.set(a, k, v);
+            }
+        }
+        alive[b] = false;
+        for x in assignment.iter_mut() {
+            if *x == b {
+                *x = a;
+            }
+        }
+        n_clusters -= 1;
+    }
+    Clustering::from_assignment(assignment)
+}
+
+// --------------------------------------------------------------------------
+// DSatur baseline (Appendix Eq. 15).
+// --------------------------------------------------------------------------
+
+/// DSatur colouring of the *complement* similarity graph.
+///
+/// Experts i,j are "similar" when d(i,j) <= t. In the complement graph we
+/// connect *dissimilar* pairs; a proper colouring then puts an edge-free
+/// (= pairwise-similar) set in each colour class → cluster = colour.
+pub fn dsatur(dist: &DistMatrix, t: f64) -> Clustering {
+    let n = dist.n;
+    if n == 0 {
+        return Clustering {
+            assignment: vec![],
+            n_clusters: 0,
+        };
+    }
+    // complement adjacency: edge when NOT similar
+    let adj: Vec<Vec<bool>> = (0..n)
+        .map(|i| (0..n).map(|j| i != j && dist.get(i, j) > t).collect())
+        .collect();
+    let mut colour: Vec<Option<usize>> = vec![None; n];
+    let degree: Vec<usize> = adj.iter().map(|r| r.iter().filter(|&&b| b).count()).collect();
+    for _ in 0..n {
+        // pick uncoloured vertex with max saturation (distinct neighbour
+        // colours), tie-break by degree (Brélaz 1979).
+        let mut pick = usize::MAX;
+        let mut pick_sat = 0usize;
+        for v in 0..n {
+            if colour[v].is_some() {
+                continue;
+            }
+            let sat = {
+                let mut seen = std::collections::HashSet::new();
+                for u in 0..n {
+                    if adj[v][u] {
+                        if let Some(c) = colour[u] {
+                            seen.insert(c);
+                        }
+                    }
+                }
+                seen.len()
+            };
+            if pick == usize::MAX
+                || sat > pick_sat
+                || (sat == pick_sat && degree[v] > degree[pick])
+            {
+                pick = v;
+                pick_sat = sat;
+            }
+        }
+        // smallest colour not used by complement-neighbours
+        let mut used = vec![false; n + 1];
+        for u in 0..n {
+            if adj[pick][u] {
+                if let Some(c) = colour[u] {
+                    used[c] = true;
+                }
+            }
+        }
+        let c = (0..).find(|&c| !used[c]).unwrap();
+        colour[pick] = Some(c);
+    }
+    Clustering::from_assignment(colour.into_iter().map(|c| c.unwrap()).collect())
+}
+
+/// Threshold search for DSatur to hit a target cluster count (same contract
+/// as [`agglomerative_target`]).
+pub fn dsatur_target(dist: &DistMatrix, target: usize) -> Clustering {
+    let n = dist.n;
+    if target >= n {
+        return Clustering {
+            assignment: (0..n).collect(),
+            n_clusters: n,
+        };
+    }
+    let target = target.max(1);
+    let (mut lo, mut hi) = (dist.min_offdiag() - 1e-12, dist.max_offdiag() + 1e-9);
+    let mut best: Option<Clustering> = None;
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        let c = dsatur(dist, mid);
+        if c.n_clusters > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                let db = b.n_clusters as isize - target as isize;
+                let dc = c.n_clusters as isize - target as isize;
+                match (db < 0, dc < 0) {
+                    (true, false) => true,
+                    (false, true) => false,
+                    _ => dc.abs() < db.abs(),
+                }
+            }
+        };
+        if better {
+            best = Some(c);
+        }
+        if best.as_ref().map(|b| b.n_clusters) == Some(target) {
+            break;
+        }
+    }
+    best.unwrap()
+}
+
+// --------------------------------------------------------------------------
+// k-means baseline (extra ablation).
+// --------------------------------------------------------------------------
+
+/// Lloyd's k-means over feature rows, k-means++-style seeding.
+pub fn kmeans(features: &[Vec<f32>], k: usize, seed: u64, iters: usize) -> Clustering {
+    let n = features.len();
+    if n == 0 || k == 0 {
+        return Clustering {
+            assignment: vec![],
+            n_clusters: 0,
+        };
+    }
+    let k = k.min(n);
+    let dim = features[0].len();
+    let mut rng = Rng::new(seed);
+    // k-means++ seeding
+    let mut centers: Vec<Vec<f32>> = vec![features[rng.below(n)].clone()];
+    while centers.len() < k {
+        let dists: Vec<f64> = features
+            .iter()
+            .map(|f| {
+                centers
+                    .iter()
+                    .map(|c| crate::tensor::Tensor::fro_dist_slices(f, c).powi(2))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = dists.iter().sum();
+        if total <= 0.0 {
+            centers.push(features[rng.below(n)].clone());
+        } else {
+            centers.push(features[rng.weighted(&dists)].clone());
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    for _ in 0..iters {
+        // assign
+        let mut changed = false;
+        for (i, f) in features.iter().enumerate() {
+            let best = (0..centers.len())
+                .min_by(|&a, &b| {
+                    let da = crate::tensor::Tensor::fro_dist_slices(f, &centers[a]);
+                    let db = crate::tensor::Tensor::fro_dist_slices(f, &centers[b]);
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // update
+        for (c, center) in centers.iter_mut().enumerate() {
+            let members: Vec<usize> =
+                (0..n).filter(|&i| assignment[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut mean = vec![0.0f32; dim];
+            for &m in &members {
+                for (acc, &x) in mean.iter_mut().zip(&features[m]) {
+                    *acc += x;
+                }
+            }
+            for x in mean.iter_mut() {
+                *x /= members.len() as f32;
+            }
+            *center = mean;
+        }
+        if !changed {
+            break;
+        }
+    }
+    Clustering::from_assignment(assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two obvious blobs: {0,1,2} mutually close, {3,4} mutually close,
+    /// far across.
+    fn blob_dist() -> DistMatrix {
+        let mut m = DistMatrix::new(5);
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let same = (i < 3) == (j < 3);
+                m.set(i, j, if same { 0.1 } else { 10.0 });
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn agglomerative_finds_blobs() {
+        let c = agglomerative(&blob_dist(), 1.0);
+        assert_eq!(c.n_clusters, 2);
+        assert_eq!(c.assignment[0], c.assignment[1]);
+        assert_eq!(c.assignment[0], c.assignment[2]);
+        assert_eq!(c.assignment[3], c.assignment[4]);
+        assert_ne!(c.assignment[0], c.assignment[3]);
+    }
+
+    #[test]
+    fn agglomerative_tight_threshold_keeps_singletons() {
+        let c = agglomerative(&blob_dist(), 0.05);
+        assert_eq!(c.n_clusters, 5);
+    }
+
+    #[test]
+    fn agglomerative_loose_threshold_merges_all() {
+        let c = agglomerative(&blob_dist(), 100.0);
+        assert_eq!(c.n_clusters, 1);
+    }
+
+    #[test]
+    fn target_search_hits_requested_count() {
+        let d = blob_dist();
+        for target in 1..=5 {
+            let c = agglomerative_target(&d, target);
+            assert_eq!(c.n_clusters, target, "target {target}");
+        }
+        // blob structure respected at the natural count
+        let c = agglomerative_target(&d, 2);
+        assert_eq!(c.assignment[0], c.assignment[2]);
+        assert_ne!(c.assignment[0], c.assignment[4]);
+    }
+
+    #[test]
+    fn complete_linkage_respects_cap() {
+        // chain: 0-1 close, 1-2 close, 0-2 far. single linkage would merge
+        // all three; complete linkage must not put 0 and 2 together with a
+        // cap below d(0,2).
+        let mut m = DistMatrix::new(3);
+        m.set(0, 1, 1.0);
+        m.set(1, 2, 1.0);
+        m.set(0, 2, 9.0);
+        let c = agglomerative(&m, 2.0);
+        assert_eq!(c.n_clusters, 2);
+        assert_ne!(c.assignment[0], c.assignment[2]);
+    }
+
+    #[test]
+    fn dsatur_finds_blobs() {
+        let c = dsatur(&blob_dist(), 1.0);
+        assert_eq!(c.n_clusters, 2);
+        assert_eq!(c.assignment[0], c.assignment[1]);
+        assert_ne!(c.assignment[0], c.assignment[4]);
+    }
+
+    #[test]
+    fn dsatur_target_hits_count() {
+        assert_eq!(dsatur_target(&blob_dist(), 2).n_clusters, 2);
+        assert_eq!(dsatur_target(&blob_dist(), 5).n_clusters, 5);
+    }
+
+    #[test]
+    fn kmeans_separates_blobs() {
+        let feats: Vec<Vec<f32>> = vec![
+            vec![0.0, 0.1],
+            vec![0.1, 0.0],
+            vec![0.05, 0.05],
+            vec![5.0, 5.0],
+            vec![5.1, 4.9],
+        ];
+        let c = kmeans(&feats, 2, 3, 50);
+        assert_eq!(c.n_clusters, 2);
+        assert_eq!(c.assignment[0], c.assignment[1]);
+        assert_eq!(c.assignment[3], c.assignment[4]);
+        assert_ne!(c.assignment[0], c.assignment[3]);
+    }
+
+    #[test]
+    fn clustering_members_partition() {
+        let c = agglomerative(&blob_dist(), 1.0);
+        let mut all: Vec<usize> = c.clusters().into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn combine_matches_eq10_signs() {
+        // higher coactivation must *reduce* distance
+        let mut fro = DistMatrix::new(2);
+        fro.set(0, 1, 1.0);
+        let mut co = DistMatrix::new(2);
+        co.set(0, 1, 0.5);
+        let d = DistMatrix::combine(&fro, &co, 1.0, 1.0);
+        assert!((d.get(0, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let m = DistMatrix::new(0);
+        assert_eq!(agglomerative(&m, 1.0).n_clusters, 0);
+        let m1 = DistMatrix::new(1);
+        let c = agglomerative(&m1, 1.0);
+        assert_eq!(c.n_clusters, 1);
+        assert_eq!(dsatur(&m1, 1.0).n_clusters, 1);
+    }
+}

@@ -1,0 +1,207 @@
+//! Coactivation statistics a_{i,j} (paper Eq. 10) and expert-load
+//! accounting, accumulated from the `router_probe` artifact over
+//! calibration batches.
+//!
+//! For every token the router selects a top-k set T (Eq. 2);
+//! `a[i][j]` counts how often experts i and j appear in T *together*.
+//! The paper normalises a_{i,j} by the total coactivations in the layer
+//! (footnote 4); [`CoactivationStats::normalized`] reproduces that.
+//! Expert load (Σ router prob mass) doubles as the gate-statistic pruning
+//! baseline (Koishekenov et al. 2023).
+
+use crate::model::ParamSet;
+use crate::runtime::{self, ModelBundle};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct CoactivationStats {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Raw coactivation counts per layer: \[L\]\[E×E\] row-major.
+    pub counts: Vec<Vec<f64>>,
+    /// Total router probability mass per expert per layer: \[L\]\[E\].
+    pub load: Vec<Vec<f64>>,
+    /// Top-1 selection counts per expert per layer: \[L\]\[E\].
+    pub top1: Vec<Vec<f64>>,
+    pub tokens_seen: usize,
+}
+
+impl CoactivationStats {
+    pub fn new(n_layers: usize, n_experts: usize) -> CoactivationStats {
+        CoactivationStats {
+            n_layers,
+            n_experts,
+            counts: vec![vec![0.0; n_experts * n_experts]; n_layers],
+            load: vec![vec![0.0; n_experts]; n_layers],
+            top1: vec![vec![0.0; n_experts]; n_layers],
+            tokens_seen: 0,
+        }
+    }
+
+    /// Accumulate one `router_probe` output: probs \[L, T, E\], using the
+    /// paper's top-k routing rule to recover the selected set per token.
+    pub fn accumulate(&mut self, probs: &Tensor, top_k: usize) {
+        let shape = probs.shape();
+        assert_eq!(shape.len(), 3);
+        let (l, t, e) = (shape[0], shape[1], shape[2]);
+        assert_eq!(l, self.n_layers);
+        assert_eq!(e, self.n_experts);
+        let data = probs.data();
+        for layer in 0..l {
+            for tok in 0..t {
+                let row = &data[(layer * t + tok) * e..(layer * t + tok + 1) * e];
+                // top-k by partial selection (k is 1-2; simple scan)
+                let mut sel: Vec<usize> = Vec::with_capacity(top_k);
+                let mut used = vec![false; e];
+                for _ in 0..top_k.min(e) {
+                    let mut best = usize::MAX;
+                    let mut best_v = f32::NEG_INFINITY;
+                    for i in 0..e {
+                        if !used[i] && row[i] > best_v {
+                            best = i;
+                            best_v = row[i];
+                        }
+                    }
+                    used[best] = true;
+                    sel.push(best);
+                }
+                self.top1[layer][sel[0]] += 1.0;
+                for &i in &sel {
+                    self.load[layer][i] += row[i] as f64;
+                    for &j in &sel {
+                        if i != j {
+                            self.counts[layer][i * e + j] += 1.0;
+                        }
+                    }
+                }
+            }
+            }
+        self.tokens_seen += shape[1];
+    }
+
+    /// Normalised coactivation â_{i,j} per layer (divide by the layer's
+    /// total coactivations — paper footnote 4). Returned as symmetric
+    /// matrices usable as similarity terms in Eq. 10.
+    pub fn normalized(&self) -> Vec<crate::cluster::DistMatrix> {
+        let e = self.n_experts;
+        self.counts
+            .iter()
+            .map(|c| {
+                let total: f64 = c.iter().sum();
+                let mut m = crate::cluster::DistMatrix::new(e);
+                if total > 0.0 {
+                    for i in 0..e {
+                        for j in 0..e {
+                            m.d[i * e + j] = c[i * e + j] / total;
+                        }
+                    }
+                }
+                m
+            })
+            .collect()
+    }
+
+    /// Expert load share per layer (sums to ~1 over experts).
+    pub fn load_share(&self, layer: usize) -> Vec<f64> {
+        let total: f64 = self.load[layer].iter().sum();
+        self.load[layer]
+            .iter()
+            .map(|&x| if total > 0.0 { x / total } else { 0.0 })
+            .collect()
+    }
+}
+
+/// Run the `router_probe` artifact over `n_batches` calibration batches
+/// and accumulate coactivation statistics.
+pub fn collect(
+    bundle: &ModelBundle,
+    params: &ParamSet,
+    gen: &mut crate::data::CorpusGenerator,
+    n_batches: usize,
+) -> Result<CoactivationStats> {
+    let cfg = &bundle.config;
+    let art = bundle.artifact("router_probe")?;
+    let mut stats = CoactivationStats::new(cfg.n_layers, cfg.n_experts);
+    let param_lits = runtime::params_to_literals(params)?;
+    let mask_lit = runtime::expert_mask_literal(params)?;
+    for _ in 0..n_batches {
+        let (tokens, _targets) = gen.batch(cfg.eval_batch);
+        let tok_lit = runtime::int_tensor_to_literal(&tokens)?;
+        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+        args.push(&mask_lit);
+        args.push(&tok_lit);
+        let outs = art.run_ref(&args)?;
+        let probs = runtime::literal_to_tensor(&outs[0])?;
+        stats.accumulate(&probs, cfg.top_k);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_counts_topk_pairs() {
+        // 1 layer, 3 experts, 2 tokens, top-2.
+        // tok0 probs: e0=0.5 e1=0.4 e2=0.1 → select {0,1}
+        // tok1 probs: e0=0.1 e1=0.2 e2=0.7 → select {2,1}
+        let probs = Tensor::new(
+            &[1, 2, 3],
+            vec![0.5, 0.4, 0.1, 0.1, 0.2, 0.7],
+        )
+        .unwrap();
+        let mut s = CoactivationStats::new(1, 3);
+        s.accumulate(&probs, 2);
+        let c = &s.counts[0];
+        assert_eq!(c[0 * 3 + 1], 1.0);
+        assert_eq!(c[1 * 3 + 0], 1.0);
+        assert_eq!(c[1 * 3 + 2], 1.0);
+        assert_eq!(c[2 * 3 + 1], 1.0);
+        assert_eq!(c[0 * 3 + 2], 0.0);
+        // load of e1 got prob mass from both tokens
+        assert!((s.load[0][1] - (0.4 + 0.2)).abs() < 1e-6);
+        // top1: e0 once, e2 once
+        assert_eq!(s.top1[0][0], 1.0);
+        assert_eq!(s.top1[0][2], 1.0);
+        assert_eq!(s.top1[0][1], 0.0);
+    }
+
+    #[test]
+    fn normalized_sums_to_one() {
+        let probs = Tensor::new(
+            &[1, 2, 3],
+            vec![0.5, 0.4, 0.1, 0.1, 0.2, 0.7],
+        )
+        .unwrap();
+        let mut s = CoactivationStats::new(1, 3);
+        s.accumulate(&probs, 2);
+        let norm = s.normalized();
+        let total: f64 = norm[0].d.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // symmetric
+        assert_eq!(norm[0].get(0, 1), norm[0].get(1, 0));
+    }
+
+    #[test]
+    fn load_share_normalises() {
+        let probs = Tensor::new(&[1, 1, 2], vec![0.9, 0.1]).unwrap();
+        let mut s = CoactivationStats::new(1, 2);
+        s.accumulate(&probs, 2);
+        let share = s.load_share(0);
+        assert!((share.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(share[0] > share[1]);
+    }
+
+    #[test]
+    fn top1_only_when_k1() {
+        let probs = Tensor::new(&[1, 2, 3], vec![0.8, 0.1, 0.1, 0.2, 0.3, 0.5]).unwrap();
+        let mut s = CoactivationStats::new(1, 3);
+        s.accumulate(&probs, 1);
+        // no pairs with k=1
+        assert!(s.counts[0].iter().all(|&x| x == 0.0));
+        assert_eq!(s.top1[0][0], 1.0);
+        assert_eq!(s.top1[0][2], 1.0);
+    }
+}

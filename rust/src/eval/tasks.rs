@@ -1,0 +1,447 @@
+//! Synthetic evaluation suite — proxies for the paper's benchmark columns.
+//!
+//! Every task is built from the *same* language generators as the training
+//! corpus (`data::CorpusGenerator`) with held-out seeds, so a trained model
+//! performs meaningfully above chance and pruning damage is measurable.
+//! Mapping to the paper's columns (Tables 1–2):
+//!
+//! | paper        | proxy                   | format                         |
+//! |--------------|-------------------------|--------------------------------|
+//! | GSM8K        | `arith_gen`             | generative exact-match         |
+//! | ARC-c        | `arc_like`              | 4-way MC, Markov continuation  |
+//! | ARC-e        | `copy_like`             | 4-way MC, easier continuation  |
+//! | HellaSwag    | `hella_like`            | 4-way MC, pattern completion   |
+//! | MMLU         | `mmlu_like`             | 4-way MC, arithmetic result    |
+//! | BoolQ        | `boolq_like`            | 2-way MC, equation verification|
+//! | OBQA         | `obqa_like`             | 4-way MC, kv retrieval         |
+//! | RTE          | `rte_like`              | 2-way MC, chain consistency    |
+//! | WinoGrande   | `wino_like`             | 2-way MC, referent binding     |
+//!
+//! Multiple-choice items are scored by length-normalised continuation
+//! log-likelihood, the lm-evaluation-harness rule (`eval::EvalHarness`).
+
+use crate::data::{CorpusConfig, CorpusGenerator, Domain, A_TOK, PERIOD, SEMI};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    ArithGen,
+    ArcLike,
+    CopyLike,
+    HellaLike,
+    MmluLike,
+    BoolqLike,
+    ObqaLike,
+    RteLike,
+    WinoLike,
+}
+
+impl TaskKind {
+    pub fn all_mc() -> Vec<TaskKind> {
+        use TaskKind::*;
+        vec![
+            ArcLike, CopyLike, HellaLike, MmluLike, BoolqLike, ObqaLike, RteLike,
+            WinoLike,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::ArithGen => "gen(GSM8K-proxy)",
+            TaskKind::ArcLike => "arc-c*",
+            TaskKind::CopyLike => "arc-e*",
+            TaskKind::HellaLike => "hellaswag*",
+            TaskKind::MmluLike => "mmlu*",
+            TaskKind::BoolqLike => "boolq*",
+            TaskKind::ObqaLike => "obqa*",
+            TaskKind::RteLike => "rte*",
+            TaskKind::WinoLike => "winogrande*",
+        }
+    }
+
+    /// Random-guess accuracy (for "below chance" checks like the paper's
+    /// ARC-c observation at 65% sparsity).
+    pub fn chance(&self) -> f64 {
+        match self {
+            TaskKind::ArithGen => 0.0,
+            TaskKind::BoolqLike | TaskKind::RteLike | TaskKind::WinoLike => 0.5,
+            _ => 0.25,
+        }
+    }
+}
+
+/// Multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub prompt: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+/// Generative item (exact-match on the produced answer tokens).
+#[derive(Clone, Debug)]
+pub struct GenItem {
+    pub prompt: Vec<i32>,
+    pub answer: Vec<i32>,
+}
+
+/// Task suite generator; seeds are offset from the corpus seed so eval
+/// items never appear verbatim in training batches.
+pub struct TaskSuite {
+    gen: CorpusGenerator,
+    rng: Rng,
+}
+
+impl TaskSuite {
+    pub fn new(vocab: usize, seq: usize, seed: u64) -> TaskSuite {
+        TaskSuite {
+            gen: CorpusGenerator::new(CorpusConfig::for_vocab(vocab, seq, seed ^ 0xEA71)),
+            rng: Rng::new(seed ^ 0x7A5C),
+        }
+    }
+
+    /// Generative GSM8K-proxy: a 50/50 mix of multi-token retrieval
+    /// generation (`? k → v ;`) and arithmetic generation (`= ? A sum ;`).
+    /// Like GSM8K it is generative exact-match over several skills, so
+    /// per-token damage compounds — the failure mode the paper leans on.
+    pub fn gen_items(&mut self, n: usize) -> Vec<GenItem> {
+        (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    let (toks, _v) = self.gen.kv_problem();
+                    let arrow =
+                        toks.iter().position(|&t| t == crate::data::ARROW).unwrap();
+                    GenItem {
+                        prompt: toks[..=arrow].to_vec(),
+                        answer: toks[arrow + 1..].to_vec(), // value word + SEMI
+                    }
+                } else {
+                    let (toks, _val) = self.gen.arith_problem();
+                    let a_pos = toks.iter().position(|&t| t == A_TOK).unwrap();
+                    GenItem {
+                        prompt: toks[..=a_pos].to_vec(),
+                        answer: toks[a_pos + 1..].to_vec(), // digits + SEMI
+                    }
+                }
+            })
+            .collect()
+    }
+
+    pub fn mc_items(&mut self, kind: TaskKind, n: usize) -> Vec<McItem> {
+        (0..n).map(|_| self.mc_item(kind)).collect()
+    }
+
+    fn mc_item(&mut self, kind: TaskKind) -> McItem {
+        match kind {
+            TaskKind::ArithGen => unreachable!("generative task"),
+            TaskKind::ArcLike => self.markov_choice(4, 1),
+            TaskKind::CopyLike => self.markov_choice(4, 0),
+            TaskKind::HellaLike => self.pattern_completion(),
+            TaskKind::MmluLike => self.arith_choice(4),
+            TaskKind::BoolqLike => self.arith_choice(2),
+            TaskKind::ObqaLike => self.kv_choice(4),
+            TaskKind::RteLike => self.chain_consistency(),
+            TaskKind::WinoLike => self.kv_choice(2),
+        }
+    }
+
+    /// Markov continuation: prompt = chain prefix; correct choice = a true
+    /// successor `depth` steps deeper in typicality; distractors = words
+    /// that are *not* successors of the last prompt word.
+    fn markov_choice(&mut self, n_choices: usize, depth: usize) -> McItem {
+        let tok = &self.gen.tok;
+        let n_words = tok.n_words();
+        loop {
+            let sent = self.gen.markov_sentence();
+            // last word token before PERIOD
+            if sent.len() < 4 {
+                continue;
+            }
+            let last = sent[sent.len() - 2];
+            let w = (last - crate::data::WORD0) as usize;
+            let mut succ: Vec<usize> = self.gen.successors_of(w).to_vec();
+            if depth > 0 {
+                // go one level deeper: successor of a successor (still
+                // higher-likelihood than a random word, but subtler)
+                let s0 = succ[self.rng.below(succ.len())];
+                succ = self.gen.successors_of(s0).to_vec();
+                // exclude direct successors so the signal is depth-2 only
+            }
+            let correct_w = succ[self.rng.below(succ.len())];
+            let direct: std::collections::HashSet<usize> =
+                self.gen.successors_of(w).iter().copied().collect();
+            let mut used = std::collections::HashSet::from([correct_w]);
+            let mut choices = vec![vec![self.gen.tok.word(correct_w)]];
+            let mut guard = 0;
+            while choices.len() < n_choices {
+                let d = self.rng.below(n_words);
+                guard += 1;
+                if guard > 1000 {
+                    break;
+                }
+                if used.contains(&d) || direct.contains(&d) {
+                    continue;
+                }
+                used.insert(d);
+                choices.push(vec![self.gen.tok.word(d)]);
+            }
+            if choices.len() < n_choices {
+                continue;
+            }
+            return self.shuffle_into_item(sent[..sent.len() - 1].to_vec(), choices);
+        }
+    }
+
+    /// Pattern completion: prompt `w_a w_{a+1}`, correct continuation
+    /// `w_a .` (the training template), distractors other words.
+    fn pattern_completion(&mut self) -> McItem {
+        let n_words = self.gen.tok.n_words();
+        let a = self.rng.below(n_words - 1);
+        let prompt = vec![self.gen.tok.word(a), self.gen.tok.word(a + 1)];
+        let mut used = std::collections::HashSet::from([a]);
+        let mut choices = vec![vec![self.gen.tok.word(a), PERIOD]];
+        while choices.len() < 4 {
+            let d = self.rng.below(n_words);
+            if used.contains(&d) {
+                continue;
+            }
+            used.insert(d);
+            choices.push(vec![self.gen.tok.word(d), PERIOD]);
+        }
+        self.shuffle_into_item(prompt, choices)
+    }
+
+    /// Arithmetic MC: `Q a + b = ? A` → choices are candidate digit
+    /// strings (correct vs off-by-{1,2,10}).
+    fn arith_choice(&mut self, n_choices: usize) -> McItem {
+        let (toks, val) = self.gen.arith_problem();
+        let a_pos = toks.iter().position(|&t| t == A_TOK).unwrap();
+        let prompt = toks[..=a_pos].to_vec();
+        let mut vals = vec![val];
+        let offsets = [1isize, -1, 10, -10, 2, 11];
+        let mut i = 0;
+        while vals.len() < n_choices && i < offsets.len() {
+            let v = val as isize + offsets[i];
+            i += 1;
+            if v >= 0 && !vals.contains(&(v as usize)) {
+                vals.push(v as usize);
+            }
+        }
+        let choices: Vec<Vec<i32>> = vals
+            .into_iter()
+            .map(|v| {
+                let mut c = self.gen.tok.number(v);
+                c.push(SEMI);
+                c
+            })
+            .collect();
+        self.shuffle_into_item(prompt, choices)
+    }
+
+    /// KV retrieval MC: context shows bindings; question probes one key;
+    /// distractors are values of *other* keys.
+    fn kv_choice(&mut self, n_choices: usize) -> McItem {
+        let (toks, v) = self.gen.kv_problem();
+        // prompt ends right after ARROW
+        let arrow = toks.iter().position(|&t| t == crate::data::ARROW).unwrap();
+        let prompt = toks[..=arrow].to_vec();
+        let mut vals = vec![v];
+        let mut guard = 0;
+        while vals.len() < n_choices {
+            let k = self.rng.below(self.gen.cfg.n_keys);
+            let other = self.gen.kv_value(k);
+            guard += 1;
+            if guard > 1000 {
+                // fall back to arbitrary words
+                let w = self.rng.below(self.gen.tok.n_words());
+                if !vals.contains(&w) {
+                    vals.push(w);
+                }
+                continue;
+            }
+            if !vals.contains(&other) {
+                vals.push(other);
+            }
+        }
+        let choices: Vec<Vec<i32>> = vals
+            .into_iter()
+            .map(|w| vec![self.gen.tok.word(w), SEMI])
+            .collect();
+        self.shuffle_into_item(prompt, choices)
+    }
+
+    /// Chain consistency (RTE proxy): prompt = markov prefix; choice A =
+    /// two more *valid chain* tokens, choice B = two random tokens.
+    fn chain_consistency(&mut self) -> McItem {
+        let n_words = self.gen.tok.n_words();
+        let sent = self.gen.markov_sentence();
+        let last = sent[sent.len() - 2];
+        let w = (last - crate::data::WORD0) as usize;
+        let s1 = {
+            let succ = self.gen.successors_of(w);
+            succ[self.rng.below(succ.len())]
+        };
+        let s2 = {
+            let succ = self.gen.successors_of(s1);
+            succ[self.rng.below(succ.len())]
+        };
+        let good = vec![self.gen.tok.word(s1), self.gen.tok.word(s2)];
+        let direct: std::collections::HashSet<usize> =
+            self.gen.successors_of(w).iter().copied().collect();
+        let mut r1 = self.rng.below(n_words);
+        let mut guard = 0;
+        while direct.contains(&r1) && guard < 1000 {
+            r1 = self.rng.below(n_words);
+            guard += 1;
+        }
+        let r2 = self.rng.below(n_words);
+        let bad = vec![self.gen.tok.word(r1), self.gen.tok.word(r2)];
+        self.shuffle_into_item(sent[..sent.len() - 1].to_vec(), vec![good, bad])
+    }
+
+    fn shuffle_into_item(&mut self, prompt: Vec<i32>, mut choices: Vec<Vec<i32>>) -> McItem {
+        // choices[0] is correct; shuffle and track it
+        let n = choices.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let correct = order.iter().position(|&o| o == 0).unwrap();
+        let shuffled: Vec<Vec<i32>> = order.into_iter().map(|o| std::mem::take(&mut choices[o])).collect();
+        McItem {
+            prompt,
+            choices: shuffled,
+            correct,
+        }
+    }
+
+    /// Few-shot prefix for the generative task (the paper evaluates GSM8K
+    /// 5-shot): `shots` solved problems (alternating domains) before the
+    /// prompt.
+    pub fn few_shot_prefix(&mut self, shots: usize) -> Vec<i32> {
+        let mut prefix = vec![crate::data::BOS];
+        for i in 0..shots {
+            let toks = if i % 2 == 0 {
+                self.gen.kv_problem().0
+            } else {
+                self.gen.arith_problem().0
+            };
+            prefix.extend(toks);
+        }
+        prefix
+    }
+
+    /// Perplexity eval stream (held-out corpus batches).
+    pub fn eval_corpus(&mut self) -> &mut CorpusGenerator {
+        &mut self.gen
+    }
+
+    /// Direct access for tests.
+    pub fn sentence(&mut self, d: Domain) -> Vec<i32> {
+        self.gen.sentence(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn suite() -> TaskSuite {
+        TaskSuite::new(256, 64, 99)
+    }
+
+    #[test]
+    fn gen_items_prompt_ends_with_answer_cue() {
+        let mut s = suite();
+        let items = s.gen_items(20);
+        let mut kv = 0;
+        let mut arith = 0;
+        for item in &items {
+            let last = *item.prompt.last().unwrap();
+            assert!(last == A_TOK || last == crate::data::ARROW);
+            if last == A_TOK {
+                arith += 1;
+                assert!(item.prompt.iter().any(|&t| t == crate::data::EQ));
+            } else {
+                kv += 1;
+            }
+            assert_eq!(*item.answer.last().unwrap(), SEMI);
+            assert!(item.prompt.iter().any(|&t| t == crate::data::QMARK));
+        }
+        assert_eq!(kv, 10);
+        assert_eq!(arith, 10);
+    }
+
+    #[test]
+    fn mc_items_have_valid_correct_index() {
+        let mut s = suite();
+        for kind in TaskKind::all_mc() {
+            for item in s.mc_items(kind, 10) {
+                assert!(item.correct < item.choices.len(), "{kind:?}");
+                assert!(!item.prompt.is_empty());
+                for c in &item.choices {
+                    assert!(!c.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn choice_counts_match_kind() {
+        let mut s = suite();
+        assert_eq!(s.mc_items(TaskKind::MmluLike, 5)[0].choices.len(), 4);
+        assert_eq!(s.mc_items(TaskKind::BoolqLike, 5)[0].choices.len(), 2);
+        assert_eq!(s.mc_items(TaskKind::WinoLike, 5)[0].choices.len(), 2);
+    }
+
+    #[test]
+    fn mc_choices_are_distinct() {
+        let mut s = suite();
+        for kind in TaskKind::all_mc() {
+            for item in s.mc_items(kind, 10) {
+                let mut set = std::collections::HashSet::new();
+                for c in &item.choices {
+                    assert!(set.insert(c.clone()), "{kind:?} duplicate choice");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_correct_choice_is_true_binding() {
+        let mut s = suite();
+        for item in s.mc_items(TaskKind::ObqaLike, 20) {
+            // prompt: ... ? <key> →
+            let key_tok = item.prompt[item.prompt.len() - 2];
+            let k = (key_tok - crate::data::WORD0) as usize;
+            let expect = s.gen.tok.word(s.gen.kv_value(k));
+            assert_eq!(item.choices[item.correct][0], expect);
+        }
+    }
+
+    #[test]
+    fn few_shot_prefix_contains_shots() {
+        let mut s = suite();
+        let p = s.few_shot_prefix(4);
+        // alternating kv / arith examples
+        assert_eq!(p.iter().filter(|&&t| t == crate::data::Q_TOK).count(), 2);
+        assert_eq!(p.iter().filter(|&&t| t == crate::data::K_TOK).count(), 2);
+        assert_eq!(p[0], crate::data::BOS);
+    }
+
+    #[test]
+    fn suites_are_deterministic_per_seed() {
+        let mut a = TaskSuite::new(256, 64, 5);
+        let mut b = TaskSuite::new(256, 64, 5);
+        let ia = a.mc_items(TaskKind::MmluLike, 5);
+        let ib = b.mc_items(TaskKind::MmluLike, 5);
+        for (x, y) in ia.iter().zip(&ib) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn chance_levels() {
+        assert_eq!(TaskKind::MmluLike.chance(), 0.25);
+        assert_eq!(TaskKind::BoolqLike.chance(), 0.5);
+    }
+}

@@ -1,0 +1,61 @@
+//! # stun — Structured-Then-UNstructured pruning for MoE LLMs
+//!
+//! Full-system reproduction of *STUN: Structured-Then-Unstructured Pruning
+//! for Scalable MoE Pruning* (Lee et al., ACL 2025) on a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the pruning pipeline and serving coordinator:
+//!   behavioural-similarity clustering, the O(1) greedy expert pruner with
+//!   selective reconstruction, Wanda/OWL unstructured pruning, the
+//!   combinatorial baseline, the evaluation harness, a synthetic-corpus
+//!   trainer, and a batching server demonstrating the deployment win.
+//! * **L2 (python/compile/model.py)** — the MoE transformer compute graph,
+//!   AOT-lowered to HLO text artifacts this crate executes via PJRT.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the MoE FFN
+//!   hot-spot, masked matmul, and Wanda scoring.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! graphs once, then everything in this crate is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use stun::prelude::*;
+//!
+//! let engine = Engine::new()?;
+//! let bundle = ModelBundle::load(&engine, "artifacts/tiny")?;
+//! let mut params = ParamSet::init(&bundle.config, 42);
+//! // ... train, prune, evaluate: see examples/e2e_stun.rs
+//! # anyhow::Ok(())
+//! ```
+
+pub mod checkpoint;
+pub mod cluster;
+pub mod coactivation;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::checkpoint::Checkpoint;
+    pub use crate::cluster::{agglomerative, dsatur, kmeans, Clustering};
+    pub use crate::coactivation::CoactivationStats;
+    pub use crate::data::{CorpusConfig, CorpusGenerator, Tokenizer};
+    pub use crate::eval::{EvalHarness, EvalReport, TaskKind, TaskSuite};
+    pub use crate::model::{ModelConfig, ParamSet};
+    pub use crate::pruning::expert::{ExpertPruneConfig, ExpertPruner};
+    pub use crate::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
+    pub use crate::pruning::StunPipeline;
+    pub use crate::runtime::{Engine, ModelBundle};
+    pub use crate::tensor::Tensor;
+    pub use crate::train::{TrainConfig, Trainer};
+    pub use anyhow::{anyhow, bail, Context, Result};
+}

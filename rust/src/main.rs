@@ -1,0 +1,299 @@
+//! `stun` — CLI for the STUN MoE-pruning system.
+//!
+//! ```text
+//! stun info                                   # platform + artifact inventory
+//! stun train  --config moe-8x --steps 300    # train on the synthetic corpus
+//! stun prune  --config moe-8x --ratio 0.25   # expert pruning only (stage 1)
+//! stun stun   --config moe-8x --sparsity 0.4 # full STUN pipeline
+//! stun eval   --config moe-8x [--ckpt f.stz] # task-suite evaluation
+//! stun serve  --config moe-8x --requests 32  # batching server demo
+//! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
+//! stun sample --n 5                          # show synthetic-corpus samples
+//! ```
+
+use anyhow::{bail, Result};
+use stun::data::{CorpusConfig, CorpusGenerator};
+use stun::model::ParamSet;
+use stun::pruning::expert::{ExpertPruneConfig, ExpertPruner};
+use stun::pruning::unstructured::UnstructuredConfig;
+use stun::pruning::StunPipeline;
+use stun::report::{self, Protocol};
+use stun::runtime::Engine;
+use stun::train::{self, TrainConfig, Trainer};
+use stun::util::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "info" => info(&args),
+        "train" => cmd_train(&args),
+        "prune" => cmd_prune(&args),
+        "stun" => cmd_stun(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
+        "sample" => cmd_sample(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `stun help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "{}",
+        include_str!("main.rs")
+            .lines()
+            .skip(1)
+            .take_while(|l| l.starts_with("//!"))
+            .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+fn proto_from(args: &Args) -> Result<Protocol> {
+    let mut p = Protocol::from_env();
+    if args.has("quick") {
+        p = Protocol::quick();
+    }
+    p.train_steps = args.usize_or("steps", p.train_steps)?;
+    p.n_mc = args.usize_or("n-mc", p.n_mc)?;
+    p.n_gen = args.usize_or("n-gen", p.n_gen)?;
+    p.calib_batches = args.usize_or("calib", p.calib_batches)?;
+    p.retrain = args.has("retrain");
+    Ok(p)
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let engine = Engine::new()?;
+    println!("platform: {}", engine.platform());
+    for config in ["tiny", "moe-32x", "moe-8x", "moe-4l", "dense"] {
+        match report::load_bundle(&engine, config) {
+            Ok(b) => println!(
+                "  {config:8} params={:>9}  experts={}x{}  artifacts={}",
+                b.config.param_count(),
+                b.config.n_layers,
+                b.config.n_experts,
+                b.artifact_names().len()
+            ),
+            Err(_) => println!("  {config:8} (artifacts missing — run `make artifacts`)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let engine = Engine::new()?;
+    let bundle = report::load_bundle(&engine, &config)?;
+    let steps = args.usize_or("steps", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut params = ParamSet::init(&bundle.config, seed);
+    let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+        bundle.config.vocab,
+        bundle.config.seq,
+        seed,
+    ));
+    let trainer = Trainer::new(TrainConfig {
+        steps,
+        lr: args.f64_or("lr", 5e-3)?,
+        ..Default::default()
+    });
+    let log = trainer.train(&bundle, &mut params, &mut gen)?;
+    println!("loss curve:\n{}", log.render());
+    println!(
+        "trained {} for {steps} steps in {:.1}s ({:.2} steps/s)",
+        config,
+        log.seconds,
+        steps as f64 / log.seconds
+    );
+    let out = args.str_or("out", &format!("runs/{config}-s{steps}.stz"));
+    train::save_run(&params, &log, &out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn load_params(args: &Args, bundle: &stun::runtime::ModelBundle) -> Result<ParamSet> {
+    match args.str_opt("ckpt") {
+        Some(path) => train::load_run(&bundle.config, path),
+        None => Ok(ParamSet::init(&bundle.config, 42)),
+    }
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let engine = Engine::new()?;
+    let bundle = report::load_bundle(&engine, &config)?;
+    let mut params = load_params(args, &bundle)?;
+    let cfg = ExpertPruneConfig {
+        ratio: args.f64_or("ratio", 0.25)?,
+        lambda1: args.f64_or("lambda1", 1.0)?,
+        lambda2: args.f64_or("lambda2", 0.0)?,
+        kappa: args.usize_or("kappa", 3)?,
+        ..Default::default()
+    };
+    let coact = if cfg.lambda2 != 0.0 {
+        let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+            bundle.config.vocab,
+            bundle.config.seq,
+            4242,
+        ));
+        Some(stun::coactivation::collect(
+            &bundle,
+            &params,
+            &mut gen,
+            args.usize_or("calib", 8)?,
+        )?)
+    } else {
+        None
+    };
+    let report = ExpertPruner::prune(&mut params, coact.as_ref(), &cfg);
+    println!(
+        "pruned {} experts ({} fwd passes for the decision)",
+        report.experts_pruned, report.decision_forward_passes
+    );
+    for l in &report.layers {
+        println!(
+            "  layer {}: clusters={} pruned={:?}",
+            l.layer, l.clustering.n_clusters, l.pruned
+        );
+    }
+    println!("sparsity: {:.1}%", params.overall_sparsity() * 100.0);
+    if let Some(out) = args.str_opt("out") {
+        params
+            .to_checkpoint(&format!(r#"{{"pruned":"expert","config":"{config}"}}"#))
+            .save(out)?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_stun(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let engine = Engine::new()?;
+    let bundle = report::load_bundle(&engine, &config)?;
+    let mut params = load_params(args, &bundle)?;
+    let pipeline = StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: args.f64_or("expert-ratio", 0.25)?,
+            lambda2: args.f64_or("lambda2", 0.0)?,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: args.f64_or("sparsity", 0.4)?,
+        calib_batches: args.usize_or("calib", 8)?,
+    };
+    let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+        bundle.config.vocab,
+        bundle.config.seq,
+        4242,
+    ));
+    let report = pipeline.run(&bundle, &mut params, &mut gen)?;
+    println!(
+        "expert stage: {:.1}% sparsity; unstructured rate {:.1}%; final {:.1}%",
+        report.expert_stage_sparsity * 100.0,
+        report.unstructured_rate * 100.0,
+        report.final_sparsity * 100.0
+    );
+    if let Some(out) = args.str_opt("out") {
+        params
+            .to_checkpoint(&format!(r#"{{"pruned":"stun","config":"{config}"}}"#))
+            .save(out)?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let engine = Engine::new()?;
+    let bundle = report::load_bundle(&engine, &config)?;
+    let params = load_params(args, &bundle)?;
+    let proto = proto_from(args)?;
+    let h = stun::eval::EvalHarness::new(&bundle, &params)?;
+    let r = h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)?;
+    for (name, acc) in &r.rows {
+        println!("{name:<20} {acc:5.1}");
+    }
+    println!("{:<20} {:5.1}", "Avg(mc)", r.mc_average());
+    let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+        bundle.config.vocab,
+        bundle.config.seq,
+        proto.eval_seed ^ 0x99,
+    ));
+    println!("{:<20} {:5.2}", "perplexity", h.perplexity(&mut gen, 4)?);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = Engine::new()?;
+    let proto = proto_from(args)?;
+    let n = args.usize_or("requests", 32)?;
+    println!("{}", report::serving_report(&engine, &proto, n)?);
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let engine = Engine::new()?;
+    let proto = proto_from(args)?;
+    let run = |name: &str, engine: &Engine, proto: &Protocol| -> Result<()> {
+        let out = match name {
+            "fig1" => report::fig1(engine, proto)?,
+            "fig2" => report::fig2(engine, proto)?,
+            "fig3" => report::fig3(engine, proto)?,
+            "table1" => report::table1(engine, proto)?,
+            "table2" => report::table2(engine, proto)?,
+            "table3" => report::table3(engine, proto)?,
+            "kurtosis" => report::kurtosis_report(engine, proto)?,
+            "serving" => report::serving_report(engine, proto, 32)?,
+            other => bail!("unknown report '{other}'"),
+        };
+        println!("\n### {name}\n{out}");
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "table2", "table3", "kurtosis", "fig3", "fig1", "fig2", "table1", "serving",
+        ] {
+            run(name, &engine, &proto)?;
+        }
+        Ok(())
+    } else {
+        run(which, &engine, &proto)
+    }
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 5)?;
+    let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+        256,
+        64,
+        args.u64_or("seed", 7)?,
+    ));
+    for _ in 0..n {
+        let seq = gen.sequence();
+        println!("{}", gen.tok.render(&seq));
+    }
+    Ok(())
+}

@@ -1,0 +1,450 @@
+//! Model configuration + parameter store (the Rust mirror of
+//! `python/compile/model.py`'s layout contract).
+//!
+//! `ModelConfig` is parsed from `artifacts/<name>/manifest.json`;
+//! `param_specs` reproduces the exact flat ordering the AOT artifacts
+//! expect; `ParamSet` holds the live weights the pruning library operates
+//! on, along with the per-layer expert mask that encodes structured
+//! pruning decisions.
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_layers: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            seq: j.get("seq")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+        })
+    }
+
+    /// A small config for host-only unit tests (no artifacts needed).
+    pub fn test_tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 256,
+            seq: 64,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 64,
+            n_experts: 4,
+            top_k: 2,
+            n_layers: 2,
+            eval_batch: 8,
+            train_batch: 8,
+        }
+    }
+
+    /// Canonical flat parameter layout — must match python `param_specs`.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, f, e, v, s) = (
+            self.d_model,
+            self.d_ff,
+            self.n_experts,
+            self.vocab,
+            self.seq,
+        );
+        let mut specs: Vec<(String, Vec<usize>)> = vec![
+            ("embed".into(), vec![v, d]),
+            ("pos_embed".into(), vec![s, d]),
+        ];
+        for i in 0..self.n_layers {
+            specs.push((format!("layer{i}.ln1"), vec![d]));
+            specs.push((format!("layer{i}.wqkv"), vec![d, 3 * d]));
+            specs.push((format!("layer{i}.wo"), vec![d, d]));
+            specs.push((format!("layer{i}.ln2"), vec![d]));
+            specs.push((format!("layer{i}.router"), vec![e, d]));
+            specs.push((format!("layer{i}.w1"), vec![e, d, f]));
+            specs.push((format!("layer{i}.w2"), vec![e, f, d]));
+        }
+        specs.push(("ln_f".into(), vec![d]));
+        specs.push(("lm_head".into(), vec![d, v]));
+        specs
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Parameters per single expert (w1 + w2 slabs).
+    pub fn params_per_expert(&self) -> usize {
+        2 * self.d_model * self.d_ff
+    }
+
+    /// Total expert parameters across all layers.
+    pub fn expert_param_count(&self) -> usize {
+        self.n_layers * self.n_experts * self.params_per_expert()
+    }
+
+    /// Parameters eligible for unstructured pruning (attn + experts + head;
+    /// embeddings, norms, and routers are excluded as in the paper setups).
+    pub fn prunable_param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = d * 3 * d + d * d + self.n_experts * self.params_per_expert();
+        self.n_layers * per_layer + d * self.vocab
+    }
+}
+
+/// Live parameter store: tensors in canonical order + expert mask.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub config: ModelConfig,
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    tensors: Vec<Tensor>,
+    /// \[n_layers × n_experts\] 1.0 = alive, 0.0 = expert-pruned.
+    pub expert_mask: Tensor,
+}
+
+impl ParamSet {
+    /// Random init mirroring the python initializer (fan-in scaled normals,
+    /// ones for norm scales).
+    pub fn init(config: &ModelConfig, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::new();
+        let mut index = HashMap::new();
+        let mut tensors = Vec::new();
+        for (name, shape) in config.param_specs() {
+            let t = if name.ends_with(".ln1")
+                || name.ends_with(".ln2")
+                || name == "ln_f"
+            {
+                Tensor::ones(&shape)
+            } else {
+                Tensor::randn_scaled(&shape, &mut rng)
+            };
+            index.insert(name.clone(), tensors.len());
+            names.push(name);
+            tensors.push(t);
+        }
+        ParamSet {
+            config: config.clone(),
+            names,
+            index,
+            tensors,
+            expert_mask: Tensor::ones(&[config.n_layers, config.n_experts]),
+        }
+    }
+
+    /// Build from tensors in canonical order (e.g. returned by train_step).
+    pub fn from_tensors(config: &ModelConfig, tensors: Vec<Tensor>) -> Result<ParamSet> {
+        let specs = config.param_specs();
+        if tensors.len() != specs.len() {
+            bail!(
+                "expected {} tensors, got {}",
+                specs.len(),
+                tensors.len()
+            );
+        }
+        let mut names = Vec::new();
+        let mut index = HashMap::new();
+        for (i, ((name, shape), t)) in specs.iter().zip(&tensors).enumerate() {
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "tensor '{}' shape {:?} != spec {:?}",
+                    name,
+                    t.shape(),
+                    shape
+                );
+            }
+            index.insert(name.clone(), i);
+            names.push(name.clone());
+        }
+        Ok(ParamSet {
+            config: config.clone(),
+            names,
+            index,
+            tensors,
+            expert_mask: Tensor::ones(&[config.n_layers, config.n_experts]),
+        })
+    }
+
+    // --------------------------------------------------------------- access
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .with_context(|| format!("no param '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .with_context(|| format!("no param '{name}'"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn router(&self, layer: usize) -> &Tensor {
+        self.get(&format!("layer{layer}.router")).unwrap()
+    }
+
+    pub fn w1(&self, layer: usize) -> &Tensor {
+        self.get(&format!("layer{layer}.w1")).unwrap()
+    }
+
+    pub fn w2(&self, layer: usize) -> &Tensor {
+        self.get(&format!("layer{layer}.w2")).unwrap()
+    }
+
+    /// Flattened weights of one expert (w1 slab ++ w2 slab) — the θ_i the
+    /// paper clusters and averages.
+    pub fn expert_theta(&self, layer: usize, expert: usize) -> Vec<f32> {
+        let mut theta =
+            Vec::with_capacity(self.config.params_per_expert());
+        theta.extend_from_slice(self.w1(layer).subtensor(expert));
+        theta.extend_from_slice(self.w2(layer).subtensor(expert));
+        theta
+    }
+
+    /// Overwrite one expert's weights from a flat θ (w1 ++ w2).
+    pub fn set_expert_theta(&mut self, layer: usize, expert: usize, theta: &[f32]) {
+        let half = self.config.d_model * self.config.d_ff;
+        assert_eq!(theta.len(), 2 * half);
+        let w1 = self.get_mut(&format!("layer{layer}.w1")).unwrap();
+        w1.subtensor_mut(expert).copy_from_slice(&theta[..half]);
+        let w2 = self.get_mut(&format!("layer{layer}.w2")).unwrap();
+        w2.subtensor_mut(expert).copy_from_slice(&theta[half..]);
+    }
+
+    pub fn is_expert_alive(&self, layer: usize, expert: usize) -> bool {
+        self.expert_mask.at2(layer, expert) != 0.0
+    }
+
+    /// Mark an expert pruned: mask bit off + weights zeroed (so sparsity
+    /// accounting and kurtosis-of-live-weights see the removal).
+    pub fn prune_expert(&mut self, layer: usize, expert: usize) {
+        *self.expert_mask.at2_mut(layer, expert) = 0.0;
+        let w1 = self.get_mut(&format!("layer{layer}.w1")).unwrap();
+        w1.subtensor_mut(expert).fill(0.0);
+        let w2 = self.get_mut(&format!("layer{layer}.w2")).unwrap();
+        w2.subtensor_mut(expert).fill(0.0);
+    }
+
+    pub fn alive_experts(&self, layer: usize) -> Vec<usize> {
+        (0..self.config.n_experts)
+            .filter(|&e| self.is_expert_alive(layer, e))
+            .collect()
+    }
+
+    /// Names of weight matrices eligible for unstructured pruning.
+    pub fn prunable_names(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        for i in 0..self.config.n_layers {
+            v.push(format!("layer{i}.wqkv"));
+            v.push(format!("layer{i}.wo"));
+            v.push(format!("layer{i}.w1"));
+            v.push(format!("layer{i}.w2"));
+        }
+        v.push("lm_head".into());
+        v
+    }
+
+    /// Overall sparsity across prunable weights: zeros / total (includes
+    /// zeroed pruned-expert slabs — that's the paper's total sparsity).
+    pub fn overall_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for name in self.prunable_names() {
+            let t = self.get(&name).unwrap();
+            zeros += t.zero_count();
+            total += t.len();
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+
+    /// All live (non-zero) prunable weights concatenated — input for the
+    /// kurtosis robustness probe.
+    pub fn live_prunable_weights(&self) -> Vec<f32> {
+        let mut v = Vec::new();
+        for name in self.prunable_names() {
+            v.extend(self.get(&name).unwrap().data().iter().filter(|&&x| x != 0.0));
+        }
+        v
+    }
+
+    // --------------------------------------------------------- checkpoints
+
+    pub fn to_checkpoint(&self, meta: &str) -> crate::checkpoint::Checkpoint {
+        let mut c = crate::checkpoint::Checkpoint::new(meta);
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            c.push(name.clone(), t.clone()).unwrap();
+        }
+        c.push("__expert_mask__", self.expert_mask.clone()).unwrap();
+        c
+    }
+
+    pub fn from_checkpoint(
+        config: &ModelConfig,
+        ckpt: &crate::checkpoint::Checkpoint,
+    ) -> Result<ParamSet> {
+        let mut tensors = Vec::new();
+        for (name, shape) in config.param_specs() {
+            let t = ckpt
+                .get(&name)
+                .with_context(|| format!("checkpoint missing '{name}'"))?;
+            if t.shape() != shape.as_slice() {
+                bail!("'{name}' shape {:?} != spec {:?}", t.shape(), shape);
+            }
+            tensors.push(t.clone());
+        }
+        let mut ps = ParamSet::from_tensors(config, tensors)?;
+        if let Some(mask) = ckpt.get("__expert_mask__") {
+            ps.expert_mask = mask.clone();
+        }
+        Ok(ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_count_matches_python_formula() {
+        let cfg = ModelConfig::test_tiny();
+        assert_eq!(cfg.param_specs().len(), 4 + 7 * cfg.n_layers);
+    }
+
+    #[test]
+    fn param_count_adds_up() {
+        let cfg = ModelConfig::test_tiny();
+        // embed + pos + ln_f + head
+        let globals = cfg.vocab * cfg.d_model
+            + cfg.seq * cfg.d_model
+            + cfg.d_model
+            + cfg.d_model * cfg.vocab;
+        let per_layer = cfg.d_model
+            + cfg.d_model * 3 * cfg.d_model
+            + cfg.d_model * cfg.d_model
+            + cfg.d_model
+            + cfg.n_experts * cfg.d_model
+            + cfg.n_experts * cfg.d_model * cfg.d_ff * 2;
+        assert_eq!(cfg.param_count(), globals + cfg.n_layers * per_layer);
+    }
+
+    #[test]
+    fn init_shapes_match_specs() {
+        let cfg = ModelConfig::test_tiny();
+        let ps = ParamSet::init(&cfg, 1);
+        for (name, shape) in cfg.param_specs() {
+            assert_eq!(ps.get(&name).unwrap().shape(), shape.as_slice());
+        }
+        // norm scales are ones
+        assert!(ps.get("ln_f").unwrap().data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn expert_theta_roundtrip() {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 2);
+        let theta = ps.expert_theta(0, 1);
+        assert_eq!(theta.len(), cfg.params_per_expert());
+        let doubled: Vec<f32> = theta.iter().map(|x| x * 2.0).collect();
+        ps.set_expert_theta(0, 1, &doubled);
+        assert_eq!(ps.expert_theta(0, 1), doubled);
+        // other experts untouched
+        assert_ne!(ps.expert_theta(0, 0), doubled);
+    }
+
+    #[test]
+    fn prune_expert_zeroes_and_masks() {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 3);
+        assert!(ps.is_expert_alive(1, 2));
+        ps.prune_expert(1, 2);
+        assert!(!ps.is_expert_alive(1, 2));
+        assert!(ps.expert_theta(1, 2).iter().all(|&x| x == 0.0));
+        assert_eq!(ps.alive_experts(1).len(), cfg.n_experts - 1);
+        assert!(ps.overall_sparsity() > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_with_mask() {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 4);
+        ps.prune_expert(0, 0);
+        let ckpt = ps.to_checkpoint(r#"{"step":10}"#);
+        let back = ParamSet::from_checkpoint(&cfg, &ckpt).unwrap();
+        assert_eq!(back.expert_mask, ps.expert_mask);
+        assert_eq!(back.get("embed").unwrap(), ps.get("embed").unwrap());
+        assert!(!back.is_expert_alive(0, 0));
+    }
+
+    #[test]
+    fn from_tensors_validates_shapes() {
+        let cfg = ModelConfig::test_tiny();
+        let mut tensors: Vec<Tensor> = cfg
+            .param_specs()
+            .iter()
+            .map(|(_, s)| Tensor::zeros(s))
+            .collect();
+        assert!(ParamSet::from_tensors(&cfg, tensors.clone()).is_ok());
+        tensors[0] = Tensor::zeros(&[1, 1]);
+        assert!(ParamSet::from_tensors(&cfg, tensors.clone()).is_err());
+        tensors.pop();
+        assert!(ParamSet::from_tensors(&cfg, tensors).is_err());
+    }
+
+    #[test]
+    fn config_parses_from_manifest_json() {
+        let text = r#"{"name":"tiny","vocab":256,"seq":64,"d_model":64,
+            "n_heads":2,"d_ff":64,"n_experts":4,"top_k":2,"n_layers":2,
+            "eval_batch":8,"train_batch":8}"#;
+        let j = Json::parse(text).unwrap();
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, ModelConfig::test_tiny());
+    }
+
+    #[test]
+    fn prunable_accounting_consistent() {
+        let cfg = ModelConfig::test_tiny();
+        let ps = ParamSet::init(&cfg, 5);
+        let total: usize = ps
+            .prunable_names()
+            .iter()
+            .map(|n| ps.get(n).unwrap().len())
+            .sum();
+        assert_eq!(total, cfg.prunable_param_count());
+    }
+}

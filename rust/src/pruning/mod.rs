@@ -1,0 +1,130 @@
+//! Pruning library — the paper's contribution (§4) plus every baseline
+//! its evaluation compares against.
+//!
+//! * [`expert`] — **STUN stage 1**: the O(1) expert pruner (clustering +
+//!   greedy joint-probability pruning + selective reconstruction).
+//! * [`combinatorial`] — Lu et al. (2024) exhaustive-reconstruction
+//!   baseline (O(kⁿ/√n) forward passes) and gate-statistic baselines.
+//! * [`unstructured`] — **STUN stage 2**: Wanda, OWL, magnitude.
+//! * [`structured_dense`] — LLM-Surgeon-style neuron pruning for the
+//!   non-MoE experiment (Fig. 3).
+//! * [`robustness`] — kurtosis probes backing the §5 robustness argument.
+//!
+//! [`StunPipeline`] composes stage 1 + stage 2 to a *total* sparsity
+//! target, reproducing the paper's headline recipe.
+
+pub mod combinatorial;
+pub mod expert;
+pub mod robustness;
+pub mod structured_dense;
+pub mod unstructured;
+
+use crate::coactivation::{self, CoactivationStats};
+use crate::data::CorpusGenerator;
+use crate::model::ParamSet;
+use crate::runtime::ModelBundle;
+use anyhow::Result;
+
+pub use expert::{ExpertPruneConfig, ExpertPruner, PruneReport};
+pub use unstructured::{UnstructuredConfig, UnstructuredMethod};
+
+/// End-to-end STUN: expert pruning until (near) no loss, then unstructured
+/// pruning up to the total sparsity target (paper §4.1).
+#[derive(Clone, Debug)]
+pub struct StunPipeline {
+    pub expert: ExpertPruneConfig,
+    pub unstructured: UnstructuredConfig,
+    /// Total sparsity over prunable weights (e.g. 0.4 for the paper's
+    /// Arctic headline). The unstructured rate is derived from whatever
+    /// the expert stage already removed.
+    pub total_sparsity: f64,
+    /// Calibration batches for coactivation + activation norms.
+    pub calib_batches: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct StunReport {
+    pub expert_report: Option<PruneReport>,
+    pub expert_stage_sparsity: f64,
+    pub unstructured_rate: f64,
+    pub final_sparsity: f64,
+}
+
+impl StunPipeline {
+    /// Run both stages in place on `params`.
+    pub fn run(
+        &self,
+        bundle: &ModelBundle,
+        params: &mut ParamSet,
+        gen: &mut CorpusGenerator,
+    ) -> Result<StunReport> {
+        // ---- stage 1: expert pruning -----------------------------------
+        let expert_report = if self.expert.ratio > 0.0 {
+            let coact: Option<CoactivationStats> = if self.expert.lambda2 != 0.0 {
+                Some(coactivation::collect(
+                    bundle,
+                    params,
+                    gen,
+                    self.calib_batches,
+                )?)
+            } else {
+                None
+            };
+            Some(ExpertPruner::prune(params, coact.as_ref(), &self.expert))
+        } else {
+            None
+        };
+        let expert_stage_sparsity = params.overall_sparsity();
+
+        // ---- stage 2: unstructured pruning ------------------------------
+        let rate = residual_rate(self.total_sparsity, expert_stage_sparsity);
+        if rate > 0.0 {
+            let norms =
+                unstructured::ActNorms::collect(bundle, params, gen, self.calib_batches)?;
+            unstructured::prune(params, &norms, rate, &self.unstructured)?;
+        }
+        Ok(StunReport {
+            expert_report,
+            expert_stage_sparsity,
+            unstructured_rate: rate,
+            final_sparsity: params.overall_sparsity(),
+        })
+    }
+}
+
+/// Sparsity arithmetic: the unstructured rate (over *live* weights) needed
+/// to bring overall sparsity from `already` to `target`.
+pub fn residual_rate(target: f64, already: f64) -> f64 {
+    if already >= target {
+        return 0.0;
+    }
+    ((target - already) / (1.0 - already)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_rate_arithmetic() {
+        // nothing pruned yet → rate = target
+        assert!((residual_rate(0.4, 0.0) - 0.4).abs() < 1e-12);
+        // expert stage removed 20% → need 25% of the remaining 80%
+        assert!((residual_rate(0.4, 0.2) - 0.25).abs() < 1e-12);
+        // already past target → no unstructured pruning
+        assert_eq!(residual_rate(0.4, 0.5), 0.0);
+        // exactly at target
+        assert_eq!(residual_rate(0.4, 0.4), 0.0);
+    }
+
+    #[test]
+    fn residual_rate_composes_to_target() {
+        for &(target, already) in
+            &[(0.4, 0.1), (0.65, 0.125), (0.7, 0.25), (0.9, 0.5)]
+        {
+            let r = residual_rate(target, already);
+            let total = already + (1.0 - already) * r;
+            assert!((total - target).abs() < 1e-9, "{target} {already}");
+        }
+    }
+}

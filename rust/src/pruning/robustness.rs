@@ -1,0 +1,144 @@
+//! §5 robustness analysis: kurtosis as a proxy for unstructured-pruning
+//! headroom (Mason-Williams & Dahlqvist 2024, paper Eq. 14).
+//!
+//! The paper's argument:
+//! * unstructured pruning removes near-zero weights → the live-weight
+//!   distribution drifts toward symmetric-bimodal → kurtosis falls toward
+//!   its minimum (Darlington 1970) → little headroom remains;
+//! * expert pruning removes a *population subset* whose members are still
+//!   ~Gaussian → kurtosis (≈3) is preserved → full unstructured headroom
+//!   remains.
+//!
+//! [`kurtosis_probe`] measures K(θ) over live prunable weights for a
+//! paramset; `stun report kurtosis` and the `robustness_kurtosis` bench
+//! build the §5 table from it.
+
+use crate::model::ParamSet;
+use crate::tensor::stats;
+
+#[derive(Clone, Debug)]
+pub struct KurtosisReport {
+    /// K(θ) over all live prunable weights.
+    pub overall: f64,
+    /// Per-tensor kurtosis (name, K, live count).
+    pub per_tensor: Vec<(String, f64, usize)>,
+    pub live_weights: usize,
+    pub sparsity: f64,
+}
+
+/// Kurtosis of the live (non-zero) prunable weights.
+pub fn kurtosis_probe(params: &ParamSet) -> KurtosisReport {
+    let live = params.live_prunable_weights();
+    let overall = stats::kurtosis(&live);
+    let mut per_tensor = Vec::new();
+    for name in params.prunable_names() {
+        let t = params.get(&name).unwrap();
+        let live_t: Vec<f32> = t.data().iter().copied().filter(|&x| x != 0.0).collect();
+        per_tensor.push((name, stats::kurtosis(&live_t), live_t.len()));
+    }
+    KurtosisReport {
+        overall,
+        per_tensor,
+        live_weights: live.len(),
+        sparsity: params.overall_sparsity(),
+    }
+}
+
+/// Side-by-side §5 comparison rows: same model pruned three ways at the
+/// same sparsity. Returns (label, sparsity, kurtosis).
+pub fn compare(
+    dense: &ParamSet,
+    expert_pruned: &ParamSet,
+    unstructured_pruned: &ParamSet,
+) -> Vec<(String, f64, f64)> {
+    vec![
+        (
+            "unpruned".into(),
+            dense.overall_sparsity(),
+            kurtosis_probe(dense).overall,
+        ),
+        (
+            "expert-pruned".into(),
+            expert_pruned.overall_sparsity(),
+            kurtosis_probe(expert_pruned).overall,
+        ),
+        (
+            "unstructured-pruned".into(),
+            unstructured_pruned.overall_sparsity(),
+            kurtosis_probe(unstructured_pruned).overall,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::pruning::expert::{ExpertPruneConfig, ExpertPruner};
+    use crate::pruning::unstructured::{self, ActNorms, UnstructuredConfig, UnstructuredMethod};
+
+    #[test]
+    fn paper_section5_ordering_holds() {
+        // Same sparsity budget via expert pruning vs unstructured pruning:
+        // expert pruning must preserve kurtosis, unstructured must drop it.
+        let cfg = ModelConfig::test_tiny();
+        let base = ParamSet::init(&cfg, 61);
+        let k0 = kurtosis_probe(&base).overall;
+
+        let mut expert = base.clone();
+        ExpertPruner::prune(
+            &mut expert,
+            None,
+            &ExpertPruneConfig {
+                ratio: 0.5,
+                ..Default::default()
+            },
+        );
+        let s_expert = expert.overall_sparsity();
+        let k_expert = kurtosis_probe(&expert).overall;
+
+        let mut unstr = base.clone();
+        unstructured::prune(
+            &mut unstr,
+            &ActNorms::uniform(&cfg),
+            s_expert, // matched sparsity
+            &UnstructuredConfig {
+                method: UnstructuredMethod::Magnitude,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let k_unstr = kurtosis_probe(&unstr).overall;
+
+        assert!(
+            (k_expert - k0).abs() < 0.3,
+            "expert pruning moved kurtosis: {k0} -> {k_expert}"
+        );
+        assert!(
+            k_unstr < k0 - 0.3,
+            "unstructured pruning failed to lower kurtosis: {k0} -> {k_unstr}"
+        );
+        assert!(k_expert > k_unstr);
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let cfg = ModelConfig::test_tiny();
+        let ps = ParamSet::init(&cfg, 63);
+        let r = kurtosis_probe(&ps);
+        assert_eq!(r.live_weights, cfg.prunable_param_count());
+        assert_eq!(r.sparsity, 0.0);
+        assert_eq!(r.per_tensor.len(), ps.prunable_names().len());
+        // fresh gaussian-ish init → kurtosis near 3
+        assert!((r.overall - 3.0).abs() < 0.3, "K {}", r.overall);
+    }
+
+    #[test]
+    fn compare_produces_three_rows() {
+        let cfg = ModelConfig::test_tiny();
+        let a = ParamSet::init(&cfg, 65);
+        let rows = compare(&a, &a, &a);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, "unpruned");
+    }
+}

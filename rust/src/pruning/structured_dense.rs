@@ -1,0 +1,175 @@
+//! Structured pruning for **non-MoE** models (Fig. 3's first stage).
+//!
+//! The paper uses LLM-Surgeon (van der Ouderaa et al. 2024) at 5% sparsity
+//! before OWL to show STUN generalises beyond MoEs. LLM-Surgeon's full
+//! Fisher-based machinery is out of scope for a CPU reproduction; we build
+//! the closest first-order analogue operating on the same structural
+//! granularity it targets — whole FFN neurons:
+//!
+//!   score(f) = ‖w1[:, f]‖₂ · ‖x‖-weighted  +  ‖w2[f, :]‖₂ · ‖h_f‖
+//!
+//! i.e. the combined Wanda-style saliency of a hidden unit's input and
+//! output connections. The lowest-scoring fraction of neurons per layer is
+//! removed by zeroing the corresponding w1 column and w2 row (a
+//! structured, hardware-friendly pattern). The dense config uses
+//! `n_experts = 1`, so expert slab 0 *is* the FFN.
+
+use crate::model::ParamSet;
+use crate::pruning::unstructured::ActNorms;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct NeuronPruneReport {
+    /// Pruned neuron indices per layer.
+    pub pruned: Vec<Vec<usize>>,
+    /// Parameter sparsity introduced in the FFN weights.
+    pub ffn_sparsity: f64,
+}
+
+/// Prune `ratio` of FFN hidden neurons per layer (dense models).
+pub fn prune_neurons(
+    params: &mut ParamSet,
+    norms: &ActNorms,
+    ratio: f64,
+) -> Result<NeuronPruneReport> {
+    let cfg = params.config.clone();
+    if cfg.n_experts != 1 {
+        bail!(
+            "structured_dense expects a dense model (n_experts=1), got {}",
+            cfg.n_experts
+        );
+    }
+    if !(0.0..1.0).contains(&ratio) {
+        bail!("ratio {ratio} out of [0,1)");
+    }
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let n_prune = ((f as f64) * ratio).round() as usize;
+    let mut pruned_all = Vec::new();
+    for layer in 0..cfg.n_layers {
+        // neuron scores
+        let mut scores = vec![0.0f64; f];
+        {
+            let w1 = params.w1(layer); // [1, D, F]
+            let w2 = params.w2(layer); // [1, F, D]
+            let in_norm = &norms.moe_in[layer][0];
+            let hid_norm = &norms.moe_hid[layer][0];
+            for fi in 0..f {
+                let mut s_in = 0.0f64;
+                for di in 0..d {
+                    let w = w1.data()[di * f + fi] as f64;
+                    s_in += (w * in_norm[di] as f64).powi(2);
+                }
+                let mut s_out = 0.0f64;
+                for di in 0..d {
+                    let w = w2.data()[fi * d + di] as f64;
+                    s_out += w * w;
+                }
+                scores[fi] = s_in.sqrt() + s_out.sqrt() * hid_norm[fi] as f64;
+            }
+        }
+        let mut idx: Vec<usize> = (0..f).collect();
+        idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        let doomed: Vec<usize> = idx.into_iter().take(n_prune).collect();
+        // zero w1 column + w2 row
+        {
+            let w1 = params.get_mut(&format!("layer{layer}.w1"))?;
+            for &fi in &doomed {
+                for di in 0..d {
+                    w1.data_mut()[di * f + fi] = 0.0;
+                }
+            }
+        }
+        {
+            let w2 = params.get_mut(&format!("layer{layer}.w2"))?;
+            for &fi in &doomed {
+                for di in 0..d {
+                    w2.data_mut()[fi * d + di] = 0.0;
+                }
+            }
+        }
+        pruned_all.push(doomed);
+    }
+    // FFN sparsity accounting
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for layer in 0..cfg.n_layers {
+        zeros += params.w1(layer).zero_count() + params.w2(layer).zero_count();
+        total += params.w1(layer).len() + params.w2(layer).len();
+    }
+    Ok(NeuronPruneReport {
+        pruned: pruned_all,
+        ffn_sparsity: zeros as f64 / total as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn dense_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::test_tiny();
+        cfg.n_experts = 1;
+        cfg.top_k = 1;
+        cfg.d_ff = 128;
+        cfg
+    }
+
+    #[test]
+    fn prunes_requested_neuron_fraction() {
+        let cfg = dense_cfg();
+        let mut ps = ParamSet::init(&cfg, 41);
+        let norms = ActNorms::uniform(&cfg);
+        let report = prune_neurons(&mut ps, &norms, 0.25).unwrap();
+        for layer in 0..cfg.n_layers {
+            assert_eq!(report.pruned[layer].len(), 32);
+        }
+        assert!((report.ffn_sparsity - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn pruned_neurons_have_zero_column_and_row() {
+        let cfg = dense_cfg();
+        let mut ps = ParamSet::init(&cfg, 43);
+        let norms = ActNorms::uniform(&cfg);
+        let report = prune_neurons(&mut ps, &norms, 0.1).unwrap();
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        for layer in 0..cfg.n_layers {
+            for &fi in &report.pruned[layer] {
+                let w1 = ps.w1(layer);
+                for di in 0..d {
+                    assert_eq!(w1.data()[di * f + fi], 0.0);
+                }
+                let w2 = ps.w2(layer);
+                for di in 0..d {
+                    assert_eq!(w2.data()[fi * d + di], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lowest_scoring_neurons_go_first() {
+        let cfg = dense_cfg();
+        let mut ps = ParamSet::init(&cfg, 45);
+        // make neuron 0 huge in both directions in layer 0
+        {
+            let f = cfg.d_ff;
+            let w1 = ps.get_mut("layer0.w1").unwrap();
+            for di in 0..cfg.d_model {
+                w1.data_mut()[di * f + 0] = 10.0;
+            }
+        }
+        let norms = ActNorms::uniform(&cfg);
+        let report = prune_neurons(&mut ps, &norms, 0.5).unwrap();
+        assert!(!report.pruned[0].contains(&0), "dominant neuron survived");
+    }
+
+    #[test]
+    fn rejects_moe_models() {
+        let cfg = ModelConfig::test_tiny(); // 4 experts
+        let mut ps = ParamSet::init(&cfg, 47);
+        let norms = ActNorms::uniform(&cfg);
+        assert!(prune_neurons(&mut ps, &norms, 0.1).is_err());
+    }
+}

@@ -1,0 +1,488 @@
+//! STUN stage 2: unstructured pruning — Wanda, OWL, magnitude.
+//!
+//! * **Wanda** (Sun et al. 2024): score S_ij = |W_ij| · ‖X_i‖₂ where
+//!   ‖X_i‖ is the L2 norm of input feature i over the calibration set;
+//!   prune the lowest-scored fraction within each *per-output comparison
+//!   group* (our weights are `[in, out]`, so groups are columns). Expert
+//!   slabs use per-expert norms restricted to tokens actually routed to
+//!   that expert (`moe_in_sq` / `moe_hid_sq` probe outputs).
+//! * **OWL** (Yin et al. 2024): reuses Wanda scores but allocates a
+//!   *per-layer* sparsity budget from the layerwise outlier distribution:
+//!   layers with more outliers (scores > M·mean) are pruned less. Defaults
+//!   M = 5, λ = 0.08 as in the paper's implementation details.
+//! * **magnitude**: |W| scores, per-tensor selection — the classic
+//!   baseline.
+//!
+//! Masks are applied by zeroing weights host-side, which the L1 pytest
+//! (`test_masking_host_side_is_equivalent`) pins as numerically identical
+//! to running the masked-matmul kernel with an explicit 0/1 mask.
+
+use crate::data::CorpusGenerator;
+use crate::model::ParamSet;
+use crate::runtime::{self, ModelBundle};
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnstructuredMethod {
+    Wanda,
+    Owl,
+    Magnitude,
+}
+
+#[derive(Clone, Debug)]
+pub struct UnstructuredConfig {
+    pub method: UnstructuredMethod,
+    /// OWL outlier multiplier M.
+    pub owl_m: f64,
+    /// OWL sparsity amplitude λ (per-layer budget stays in \[S−λ, S+λ\]).
+    pub owl_lambda: f64,
+}
+
+impl Default for UnstructuredConfig {
+    fn default() -> Self {
+        UnstructuredConfig {
+            method: UnstructuredMethod::Owl,
+            owl_m: 5.0,
+            owl_lambda: 0.08,
+        }
+    }
+}
+
+/// Calibration activation norms per weight matrix (Wanda's ‖X‖).
+#[derive(Clone, Debug)]
+pub struct ActNorms {
+    /// \[L\]\[D\] — inputs to wqkv (and wo reuses attn context norms? no:
+    /// wo gets its own — see `attn_ctx`note below).
+    pub attn_in: Vec<Vec<f32>>,
+    /// \[L\]\[E\]\[D\] — MoE inputs per expert (routed tokens only).
+    pub moe_in: Vec<Vec<Vec<f32>>>,
+    /// \[L\]\[E\]\[F\] — expert hidden activations per expert.
+    pub moe_hid: Vec<Vec<Vec<f32>>>,
+    /// \[D\] — lm_head inputs.
+    pub head_in: Vec<f32>,
+    pub batches: usize,
+}
+
+impl ActNorms {
+    /// Accumulate square-sums from the `actnorm_probe` artifact over
+    /// `n_batches` calibration batches, then sqrt.
+    pub fn collect(
+        bundle: &ModelBundle,
+        params: &ParamSet,
+        gen: &mut CorpusGenerator,
+        n_batches: usize,
+    ) -> Result<ActNorms> {
+        let cfg = &bundle.config;
+        let art = bundle.artifact("actnorm_probe")?;
+        let (l, e, d, f) = (cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff);
+        let mut attn_sq = vec![vec![0f64; d]; l];
+        let mut moe_in_sq = vec![vec![vec![0f64; d]; e]; l];
+        let mut moe_hid_sq = vec![vec![vec![0f64; f]; e]; l];
+        let mut head_sq = vec![0f64; d];
+        let param_lits = runtime::params_to_literals(params)?;
+        let mask_lit = runtime::expert_mask_literal(params)?;
+        for _ in 0..n_batches {
+            let (tokens, _) = gen.batch(cfg.eval_batch);
+            let tok_lit = runtime::int_tensor_to_literal(&tokens)?;
+            let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+            args.push(&mask_lit);
+            args.push(&tok_lit);
+            let outs = art.run_ref(&args)?;
+            let attn = runtime::literal_to_tensor(&outs[0])?; // [L,D]
+            let min = runtime::literal_to_tensor(&outs[1])?; // [L,E,D]
+            let mhid = runtime::literal_to_tensor(&outs[2])?; // [L,E,F]
+            let head = runtime::literal_to_tensor(&outs[3])?; // [D]
+            for li in 0..l {
+                for k in 0..d {
+                    attn_sq[li][k] += attn.data()[li * d + k] as f64;
+                }
+                for ei in 0..e {
+                    for k in 0..d {
+                        moe_in_sq[li][ei][k] +=
+                            min.data()[(li * e + ei) * d + k] as f64;
+                    }
+                    for k in 0..f {
+                        moe_hid_sq[li][ei][k] +=
+                            mhid.data()[(li * e + ei) * f + k] as f64;
+                    }
+                }
+            }
+            for k in 0..d {
+                head_sq[k] += head.data()[k] as f64;
+            }
+        }
+        let sqrt = |v: &Vec<f64>| -> Vec<f32> { v.iter().map(|&x| x.sqrt() as f32).collect() };
+        Ok(ActNorms {
+            attn_in: attn_sq.iter().map(sqrt).collect(),
+            moe_in: moe_in_sq
+                .iter()
+                .map(|per_e| per_e.iter().map(sqrt).collect())
+                .collect(),
+            moe_hid: moe_hid_sq
+                .iter()
+                .map(|per_e| per_e.iter().map(sqrt).collect())
+                .collect(),
+            head_in: sqrt(&head_sq),
+            batches: n_batches,
+        })
+    }
+
+    /// Uniform norms (all ones) — turns Wanda into pure magnitude; used by
+    /// unit tests and as a no-calibration fallback.
+    pub fn uniform(cfg: &crate::model::ModelConfig) -> ActNorms {
+        ActNorms {
+            attn_in: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+            moe_in: vec![vec![vec![1.0; cfg.d_model]; cfg.n_experts]; cfg.n_layers],
+            moe_hid: vec![vec![vec![1.0; cfg.d_ff]; cfg.n_experts]; cfg.n_layers],
+            head_in: vec![1.0; cfg.d_model],
+            batches: 0,
+        }
+    }
+}
+
+/// One prunable weight-group view: a flat score per element + the target
+/// tensor location. Groups are (tensor, expert-slab) pairs so expert norms
+/// apply per slab.
+struct Group<'a> {
+    tensor_name: String,
+    /// byte offset range within the tensor's data
+    start: usize,
+    rows: usize,
+    cols: usize,
+    xnorm: &'a [f32],
+    layer: usize,
+}
+
+fn groups<'a>(params: &ParamSet, norms: &'a ActNorms) -> Vec<Group<'a>> {
+    let cfg = &params.config;
+    let (d, f, e) = (cfg.d_model, cfg.d_ff, cfg.n_experts);
+    let mut gs = Vec::new();
+    for l in 0..cfg.n_layers {
+        gs.push(Group {
+            tensor_name: format!("layer{l}.wqkv"),
+            start: 0,
+            rows: d,
+            cols: 3 * d,
+            xnorm: &norms.attn_in[l],
+            layer: l,
+        });
+        // wo input is the attention context; we reuse the block-input
+        // norms as its proxy (the probe tracks the residual-stream
+        // magnitude, which dominates the context scale).
+        gs.push(Group {
+            tensor_name: format!("layer{l}.wo"),
+            start: 0,
+            rows: d,
+            cols: d,
+            xnorm: &norms.attn_in[l],
+            layer: l,
+        });
+        for ei in 0..e {
+            gs.push(Group {
+                tensor_name: format!("layer{l}.w1"),
+                start: ei * d * f,
+                rows: d,
+                cols: f,
+                xnorm: &norms.moe_in[l][ei],
+                layer: l,
+            });
+            gs.push(Group {
+                tensor_name: format!("layer{l}.w2"),
+                start: ei * f * d,
+                rows: f,
+                cols: d,
+                xnorm: &norms.moe_hid[l][ei],
+                layer: l,
+            });
+        }
+    }
+    gs.push(Group {
+        tensor_name: "lm_head".into(),
+        start: 0,
+        rows: d,
+        cols: cfg.vocab,
+        xnorm: &norms.head_in,
+        layer: cfg.n_layers, // lm_head treated as its own OWL "layer"
+    });
+    gs
+}
+
+/// Apply unstructured pruning in place at `rate` (fraction of currently
+/// non-zero prunable weights to remove).
+pub fn prune(
+    params: &mut ParamSet,
+    norms: &ActNorms,
+    rate: f64,
+    cfg: &UnstructuredConfig,
+) -> Result<()> {
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("rate {rate} out of [0,1]");
+    }
+    if rate == 0.0 {
+        return Ok(());
+    }
+    match cfg.method {
+        UnstructuredMethod::Magnitude => {
+            let uniform = ActNorms::uniform(&params.config);
+            let per_layer = vec![rate; params.config.n_layers + 1];
+            apply_with_layer_rates(params, &uniform, &per_layer)
+        }
+        UnstructuredMethod::Wanda => {
+            let per_layer = vec![rate; params.config.n_layers + 1];
+            apply_with_layer_rates(params, norms, &per_layer)
+        }
+        UnstructuredMethod::Owl => {
+            let per_layer = owl_layer_rates(params, norms, rate, cfg.owl_m, cfg.owl_lambda);
+            apply_with_layer_rates(params, norms, &per_layer)
+        }
+    }
+}
+
+/// OWL per-layer sparsity allocation: layers with a higher outlier ratio
+/// (weights scoring > M · layer-mean) keep more weights. Budgets stay in
+/// \[S−λ, S+λ\] and average exactly S (weighted by live weights).
+pub fn owl_layer_rates(
+    params: &ParamSet,
+    norms: &ActNorms,
+    rate: f64,
+    m: f64,
+    lambda: f64,
+) -> Vec<f64> {
+    let n_layers = params.config.n_layers + 1; // +1: lm_head pseudo-layer
+    let gs = groups(params, norms);
+    let mut outlier = vec![0.0f64; n_layers];
+    let mut weights = vec![0.0f64; n_layers];
+    for l in 0..n_layers {
+        let mut scores: Vec<f32> = Vec::new();
+        for g in gs.iter().filter(|g| g.layer == l) {
+            let t = params.get(&g.tensor_name).unwrap();
+            let data = &t.data()[g.start..g.start + g.rows * g.cols];
+            for r in 0..g.rows {
+                let nrm = g.xnorm[r];
+                for c in 0..g.cols {
+                    let w = data[r * g.cols + c];
+                    if w != 0.0 {
+                        scores.push(w.abs() * nrm);
+                    }
+                }
+            }
+        }
+        if scores.is_empty() {
+            continue;
+        }
+        let mean = scores.iter().map(|&s| s as f64).sum::<f64>() / scores.len() as f64;
+        let n_out = scores.iter().filter(|&&s| (s as f64) > m * mean).count();
+        outlier[l] = n_out as f64 / scores.len() as f64;
+        weights[l] = scores.len() as f64;
+    }
+    // raw preference: fewer outliers → more sparsity
+    let max_o = outlier.iter().cloned().fold(0.0f64, f64::max);
+    let min_o = outlier.iter().cloned().fold(f64::INFINITY, f64::min);
+    let span = (max_o - min_o).max(1e-12);
+    let mut rates: Vec<f64> = outlier
+        .iter()
+        .map(|&o| {
+            // linear map: most outliers → S−λ, fewest → S+λ
+            rate + lambda * (1.0 - 2.0 * (o - min_o) / span)
+        })
+        .collect();
+    // renormalise (weighted) mean to exactly `rate`, then clamp
+    let total_w: f64 = weights.iter().sum();
+    if total_w > 0.0 {
+        let mean_rate: f64 = rates
+            .iter()
+            .zip(&weights)
+            .map(|(r, w)| r * w)
+            .sum::<f64>()
+            / total_w;
+        let shift = rate - mean_rate;
+        for r in rates.iter_mut() {
+            *r = (*r + shift).clamp((rate - lambda).max(0.0), (rate + lambda).min(1.0));
+        }
+    }
+    rates
+}
+
+/// Core applier: per-column (comparison-group) selection of the lowest
+/// Wanda scores among *live* weights, at the layer's rate.
+fn apply_with_layer_rates(
+    params: &mut ParamSet,
+    norms: &ActNorms,
+    layer_rates: &[f64],
+) -> Result<()> {
+    // borrow dance: gather group descriptors first
+    let descr: Vec<(String, usize, usize, usize, Vec<f32>, usize)> =
+        groups(params, norms)
+            .into_iter()
+            .map(|g| {
+                (
+                    g.tensor_name,
+                    g.start,
+                    g.rows,
+                    g.cols,
+                    g.xnorm.to_vec(),
+                    g.layer,
+                )
+            })
+            .collect();
+    for (name, start, rows, cols, xnorm, layer) in descr {
+        let rate = layer_rates[layer.min(layer_rates.len() - 1)];
+        if rate <= 0.0 {
+            continue;
+        }
+        let t = params.get_mut(&name)?;
+        let data = &mut t.data_mut()[start..start + rows * cols];
+        // per-output comparison group = column
+        let mut col_scores: Vec<(f32, usize)> = Vec::with_capacity(rows);
+        for c in 0..cols {
+            col_scores.clear();
+            for r in 0..rows {
+                let w = data[r * cols + c];
+                if w != 0.0 {
+                    col_scores.push((w.abs() * xnorm[r], r));
+                }
+            }
+            if col_scores.is_empty() {
+                continue;
+            }
+            let k = ((col_scores.len() as f64) * rate).round() as usize;
+            if k == 0 {
+                continue;
+            }
+            col_scores
+                .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+            for &(_, r) in col_scores.iter().take(k) {
+                data[r * cols + c] = 0.0;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn setup() -> (ParamSet, ActNorms) {
+        let cfg = ModelConfig::test_tiny();
+        let ps = ParamSet::init(&cfg, 21);
+        let norms = ActNorms::uniform(&cfg);
+        (ps, norms)
+    }
+
+    #[test]
+    fn wanda_hits_requested_rate() {
+        let (mut ps, norms) = setup();
+        let cfg = UnstructuredConfig {
+            method: UnstructuredMethod::Wanda,
+            ..Default::default()
+        };
+        prune(&mut ps, &norms, 0.5, &cfg).unwrap();
+        let s = ps.overall_sparsity();
+        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+    }
+
+    #[test]
+    fn magnitude_prunes_smallest() {
+        let (mut ps, norms) = setup();
+        let cfg = UnstructuredConfig {
+            method: UnstructuredMethod::Magnitude,
+            ..Default::default()
+        };
+        // remember the largest |w| in lm_head column 0 — it must survive
+        let t = ps.get("lm_head").unwrap();
+        let cols = t.shape()[1];
+        let col0: Vec<f32> = (0..t.shape()[0]).map(|r| t.data()[r * cols]).collect();
+        let max_abs = col0.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        prune(&mut ps, &norms, 0.6, &cfg).unwrap();
+        let t = ps.get("lm_head").unwrap();
+        let survived: Vec<f32> = (0..t.shape()[0]).map(|r| t.data()[r * cols]).collect();
+        assert!(survived.iter().any(|&x| x.abs() == max_abs));
+        // and the column hit the rate
+        let nz = survived.iter().filter(|&&x| x != 0.0).count();
+        assert!((nz as f64 / survived.len() as f64 - 0.4).abs() < 0.05);
+    }
+
+    #[test]
+    fn wanda_respects_activation_norms() {
+        // Two rows with equal |w|: the one with tiny activation norm gets
+        // pruned first.
+        let (mut ps, mut norms) = setup();
+        {
+            let t = ps.get_mut("lm_head").unwrap();
+            for c in 0..t.shape()[1] {
+                *t.at2_mut(0, c) = 0.5;
+                *t.at2_mut(1, c) = 0.5;
+            }
+        }
+        norms.head_in[0] = 0.001; // row 0 inputs are tiny
+        norms.head_in[1] = 10.0;
+        let cfg = UnstructuredConfig {
+            method: UnstructuredMethod::Wanda,
+            ..Default::default()
+        };
+        prune(&mut ps, &norms, 0.5, &cfg).unwrap();
+        let t = ps.get("lm_head").unwrap();
+        assert!(t.row(0).iter().all(|&x| x == 0.0), "low-norm row pruned");
+        assert!(t.row(1).iter().all(|&x| x != 0.0), "high-norm row kept");
+    }
+
+    #[test]
+    fn owl_mean_rate_matches_target() {
+        let (ps, norms) = setup();
+        let rates = owl_layer_rates(&ps, &norms, 0.5, 5.0, 0.08);
+        assert_eq!(rates.len(), ps.config.n_layers + 1);
+        for &r in &rates {
+            assert!((0.42..=0.58).contains(&r), "rate {r} outside S±λ");
+        }
+        let (mut ps2, norms2) = setup();
+        let cfg = UnstructuredConfig::default(); // OWL
+        prune(&mut ps2, &norms2, 0.5, &cfg).unwrap();
+        let s = ps2.overall_sparsity();
+        assert!((s - 0.5).abs() < 0.03, "overall sparsity {s}");
+    }
+
+    #[test]
+    fn pruning_only_removes_live_weights() {
+        // expert-prune first, then unstructured: the rate applies to the
+        // remaining live weights.
+        let (mut ps, norms) = setup();
+        ps.prune_expert(0, 0);
+        ps.prune_expert(1, 2);
+        let before = ps.overall_sparsity();
+        let cfg = UnstructuredConfig {
+            method: UnstructuredMethod::Wanda,
+            ..Default::default()
+        };
+        prune(&mut ps, &norms, 0.5, &cfg).unwrap();
+        let after = ps.overall_sparsity();
+        let expect = before + (1.0 - before) * 0.5;
+        assert!((after - expect).abs() < 0.02, "{after} vs {expect}");
+    }
+
+    #[test]
+    fn rate_zero_is_noop_and_rate_validates() {
+        let (mut ps, norms) = setup();
+        let snapshot = ps.get("lm_head").unwrap().clone();
+        let cfg = UnstructuredConfig::default();
+        prune(&mut ps, &norms, 0.0, &cfg).unwrap();
+        assert_eq!(ps.get("lm_head").unwrap(), &snapshot);
+        assert!(prune(&mut ps, &norms, 1.5, &cfg).is_err());
+    }
+
+    #[test]
+    fn kurtosis_drops_after_unstructured_prune() {
+        // §5 sanity on real weights: unstructured pruning lowers kurtosis
+        // of the live weights.
+        let (mut ps, norms) = setup();
+        let k_before = crate::tensor::stats::kurtosis(&ps.live_prunable_weights());
+        let cfg = UnstructuredConfig {
+            method: UnstructuredMethod::Wanda,
+            ..Default::default()
+        };
+        prune(&mut ps, &norms, 0.6, &cfg).unwrap();
+        let k_after = crate::tensor::stats::kurtosis(&ps.live_prunable_weights());
+        assert!(k_after < k_before, "before {k_before} after {k_after}");
+    }
+}

@@ -1,0 +1,599 @@
+//! Experiment protocols — one function per paper table/figure.
+//!
+//! Each `fig*`/`table*` function runs the full protocol (train-or-load a
+//! checkpoint, prune with each method, evaluate, print the table) and
+//! returns the rows so benches and EXPERIMENTS.md generation can reuse
+//! them. Trained checkpoints are cached under `runs/<config>.stz`; pass
+//! `--retrain` to the CLI to refresh.
+
+use crate::coordinator::{burst_workload, Batcher, ExpertStore};
+use crate::data::{CorpusConfig, CorpusGenerator};
+use crate::eval::EvalHarness;
+use crate::model::ParamSet;
+use crate::pruning::expert::{ClusterMethod, ExpertPruneConfig, ExpertPruner, ReconstructMode};
+use crate::pruning::unstructured::{ActNorms, UnstructuredConfig, UnstructuredMethod};
+use crate::pruning::{self, combinatorial, robustness, StunPipeline};
+use crate::runtime::{Engine, ModelBundle};
+use crate::train::{self, TrainConfig, Trainer};
+use crate::util::render_table;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Experiment-wide knobs (kept small so benches can shrink them).
+#[derive(Clone, Debug)]
+pub struct Protocol {
+    pub train_steps: usize,
+    pub calib_batches: usize,
+    pub n_gen: usize,
+    pub n_mc: usize,
+    pub few_shots: usize,
+    pub eval_seed: u64,
+    pub retrain: bool,
+}
+
+impl Default for Protocol {
+    fn default() -> Self {
+        // sized for the single-core CPU-PJRT testbed: one full `report
+        // all` fits in tens of minutes while keeping ≥24 items per task
+        Protocol {
+            train_steps: 300,
+            calib_batches: 4,
+            n_gen: 24,
+            n_mc: 24,
+            few_shots: 2,
+            eval_seed: 20250710,
+            retrain: false,
+        }
+    }
+}
+
+impl Protocol {
+    /// Smoke-sized protocol for `STUN_BENCH_QUICK=1` and CI.
+    pub fn quick() -> Protocol {
+        Protocol {
+            train_steps: 30,
+            calib_batches: 2,
+            n_gen: 8,
+            n_mc: 12,
+            few_shots: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn from_env() -> Protocol {
+        if std::env::var("STUN_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Protocol::quick()
+        } else {
+            Protocol::default()
+        }
+    }
+
+    /// Bench binaries default to the quick protocol (so `cargo bench`
+    /// finishes in minutes); `STUN_BENCH_FULL=1` runs the paper-scale
+    /// protocol used for EXPERIMENTS.md.
+    pub fn bench() -> Protocol {
+        if std::env::var("STUN_BENCH_FULL").ok().as_deref() == Some("1") {
+            Protocol::default()
+        } else {
+            Protocol::quick()
+        }
+    }
+}
+
+/// Load artifacts for `config` from the repo's artifacts dir.
+pub fn load_bundle(engine: &Engine, config: &str) -> Result<ModelBundle> {
+    let base = std::env::var("STUN_ARTIFACTS").unwrap_or_else(|_| {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .to_string_lossy()
+            .into_owned()
+    });
+    ModelBundle::load(engine, Path::new(&base).join(config))
+        .with_context(|| format!("artifacts for '{config}' — run `make artifacts`"))
+}
+
+/// Train (or load the cached run of) a model config.
+pub fn ensure_trained(
+    engine: &Engine,
+    config: &str,
+    proto: &Protocol,
+) -> Result<(ModelBundle, ParamSet)> {
+    let bundle = load_bundle(engine, config)?;
+    let run_path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("runs")
+        .join(format!("{config}-s{}.stz", proto.train_steps));
+    if !proto.retrain && run_path.exists() {
+        let params = train::load_run(&bundle.config, run_path.to_str().unwrap())?;
+        return Ok((bundle, params));
+    }
+    let mut params = ParamSet::init(&bundle.config, 42);
+    let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+        bundle.config.vocab,
+        bundle.config.seq,
+        42,
+    ));
+    let trainer = Trainer::new(TrainConfig {
+        steps: proto.train_steps,
+        ..Default::default()
+    });
+    let log = trainer.train(&bundle, &mut params, &mut gen)?;
+    eprintln!(
+        "[train] {config}: loss {:.3} -> {:.3} in {:.1}s",
+        log.first_loss(),
+        log.last_loss(),
+        log.seconds
+    );
+    train::save_run(&params, &log, run_path.to_str().unwrap())?;
+    Ok((bundle, params))
+}
+
+fn calib_gen(cfg: &crate::model::ModelConfig) -> CorpusGenerator {
+    // distinct seed from training (C4-calibration stand-in)
+    CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 4242))
+}
+
+/// Evaluate a paramset → (GSM8K-proxy, mc-average, per-task rows).
+fn evaluate(
+    bundle: &ModelBundle,
+    params: &ParamSet,
+    proto: &Protocol,
+) -> Result<crate::eval::EvalReport> {
+    let h = EvalHarness::new(bundle, params)?;
+    h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)
+}
+
+/// Apply STUN (expert ratio → unstructured to total) — shared helper.
+fn stun_variant(
+    bundle: &ModelBundle,
+    base: &ParamSet,
+    expert_ratio: f64,
+    total_sparsity: f64,
+    method: UnstructuredMethod,
+    proto: &Protocol,
+) -> Result<(ParamSet, pruning::StunReport)> {
+    let mut params = base.clone();
+    let pipeline = StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: expert_ratio,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig {
+            method,
+            ..Default::default()
+        },
+        total_sparsity,
+        calib_batches: proto.calib_batches,
+    };
+    let mut gen = calib_gen(&bundle.config);
+    let report = pipeline.run(bundle, &mut params, &mut gen)?;
+    Ok((params, report))
+}
+
+/// Unstructured-only baseline at a total sparsity.
+fn unstructured_only(
+    bundle: &ModelBundle,
+    base: &ParamSet,
+    total_sparsity: f64,
+    method: UnstructuredMethod,
+    proto: &Protocol,
+) -> Result<ParamSet> {
+    let (params, _r) = stun_variant(bundle, base, 0.0, total_sparsity, method, proto)?;
+    Ok(params)
+}
+
+// ===========================================================================
+// Figure 1 / Figure 2: sparsity sweeps.
+// ===========================================================================
+
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub sparsity: f64,
+    pub stun: f64,
+    pub owl: f64,
+    pub wanda: f64,
+}
+
+/// GSM8K-proxy accuracy vs total sparsity for STUN / OWL-only / Wanda-only
+/// (Fig. 1 for one config; Fig. 2 runs it per config).
+pub fn sparsity_sweep(
+    engine: &Engine,
+    config: &str,
+    sparsities: &[f64],
+    expert_ratio: f64,
+    proto: &Protocol,
+) -> Result<Vec<SweepRow>> {
+    let (bundle, base) = ensure_trained(engine, config, proto)?;
+    let mut rows = Vec::new();
+    for &s in sparsities {
+        let ratio = if s > 0.0 { expert_ratio.min(s) } else { 0.0 };
+        let (stun_p, _) =
+            stun_variant(&bundle, &base, ratio, s, UnstructuredMethod::Owl, proto)?;
+        let owl_p = unstructured_only(&bundle, &base, s, UnstructuredMethod::Owl, proto)?;
+        let wanda_p =
+            unstructured_only(&bundle, &base, s, UnstructuredMethod::Wanda, proto)?;
+        let stun = evaluate(&bundle, &stun_p, proto)?;
+        let owl = evaluate(&bundle, &owl_p, proto)?;
+        let wanda = evaluate(&bundle, &wanda_p, proto)?;
+        let gsm = |r: &crate::eval::EvalReport| r.rows[0].1;
+        rows.push(SweepRow {
+            sparsity: s,
+            stun: gsm(&stun),
+            owl: gsm(&owl),
+            wanda: gsm(&wanda),
+        });
+        eprintln!(
+            "[fig1:{config}] s={s:.2} stun={:.1} owl={:.1} wanda={:.1}",
+            rows.last().unwrap().stun,
+            rows.last().unwrap().owl,
+            rows.last().unwrap().wanda
+        );
+    }
+    Ok(rows)
+}
+
+pub fn fig1(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let sweep = sparsity_sweep(
+        engine,
+        "moe-32x",
+        &[0.0, 0.2, 0.4, 0.55, 0.7],
+        0.25,
+        proto,
+    )?;
+    let rows: Vec<Vec<String>> = sweep
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0}%", r.sparsity * 100.0),
+                format!("{:.1}", r.stun),
+                format!("{:.1}", r.owl),
+                format!("{:.1}", r.wanda),
+            ]
+        })
+        .collect();
+    Ok(render_table(
+        &["sparsity", "STUN(w/OWL)", "OWL", "Wanda"],
+        &rows,
+    ))
+}
+
+pub fn fig2(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let mut out = String::new();
+    // (a) many small experts → (c) few large experts, matched capacity
+    for (config, ratio) in [("moe-32x", 0.25), ("moe-8x", 0.25), ("moe-4l", 0.25)] {
+        let sweep = sparsity_sweep(engine, config, &[0.4, 0.65], ratio, proto)?;
+        out.push_str(&format!("\n== {config} ==\n"));
+        let rows: Vec<Vec<String>> = sweep
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.0}%", r.sparsity * 100.0),
+                    format!("{:.1}", r.stun),
+                    format!("{:.1}", r.owl),
+                    format!("{:+.1}", r.stun - r.owl),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["sparsity", "STUN", "OWL", "gap"],
+            &rows,
+        ));
+    }
+    Ok(out)
+}
+
+// ===========================================================================
+// Table 1: STUN vs unstructured-only across models/sparsities.
+// ===========================================================================
+
+pub fn table1(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let mut out_rows: Vec<Vec<String>> = Vec::new();
+    let cases: Vec<(&str, f64, f64)> = vec![
+        // (config, total sparsity, expert ratio) — mirroring the paper's
+        // Arctic@40%, Arctic@65%, 8x7B@65%, 8x22B@70% structure
+        ("moe-32x", 0.40, 0.25),
+        ("moe-32x", 0.65, 0.25),
+        ("moe-8x", 0.65, 0.25),
+        ("moe-4l", 0.70, 0.25),
+    ];
+    let mut evaluated: std::collections::HashMap<String, crate::eval::EvalReport> =
+        Default::default();
+    for (config, sparsity, ratio) in cases {
+        let (bundle, base) = ensure_trained(engine, config, proto)?;
+        if !evaluated.contains_key(config) {
+            let r = evaluate(&bundle, &base, proto)?;
+            push_t1_row(&mut out_rows, config, 0.0, "unpruned", &r);
+            evaluated.insert(config.to_string(), r);
+        }
+        for (label, method, use_expert) in [
+            ("STUN (w/ OWL)", UnstructuredMethod::Owl, true),
+            ("OWL", UnstructuredMethod::Owl, false),
+            ("STUN (w/ Wanda)", UnstructuredMethod::Wanda, true),
+            ("Wanda", UnstructuredMethod::Wanda, false),
+        ] {
+            let er = if use_expert { ratio } else { 0.0 };
+            let (p, _) = stun_variant(&bundle, &base, er, sparsity, method, proto)?;
+            let r = evaluate(&bundle, &p, proto)?;
+            push_t1_row(&mut out_rows, config, sparsity, label, &r);
+        }
+    }
+    Ok(render_table(
+        &[
+            "model", "sparsity", "method", "GSM8K*", "Avg(mc)", "arc-c*", "arc-e*",
+            "hellaswag*", "mmlu*",
+        ],
+        &out_rows,
+    ))
+}
+
+fn push_t1_row(
+    rows: &mut Vec<Vec<String>>,
+    config: &str,
+    sparsity: f64,
+    label: &str,
+    r: &crate::eval::EvalReport,
+) {
+    let g = |n: &str| r.get(n).map(|v| format!("{v:.1}")).unwrap_or_default();
+    rows.push(vec![
+        config.into(),
+        format!("{:.0}%", sparsity * 100.0),
+        label.into(),
+        format!("{:.1}", r.rows[0].1),
+        format!("{:.1}", r.mc_average()),
+        g("arc-c*"),
+        g("arc-e*"),
+        g("hellaswag*"),
+        g("mmlu*"),
+    ]);
+}
+
+// ===========================================================================
+// Table 2: O(1) expert pruning vs the combinatorial baseline.
+// ===========================================================================
+
+pub fn table2(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    let r0 = evaluate(&bundle, &base, proto)?;
+    rows.push(t2_row("unpruned", "-", 0, &r0));
+
+    for expert_sparsity in [0.25, 0.5] {
+        let n_prune =
+            ((bundle.config.n_experts as f64) * expert_sparsity).round() as usize;
+
+        // ours: O(1)
+        let mut ours = base.clone();
+        let e0 = crate::runtime::execution_count();
+        ExpertPruner::prune(
+            &mut ours,
+            None,
+            &ExpertPruneConfig {
+                ratio: expert_sparsity,
+                ..Default::default()
+            },
+        );
+        let ours_cost = crate::runtime::execution_count() - e0;
+        let r = evaluate(&bundle, &ours, proto)?;
+        rows.push(t2_row(
+            &format!("Ours O(1) @{:.0}%", expert_sparsity * 100.0),
+            &format!("{ours_cost} fwd"),
+            n_prune,
+            &r,
+        ));
+
+        // Lu et al. combinatorial
+        let mut lu = base.clone();
+        let mut gen = calib_gen(&bundle.config);
+        let inputs = combinatorial::capture_moe_inputs(&bundle, &lu, &mut gen)?;
+        let report = combinatorial::prune_combinatorial(&bundle, &mut lu, &inputs, n_prune)?;
+        let r = evaluate(&bundle, &lu, proto)?;
+        rows.push(t2_row(
+            &format!("Lu et al. @{:.0}%", expert_sparsity * 100.0),
+            &format!("{} fwd", report.forward_passes),
+            n_prune,
+            &r,
+        ));
+    }
+    Ok(render_table(
+        &[
+            "method", "cost", "pruned/layer", "Avg(mc)", "arc-c*", "arc-e*", "boolq*",
+            "hellaswag*", "mmlu*", "obqa*", "rte*", "winogrande*",
+        ],
+        &rows,
+    ))
+}
+
+fn t2_row(label: &str, cost: &str, n_prune: usize, r: &crate::eval::EvalReport) -> Vec<String> {
+    let g = |n: &str| r.get(n).map(|v| format!("{v:.1}")).unwrap_or_default();
+    vec![
+        label.into(),
+        cost.into(),
+        n_prune.to_string(),
+        format!("{:.1}", r.mc_average()),
+        g("arc-c*"),
+        g("arc-e*"),
+        g("boolq*"),
+        g("hellaswag*"),
+        g("mmlu*"),
+        g("obqa*"),
+        g("rte*"),
+        g("winogrande*"),
+    ]
+}
+
+// ===========================================================================
+// Figure 3: non-MoE (dense) structured-then-unstructured.
+// ===========================================================================
+
+pub fn fig3(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let (bundle, base) = ensure_trained(engine, "dense", proto)?;
+    let mut rows = Vec::new();
+    for s in [0.4, 0.6, 0.7] {
+        // STUN-dense: 5% structured neurons, then OWL to total s
+        let mut stun_p = base.clone();
+        {
+            let mut gen = calib_gen(&bundle.config);
+            let norms = ActNorms::collect(&bundle, &stun_p, &mut gen, proto.calib_batches)?;
+            crate::pruning::structured_dense::prune_neurons(&mut stun_p, &norms, 0.05)?;
+            let rate = pruning::residual_rate(s, stun_p.overall_sparsity());
+            crate::pruning::unstructured::prune(
+                &mut stun_p,
+                &norms,
+                rate,
+                &UnstructuredConfig::default(),
+            )?;
+        }
+        let owl_p = unstructured_only(&bundle, &base, s, UnstructuredMethod::Owl, proto)?;
+        let r_stun = evaluate(&bundle, &stun_p, proto)?;
+        let r_owl = evaluate(&bundle, &owl_p, proto)?;
+        rows.push(vec![
+            format!("{:.0}%", s * 100.0),
+            format!("{:.1}", r_stun.rows[0].1),
+            format!("{:.1}", r_owl.rows[0].1),
+        ]);
+    }
+    Ok(render_table(
+        &["sparsity", "struct(5%)+OWL", "OWL"],
+        &rows,
+    ))
+}
+
+// ===========================================================================
+// Table 3/4/5: ablations (clustering algorithm, reconstruction mode).
+// ===========================================================================
+
+pub fn table3(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+    let mut rows = Vec::new();
+    let variants: Vec<(&str, ClusterMethod, ReconstructMode, usize)> = vec![
+        ("Ours (agglo, κ=3)", ClusterMethod::Agglomerative, ReconstructMode::Selective, 3),
+        ("DSatur", ClusterMethod::DSatur, ReconstructMode::Selective, 3),
+        ("k-means", ClusterMethod::KMeans, ReconstructMode::Selective, 3),
+        ("Always reconstruct", ClusterMethod::Agglomerative, ReconstructMode::Always, 3),
+        ("Never reconstruct", ClusterMethod::Agglomerative, ReconstructMode::Never, 3),
+    ];
+    for (label, cluster_method, reconstruct, kappa) in variants {
+        let mut p = base.clone();
+        ExpertPruner::prune(
+            &mut p,
+            None,
+            &ExpertPruneConfig {
+                ratio: 0.5,
+                cluster_method,
+                reconstruct,
+                kappa,
+                ..Default::default()
+            },
+        );
+        let r = evaluate(&bundle, &p, proto)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}", r.mc_average()),
+            format!("{:.1}", r.rows[0].1),
+        ]);
+    }
+    Ok(render_table(&["variant", "Avg(mc)", "GSM8K*"], &rows))
+}
+
+// ===========================================================================
+// §5 robustness: kurtosis table.
+// ===========================================================================
+
+pub fn kurtosis_report(engine: &Engine, proto: &Protocol) -> Result<String> {
+    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+    let mut expert = base.clone();
+    ExpertPruner::prune(
+        &mut expert,
+        None,
+        &ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+    );
+    let matched = expert.overall_sparsity();
+    let mut unstr = base.clone();
+    {
+        let mut gen = calib_gen(&bundle.config);
+        let norms = ActNorms::collect(&bundle, &unstr, &mut gen, proto.calib_batches)?;
+        crate::pruning::unstructured::prune(
+            &mut unstr,
+            &norms,
+            matched,
+            &UnstructuredConfig {
+                method: UnstructuredMethod::Wanda,
+                ..Default::default()
+            },
+        )?;
+    }
+    let rows: Vec<Vec<String>> = robustness::compare(&base, &expert, &unstr)
+        .into_iter()
+        .map(|(label, s, k)| {
+            vec![label, format!("{:.1}%", s * 100.0), format!("{k:.3}")]
+        })
+        .collect();
+    Ok(render_table(&["model", "sparsity", "kurtosis K(θ)"], &rows))
+}
+
+// ===========================================================================
+// Serving comparison (coordinator demo).
+// ===========================================================================
+
+pub fn serving_report(engine: &Engine, proto: &Protocol, n_requests: usize) -> Result<String> {
+    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+    let mut pruned = base.clone();
+    let mut gen = calib_gen(&bundle.config);
+    StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: 0.4,
+        calib_batches: proto.calib_batches,
+    }
+    .run(&bundle, &mut pruned, &mut gen)?;
+
+    // store sized to fit the PRUNED working set but not the dense one
+    let capacity = ExpertStore::working_set(&pruned);
+    let mut rows = Vec::new();
+    for (label, params) in [("dense", &base), ("stun-pruned", &pruned)] {
+        let store = ExpertStore::new(capacity, std::time::Duration::from_micros(200));
+        let mut batcher = Batcher::new(&bundle, params, store)?;
+        let queue = burst_workload(&bundle.config, n_requests, 6, 17);
+        let (_resp, m) = batcher.serve(queue)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{}", ExpertStore::working_set(params)),
+            format!("{:.1}", m.tokens_per_sec()),
+            format!("{:.1}", m.effective_tokens_per_sec()),
+            format!("{}", m.expert_swaps),
+            format!("{:.1?}", m.p50_latency),
+            format!("{:.1?}", m.p95_latency),
+        ]);
+    }
+    Ok(render_table(
+        &[
+            "model",
+            "experts",
+            "tok/s",
+            "tok/s(eff)",
+            "swaps",
+            "p50",
+            "p95",
+        ],
+        &rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_quick_is_smaller() {
+        let q = Protocol::quick();
+        let d = Protocol::default();
+        assert!(q.train_steps < d.train_steps);
+        assert!(q.n_mc < d.n_mc);
+    }
+}

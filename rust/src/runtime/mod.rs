@@ -1,0 +1,436 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. It wraps:
+//!
+//! * [`Engine`] — a PJRT CPU client (one per process).
+//! * [`ModelBundle`] — one compiled model config: parses
+//!   `artifacts/<cfg>/manifest.json`, lazily compiles each
+//!   `<artifact>.hlo.txt` on first use, and validates I/O arity against
+//!   the manifest.
+//! * [`Artifact`] — a compiled executable plus its manifest I/O specs and
+//!   an execution counter (the unit in which the paper's O(1) vs
+//!   O(kⁿ/√n) complexity claim is measured).
+//!
+//! Artifacts are lowered with `return_tuple=True`, so PJRT hands back a
+//! single tuple buffer; [`Artifact::run`] decomposes it into one
+//! `Literal` per manifest output. Conversions between [`Tensor`] /
+//! [`IntTensor`] and `xla::Literal` live here too.
+
+use crate::model::ModelConfig;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of PJRT executions ("GPU calls" in the paper's
+/// terms). `pruning::combinatorial` and the complexity bench read this.
+pub static EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+
+pub fn execution_count() -> u64 {
+    EXECUTIONS.load(Ordering::Relaxed)
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let dtype = match j.get("dtype")?.as_str()? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        };
+        Ok(IoSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype,
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The PJRT client. Construct once per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// A device-resident input: host literal + its device buffer, kept
+/// together because PJRT host→device copies are asynchronous (see
+/// [`Artifact::stage`]).
+pub struct Staged {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+/// A compiled artifact + manifest metadata.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    exe: xla::PjRtLoadedExecutable,
+    runs: AtomicU64,
+    client: xla::PjRtClient,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns one `Literal` per manifest
+    /// output (tuple root decomposed).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_ref(&refs)
+    }
+
+    /// Execute with borrowed literal inputs.
+    ///
+    /// Inputs are uploaded to Rust-owned [`xla::PjRtBuffer`]s and executed
+    /// via `execute_b`, NOT via the crate's literal `execute`: that C++
+    /// wrapper `release()`s the input device buffers without ever deleting
+    /// them, leaking the full argument size per call (36 GB OOM over a
+    /// report run — see vendor/xla/xla_rs/xla_rs.cc `status execute`).
+    /// `PjRtBuffer` has a proper Drop, so this path is leak-free.
+    pub fn run_ref(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        // args literals outlive the synchronous run_buffers call below, so
+        // bare buffers (no Staged guard) are safe here.
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("{}: upload: {e:?}", self.name))
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(&refs)
+    }
+
+    /// Stage a literal on device. Returns a [`Staged`] guard that owns
+    /// BOTH the host literal and the device buffer: PJRT's
+    /// `BufferFromHostLiteral` copies asynchronously, so the literal must
+    /// outlive the transfer (dropping it early is a use-after-free — it
+    /// SIGSEGVed the test suite before this guard existed).
+    pub fn stage(&self, lit: xla::Literal) -> Result<Staged> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("{}: upload: {e:?}", self.name))?;
+        Ok(Staged { _lit: lit, buf })
+    }
+
+    /// Stage a borrowed literal (clones the host side into the guard).
+    pub fn stage_ref(&self, lit: &xla::Literal) -> Result<Staged> {
+        self.stage(lit.clone())
+    }
+
+    /// Execute with device-resident inputs — the hot-path variant: the
+    /// (large, unchanging) parameter buffers are uploaded once per
+    /// eval/probe session instead of per batch (EXPERIMENTS.md §Perf).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            );
+        }
+        EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        let mut result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let device0 = result
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("{}: no device outputs", self.name))?;
+        let mut outs = Vec::new();
+        for buf in &device0 {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
+            // return_tuple=True roots come back as a single tuple literal.
+            match lit.shape() {
+                Ok(xla::Shape::Tuple(_)) => {
+                    let mut l = lit;
+                    outs.extend(
+                        l.decompose_tuple()
+                            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))?,
+                    );
+                }
+                _ => outs.push(lit),
+            }
+        }
+        if outs.len() != self.outputs.len() {
+            bail!(
+                "{}: manifest says {} outputs, runtime produced {}",
+                self.name,
+                self.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Number of times this artifact has executed.
+    pub fn run_count(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+}
+
+/// One model config's artifact registry (lazy compilation).
+pub struct ModelBundle {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub param_specs: Vec<IoSpec>,
+    pub recon_tokens: usize,
+    artifact_files: HashMap<String, String>,
+    artifact_specs: HashMap<String, (Vec<IoSpec>, Vec<IoSpec>)>,
+    compiled: RefCell<HashMap<String, Rc<Artifact>>>,
+    client: xla::PjRtClient,
+}
+
+impl ModelBundle {
+    pub fn load(engine: &Engine, dir: impl AsRef<Path>) -> Result<ModelBundle> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", manifest_path.display()))?;
+        let config = ModelConfig::from_json(j.get("config")?)?;
+        let param_specs = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(IoSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let recon_tokens = j.get("recon_tokens")?.as_usize()?;
+        let mut artifact_files = HashMap::new();
+        let mut artifact_specs = HashMap::new();
+        for (name, art) in j.get("artifacts")?.as_obj()? {
+            let file = art.get("file")?.as_str()?.to_string();
+            let ins = art
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outs = art
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifact_files.insert(name.clone(), file);
+            artifact_specs.insert(name.clone(), (ins, outs));
+        }
+        Ok(ModelBundle {
+            dir,
+            config,
+            param_specs,
+            recon_tokens,
+            artifact_files,
+            artifact_specs,
+            compiled: RefCell::new(HashMap::new()),
+            client: engine.client.clone(),
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.artifact_files.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Fetch (compiling on first use) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.compiled.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let file = self
+            .artifact_files
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}' in {}", self.dir.display()))?;
+        let (inputs, outputs) = self.artifact_specs.get(name).unwrap().clone();
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let artifact = Rc::new(Artifact {
+            name: name.to_string(),
+            inputs,
+            outputs,
+            exe,
+            runs: AtomicU64::new(0),
+            client: self.client.clone(),
+        });
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> Tensor conversions.
+// ---------------------------------------------------------------------------
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.shape().is_empty() {
+        return Ok(xla::Literal::scalar(t.item()));
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape int literal: {e:?}"))
+}
+
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal data: {e:?}"))?;
+    Tensor::new(&dims, data)
+}
+
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar literal: {e:?}"))
+}
+
+/// Convert a ParamSet's tensors into the literal list the artifacts expect
+/// (canonical order).
+pub fn params_to_literals(ps: &crate::model::ParamSet) -> Result<Vec<xla::Literal>> {
+    ps.tensors().iter().map(tensor_to_literal).collect()
+}
+
+pub fn expert_mask_literal(ps: &crate::model::ParamSet) -> Result<xla::Literal> {
+    tensor_to_literal(&ps.expert_mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn bundle_parses_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new().unwrap();
+        let b = ModelBundle::load(&engine, dir).unwrap();
+        assert_eq!(b.config.name, "tiny");
+        assert_eq!(b.param_specs.len(), b.config.param_specs().len());
+        assert!(b.artifact_names().contains(&"fwd_logits".to_string()));
+    }
+
+    #[test]
+    fn layer_recon_executes_and_matches_manifest_arity() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new().unwrap();
+        let b = ModelBundle::load(&engine, dir).unwrap();
+        let art = b.artifact("layer_recon").unwrap();
+        let cfg = &b.config;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let router = Tensor::randn(&[cfg.n_experts, cfg.d_model], &mut rng);
+        let w1 = Tensor::randn(&[cfg.n_experts, cfg.d_model, cfg.d_ff], &mut rng);
+        let w2 = Tensor::randn(&[cfg.n_experts, cfg.d_ff, cfg.d_model], &mut rng);
+        let mask = Tensor::ones(&[cfg.n_experts]);
+        let x = Tensor::randn(&[b.recon_tokens, cfg.d_model], &mut rng);
+        let args = vec![
+            tensor_to_literal(&router).unwrap(),
+            tensor_to_literal(&w1).unwrap(),
+            tensor_to_literal(&w2).unwrap(),
+            tensor_to_literal(&mask).unwrap(),
+            tensor_to_literal(&x).unwrap(),
+        ];
+        let before = art.run_count();
+        let outs = art.run(&args).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(art.run_count(), before + 1);
+        let y = literal_to_tensor(&outs[0]).unwrap();
+        assert_eq!(y.shape(), &[b.recon_tokens, cfg.d_model]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::new().unwrap();
+        let b = ModelBundle::load(&engine, dir).unwrap();
+        let art = b.artifact("layer_recon").unwrap();
+        assert!(art.run(&[]).is_err());
+    }
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(2.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), 2.5);
+    }
+}

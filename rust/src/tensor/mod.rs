@@ -1,0 +1,374 @@
+//! Dense row-major f32 tensor — the host-side numeric substrate.
+//!
+//! The heavy math (model forward/backward) runs inside AOT-compiled XLA
+//! executables; this type covers everything the coordinator does *around*
+//! them: weight surgery for pruning, similarity matrices, statistics,
+//! checkpoint IO, and conversions to/from `xla::Literal`.
+
+pub mod stats;
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ------------------------------------------------------------ create
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elems, got {}", data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Gaussian init scaled by 1/sqrt(fan_in) — mirrors python init.
+    pub fn randn_scaled(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let fan_in = if shape.len() >= 2 {
+            shape[shape.len() - 2]
+        } else {
+            shape.last().copied().unwrap_or(1)
+        };
+        let scale = 1.0 / (fan_in as f32).sqrt();
+        let data = (0..shape.iter().product())
+            .map(|_| rng.normal() * scale)
+            .collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let data = (0..shape.iter().product()).map(|_| rng.normal()).collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    // ------------------------------------------------------------ access
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+
+    /// 2-D element accessor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols + j]
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// For a tensor whose leading axis indexes "items" (e.g. experts),
+    /// return the flat slice of item `i`.
+    pub fn subtensor(&self, i: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn subtensor_mut(&mut self, i: usize) -> &mut [f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    // -------------------------------------------------------------- math
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Frobenius distance between two equally-shaped tensors.
+    pub fn fro_dist(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        Self::fro_dist_slices(&self.data, &other.data)
+    }
+
+    pub fn fro_dist_slices(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let d = (x - y) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Naive matmul for host-side checks: [M,K] @ [K,N] -> [M,N].
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!("matmul expects 2-D tensors");
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!("matmul dim mismatch: {k} vs {k2}");
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Count of exact-zero entries (sparsity accounting).
+    pub fn zero_count(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    /// Fraction of exact-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.zero_count() as f64 / self.data.len() as f64
+    }
+
+    /// Mean of elements.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+}
+
+/// Integer tensor for token ids (kept separate: PJRT wants i32 buffers).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Result<IntTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elems, got {}", data.len());
+        }
+        Ok(IntTensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn fro_dist_basic() {
+        let a = Tensor::new(&[2], vec![0.0, 3.0]).unwrap();
+        let b = Tensor::new(&[2], vec![4.0, 3.0]).unwrap();
+        assert!((a.fro_dist(&b) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subtensor_indexes_leading_axis() {
+        let t = Tensor::new(&[2, 2, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.subtensor(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = Tensor::new(&[4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(t.sparsity(), 0.5);
+        assert_eq!(t.zero_count(), 2);
+    }
+
+    #[test]
+    fn randn_scaled_has_expected_scale() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn_scaled(&[256, 64], &mut rng);
+        // std should be ~ 1/sqrt(256) = 1/16
+        let var = t.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / t.len() as f64;
+        assert!((var.sqrt() - 1.0 / 16.0).abs() < 0.005, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn rows_and_at2() {
+        let mut t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        *t.at2_mut(1, 0) = 9.0;
+        assert_eq!(t.row(1), &[9., 5., 6.]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+}

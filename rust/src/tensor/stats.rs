@@ -1,0 +1,182 @@
+//! Weight-distribution statistics, most importantly **kurtosis** (paper
+//! Eq. 14): K(θ) = E[((θ−μ)/σ)^4]. Mason-Williams & Dahlqvist (2024) use
+//! kurtosis as a proxy for robustness to unstructured pruning; STUN §5
+//! argues expert pruning preserves it while unstructured pruning collapses
+//! it toward the bimodal minimum. `pruning::robustness` builds the paper's
+//! §5 analysis on these primitives.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub kurtosis: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Full summary of a weight sample. Kurtosis is the *non-excess* fourth
+/// standardised moment (Gaussian → 3.0), matching paper Eq. 14.
+pub fn summarize(xs: &[f32]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            kurtosis: 0.0,
+            min: 0.0,
+            max: 0.0,
+        };
+    }
+    let nf = n as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / nf;
+    let mut m2 = 0.0;
+    let mut m4 = 0.0;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for &x in xs {
+        let d = x as f64 - mean;
+        let d2 = d * d;
+        m2 += d2;
+        m4 += d2 * d2;
+        min = min.min(x as f64);
+        max = max.max(x as f64);
+    }
+    m2 /= nf;
+    m4 /= nf;
+    let std = m2.sqrt();
+    let kurtosis = if m2 > 0.0 { m4 / (m2 * m2) } else { 0.0 };
+    Summary {
+        n,
+        mean,
+        std,
+        kurtosis,
+        min,
+        max,
+    }
+}
+
+/// Kurtosis of a sample (Eq. 14). Gaussian ≈ 3; bimodal symmetric → 1
+/// (the distribution unstructured pruning pushes weights toward, §5).
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    summarize(xs).kurtosis
+}
+
+/// Kurtosis over the *non-zero* entries — the live weights after a pruning
+/// mask has been applied (zeroed weights are "removed", not part of θ).
+pub fn kurtosis_nonzero(xs: &[f32]) -> f64 {
+    let live: Vec<f32> = xs.iter().copied().filter(|&x| x != 0.0).collect();
+    kurtosis(&live)
+}
+
+/// Histogram over [lo, hi] with `bins` equal buckets (out-of-range values
+/// clamp to the edge buckets). Used by `stun report kurtosis --hist`.
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    if xs.is_empty() || bins == 0 || hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+/// Percentile (0..=100) by sorting a copy; used for score thresholds.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaussian_kurtosis_near_three() {
+        let mut rng = Rng::new(42);
+        let xs: Vec<f32> = (0..200_000).map(|_| rng.normal()).collect();
+        let k = kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.1, "kurtosis {k}");
+    }
+
+    #[test]
+    fn bimodal_kurtosis_is_one() {
+        // ±1 Rademacher: kurtosis = 1, the theoretical minimum for
+        // symmetric distributions (Darlington 1970, cited in §5).
+        let xs: Vec<f32> = (0..10_000)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        assert!((kurtosis(&xs) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn magnitude_pruning_lowers_kurtosis_of_gaussian() {
+        // The §5 mechanism in miniature: dropping near-zero weights from a
+        // Gaussian moves the survivors toward bimodal, lowering kurtosis.
+        let mut rng = Rng::new(7);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+        let k_before = kurtosis(&xs);
+        let thr = percentile(&xs.iter().map(|x| x.abs()).collect::<Vec<_>>(), 60.0);
+        let pruned: Vec<f32> = xs
+            .iter()
+            .map(|&x| if x.abs() < thr { 0.0 } else { x })
+            .collect();
+        let k_after = kurtosis_nonzero(&pruned);
+        assert!(
+            k_after < k_before - 0.5,
+            "before {k_before} after {k_after}"
+        );
+    }
+
+    #[test]
+    fn expert_style_subsetting_preserves_kurtosis() {
+        // Removing a random *subset* of Gaussian weights (what expert
+        // pruning does to the weight population) leaves kurtosis ~3.
+        let mut rng = Rng::new(9);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+        let keep: Vec<f32> = xs.iter().copied().take(40_000).collect();
+        assert!((kurtosis(&keep) - 3.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn summary_min_max_mean() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let h = histogram(&[0.0, 0.1, 0.9, 1.0, -5.0, 5.0], 0.0, 1.0, 2);
+        assert_eq!(h.iter().sum::<usize>(), 6);
+        assert_eq!(h[0], 3); // 0.0, 0.1, -5.0(clamped)
+        assert_eq!(h[1], 3); // 0.9, 1.0(clamped), 5.0(clamped)
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn empty_inputs_do_not_panic() {
+        assert_eq!(kurtosis(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(histogram(&[], 0.0, 1.0, 4), vec![0; 4]);
+    }
+}

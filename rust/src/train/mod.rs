@@ -1,0 +1,215 @@
+//! Rust-driven training loop over the AOT `train_step` artifact.
+//!
+//! The entire optimisation step (forward, backward through the Pallas
+//! kernel's custom VJP, AdamW update) is one XLA executable; this module
+//! owns the *loop*: batch generation, LR schedule (linear warmup + cosine
+//! decay), loss logging, and checkpointing. Parameters and optimiser state
+//! stay as `xla::Literal`s between steps — they are only materialised into
+//! [`Tensor`]s for checkpoints.
+
+use crate::checkpoint::Checkpoint;
+use crate::data::CorpusGenerator;
+use crate::model::ParamSet;
+use crate::runtime::{self, ModelBundle};
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 5e-3,
+            warmup: 20,
+            log_every: 20,
+            seed: 1234,
+        }
+    }
+}
+
+/// Linear warmup then cosine decay to 10% of peak.
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f64 {
+    if cfg.steps == 0 {
+        return cfg.lr;
+    }
+    if step < cfg.warmup {
+        return cfg.lr * (step as f64 + 1.0) / cfg.warmup as f64;
+    }
+    let progress =
+        (step - cfg.warmup) as f64 / (cfg.steps.saturating_sub(cfg.warmup)).max(1) as f64;
+    let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress.min(1.0)).cos());
+    cfg.lr * (0.1 + 0.9 * cos)
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    /// (step, loss) samples at `log_every` cadence plus first/last.
+    pub losses: Vec<(usize, f64)>,
+    pub seconds: f64,
+}
+
+impl TrainLog {
+    pub fn first_loss(&self) -> f64 {
+        self.losses.first().map(|&(_, l)| l).unwrap_or(f64::NAN)
+    }
+
+    pub fn last_loss(&self) -> f64 {
+        self.losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (step, loss) in &self.losses {
+            s.push_str(&format!("{step},{loss:.4}\n"));
+        }
+        s
+    }
+}
+
+pub struct Trainer {
+    pub config: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(config: TrainConfig) -> Trainer {
+        Trainer { config }
+    }
+
+    /// Train `params` in place; returns the loss log.
+    pub fn train(
+        &self,
+        bundle: &ModelBundle,
+        params: &mut ParamSet,
+        gen: &mut CorpusGenerator,
+    ) -> Result<TrainLog> {
+        let cfg = &bundle.config;
+        if gen.cfg.seq != cfg.seq || gen.cfg.vocab != cfg.vocab {
+            bail!(
+                "corpus shape ({}, {}) does not match model ({}, {})",
+                gen.cfg.vocab,
+                gen.cfg.seq,
+                cfg.vocab,
+                cfg.seq
+            );
+        }
+        let art = bundle.artifact("train_step")?;
+        let n_p = cfg.param_specs().len();
+        let t0 = std::time::Instant::now();
+
+        // live state as literals: params ++ m ++ v
+        let mut p_lits = runtime::params_to_literals(params)?;
+        let mut m_lits: Vec<xla::Literal> = params
+            .tensors()
+            .iter()
+            .map(|t| runtime::tensor_to_literal(&crate::tensor::Tensor::zeros(t.shape())))
+            .collect::<Result<_>>()?;
+        let mut v_lits = m_lits.clone();
+
+        let mut log = TrainLog::default();
+        for step in 0..self.config.steps {
+            let (tokens, targets) = gen.batch(cfg.train_batch);
+            // move the state literals into the call (no host copies; the
+            // next state comes back in the outputs)
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n_p + 4);
+            args.append(&mut p_lits);
+            args.append(&mut m_lits);
+            args.append(&mut v_lits);
+            args.push(runtime::scalar_literal((step + 1) as f32));
+            args.push(runtime::scalar_literal(lr_at(&self.config, step) as f32));
+            args.push(runtime::int_tensor_to_literal(&tokens)?);
+            args.push(runtime::int_tensor_to_literal(&targets)?);
+            let mut outs = art.run(&args)?;
+            let loss = runtime::literal_to_f32(outs.last().unwrap())? as f64;
+            if !loss.is_finite() {
+                bail!("training diverged at step {step}: loss {loss}");
+            }
+            // reslot state
+            let mut it = outs.drain(..);
+            p_lits = (&mut it).take(n_p).collect();
+            m_lits = (&mut it).take(n_p).collect();
+            v_lits = (&mut it).take(n_p).collect();
+            if step % self.config.log_every == 0 || step + 1 == self.config.steps {
+                log.losses.push((step, loss));
+            }
+        }
+
+        // materialise final params back into the ParamSet
+        let tensors: Vec<crate::tensor::Tensor> = p_lits
+            .iter()
+            .map(runtime::literal_to_tensor)
+            .collect::<Result<_>>()?;
+        let mask = params.expert_mask.clone();
+        *params = ParamSet::from_tensors(cfg, tensors)?;
+        params.expert_mask = mask;
+        log.seconds = t0.elapsed().as_secs_f64();
+        Ok(log)
+    }
+}
+
+/// Save a trained model to `runs/<name>.stz` with a metadata blob.
+pub fn save_run(params: &ParamSet, log: &TrainLog, path: &str) -> Result<()> {
+    let meta = crate::util::json::Json::obj(vec![
+        ("config", crate::util::json::Json::Str(params.config.name.clone())),
+        (
+            "final_loss",
+            crate::util::json::Json::Num(log.last_loss()),
+        ),
+        (
+            "train_seconds",
+            crate::util::json::Json::Num(log.seconds),
+        ),
+    ]);
+    let ckpt = params.to_checkpoint(&meta.to_string());
+    ckpt.save(path)
+}
+
+/// Load a trained model saved by [`save_run`].
+pub fn load_run(config: &crate::model::ModelConfig, path: &str) -> Result<ParamSet> {
+    let ckpt = Checkpoint::load(path)?;
+    ParamSet::from_checkpoint(config, &ckpt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig {
+            steps: 100,
+            lr: 1e-3,
+            warmup: 10,
+            ..Default::default()
+        };
+        // warmup is increasing
+        assert!(lr_at(&cfg, 0) < lr_at(&cfg, 5));
+        assert!(lr_at(&cfg, 5) < lr_at(&cfg, 9));
+        // peak right after warmup
+        let peak = lr_at(&cfg, 10);
+        assert!((peak - 1e-3).abs() < 1e-9);
+        // decays after
+        assert!(lr_at(&cfg, 50) < peak);
+        assert!(lr_at(&cfg, 99) < lr_at(&cfg, 50));
+        // floor at 10%
+        assert!(lr_at(&cfg, 99) >= 1e-4 - 1e-12);
+    }
+
+    #[test]
+    fn train_log_render() {
+        let log = TrainLog {
+            losses: vec![(0, 5.5), (20, 3.2)],
+            seconds: 1.0,
+        };
+        let s = log.render();
+        assert!(s.contains("0,5.5000"));
+        assert_eq!(log.first_loss(), 5.5);
+        assert_eq!(log.last_loss(), 3.2);
+    }
+}

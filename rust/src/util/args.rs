@@ -1,0 +1,163 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch lives in `main.rs`.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (not including argv[0] / subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.str_opt(key)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{s}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{s}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{s}'")),
+            None => Ok(default),
+        }
+    }
+
+    /// Comma-separated list of f64 values.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.str_opt(key) {
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad number '{t}'"))
+                })
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // NOTE: a bare `--flag` greedily consumes a following non-flag
+        // token as its value, so positionals go before flags (or use
+        // `--flag=true`).
+        let a = parse("ckpt.stz --steps 300 --lr=0.003 --verbose");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.003);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["ckpt.stz"]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("--quick");
+        assert!(a.has("quick"));
+        assert_eq!(a.str_or("quick", ""), "true");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse("");
+        assert!(a.req("config").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.usize_or("steps", 42).unwrap(), 42);
+        assert_eq!(a.str_or("config", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--steps banana");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn f64_list_parses() {
+        let a = parse("--sweep 0.1,0.2,0.5");
+        assert_eq!(
+            a.f64_list_or("sweep", &[]).unwrap(),
+            vec![0.1, 0.2, 0.5]
+        );
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--t -0.5": the next token starts with '-' but not '--', so it is
+        // consumed as the value.
+        let a = parse("--t -0.5");
+        assert_eq!(a.f64_or("t", 0.0).unwrap(), -0.5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Bench binaries are declared with `harness = false` in Cargo.toml and
+//! call [`bench_fn`] / [`Bench::run`] directly. Reports mean / p50 / p95
+//! wall-clock over a warmup + timed phase, plus a user-supplied throughput
+//! unit when given.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Keep defaults modest: bench workloads here run entire pruning +
+        // eval pipelines, not nanosecond ops.
+        Bench {
+            warmup_iters: 1,
+            iters: 5,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup_iters: 0,
+            iters: 1,
+        }
+    }
+
+    /// Honour `STUN_BENCH_QUICK=1` for fast CI runs.
+    pub fn from_env() -> Self {
+        if std::env::var("STUN_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+            min: samples[0],
+        };
+        println!("{}", res.line());
+        res
+    }
+}
+
+/// One-shot convenience used by bench binaries.
+pub fn bench_fn<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    Bench::from_env().run(name, f)
+}
+
+/// Time a single closure invocation, returning (result, seconds).
+pub fn timed<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_requested_iterations() {
+        let mut count = 0usize;
+        let b = Bench {
+            warmup_iters: 2,
+            iters: 5,
+        };
+        let res = b.run("noop", || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(res.iters, 5);
+        assert!(res.p50 >= res.min);
+        assert!(res.p95 >= res.p50);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn quick_mode_single_iter() {
+        let mut count = 0;
+        Bench::quick().run("noop", || count += 1);
+        assert_eq!(count, 1);
+    }
+}

@@ -1,0 +1,70 @@
+//! In-tree utilities replacing crates unavailable in this offline
+//! environment: a seeded RNG (`rng`), a JSON parser/serializer (`json`),
+//! a tiny CLI argument parser (`args`), and a micro-benchmark harness
+//! (`bench`) used by the `harness = false` bench binaries.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Format a float with fixed width for table output.
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Render a simple aligned text table (used by `stun report`).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("| ");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!("{c:<w$} | "));
+        }
+        s.trim_end().to_string()
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&line(&hdr, &widths));
+    out.push('\n');
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&"-".repeat(w + 2));
+        sep.push('|');
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["name", "acc"],
+            &[
+                vec!["stun".into(), "70.28".into()],
+                vec!["owl-only".into(), "63.76".into()],
+            ],
+        );
+        assert!(t.contains("| stun"));
+        assert!(t.lines().count() == 4);
+        // all lines same width
+        let ws: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(ws.windows(2).all(|w| w[0] == w[1]), "{t}");
+    }
+}

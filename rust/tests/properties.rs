@@ -1,0 +1,261 @@
+//! Property-based tests (hand-rolled generators — proptest is unavailable
+//! offline): randomised invariants over the host-side algorithm library.
+//! Each property runs across many seeded cases; failures print the seed.
+
+use stun::checkpoint::Checkpoint;
+use stun::cluster::{self, DistMatrix};
+use stun::model::{ModelConfig, ParamSet};
+use stun::pruning::combinatorial::{subset_count, subsets};
+use stun::pruning::expert::{ExpertPruneConfig, ExpertPruner};
+use stun::pruning::unstructured::{self, ActNorms, UnstructuredConfig, UnstructuredMethod};
+use stun::pruning::residual_rate;
+use stun::tensor::Tensor;
+use stun::util::rng::Rng;
+
+fn random_dist(rng: &mut Rng, n: usize) -> DistMatrix {
+    let mut m = DistMatrix::new(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            m.set(i, j, rng.f64() * 10.0);
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_residual_rate_always_composes_to_target() {
+    let mut rng = Rng::new(1);
+    for case in 0..500 {
+        let already = rng.f64() * 0.8;
+        let target = rng.f64();
+        let r = residual_rate(target, already);
+        assert!((0.0..=1.0).contains(&r), "case {case}");
+        if target > already {
+            let total = already + (1.0 - already) * r;
+            assert!((total - target).abs() < 1e-9, "case {case}");
+        } else {
+            assert_eq!(r, 0.0, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_agglomerative_target_exact_count_and_partition() {
+    let mut rng = Rng::new(2);
+    for case in 0..100 {
+        let n = rng.range(2, 24);
+        let target = rng.range(1, n + 1);
+        let d = random_dist(&mut rng, n);
+        let c = cluster::agglomerative_target(&d, target);
+        assert_eq!(c.n_clusters, target, "case {case} n={n}");
+        // partition: every item in exactly one cluster
+        let mut seen = vec![false; n];
+        for members in c.clusters() {
+            for m in members {
+                assert!(!seen[m], "case {case}: duplicate item");
+                seen[m] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "case {case}: missing item");
+    }
+}
+
+#[test]
+fn prop_threshold_agglomerative_monotone_in_threshold() {
+    let mut rng = Rng::new(3);
+    for case in 0..50 {
+        let n = rng.range(3, 16);
+        let d = random_dist(&mut rng, n);
+        let mut last = usize::MAX;
+        for t in [0.0, 1.0, 3.0, 6.0, 11.0] {
+            let c = cluster::agglomerative(&d, t);
+            assert!(
+                c.n_clusters <= last,
+                "case {case}: clusters increased with looser threshold"
+            );
+            last = c.n_clusters;
+        }
+        assert_eq!(cluster::agglomerative(&d, 1e9).n_clusters, 1, "case {case}");
+    }
+}
+
+#[test]
+fn prop_dsatur_colour_classes_are_similarity_cliques() {
+    let mut rng = Rng::new(4);
+    for case in 0..50 {
+        let n = rng.range(2, 14);
+        let d = random_dist(&mut rng, n);
+        let t = rng.f64() * 10.0;
+        let c = cluster::dsatur(&d, t);
+        for members in c.clusters() {
+            for (ai, &a) in members.iter().enumerate() {
+                for &b in &members[ai + 1..] {
+                    assert!(
+                        d.get(a, b) <= t,
+                        "case {case}: dissimilar pair ({a},{b}) share a cluster"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_subsets_length_matches_binomial() {
+    let mut rng = Rng::new(5);
+    for _ in 0..60 {
+        let n = rng.range(1, 12);
+        let k = rng.range(0, n + 1);
+        assert_eq!(subsets(n, k).len() as u128, subset_count(n, k), "C({n},{k})");
+    }
+}
+
+#[test]
+fn prop_expert_pruner_respects_ratio_and_mask_weight_consistency() {
+    let mut rng = Rng::new(6);
+    for case in 0..20 {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, rng.next_u64());
+        let ratio = [0.25, 0.5, 0.75][case % 3];
+        ExpertPruner::prune(
+            &mut ps,
+            None,
+            &ExpertPruneConfig {
+                ratio,
+                ..Default::default()
+            },
+        );
+        let expect_pruned = ((cfg.n_experts as f64) * ratio).round() as usize;
+        for l in 0..cfg.n_layers {
+            assert_eq!(
+                ps.alive_experts(l).len(),
+                cfg.n_experts - expect_pruned,
+                "case {case} layer {l}"
+            );
+            for e in 0..cfg.n_experts {
+                let zeroed = ps.expert_theta(l, e).iter().all(|&x| x == 0.0);
+                assert_eq!(
+                    !ps.is_expert_alive(l, e),
+                    zeroed,
+                    "case {case}: mask and weights disagree (layer {l} expert {e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_unstructured_rate_within_tolerance_across_methods() {
+    let mut rng = Rng::new(7);
+    let cfg = ModelConfig::test_tiny();
+    for case in 0..12 {
+        let mut ps = ParamSet::init(&cfg, rng.next_u64());
+        let rate = 0.1 + 0.8 * rng.f64();
+        let method = [
+            UnstructuredMethod::Magnitude,
+            UnstructuredMethod::Wanda,
+            UnstructuredMethod::Owl,
+        ][case % 3];
+        unstructured::prune(
+            &mut ps,
+            &ActNorms::uniform(&cfg),
+            rate,
+            &UnstructuredConfig {
+                method,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let s = ps.overall_sparsity();
+        assert!(
+            (s - rate).abs() < 0.04,
+            "case {case} {method:?}: wanted {rate:.3} got {s:.3}"
+        );
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_tensors() {
+    let mut rng = Rng::new(8);
+    for case in 0..20 {
+        let mut ckpt = Checkpoint::new(format!("{{\"case\":{case}}}"));
+        let n_tensors = rng.range(1, 8);
+        for t in 0..n_tensors {
+            let ndim = rng.range(0, 4);
+            let shape: Vec<usize> = (0..ndim).map(|_| rng.range(1, 9)).collect();
+            ckpt.push(format!("t{t}"), Tensor::randn(&shape, &mut rng))
+                .unwrap();
+        }
+        let path =
+            std::env::temp_dir().join(format!("stun-prop-{}-{case}.stz", std::process::id()));
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.meta, ckpt.meta);
+        assert_eq!(back.names(), ckpt.names());
+        for (name, t) in ckpt.iter() {
+            assert_eq!(back.get(name).unwrap(), t, "case {case} {name}");
+        }
+    }
+}
+
+#[test]
+fn prop_owl_rates_bounded_and_mean_preserving() {
+    let mut rng = Rng::new(9);
+    let cfg = ModelConfig::test_tiny();
+    for case in 0..10 {
+        let ps = ParamSet::init(&cfg, rng.next_u64());
+        let rate = 0.2 + 0.5 * rng.f64();
+        let lambda = 0.08;
+        let rates =
+            unstructured::owl_layer_rates(&ps, &ActNorms::uniform(&cfg), rate, 5.0, lambda);
+        for &r in &rates {
+            assert!(
+                r >= rate - lambda - 1e-9 && r <= rate + lambda + 1e-9,
+                "case {case}: rate {r} outside band around {rate}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use stun::util::json::Json;
+    let mut rng = Rng::new(10);
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 1e6).round() / 4.0),
+            3 => Json::Str(format!("s{}", rng.next_u64() % 1000)),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} — {text}"));
+        assert_eq!(back, v, "case {case}");
+    }
+}
+
+#[test]
+fn prop_tensor_matmul_associates_with_identity() {
+    let mut rng = Rng::new(11);
+    for case in 0..30 {
+        let n = rng.range(1, 10);
+        let m = rng.range(1, 10);
+        let a = Tensor::randn(&[n, m], &mut rng);
+        let mut eye = Tensor::zeros(&[m, m]);
+        for i in 0..m {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        let prod = a.matmul(&eye).unwrap();
+        assert_eq!(prod, a, "case {case}");
+    }
+}
