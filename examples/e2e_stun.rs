@@ -5,8 +5,9 @@
 //! matched sparsity — the Fig. 1 protocol on a real (small) workload.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_stun [-- --config moe-8x --steps 200]
+//! cargo run --release --example e2e_stun [-- --config moe-8x --steps 200]
 //! ```
+//! (add `--features pjrt` plus `make artifacts` to run on the AOT path)
 
 use stun::prelude::*;
 use stun::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
@@ -18,12 +19,13 @@ fn main() -> Result<()> {
     let steps = args.usize_or("steps", 200)?;
     let sparsity = args.f64_or("sparsity", 0.4)?;
 
-    let engine = Engine::new()?;
-    let bundle = ModelBundle::load(&engine, format!("artifacts/{config}"))?;
-    let cfg = bundle.config.clone();
+    let backend = stun::report::load_backend(&config)?;
+    let backend = backend.as_ref();
+    let cfg = backend.config().clone();
     println!(
-        "== e2e: {} ({} params, {}x{} experts) ==",
+        "== e2e: {} via {} ({} params, {}x{} experts) ==",
         cfg.name,
+        backend.name(),
         cfg.param_count(),
         cfg.n_layers,
         cfg.n_experts
@@ -36,7 +38,7 @@ fn main() -> Result<()> {
         steps,
         ..Default::default()
     });
-    let log = trainer.train(&bundle, &mut params, &mut corpus)?;
+    let log = trainer.train(backend, &mut params, &mut corpus)?;
     println!("loss curve (step,loss):\n{}", log.render());
     println!(
         "trained {steps} steps in {:.1}s ({:.2} steps/s)",
@@ -45,7 +47,7 @@ fn main() -> Result<()> {
     );
 
     // ---- 2. evaluate the dense model --------------------------------------
-    let h = EvalHarness::new(&bundle, &params)?;
+    let h = EvalHarness::new(backend, &params)?;
     let dense_report = h.full_report(11, 24, 24, 2)?;
     let mut held_out =
         CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 999));
@@ -64,7 +66,7 @@ fn main() -> Result<()> {
         total_sparsity: sparsity,
         calib_batches: 4,
     }
-    .run(&bundle, &mut stun_params, &mut calib)?;
+    .run(backend, &mut stun_params, &mut calib)?;
     println!(
         "STUN: expert stage {:.1}% sparsity (0 decision fwd passes), final {:.1}%",
         stun_report.expert_stage_sparsity * 100.0,
@@ -84,14 +86,14 @@ fn main() -> Result<()> {
         total_sparsity: sparsity,
         calib_batches: 4,
     }
-    .run(&bundle, &mut owl_params, &mut calib)?;
+    .run(backend, &mut owl_params, &mut calib)?;
 
     // ---- 4. report ---------------------------------------------------------
-    let stun_h = EvalHarness::new(&bundle, &stun_params)?;
+    let stun_h = EvalHarness::new(backend, &stun_params)?;
     let stun_rep = stun_h.full_report(11, 24, 24, 2)?;
     let stun_ppl = stun_h.perplexity(&mut held_out, 4)?;
     drop(stun_h);
-    let owl_h = EvalHarness::new(&bundle, &owl_params)?;
+    let owl_h = EvalHarness::new(backend, &owl_params)?;
     let owl_rep = owl_h.full_report(11, 24, 24, 2)?;
     let owl_ppl = owl_h.perplexity(&mut held_out, 4)?;
     drop(owl_h);

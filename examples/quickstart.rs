@@ -1,23 +1,25 @@
-//! Quickstart: load artifacts, train a tiny MoE for a handful of steps,
-//! STUN-prune it, and evaluate — in under a minute on one CPU core.
+//! Quickstart: build a backend, train a tiny MoE for a handful of steps,
+//! STUN-prune it, and evaluate — in under a minute on one CPU core, with
+//! no artifacts or native libraries required.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use stun::prelude::*;
 use stun::pruning::unstructured::UnstructuredConfig;
-use stun::runtime;
 
 fn main() -> Result<()> {
-    // 1. PJRT engine + the `tiny` artifact bundle (AOT-compiled by
-    //    `make artifacts`; python never runs again after that).
-    let engine = Engine::new()?;
-    let bundle = ModelBundle::load(&engine, "artifacts/tiny")?;
-    let cfg = bundle.config.clone();
+    // 1. Execution backend. `load_backend` picks the PJRT artifact path
+    //    when it is compiled in (`--features pjrt`) and `make artifacts`
+    //    has run; otherwise the pure-Rust NativeBackend.
+    let backend = stun::report::load_backend("tiny")?;
+    let backend = backend.as_ref();
+    let cfg = backend.config().clone();
     println!(
-        "model: {} ({} params, {} layers x {} experts)",
+        "model: {} via {} ({} params, {} layers x {} experts)",
         cfg.name,
+        backend.name(),
         cfg.param_count(),
         cfg.n_layers,
         cfg.n_experts
@@ -30,7 +32,7 @@ fn main() -> Result<()> {
         steps: 120,
         ..Default::default()
     });
-    let log = trainer.train(&bundle, &mut params, &mut corpus)?;
+    let log = trainer.train(backend, &mut params, &mut corpus)?;
     println!(
         "trained 120 steps in {:.1}s: loss {:.2} -> {:.2}",
         log.seconds,
@@ -38,25 +40,36 @@ fn main() -> Result<()> {
         log.last_loss()
     );
 
-    // 3. Prove the three layers compose: run the *Pallas-kernel* variant
-    //    of the loss graph and compare against the reference-path variant.
+    // 3. Prove the execution contracts compose: the mean NLL reported by
+    //    `fwd_loss` must match the NLL recomputed host-side from the raw
+    //    `fwd_logits` output (two separate graph executions).
     let (tokens, targets) = corpus.batch(cfg.eval_batch);
-    let mut args = runtime::params_to_literals(&params)?;
-    args.push(runtime::expert_mask_literal(&params)?);
-    args.push(runtime::int_tensor_to_literal(&tokens)?);
-    args.push(runtime::int_tensor_to_literal(&targets)?);
-    let ref_loss = runtime::literal_to_f32(&bundle.artifact("fwd_loss")?.run(&args)?[0])?;
-    let kern_loss =
-        runtime::literal_to_f32(&bundle.artifact("fwd_loss_kernel")?.run(&args)?[0])?;
-    println!("loss via jnp reference path : {ref_loss:.6}");
-    println!("loss via Pallas kernel path : {kern_loss:.6}");
+    let loss = backend.fwd_loss(&params, &tokens, &targets)?;
+    let logits = backend.fwd_logits(&params, &tokens)?;
+    let mut total = 0f64;
+    let mut count = 0f64;
+    for r in 0..cfg.eval_batch * cfg.seq {
+        let tgt = targets.data()[r];
+        if tgt == 0 {
+            continue; // PAD target positions are masked from the loss
+        }
+        let row = &logits.data()[r * cfg.vocab..(r + 1) * cfg.vocab];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 = row.iter().map(|&x| ((x - maxv) as f64).exp()).sum::<f64>().ln()
+            + maxv as f64;
+        total += lse - row[tgt as usize] as f64;
+        count += 1.0;
+    }
+    let recomputed = (total / count.max(1.0)) as f32;
+    println!("loss via fwd_loss contract  : {:.6}", loss.mean);
+    println!("loss recomputed from logits : {recomputed:.6}");
     assert!(
-        (ref_loss - kern_loss).abs() < 1e-3,
-        "kernel and reference paths disagree"
+        (loss.mean - recomputed).abs() < 1e-3,
+        "fwd_loss and fwd_logits disagree"
     );
 
     // 4. STUN: expert-prune 25% of experts, then OWL to 40% total sparsity.
-    let before = EvalHarness::new(&bundle, &params)?.full_report(7, 16, 16, 1)?;
+    let before = EvalHarness::new(backend, &params)?.full_report(7, 16, 16, 1)?;
     let mut pruned = params.clone();
     let pipeline = StunPipeline {
         expert: ExpertPruneConfig {
@@ -67,7 +80,7 @@ fn main() -> Result<()> {
         total_sparsity: 0.4,
         calib_batches: 2,
     };
-    let report = pipeline.run(&bundle, &mut pruned, &mut corpus)?;
+    let report = pipeline.run(backend, &mut pruned, &mut corpus)?;
     println!(
         "STUN: expert stage {:.1}% -> final {:.1}% sparsity ({} experts pruned, {} decision fwd passes)",
         report.expert_stage_sparsity * 100.0,
@@ -77,7 +90,7 @@ fn main() -> Result<()> {
     );
 
     // 5. Evaluate before/after.
-    let after = EvalHarness::new(&bundle, &pruned)?.full_report(7, 16, 16, 1)?;
+    let after = EvalHarness::new(backend, &pruned)?.full_report(7, 16, 16, 1)?;
     println!("\n{:<20} {:>8} {:>8}", "task", "dense", "stun@40%");
     for ((name, a), (_, b)) in before.rows.iter().zip(&after.rows) {
         println!("{name:<20} {a:8.1} {b:8.1}");

@@ -18,9 +18,9 @@ fn main() -> Result<()> {
     let config = args.str_or("config", "tiny");
     let n_requests = args.usize_or("requests", 24)?;
 
-    let engine = Engine::new()?;
-    let bundle = ModelBundle::load(&engine, format!("artifacts/{config}"))?;
-    let cfg = bundle.config.clone();
+    let backend = stun::report::load_backend(&config)?;
+    let backend = backend.as_ref();
+    let cfg = backend.config().clone();
 
     // a lightly-trained model (serving quality is not the point here)
     let mut params = ParamSet::init(&cfg, 42);
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
         steps: args.usize_or("steps", 60)?,
         ..Default::default()
     })
-    .train(&bundle, &mut params, &mut corpus)?;
+    .train(backend, &mut params, &mut corpus)?;
 
     // STUN-pruned variant
     let mut pruned = params.clone();
@@ -42,7 +42,7 @@ fn main() -> Result<()> {
         total_sparsity: 0.4,
         calib_batches: 2,
     }
-    .run(&bundle, &mut pruned, &mut corpus)?;
+    .run(backend, &mut pruned, &mut corpus)?;
 
     // memory budget sized to the pruned working set: the dense model
     // must page experts, the pruned one fits
@@ -59,7 +59,7 @@ fn main() -> Result<()> {
     );
     for (label, ps) in [("dense", &params), ("stun-pruned", &pruned)] {
         let store = ExpertStore::new(budget, Duration::from_micros(200));
-        let mut batcher = Batcher::new(&bundle, ps, store)?;
+        let mut batcher = Batcher::new(backend, ps, store)?;
         let queue = burst_workload(&cfg, n_requests, 8, 17);
         let (responses, m) = batcher.serve(queue)?;
         assert_eq!(responses.len(), n_requests);

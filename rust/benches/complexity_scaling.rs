@@ -4,27 +4,29 @@
 //! Arctic scale (n = 128, footnote 2).
 //!
 //! Measured part runs the real pruners on the `tiny` (n=4) and `moe-8x`
-//! (n=8) bundles; beyond n=8 the subset counts are exact binomials.
+//! (n=8) configs through `report::load_backend` (native by default, PJRT
+//! artifacts when compiled in); beyond n=8 the subset counts are exact
+//! binomials.
 
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
 use stun::pruning::combinatorial::{self, subset_count};
 use stun::pruning::expert::{ExpertPruneConfig, ExpertPruner};
 use stun::report::Protocol;
-use stun::runtime::{self, Engine};
+use stun::runtime::{self, Backend};
 use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = Engine::new().expect("PJRT engine");
     println!(
         "{:<10} {:>4} {:>6} | {:>14} {:>10} | {:>14} {:>10}",
         "config", "n", "prune", "ours(fwd)", "ours(s)", "comb(fwd)", "comb(s)"
     );
 
     for (config, n_prune) in [("tiny", 1), ("tiny", 2), ("moe-8x", 2), ("moe-8x", 4)] {
-        let bundle = stun::report::load_bundle(&engine, config).expect("artifacts");
-        let base = ParamSet::init(&bundle.config, 7);
+        let backend = stun::report::load_backend(config).expect("backend");
+        let backend = backend.as_ref();
+        let base = ParamSet::init(backend.config(), 7);
 
         // ours — O(1): zero forward passes by construction
         let mut ours = base.clone();
@@ -34,7 +36,7 @@ fn main() {
                 &mut ours,
                 None,
                 &ExpertPruneConfig {
-                    ratio: n_prune as f64 / bundle.config.n_experts as f64,
+                    ratio: n_prune as f64 / backend.config().n_experts as f64,
                     ..Default::default()
                 },
             )
@@ -44,21 +46,21 @@ fn main() {
         // combinatorial — C(n, k) layer_recon calls per layer (+1 ref)
         let mut comb = base.clone();
         let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-            bundle.config.vocab,
-            bundle.config.seq,
+            backend.config().vocab,
+            backend.config().seq,
             proto.eval_seed,
         ));
-        let inputs = combinatorial::capture_moe_inputs(&bundle, &comb, &mut gen)
+        let inputs = combinatorial::capture_moe_inputs(backend, &comb, &mut gen)
             .expect("moe inputs");
         let (report, comb_secs) = timed(|| {
-            combinatorial::prune_combinatorial(&bundle, &mut comb, &inputs, n_prune)
+            combinatorial::prune_combinatorial(backend, &mut comb, &inputs, n_prune)
                 .expect("combinatorial")
         });
 
         println!(
             "{:<10} {:>4} {:>6} | {:>14} {:>10.3} | {:>14} {:>10.3}",
             config,
-            bundle.config.n_experts,
+            backend.config().n_experts,
             n_prune,
             ours_fwd,
             ours_secs,

@@ -7,7 +7,6 @@ use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::fig1(&engine, &proto).expect("fig1"));
+    let (table, secs) = timed(|| report::fig1(&proto).expect("fig1"));
     println!("\n### fig1_sparsity_sweep ({secs:.1}s)\n{table}");
 }

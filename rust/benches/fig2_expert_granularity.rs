@@ -7,7 +7,6 @@ use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::fig2(&engine, &proto).expect("fig2"));
+    let (table, secs) = timed(|| report::fig2(&proto).expect("fig2"));
     println!("\n### fig2_expert_granularity ({secs:.1}s)\n{table}");
 }

@@ -7,7 +7,6 @@ use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::fig3(&engine, &proto).expect("fig3"));
+    let (table, secs) = timed(|| report::fig3(&proto).expect("fig3"));
     println!("\n### fig3_dense ({secs:.1}s)\n{table}");
 }

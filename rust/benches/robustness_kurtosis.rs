@@ -50,7 +50,6 @@ fn main() {
 
     // trained-checkpoint version (the paper-style table)
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::kurtosis_report(&engine, &proto).expect("kurtosis"));
+    let (table, secs) = timed(|| report::kurtosis_report(&proto).expect("kurtosis"));
     println!("\n### kurtosis on trained moe-8x ({secs:.1}s)\n{table}");
 }

@@ -1,97 +1,68 @@
-//! Bench: L3 runtime hot paths — artifact execution latency, the
-//! Pallas-kernel vs jnp-reference L2 graph comparison that justifies the
-//! default artifact path (DESIGN.md §Perf), and host-side conversion
-//! overhead.
+//! Bench: runtime hot paths — per-call latency of every Backend contract
+//! (forward, loss, probes, layer reconstruction, one train step) on the
+//! selected backend for each config.
+//!
+//! Runs on the native backend by default; `--features pjrt` builds with
+//! artifacts present measure the AOT executable path instead
+//! (`STUN_BACKEND` forces the choice). The per-contract latencies are the
+//! unit costs behind every report/figure wall-clock.
 
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
-use stun::runtime::{self, Engine};
+use stun::runtime::{Backend, TrainState};
 use stun::tensor::Tensor;
 use stun::util::bench::Bench;
 use stun::util::rng::Rng;
 
 fn main() {
-    let engine = Engine::new().expect("PJRT engine");
     let bench = Bench::from_env();
 
     for config in ["tiny", "moe-8x"] {
-        let bundle = stun::report::load_bundle(&engine, config).expect("artifacts");
-        let cfg = bundle.config.clone();
+        let backend = stun::report::load_backend(config).expect("backend");
+        let backend = backend.as_ref();
+        let cfg = backend.config().clone();
         let params = ParamSet::init(&cfg, 7);
         let mut gen =
             CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 11));
         let (tokens, targets) = gen.batch(cfg.eval_batch);
-        let param_lits = runtime::params_to_literals(&params).unwrap();
-        let mask = runtime::expert_mask_literal(&params).unwrap();
 
-        let mut loss_args = param_lits.clone();
-        loss_args.push(mask.clone());
-        loss_args.push(runtime::int_tensor_to_literal(&tokens).unwrap());
-        loss_args.push(runtime::int_tensor_to_literal(&targets).unwrap());
-
-        println!("== {config} ==");
-        for art_name in ["fwd_loss", "fwd_loss_kernel"] {
-            let art = bundle.artifact(art_name).unwrap();
-            bench.run(&format!("{config}/{art_name} (B={})", cfg.eval_batch), || {
-                art.run(&loss_args).unwrap();
-            });
-        }
-        let mut logits_args = param_lits.clone();
-        logits_args.push(mask.clone());
-        logits_args.push(runtime::int_tensor_to_literal(&tokens).unwrap());
-        let fwd = bundle.artifact("fwd_logits").unwrap();
+        println!("== {config} ({}) ==", backend.name());
+        bench.run(&format!("{config}/fwd_loss (B={})", cfg.eval_batch), || {
+            backend.fwd_loss(&params, &tokens, &targets).unwrap();
+        });
         bench.run(&format!("{config}/fwd_logits (B={})", cfg.eval_batch), || {
-            fwd.run(&logits_args).unwrap();
+            backend.fwd_logits(&params, &tokens).unwrap();
+        });
+        bench.run(&format!("{config}/router_probe (B={})", cfg.eval_batch), || {
+            backend.router_probe(&params, &tokens).unwrap();
+        });
+        bench.run(&format!("{config}/actnorm_probe (B={})", cfg.eval_batch), || {
+            backend.actnorm_probe(&params, &tokens).unwrap();
         });
 
         // layer_recon is the combinatorial baseline's unit cost
         let mut rng = Rng::new(3);
-        let recon = bundle.artifact("layer_recon").unwrap();
-        let recon_args = vec![
-            runtime::tensor_to_literal(&Tensor::randn(&[cfg.n_experts, cfg.d_model], &mut rng)).unwrap(),
-            runtime::tensor_to_literal(&Tensor::randn(&[cfg.n_experts, cfg.d_model, cfg.d_ff], &mut rng)).unwrap(),
-            runtime::tensor_to_literal(&Tensor::randn(&[cfg.n_experts, cfg.d_ff, cfg.d_model], &mut rng)).unwrap(),
-            runtime::tensor_to_literal(&Tensor::ones(&[cfg.n_experts])).unwrap(),
-            runtime::tensor_to_literal(&Tensor::randn(&[bundle.recon_tokens, cfg.d_model], &mut rng)).unwrap(),
-        ];
-        bench.run(&format!("{config}/layer_recon (T={})", bundle.recon_tokens), || {
-            recon.run(&recon_args).unwrap();
-        });
+        let router = Tensor::randn(&[cfg.n_experts, cfg.d_model], &mut rng);
+        let w1 = Tensor::randn(&[cfg.n_experts, cfg.d_model, cfg.d_ff], &mut rng);
+        let w2 = Tensor::randn(&[cfg.n_experts, cfg.d_ff, cfg.d_model], &mut rng);
+        let mask = Tensor::ones(&[cfg.n_experts]);
+        let x = Tensor::randn(&[backend.recon_tokens(), cfg.d_model], &mut rng);
+        bench.run(
+            &format!("{config}/layer_recon (T={})", backend.recon_tokens()),
+            || {
+                backend.layer_recon(&router, &w1, &w2, &mask, &x).unwrap();
+            },
+        );
 
-        // host-side conversion overhead (params -> literals)
-        bench.run(&format!("{config}/params_to_literals"), || {
-            runtime::params_to_literals(&params).unwrap();
-        });
-
-        // §Perf L3: the original eval hot path deep-cloned every param
-        // literal and re-uploaded all of them per batch; the current path
-        // keeps params device-resident and uploads only the token tensors.
-        let loss_art = bundle.artifact("fwd_loss").unwrap();
-        bench.run(&format!("{config}/fwd_loss OLD clone+upload-all"), || {
-            let mut args = param_lits.clone();
-            args.push(mask.clone());
-            args.push(runtime::int_tensor_to_literal(&tokens).unwrap());
-            args.push(runtime::int_tensor_to_literal(&targets).unwrap());
-            loss_art.run(&args).unwrap();
-        });
-        let param_bufs: Vec<stun::runtime::Staged> = param_lits
-            .iter()
-            .map(|l| loss_art.stage_ref(l).unwrap())
-            .collect();
-        let mask_buf = loss_art.stage_ref(&mask).unwrap();
-        bench.run(&format!("{config}/fwd_loss NEW device-resident"), || {
-            let tok_buf = loss_art
-                .stage(runtime::int_tensor_to_literal(&tokens).unwrap())
+        // one full optimisation step (fwd + bwd + AdamW)
+        let mut state = TrainState::new(&params);
+        let (ttok, ttgt) = gen.batch(cfg.train_batch);
+        let mut step = 0f32;
+        bench.run(&format!("{config}/train_step (B={})", cfg.train_batch), || {
+            step += 1.0;
+            backend
+                .train_step(&mut state, step, 1e-3, &ttok, &ttgt)
                 .unwrap();
-            let tgt_buf = loss_art
-                .stage(runtime::int_tensor_to_literal(&targets).unwrap())
-                .unwrap();
-            let mut args: Vec<&xla::PjRtBuffer> =
-                param_bufs.iter().map(|s| &s.buf).collect();
-            args.push(&mask_buf.buf);
-            args.push(&tok_buf.buf);
-            args.push(&tgt_buf.buf);
-            loss_art.run_buffers(&args).unwrap();
         });
     }
 }

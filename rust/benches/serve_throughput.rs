@@ -9,23 +9,23 @@ use stun::pruning::expert::ExpertPruneConfig;
 use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
 use stun::report::{self, Protocol};
-use stun::runtime::Engine;
+use stun::runtime::Backend;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = Engine::new().expect("PJRT engine");
 
     // headline comparison on the trained checkpoint
-    let table = report::serving_report(&engine, &proto, 24).expect("serving");
+    let table = report::serving_report(&proto, 24).expect("serving");
     println!("### serving: dense vs stun-pruned (trained moe-8x)\n{table}");
 
-    // batcher scaling on the tiny bundle (fast)
-    let bundle = report::load_bundle(&engine, "tiny").expect("artifacts");
-    let params = ParamSet::init(&bundle.config, 7);
+    // batcher scaling on the tiny config (fast)
+    let backend = report::load_backend("tiny").expect("backend");
+    let backend = backend.as_ref();
+    let params = ParamSet::init(backend.config(), 7);
     let mut pruned = params.clone();
     let mut gen = stun::data::CorpusGenerator::new(stun::data::CorpusConfig::for_vocab(
-        bundle.config.vocab,
-        bundle.config.seq,
+        backend.config().vocab,
+        backend.config().seq,
         4242,
     ));
     StunPipeline {
@@ -37,7 +37,7 @@ fn main() {
         total_sparsity: 0.4,
         calib_batches: 2,
     }
-    .run(&bundle, &mut pruned, &mut gen)
+    .run(backend, &mut pruned, &mut gen)
     .expect("stun");
 
     println!("\n### burst-size scaling (tiny)");
@@ -50,8 +50,10 @@ fn main() {
         let mut results = Vec::new();
         for ps in [&params, &pruned] {
             let store = ExpertStore::new(capacity, Duration::from_micros(200));
-            let mut batcher = Batcher::new(&bundle, ps, store).expect("batcher");
-            let (_r, m) = batcher.serve(burst_workload(&bundle.config, n, 6, 3)).expect("serve");
+            let mut batcher = Batcher::new(backend, ps, store).expect("batcher");
+            let (_r, m) = batcher
+                .serve(burst_workload(backend.config(), n, 6, 3))
+                .expect("serve");
             results.push(m);
         }
         println!(

@@ -7,7 +7,6 @@ use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::table1(&engine, &proto).expect("table1"));
+    let (table, secs) = timed(|| report::table1(&proto).expect("table1"));
     println!("\n### tab1_models ({secs:.1}s)\n{table}");
 }

@@ -7,7 +7,6 @@ use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::table2(&engine, &proto).expect("table2"));
+    let (table, secs) = timed(|| report::table2(&proto).expect("table2"));
     println!("\n### tab2_expert_pruning ({secs:.1}s)\n{table}");
 }

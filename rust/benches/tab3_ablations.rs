@@ -7,7 +7,6 @@ use stun::util::bench::timed;
 
 fn main() {
     let proto = Protocol::bench();
-    let engine = stun::runtime::Engine::new().expect("PJRT engine");
-    let (table, secs) = timed(|| report::table3(&engine, &proto).expect("table3"));
+    let (table, secs) = timed(|| report::table3(&proto).expect("table3"));
     println!("\n### tab3_ablations ({secs:.1}s)\n{table}");
 }

@@ -1,6 +1,6 @@
 //! Coactivation statistics a_{i,j} (paper Eq. 10) and expert-load
-//! accounting, accumulated from the `router_probe` artifact over
-//! calibration batches.
+//! accounting, accumulated from the backend's `router_probe` contract
+//! over calibration batches.
 //!
 //! For every token the router selects a top-k set T (Eq. 2);
 //! `a[i][j]` counts how often experts i and j appear in T *together*.
@@ -10,7 +10,7 @@
 //! baseline (Koishekenov et al. 2023).
 
 use crate::model::ParamSet;
-use crate::runtime::{self, ModelBundle};
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
@@ -25,6 +25,10 @@ pub struct CoactivationStats {
     /// Top-1 selection counts per expert per layer: \[L\]\[E\].
     pub top1: Vec<Vec<f64>>,
     pub tokens_seen: usize,
+    /// Backend executions [`collect`] spent gathering these statistics
+    /// (one `router_probe` per calibration batch). `StunPipeline` reports
+    /// this as the expert stage's decision cost.
+    pub probe_passes: u64,
 }
 
 impl CoactivationStats {
@@ -36,6 +40,7 @@ impl CoactivationStats {
             load: vec![vec![0.0; n_experts]; n_layers],
             top1: vec![vec![0.0; n_experts]; n_layers],
             tokens_seen: 0,
+            probe_passes: 0,
         }
     }
 
@@ -112,28 +117,21 @@ impl CoactivationStats {
     }
 }
 
-/// Run the `router_probe` artifact over `n_batches` calibration batches
-/// and accumulate coactivation statistics.
+/// Run the `router_probe` contract over `n_batches` calibration batches
+/// (one backend execution each) and accumulate coactivation statistics.
 pub fn collect(
-    bundle: &ModelBundle,
+    backend: &dyn Backend,
     params: &ParamSet,
     gen: &mut crate::data::CorpusGenerator,
     n_batches: usize,
 ) -> Result<CoactivationStats> {
-    let cfg = &bundle.config;
-    let art = bundle.artifact("router_probe")?;
+    let cfg = backend.config();
     let mut stats = CoactivationStats::new(cfg.n_layers, cfg.n_experts);
-    let param_lits = runtime::params_to_literals(params)?;
-    let mask_lit = runtime::expert_mask_literal(params)?;
     for _ in 0..n_batches {
         let (tokens, _targets) = gen.batch(cfg.eval_batch);
-        let tok_lit = runtime::int_tensor_to_literal(&tokens)?;
-        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
-        args.push(&mask_lit);
-        args.push(&tok_lit);
-        let outs = art.run_ref(&args)?;
-        let probs = runtime::literal_to_tensor(&outs[0])?;
+        let probs = backend.router_probe(params, &tokens)?;
         stats.accumulate(&probs, cfg.top_k);
+        stats.probe_passes += 1;
     }
     Ok(stats)
 }

@@ -8,22 +8,26 @@
 //!   overflow the store and pay per-swap latency; pruned models fit. The
 //!   swap count is the serving-side metric the memory reduction buys down.
 //! * [`Batcher`] — continuous batching: a FIFO of decode requests is
-//!   packed into fixed-size PJRT batches; finished sequences leave, new
-//!   ones join every step (the vLLM-style request loop, single-threaded
-//!   because PJRT handles are not Send).
+//!   packed into fixed-size batches; finished sequences leave, new ones
+//!   join every step (the vLLM-style request loop, single-threaded
+//!   because PJRT handles are not `Send`). Expert-store touches come from
+//!   the backend's *real* top-k router decisions when it exposes them
+//!   (`fwd_logits_routed`); otherwise a documented uniform-routing
+//!   fallback approximates the traffic.
 //! * [`Server`] — request intake via `std::sync::mpsc` from any number of
-//!   producer threads; the engine thread owns PJRT and streams responses
-//!   back over per-request channels.
+//!   producer threads; the engine thread owns the backend and streams
+//!   responses back over per-request channels.
 //!
 //! Throughput/latency of dense vs pruned configurations is measured by
 //! `benches/serve_throughput.rs` and `examples/serve_pruned.rs`.
 
-use crate::data::SEMI;
-use crate::eval::EvalHarness;
+use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
-use crate::runtime::ModelBundle;
+use crate::runtime::Backend;
+use crate::tensor::IntTensor;
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
@@ -110,6 +114,9 @@ pub struct ServeMetrics {
     pub p95_latency: Duration,
     pub expert_swaps: u64,
     pub simulated_swap_stall: Duration,
+    /// Decode steps whose expert touches came from real router decisions
+    /// (vs the uniform-routing fallback).
+    pub routed_steps: u64,
 }
 
 impl ServeMetrics {
@@ -122,6 +129,18 @@ impl ServeMetrics {
         let total = self.wall + self.simulated_swap_stall;
         self.generated_tokens as f64 / total.as_secs_f64().max(1e-9)
     }
+
+    fn finalise(&mut self, responses: &[Response], t0: Instant, store: &ExpertStore) {
+        self.completed = responses.len();
+        self.wall = t0.elapsed();
+        self.expert_swaps = store.swaps;
+        let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
+        lats.sort();
+        if !lats.is_empty() {
+            self.p50_latency = lats[lats.len() / 2];
+            self.p95_latency = lats[(lats.len() * 95 / 100).min(lats.len() - 1)];
+        }
+    }
 }
 
 struct Active {
@@ -129,25 +148,30 @@ struct Active {
     arrived: Instant,
     started: Instant,
     generated: Vec<i32>,
+    /// Per-request response channel ([`Server`] path; `None` under
+    /// [`Batcher::serve`]). Kept on the sequence itself so responses
+    /// cannot be cross-wired even when callers reuse request ids.
+    respond: Option<mpsc::Sender<Response>>,
 }
 
 /// Continuous batcher over a single model.
 pub struct Batcher<'b> {
-    harness: EvalHarness<'b>,
-    bundle: &'b ModelBundle,
-    params_alive: Vec<Vec<usize>>,
+    backend: &'b dyn Backend,
+    params: ParamSet,
     pub store: ExpertStore,
+    /// Alive experts per layer, for the uniform-routing fallback.
+    params_alive: Vec<Vec<usize>>,
 }
 
 impl<'b> Batcher<'b> {
     pub fn new(
-        bundle: &'b ModelBundle,
+        backend: &'b dyn Backend,
         params: &ParamSet,
         store: ExpertStore,
     ) -> Result<Batcher<'b>> {
         Ok(Batcher {
-            harness: EvalHarness::new(bundle, params)?,
-            bundle,
+            backend,
+            params: params.clone(),
             params_alive: (0..params.config.n_layers)
                 .map(|l| params.alive_experts(l))
                 .collect(),
@@ -155,10 +179,117 @@ impl<'b> Batcher<'b> {
         })
     }
 
+    /// One decode step over the active set: run the model, touch the
+    /// expert store, append one token per sequence, and retire finished
+    /// sequences into `responses`. Returns the simulated swap stall.
+    fn decode_step(
+        &mut self,
+        active: &mut Vec<Active>,
+        responses: &mut Vec<Response>,
+        metrics: &mut ServeMetrics,
+    ) -> Result<Duration> {
+        let cfg = self.backend.config();
+        let (b, s, v, k) = (cfg.eval_batch, cfg.seq, cfg.vocab, cfg.top_k);
+        let mut tokens = IntTensor::zeros(&[b, s]);
+        let mut positions = vec![0usize; active.len()];
+        for (bi, a) in active.iter().enumerate() {
+            let mut seq: Vec<i32> = a.req.prompt.clone();
+            seq.extend(&a.generated);
+            if seq.is_empty() {
+                seq.push(crate::data::BOS);
+            }
+            if seq.len() >= s {
+                // keep the tail (the live context), drop oldest tokens
+                seq.drain(0..seq.len() - (s - 1));
+            }
+            positions[bi] = seq.len() - 1;
+            tokens.row_mut(bi)[..seq.len()].copy_from_slice(&seq);
+        }
+        let (logits, routing) = self.backend.fwd_logits_routed(&self.params, &tokens)?;
+        metrics.decode_steps += 1;
+
+        // memory model: each decode step touches the top-k experts per
+        // layer for each sequence's current position.
+        let mut stall = Duration::ZERO;
+        match &routing {
+            Some(r) => {
+                // real router decisions: routing is [L, B·S, K] expert ids
+                // (−1 marks an empty slot when fewer than k experts live)
+                metrics.routed_steps += 1;
+                let t_total = b * s;
+                for layer in 0..self.params_alive.len() {
+                    for (bi, &pos) in positions.iter().enumerate().take(active.len()) {
+                        let base = (layer * t_total + bi * s + pos) * k;
+                        for slot in 0..k {
+                            let e = r.data()[base + slot];
+                            if e >= 0 {
+                                stall += self.store.touch(layer, e as usize);
+                            }
+                        }
+                    }
+                }
+            }
+            None => {
+                // documented fallback (e.g. the PJRT fwd_logits artifact
+                // exposes no routing): approximate with a uniform rotation
+                // over the alive set — the *count* difference between
+                // dense and pruned is what matters.
+                for layer in 0..self.params_alive.len() {
+                    let alive = &self.params_alive[layer];
+                    for s_idx in 0..active.len() {
+                        for slot in 0..k {
+                            let e = alive[(s_idx + slot * 7 + metrics.decode_steps as usize)
+                                % alive.len()];
+                            stall += self.store.touch(layer, e);
+                        }
+                    }
+                }
+            }
+        }
+
+        // collect new tokens / retire finished sequences
+        let mut still = Vec::new();
+        for (bi, mut a) in active.drain(..).enumerate() {
+            let pos = positions[bi];
+            let row = &logits.data()[(bi * s + pos) * v..(bi * s + pos + 1) * v];
+            // greedy decode, never emitting PAD
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (t, &x) in row.iter().enumerate().skip(1) {
+                if x > best_v {
+                    best = t;
+                    best_v = x;
+                }
+            }
+            let tok = best as i32;
+            debug_assert_ne!(tok, PAD);
+            a.generated.push(tok);
+            metrics.generated_tokens += 1;
+            let finished = tok == SEMI || a.generated.len() >= a.req.max_new;
+            if finished {
+                let resp = Response {
+                    id: a.req.id,
+                    tokens: a.generated,
+                    latency: a.started.elapsed(),
+                    queued: a.started.duration_since(a.arrived),
+                };
+                if let Some(ch) = a.respond {
+                    // a dropped receiver just means the caller went away
+                    let _ = ch.send(resp.clone());
+                }
+                responses.push(resp);
+            } else {
+                still.push(a);
+            }
+        }
+        *active = still;
+        Ok(stall)
+    }
+
     /// Drain a queue of requests with continuous batching; returns
     /// responses + metrics.
     pub fn serve(&mut self, mut queue: VecDeque<Request>) -> Result<(Vec<Response>, ServeMetrics)> {
-        let b = self.bundle.config.eval_batch;
+        let b = self.backend.config().eval_batch;
         let t0 = Instant::now();
         let mut active: Vec<Active> = Vec::new();
         let mut responses = Vec::new();
@@ -173,68 +304,144 @@ impl<'b> Batcher<'b> {
                         arrived: t0, // single-burst workload: all arrive at t0
                         started: Instant::now(),
                         generated: Vec::new(),
+                        respond: None,
                         req,
                     }),
                     None => break,
                 }
             }
-            // one decode step for the whole active set
-            let prompts: Vec<Vec<i32>> = active
-                .iter()
-                .map(|a| {
-                    let mut p = a.req.prompt.clone();
-                    p.extend(&a.generated);
-                    p
-                })
-                .collect();
-            let outs = self.harness.generate(&prompts, 1, SEMI)?;
-            metrics.decode_steps += 1;
-            // memory model: each decode step touches top-k experts per
-            // layer for each sequence; approximate with the alive set
-            // (uniform routing) — the *count* difference between dense and
-            // pruned is what matters.
-            for layer in 0..self.params_alive.len() {
-                let alive = &self.params_alive[layer];
-                for s_idx in 0..active.len() {
-                    for k in 0..self.bundle.config.top_k {
-                        let e = alive[(s_idx + k * 7 + metrics.decode_steps as usize)
-                            % alive.len()];
-                        swap_stall += self.store.touch(layer, e);
+            swap_stall += self.decode_step(&mut active, &mut responses, &mut metrics)?;
+        }
+
+        metrics.simulated_swap_stall = swap_stall;
+        metrics.finalise(&responses, t0, &self.store);
+        Ok((responses, metrics))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server: mpsc request intake + engine thread.
+// ---------------------------------------------------------------------------
+
+struct Job {
+    req: Request,
+    arrived: Instant,
+    respond: mpsc::Sender<Response>,
+}
+
+/// Cloneable submission handle. Producer threads call [`ServerHandle::submit`]
+/// and receive a per-request response channel.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl ServerHandle {
+    /// Enqueue a request; the returned receiver yields exactly one
+    /// [`Response`] when decoding finishes (or nothing if the server shut
+    /// down first).
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Job {
+                req,
+                arrived: Instant::now(),
+                respond: tx,
+            })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+}
+
+/// Request server over a [`Batcher`]: any number of producer threads feed
+/// requests through [`ServerHandle`]s (`std::sync::mpsc`); the thread that
+/// calls [`Server::run`] becomes the engine thread — it owns the backend
+/// (PJRT handles are not `Send`, so execution stays single-threaded) and
+/// streams each [`Response`] back over that request's private channel.
+pub struct Server<'b> {
+    batcher: Batcher<'b>,
+    rx: mpsc::Receiver<Job>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl<'b> Server<'b> {
+    pub fn new(batcher: Batcher<'b>) -> Server<'b> {
+        let (tx, rx) = mpsc::channel();
+        Server {
+            batcher,
+            rx,
+            tx: Some(tx),
+        }
+    }
+
+    /// A new submission handle (clone freely across producer threads).
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            tx: self.tx.as_ref().expect("server not yet run").clone(),
+        }
+    }
+
+    /// Engine loop: continuous batching over everything the producers
+    /// send, until every [`ServerHandle`] is dropped and the queue drains.
+    /// Consumes the server; returns aggregate metrics.
+    pub fn run(mut self) -> Result<ServeMetrics> {
+        // Drop our own sender so rx disconnects once all handles are gone.
+        drop(self.tx.take());
+        let b = self.batcher.backend.config().eval_batch;
+        let t0 = Instant::now();
+        let mut active: Vec<Active> = Vec::new();
+        let mut pending: VecDeque<Job> = VecDeque::new();
+        let mut responses: Vec<Response> = Vec::new();
+        let mut metrics = ServeMetrics::default();
+        let mut swap_stall = Duration::ZERO;
+        let mut disconnected = false;
+
+        loop {
+            // intake: block only when idle, otherwise just drain
+            if active.is_empty() && pending.is_empty() && !disconnected {
+                match self.rx.recv() {
+                    Ok(job) => pending.push_back(job),
+                    Err(_) => disconnected = true,
+                }
+            }
+            loop {
+                match self.rx.try_recv() {
+                    Ok(job) => pending.push_back(job),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
                     }
                 }
             }
-            // collect new tokens / retire finished sequences
-            let mut still = Vec::new();
-            for (mut a, out) in active.drain(..).zip(outs) {
-                let tok = out.first().copied().unwrap_or(SEMI);
-                a.generated.push(tok);
-                metrics.generated_tokens += 1;
-                let finished = tok == SEMI || a.generated.len() >= a.req.max_new;
-                if finished {
-                    responses.push(Response {
-                        id: a.req.id,
-                        tokens: a.generated,
-                        latency: a.started.elapsed(),
-                        queued: a.started.duration_since(a.arrived),
-                    });
-                } else {
-                    still.push(a);
+            while active.len() < b {
+                match pending.pop_front() {
+                    Some(job) => active.push(Active {
+                        arrived: job.arrived,
+                        started: Instant::now(),
+                        generated: Vec::new(),
+                        respond: Some(job.respond),
+                        req: job.req,
+                    }),
+                    None => break,
                 }
             }
-            active = still;
+            if active.is_empty() {
+                if disconnected {
+                    break;
+                }
+                continue;
+            }
+            // decode_step streams each retired response straight to its
+            // own channel via Active::respond
+            swap_stall +=
+                self.batcher
+                    .decode_step(&mut active, &mut responses, &mut metrics)?;
         }
 
-        metrics.completed = responses.len();
-        metrics.wall = t0.elapsed();
-        metrics.expert_swaps = self.store.swaps;
         metrics.simulated_swap_stall = swap_stall;
-        let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
-        lats.sort();
-        if !lats.is_empty() {
-            metrics.p50_latency = lats[lats.len() / 2];
-            metrics.p95_latency = lats[(lats.len() * 95 / 100).min(lats.len() - 1)];
-        }
-        Ok((responses, metrics))
+        metrics.finalise(&responses, t0, &self.batcher.store);
+        Ok(metrics)
     }
 }
 
@@ -266,6 +473,7 @@ pub fn burst_workload(
 mod tests {
     use super::*;
     use crate::model::ModelConfig;
+    use crate::runtime::NativeBackend;
 
     #[test]
     fn expert_store_lru_and_swap_counting() {
@@ -318,25 +526,88 @@ mod tests {
     }
 
     #[test]
-    fn serve_end_to_end_with_runtime() {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
-        let engine = crate::runtime::Engine::new().unwrap();
-        let bundle = ModelBundle::load(&engine, dir).unwrap();
-        let params = ParamSet::init(&bundle.config, 95);
+    fn serve_end_to_end_on_native_backend() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 95);
         let store = ExpertStore::new(64, Duration::from_micros(50));
-        let mut batcher = Batcher::new(&bundle, &params, store).unwrap();
-        let queue = burst_workload(&bundle.config, 5, 4, 7);
+        let mut batcher = Batcher::new(&backend, &params, store).unwrap();
+        let queue = burst_workload(backend.config(), 5, 4, 7);
         let (responses, metrics) = batcher.serve(queue).unwrap();
         assert_eq!(responses.len(), 5);
         assert_eq!(metrics.completed, 5);
         assert!(metrics.generated_tokens >= 5);
         assert!(metrics.tokens_per_sec() > 0.0);
+        // the native backend exposes routing, so every step used it
+        assert_eq!(metrics.routed_steps, metrics.decode_steps);
         for r in &responses {
             assert!(!r.tokens.is_empty());
             assert!(r.tokens.len() <= 4);
         }
+    }
+
+    #[test]
+    fn store_touches_follow_real_routing() {
+        // Prune layer 0 down to a single expert: every touch at layer 0
+        // must hit that expert — the uniform fallback can't know this,
+        // real routing must.
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let mut params = ParamSet::init(backend.config(), 97);
+        params.prune_expert(0, 0);
+        params.prune_expert(0, 1);
+        params.prune_expert(0, 2); // only expert 3 lives in layer 0
+        let store = ExpertStore::new(64, Duration::from_micros(10));
+        let mut batcher = Batcher::new(&backend, &params, store).unwrap();
+        let queue = burst_workload(backend.config(), 4, 3, 11);
+        let (_responses, metrics) = batcher.serve(queue).unwrap();
+        assert!(metrics.routed_steps > 0);
+        // layer-0 residency can only ever contain (0, 3)
+        assert!(batcher
+            .store
+            .resident
+            .iter()
+            .all(|&(l, e)| l != 0 || e == 3));
+    }
+
+    #[test]
+    fn server_smoke_over_producer_threads() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 99);
+        let store = ExpertStore::new(64, Duration::from_micros(10));
+        let batcher = Batcher::new(&backend, &params, store).unwrap();
+        let server = Server::new(batcher);
+        let cfg = backend.config().clone();
+
+        let mut producers = Vec::new();
+        for p in 0..2u64 {
+            let handle = server.handle();
+            // NOTE: both producers deliberately reuse ids 0..3 — responses
+            // are delivered over each request's private channel, so
+            // duplicate caller ids must not cross-wire them.
+            let reqs: Vec<Request> = burst_workload(&cfg, 3, 3, 20 + p).into_iter().collect();
+            producers.push(std::thread::spawn(move || {
+                let receivers: Vec<_> = reqs
+                    .iter()
+                    .map(|r| (r.id, handle.submit(r.clone()).unwrap()))
+                    .collect();
+                receivers
+                    .into_iter()
+                    .map(|(id, rx)| {
+                        let resp = rx.recv().expect("response");
+                        assert_eq!(resp.id, id);
+                        assert!(!resp.tokens.is_empty());
+                        resp
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        // engine thread: owns the backend, drains both producers
+        let metrics = server.run().unwrap();
+        let mut total = 0;
+        for p in producers {
+            total += p.join().unwrap().len();
+        }
+        assert_eq!(total, 6);
+        assert_eq!(metrics.completed, 6);
+        assert!(metrics.decode_steps > 0);
     }
 }

@@ -3,13 +3,16 @@
 //! Scoring rules match the original:
 //! * **multiple choice** — length-normalised continuation log-likelihood:
 //!   each (item, choice) pair becomes one row of a `fwd_loss` batch whose
-//!   targets are PAD everywhere except the choice span; the artifact's
+//!   targets are PAD everywhere except the choice span; the backend's
 //!   per-token logp output is summed over the span.
 //! * **generative exact-match** — batched greedy decoding through
 //!   `fwd_logits`, stopping at `;` (the answer terminator), then exact
 //!   token match against the gold answer (the GSM8K protocol).
 //! * **perplexity** — exact aggregation of `fwd_loss`'s (total, count)
 //!   outputs over held-out batches.
+//!
+//! The harness is backend-agnostic: it drives any [`Backend`] (native or
+//! PJRT) and holds its own copy of the parameters for the session.
 
 pub mod tasks;
 
@@ -17,20 +20,14 @@ pub use tasks::{GenItem, McItem, TaskKind, TaskSuite};
 
 use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
-use crate::runtime::{self, ModelBundle};
+use crate::runtime::Backend;
 use crate::tensor::IntTensor;
 use anyhow::Result;
-use std::rc::Rc;
 
-/// Evaluation session for one parameter state. Parameters and the expert
-/// mask are uploaded to device-resident buffers ONCE at construction; each
-/// batch only uploads its token tensors (EXPERIMENTS.md §Perf).
+/// Evaluation session for one parameter state on one backend.
 pub struct EvalHarness<'b> {
-    bundle: &'b ModelBundle,
-    fwd_loss: Rc<crate::runtime::Artifact>,
-    fwd_logits: Rc<crate::runtime::Artifact>,
-    param_bufs: Vec<crate::runtime::Staged>,
-    mask_buf: crate::runtime::Staged,
+    backend: &'b dyn Backend,
+    params: ParamSet,
 }
 
 #[derive(Clone, Debug)]
@@ -63,19 +60,10 @@ impl EvalReport {
 }
 
 impl<'b> EvalHarness<'b> {
-    pub fn new(bundle: &'b ModelBundle, params: &ParamSet) -> Result<EvalHarness<'b>> {
-        let fwd_loss = bundle.artifact("fwd_loss")?;
-        let param_bufs = runtime::params_to_literals(params)?
-            .into_iter()
-            .map(|l| fwd_loss.stage(l))
-            .collect::<Result<_>>()?;
-        let mask_buf = fwd_loss.stage(runtime::expert_mask_literal(params)?)?;
+    pub fn new(backend: &'b dyn Backend, params: &ParamSet) -> Result<EvalHarness<'b>> {
         Ok(EvalHarness {
-            fwd_logits: bundle.artifact("fwd_logits")?,
-            fwd_loss,
-            param_bufs,
-            mask_buf,
-            bundle,
+            backend,
+            params: params.clone(),
         })
     }
 
@@ -84,20 +72,12 @@ impl<'b> EvalHarness<'b> {
     /// Per-row summed log-likelihood of the masked target spans.
     /// `rows` are (tokens, targets) with PAD targets outside the span.
     fn batch_loglik(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<Vec<f64>> {
-        let cfg = &self.bundle.config;
-        let tok_buf = self.fwd_loss.stage(runtime::int_tensor_to_literal(tokens)?)?;
-        let tgt_buf = self.fwd_loss.stage(runtime::int_tensor_to_literal(targets)?)?;
-        let mut args: Vec<&xla::PjRtBuffer> =
-            self.param_bufs.iter().map(|s| &s.buf).collect();
-        args.push(&self.mask_buf.buf);
-        args.push(&tok_buf.buf);
-        args.push(&tgt_buf.buf);
-        let outs = self.fwd_loss.run_buffers(&args)?;
-        let tok_logp = runtime::literal_to_tensor(&outs[3])?; // [B, S]
+        let cfg = self.backend.config();
+        let out = self.backend.fwd_loss(&self.params, tokens, targets)?;
         let (b, s) = (cfg.eval_batch, cfg.seq);
         Ok((0..b)
             .map(|bi| {
-                tok_logp.data()[bi * s..(bi + 1) * s]
+                out.tok_logp.data()[bi * s..(bi + 1) * s]
                     .iter()
                     .map(|&x| x as f64)
                     .sum()
@@ -107,7 +87,7 @@ impl<'b> EvalHarness<'b> {
 
     /// Score one MC task: returns accuracy in percent.
     pub fn score_mc(&self, items: &[McItem]) -> Result<f64> {
-        let cfg = &self.bundle.config;
+        let cfg = self.backend.config();
         let (b, s) = (cfg.eval_batch, cfg.seq);
         // flatten to scoring rows
         struct Row {
@@ -191,7 +171,7 @@ impl<'b> EvalHarness<'b> {
         max_new: usize,
         stop: i32,
     ) -> Result<Vec<Vec<i32>>> {
-        let cfg = &self.bundle.config;
+        let cfg = self.backend.config();
         let (b, s, v) = (cfg.eval_batch, cfg.seq, cfg.vocab);
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
         let mut base = 0;
@@ -220,14 +200,7 @@ impl<'b> EvalHarness<'b> {
                         row[j] = t;
                     }
                 }
-                let tok_buf =
-                    self.fwd_logits.stage(runtime::int_tensor_to_literal(&tokens)?)?;
-                let mut args: Vec<&xla::PjRtBuffer> =
-                    self.param_bufs.iter().map(|s| &s.buf).collect();
-                args.push(&self.mask_buf.buf);
-                args.push(&tok_buf.buf);
-                let outs = self.fwd_logits.run_buffers(&args)?;
-                let logits = runtime::literal_to_tensor(&outs[0])?; // [B,S,V]
+                let logits = self.backend.fwd_logits(&self.params, &tokens)?;
                 for bi in 0..chunk_n {
                     if done[bi] {
                         continue;
@@ -294,17 +267,10 @@ impl<'b> EvalHarness<'b> {
         let mut total = 0.0f64;
         let mut count = 0.0f64;
         for _ in 0..n_batches {
-            let (tokens, targets) = gen.batch(self.bundle.config.eval_batch);
-            let tok_buf = self.fwd_loss.stage(runtime::int_tensor_to_literal(&tokens)?)?;
-            let tgt_buf = self.fwd_loss.stage(runtime::int_tensor_to_literal(&targets)?)?;
-            let mut args: Vec<&xla::PjRtBuffer> =
-                self.param_bufs.iter().map(|s| &s.buf).collect();
-            args.push(&self.mask_buf.buf);
-            args.push(&tok_buf.buf);
-            args.push(&tgt_buf.buf);
-            let outs = self.fwd_loss.run_buffers(&args)?;
-            total += runtime::literal_to_f32(&outs[1])? as f64;
-            count += runtime::literal_to_f32(&outs[2])? as f64;
+            let (tokens, targets) = gen.batch(self.backend.config().eval_batch);
+            let out = self.backend.fwd_loss(&self.params, &tokens, &targets)?;
+            total += out.total as f64;
+            count += out.count as f64;
         }
         Ok((total / count.max(1.0)).exp())
     }
@@ -319,7 +285,7 @@ impl<'b> EvalHarness<'b> {
         n_mc: usize,
         few_shots: usize,
     ) -> Result<EvalReport> {
-        let cfg = &self.bundle.config;
+        let cfg = self.backend.config();
         let mut suite = TaskSuite::new(cfg.vocab, cfg.seq, suite_seed);
         let mut rows = Vec::new();
         let shots = suite.few_shot_prefix(few_shots);
@@ -340,23 +306,18 @@ impl<'b> EvalHarness<'b> {
 mod tests {
     use super::*;
     use crate::model::ModelConfig;
+    use crate::runtime::NativeBackend;
 
-    fn bundle() -> Option<(crate::runtime::Engine, ModelBundle)> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        let engine = crate::runtime::Engine::new().unwrap();
-        let b = ModelBundle::load(&engine, dir).unwrap();
-        Some((engine, b))
+    fn backend() -> NativeBackend {
+        NativeBackend::new(ModelConfig::test_tiny())
     }
 
     #[test]
     fn mc_scoring_runs_and_is_bounded() {
-        let Some((_e, b)) = bundle() else { return };
-        let params = ParamSet::init(&b.config, 71);
-        let h = EvalHarness::new(&b, &params).unwrap();
-        let mut suite = TaskSuite::new(b.config.vocab, b.config.seq, 3);
+        let be = backend();
+        let params = ParamSet::init(be.config(), 71);
+        let h = EvalHarness::new(&be, &params).unwrap();
+        let mut suite = TaskSuite::new(be.config().vocab, be.config().seq, 3);
         let items = suite.mc_items(TaskKind::MmluLike, 12);
         let acc = h.score_mc(&items).unwrap();
         assert!((0.0..=100.0).contains(&acc));
@@ -364,10 +325,10 @@ mod tests {
 
     #[test]
     fn gen_scoring_runs() {
-        let Some((_e, b)) = bundle() else { return };
-        let params = ParamSet::init(&b.config, 73);
-        let h = EvalHarness::new(&b, &params).unwrap();
-        let mut suite = TaskSuite::new(b.config.vocab, b.config.seq, 4);
+        let be = backend();
+        let params = ParamSet::init(be.config(), 73);
+        let h = EvalHarness::new(&be, &params).unwrap();
+        let mut suite = TaskSuite::new(be.config().vocab, be.config().seq, 4);
         let items = suite.gen_items(6);
         let shots = suite.few_shot_prefix(1);
         let acc = h.score_gen(&items, &shots).unwrap();
@@ -376,22 +337,25 @@ mod tests {
 
     #[test]
     fn perplexity_of_random_model_near_vocab() {
-        let Some((_e, b)) = bundle() else { return };
-        let params = ParamSet::init(&b.config, 75);
-        let h = EvalHarness::new(&b, &params).unwrap();
+        let be = backend();
+        let params = ParamSet::init(be.config(), 75);
+        let h = EvalHarness::new(&be, &params).unwrap();
         let mut gen = crate::data::CorpusGenerator::new(
-            crate::data::CorpusConfig::for_vocab(b.config.vocab, b.config.seq, 77),
+            crate::data::CorpusConfig::for_vocab(be.config().vocab, be.config().seq, 77),
         );
         let ppl = h.perplexity(&mut gen, 2).unwrap();
         // untrained model ≈ uniform → ppl ≈ vocab (very loose bounds)
-        assert!(ppl > 20.0 && ppl < 4.0 * b.config.vocab as f64, "ppl {ppl}");
+        assert!(
+            ppl > 20.0 && ppl < 4.0 * be.config().vocab as f64,
+            "ppl {ppl}"
+        );
     }
 
     #[test]
     fn report_shape() {
-        let Some((_e, b)) = bundle() else { return };
-        let params = ParamSet::init(&b.config, 79);
-        let h = EvalHarness::new(&b, &params).unwrap();
+        let be = backend();
+        let params = ParamSet::init(be.config(), 79);
+        let h = EvalHarness::new(&be, &params).unwrap();
         let r = h.full_report(1, 4, 4, 1).unwrap();
         assert_eq!(r.rows.len(), 1 + TaskKind::all_mc().len());
         assert!(r.get("mmlu*").is_some());
@@ -401,12 +365,12 @@ mod tests {
 
     #[test]
     fn masked_expert_changes_scores_not_crash() {
-        let Some((_e, b)) = bundle() else { return };
-        let mut params = ParamSet::init(&b.config, 81);
+        let be = backend();
+        let mut params = ParamSet::init(be.config(), 81);
         params.prune_expert(0, 0);
         params.prune_expert(1, 3);
-        let h = EvalHarness::new(&b, &params).unwrap();
-        let mut suite = TaskSuite::new(b.config.vocab, b.config.seq, 5);
+        let h = EvalHarness::new(&be, &params).unwrap();
+        let mut suite = TaskSuite::new(be.config().vocab, be.config().seq, 5);
         let items = suite.mc_items(TaskKind::BoolqLike, 8);
         let acc = h.score_mc(&items).unwrap();
         assert!((0.0..=100.0).contains(&acc));

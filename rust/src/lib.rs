@@ -10,21 +10,36 @@
 //!   combinatorial baseline, the evaluation harness, a synthetic-corpus
 //!   trainer, and a batching server demonstrating the deployment win.
 //! * **L2 (python/compile/model.py)** — the MoE transformer compute graph,
-//!   AOT-lowered to HLO text artifacts this crate executes via PJRT.
+//!   AOT-lowered to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the MoE FFN
 //!   hot-spot, masked matmul, and Wanda scoring.
 //!
-//! Python never runs on the request path: `make artifacts` lowers the
-//! graphs once, then everything in this crate is self-contained.
+//! ## Execution backends
+//!
+//! All model execution goes through the [`runtime::Backend`] trait, which
+//! has two implementations:
+//!
+//! * [`runtime::NativeBackend`] *(default)* — a pure-Rust reference
+//!   implementation of every artifact contract (forward, loss, probes,
+//!   layer reconstruction, AdamW training), mirroring the jnp oracles in
+//!   `python/compile/kernels/ref.py`. It needs no artifacts, no Python,
+//!   and no native libraries: the entire STUN pipeline (expert prune →
+//!   Wanda/OWL → eval → serve) runs on a bare CI box.
+//! * `runtime::PjrtBackend` *(feature `pjrt`)* — executes the AOT HLO
+//!   artifacts produced by `make artifacts` through the `xla` crate's
+//!   PJRT client. Both backends tick the same forward-pass counter
+//!   ([`runtime::EXECUTIONS`]), so the paper's O(1) vs O(kⁿ/√n)
+//!   complexity measurements are backend-independent, and a
+//!   `pjrt`-gated integration test pins cross-backend `fwd_logits`
+//!   agreement.
 //!
 //! ## Quick tour
 //!
 //! ```no_run
 //! use stun::prelude::*;
 //!
-//! let engine = Engine::new()?;
-//! let bundle = ModelBundle::load(&engine, "artifacts/tiny")?;
-//! let mut params = ParamSet::init(&bundle.config, 42);
+//! let backend = NativeBackend::by_name("tiny")?;
+//! let mut params = ParamSet::init(backend.config(), 42);
 //! // ... train, prune, evaluate: see examples/e2e_stun.rs
 //! # anyhow::Ok(())
 //! ```
@@ -54,7 +69,9 @@ pub mod prelude {
     pub use crate::pruning::expert::{ExpertPruneConfig, ExpertPruner};
     pub use crate::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
     pub use crate::pruning::StunPipeline;
-    pub use crate::runtime::{Engine, ModelBundle};
+    pub use crate::runtime::{Backend, NativeBackend};
+    #[cfg(feature = "pjrt")]
+    pub use crate::runtime::{Engine, ModelBundle, PjrtBackend};
     pub use crate::tensor::Tensor;
     pub use crate::train::{TrainConfig, Trainer};
     pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,7 +1,7 @@
 //! `stun` — CLI for the STUN MoE-pruning system.
 //!
 //! ```text
-//! stun info                                   # platform + artifact inventory
+//! stun info                                   # backend + config inventory
 //! stun train  --config moe-8x --steps 300    # train on the synthetic corpus
 //! stun prune  --config moe-8x --ratio 0.25   # expert pruning only (stage 1)
 //! stun stun   --config moe-8x --sparsity 0.4 # full STUN pipeline
@@ -10,6 +10,12 @@
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
 //! stun sample --n 5                          # show synthetic-corpus samples
 //! ```
+//!
+//! Execution backends: every command runs on the pure-Rust native backend
+//! by default (no artifacts, no PJRT libraries needed). Builds with
+//! `--features pjrt` use the AOT HLO artifacts under `artifacts/<config>/`
+//! when present. Select explicitly with `--backend native|pjrt` or the
+//! `STUN_BACKEND` env var.
 
 use anyhow::{bail, Result};
 use stun::data::{CorpusConfig, CorpusGenerator};
@@ -18,7 +24,7 @@ use stun::pruning::expert::{ExpertPruneConfig, ExpertPruner};
 use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
 use stun::report::{self, Protocol};
-use stun::runtime::Engine;
+use stun::runtime::Backend;
 use stun::train::{self, TrainConfig, Trainer};
 use stun::util::args::Args;
 
@@ -37,6 +43,12 @@ fn run() -> Result<()> {
     }
     let cmd = argv.remove(0);
     let args = Args::parse(argv);
+    // `--backend native|pjrt` routes through the same selection logic as
+    // the env var; set once here so every command (and the report helpers
+    // that build backends internally) sees it.
+    if let Some(which) = args.str_opt("backend") {
+        std::env::set_var("STUN_BACKEND", which);
+    }
     match cmd.as_str() {
         "info" => info(&args),
         "train" => cmd_train(&args),
@@ -80,34 +92,40 @@ fn proto_from(args: &Args) -> Result<Protocol> {
     Ok(p)
 }
 
+/// Build the backend for the CLI's `--config`.
+fn backend_from(args: &Args) -> Result<Box<dyn Backend>> {
+    report::load_backend(&args.str_or("config", "tiny"))
+}
+
 fn info(_args: &Args) -> Result<()> {
-    let engine = Engine::new()?;
-    println!("platform: {}", engine.platform());
     for config in ["tiny", "moe-32x", "moe-8x", "moe-4l", "dense"] {
-        match report::load_bundle(&engine, config) {
+        match report::load_backend(config) {
             Ok(b) => println!(
-                "  {config:8} params={:>9}  experts={}x{}  artifacts={}",
-                b.config.param_count(),
-                b.config.n_layers,
-                b.config.n_experts,
-                b.artifact_names().len()
+                "  {config:8} backend={:<12} params={:>9}  experts={}x{}",
+                b.name(),
+                b.config().param_count(),
+                b.config().n_layers,
+                b.config().n_experts
             ),
-            Err(_) => println!("  {config:8} (artifacts missing — run `make artifacts`)"),
+            Err(e) => println!("  {config:8} (unavailable: {e})"),
         }
     }
+    println!(
+        "\nartifacts dir: {} (used by `--features pjrt` builds)",
+        report::artifacts_base()
+    );
     Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let config = args.str_or("config", "tiny");
-    let engine = Engine::new()?;
-    let bundle = report::load_bundle(&engine, &config)?;
+    let backend = backend_from(args)?;
     let steps = args.usize_or("steps", 300)?;
     let seed = args.u64_or("seed", 42)?;
-    let mut params = ParamSet::init(&bundle.config, seed);
+    let mut params = ParamSet::init(backend.config(), seed);
     let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-        bundle.config.vocab,
-        bundle.config.seq,
+        backend.config().vocab,
+        backend.config().seq,
         seed,
     ));
     let trainer = Trainer::new(TrainConfig {
@@ -115,13 +133,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.f64_or("lr", 5e-3)?,
         ..Default::default()
     });
-    let log = trainer.train(&bundle, &mut params, &mut gen)?;
+    let log = trainer.train(backend.as_ref(), &mut params, &mut gen)?;
     println!("loss curve:\n{}", log.render());
     println!(
-        "trained {} for {steps} steps in {:.1}s ({:.2} steps/s)",
+        "trained {} for {steps} steps in {:.1}s ({:.2} steps/s) on {}",
         config,
         log.seconds,
-        steps as f64 / log.seconds
+        steps as f64 / log.seconds,
+        backend.name()
     );
     let out = args.str_or("out", &format!("runs/{config}-s{steps}.stz"));
     train::save_run(&params, &log, &out)?;
@@ -129,18 +148,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_params(args: &Args, bundle: &stun::runtime::ModelBundle) -> Result<ParamSet> {
+fn load_params(args: &Args, backend: &dyn Backend) -> Result<ParamSet> {
     match args.str_opt("ckpt") {
-        Some(path) => train::load_run(&bundle.config, path),
-        None => Ok(ParamSet::init(&bundle.config, 42)),
+        Some(path) => train::load_run(backend.config(), path),
+        None => Ok(ParamSet::init(backend.config(), 42)),
     }
 }
 
 fn cmd_prune(args: &Args) -> Result<()> {
     let config = args.str_or("config", "tiny");
-    let engine = Engine::new()?;
-    let bundle = report::load_bundle(&engine, &config)?;
-    let mut params = load_params(args, &bundle)?;
+    let backend = backend_from(args)?;
+    let mut params = load_params(args, backend.as_ref())?;
     let cfg = ExpertPruneConfig {
         ratio: args.f64_or("ratio", 0.25)?,
         lambda1: args.f64_or("lambda1", 1.0)?,
@@ -150,12 +168,12 @@ fn cmd_prune(args: &Args) -> Result<()> {
     };
     let coact = if cfg.lambda2 != 0.0 {
         let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-            bundle.config.vocab,
-            bundle.config.seq,
+            backend.config().vocab,
+            backend.config().seq,
             4242,
         ));
         Some(stun::coactivation::collect(
-            &bundle,
+            backend.as_ref(),
             &params,
             &mut gen,
             args.usize_or("calib", 8)?,
@@ -186,9 +204,8 @@ fn cmd_prune(args: &Args) -> Result<()> {
 
 fn cmd_stun(args: &Args) -> Result<()> {
     let config = args.str_or("config", "tiny");
-    let engine = Engine::new()?;
-    let bundle = report::load_bundle(&engine, &config)?;
-    let mut params = load_params(args, &bundle)?;
+    let backend = backend_from(args)?;
+    let mut params = load_params(args, backend.as_ref())?;
     let pipeline = StunPipeline {
         expert: ExpertPruneConfig {
             ratio: args.f64_or("expert-ratio", 0.25)?,
@@ -200,11 +217,11 @@ fn cmd_stun(args: &Args) -> Result<()> {
         calib_batches: args.usize_or("calib", 8)?,
     };
     let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-        bundle.config.vocab,
-        bundle.config.seq,
+        backend.config().vocab,
+        backend.config().seq,
         4242,
     ));
-    let report = pipeline.run(&bundle, &mut params, &mut gen)?;
+    let report = pipeline.run(backend.as_ref(), &mut params, &mut gen)?;
     println!(
         "expert stage: {:.1}% sparsity; unstructured rate {:.1}%; final {:.1}%",
         report.expert_stage_sparsity * 100.0,
@@ -221,20 +238,18 @@ fn cmd_stun(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let config = args.str_or("config", "tiny");
-    let engine = Engine::new()?;
-    let bundle = report::load_bundle(&engine, &config)?;
-    let params = load_params(args, &bundle)?;
+    let backend = backend_from(args)?;
+    let params = load_params(args, backend.as_ref())?;
     let proto = proto_from(args)?;
-    let h = stun::eval::EvalHarness::new(&bundle, &params)?;
+    let h = stun::eval::EvalHarness::new(backend.as_ref(), &params)?;
     let r = h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)?;
     for (name, acc) in &r.rows {
         println!("{name:<20} {acc:5.1}");
     }
     println!("{:<20} {:5.1}", "Avg(mc)", r.mc_average());
     let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-        bundle.config.vocab,
-        bundle.config.seq,
+        backend.config().vocab,
+        backend.config().seq,
         proto.eval_seed ^ 0x99,
     ));
     println!("{:<20} {:5.2}", "perplexity", h.perplexity(&mut gen, 4)?);
@@ -242,10 +257,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = Engine::new()?;
     let proto = proto_from(args)?;
     let n = args.usize_or("requests", 32)?;
-    println!("{}", report::serving_report(&engine, &proto, n)?);
+    println!("{}", report::serving_report(&proto, n)?);
     Ok(())
 }
 
@@ -255,18 +269,17 @@ fn cmd_report(args: &Args) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all");
-    let engine = Engine::new()?;
     let proto = proto_from(args)?;
-    let run = |name: &str, engine: &Engine, proto: &Protocol| -> Result<()> {
+    let run = |name: &str, proto: &Protocol| -> Result<()> {
         let out = match name {
-            "fig1" => report::fig1(engine, proto)?,
-            "fig2" => report::fig2(engine, proto)?,
-            "fig3" => report::fig3(engine, proto)?,
-            "table1" => report::table1(engine, proto)?,
-            "table2" => report::table2(engine, proto)?,
-            "table3" => report::table3(engine, proto)?,
-            "kurtosis" => report::kurtosis_report(engine, proto)?,
-            "serving" => report::serving_report(engine, proto, 32)?,
+            "fig1" => report::fig1(proto)?,
+            "fig2" => report::fig2(proto)?,
+            "fig3" => report::fig3(proto)?,
+            "table1" => report::table1(proto)?,
+            "table2" => report::table2(proto)?,
+            "table3" => report::table3(proto)?,
+            "kurtosis" => report::kurtosis_report(proto)?,
+            "serving" => report::serving_report(proto, 32)?,
             other => bail!("unknown report '{other}'"),
         };
         println!("\n### {name}\n{out}");
@@ -276,11 +289,11 @@ fn cmd_report(args: &Args) -> Result<()> {
         for name in [
             "table2", "table3", "kurtosis", "fig3", "fig1", "fig2", "table1", "serving",
         ] {
-            run(name, &engine, &proto)?;
+            run(name, &proto)?;
         }
         Ok(())
     } else {
-        run(which, &engine, &proto)
+        run(which, &proto)
     }
 }
 

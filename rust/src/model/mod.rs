@@ -45,6 +45,36 @@ impl ModelConfig {
         })
     }
 
+    /// The built-in config table — the Rust mirror of
+    /// `python/compile/configs.py` (the `NativeBackend` builds models from
+    /// these directly; the PJRT backend reads the same values out of
+    /// `manifest.json`).
+    pub fn builtin(name: &str) -> Option<ModelConfig> {
+        let mk = |name: &str, vocab, seq, d_model, n_heads, d_ff, n_experts, top_k, n_layers| {
+            ModelConfig {
+                name: name.into(),
+                vocab,
+                seq,
+                d_model,
+                n_heads,
+                d_ff,
+                n_experts,
+                top_k,
+                n_layers,
+                eval_batch: 8,
+                train_batch: 8,
+            }
+        };
+        match name {
+            "tiny" => Some(mk("tiny", 256, 64, 64, 2, 64, 4, 2, 2)),
+            "moe-32x" => Some(mk("moe-32x", 512, 128, 128, 4, 128, 32, 2, 4)),
+            "moe-8x" => Some(mk("moe-8x", 512, 128, 128, 4, 512, 8, 2, 4)),
+            "moe-4l" => Some(mk("moe-4l", 512, 128, 128, 4, 1024, 4, 2, 4)),
+            "dense" => Some(mk("dense", 512, 128, 128, 4, 1024, 1, 1, 4)),
+            _ => None,
+        }
+    }
+
     /// A small config for host-only unit tests (no artifacts needed).
     pub fn test_tiny() -> ModelConfig {
         ModelConfig {
@@ -434,6 +464,19 @@ mod tests {
         let j = Json::parse(text).unwrap();
         let cfg = ModelConfig::from_json(&j).unwrap();
         assert_eq!(cfg, ModelConfig::test_tiny());
+    }
+
+    #[test]
+    fn builtin_table_matches_python_configs() {
+        assert_eq!(ModelConfig::builtin("tiny").unwrap(), ModelConfig::test_tiny());
+        let m8 = ModelConfig::builtin("moe-8x").unwrap();
+        assert_eq!((m8.n_experts, m8.d_ff, m8.n_layers), (8, 512, 4));
+        // matched expert capacity across the Fig. 2 trio: E · F constant
+        let m32 = ModelConfig::builtin("moe-32x").unwrap();
+        let m4 = ModelConfig::builtin("moe-4l").unwrap();
+        assert_eq!(m32.n_experts * m32.d_ff, m8.n_experts * m8.d_ff);
+        assert_eq!(m4.n_experts * m4.d_ff, m8.n_experts * m8.d_ff);
+        assert!(ModelConfig::builtin("missing").is_none());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use crate::coactivation::CoactivationStats;
 use crate::model::ParamSet;
-use crate::runtime::{self, ModelBundle};
+use crate::runtime::{self, Backend};
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -75,34 +75,26 @@ pub fn subsets(n: usize, k: usize) -> Vec<Vec<usize>> {
 pub struct CombinatorialReport {
     /// Pruned expert set per layer.
     pub pruned: Vec<Vec<usize>>,
-    /// PJRT executions spent on the search (the paper's "GPU calls").
+    /// Graph executions spent on the search (the paper's "GPU calls").
     pub forward_passes: u64,
     /// Best reconstruction loss per layer.
     pub losses: Vec<f64>,
 }
 
 /// Per-layer MoE input activations captured once via `hidden_probe`,
-/// truncated to the `layer_recon` artifact's token budget.
+/// truncated to the backend's `layer_recon` token budget.
 pub fn capture_moe_inputs(
-    bundle: &ModelBundle,
+    backend: &dyn Backend,
     params: &ParamSet,
     gen: &mut crate::data::CorpusGenerator,
 ) -> Result<Vec<Tensor>> {
-    let cfg = &bundle.config;
-    let art = bundle.artifact("hidden_probe")?;
-    let param_lits = runtime::params_to_literals(params)?;
-    let mask_lit = runtime::expert_mask_literal(params)?;
-    let need = bundle.recon_tokens;
+    let cfg = backend.config();
+    let need = backend.recon_tokens();
     let mut per_layer: Vec<Vec<f32>> = vec![Vec::new(); cfg.n_layers];
     let t_per_batch = cfg.eval_batch * cfg.seq;
     while per_layer[0].len() < need * cfg.d_model {
         let (tokens, _) = gen.batch(cfg.eval_batch);
-        let tok_lit = runtime::int_tensor_to_literal(&tokens)?;
-        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
-        args.push(&mask_lit);
-        args.push(&tok_lit);
-        let outs = art.run_ref(&args)?;
-        let x = runtime::literal_to_tensor(&outs[0])?; // [L, T, D]
+        let x = backend.hidden_probe(params, &tokens)?; // [L, T, D]
         for l in 0..cfg.n_layers {
             let start = l * t_per_batch * cfg.d_model;
             let end = (l + 1) * t_per_batch * cfg.d_model;
@@ -121,39 +113,29 @@ pub fn capture_moe_inputs(
 /// Lu et al. (2024) exhaustive search. Prunes `n_prune` experts per layer
 /// in place; `moe_inputs` come from [`capture_moe_inputs`].
 pub fn prune_combinatorial(
-    bundle: &ModelBundle,
+    backend: &dyn Backend,
     params: &mut ParamSet,
     moe_inputs: &[Tensor],
     n_prune: usize,
 ) -> Result<CombinatorialReport> {
-    let cfg = bundle.config.clone();
+    let cfg = backend.config().clone();
     let n = cfg.n_experts;
     if n_prune >= n {
         bail!("cannot prune all {n} experts");
     }
-    let art = bundle.artifact("layer_recon")?;
     let start_execs = runtime::execution_count();
     let mut pruned_layers = Vec::new();
     let mut losses = Vec::new();
 
     for layer in 0..cfg.n_layers {
-        let router = runtime::tensor_to_literal(params.router(layer))?;
-        let w1 = runtime::tensor_to_literal(params.w1(layer))?;
-        let w2 = runtime::tensor_to_literal(params.w2(layer))?;
-        let x = runtime::tensor_to_literal(&moe_inputs[layer])?;
+        let router = params.router(layer);
+        let w1 = params.w1(layer);
+        let w2 = params.w2(layer);
+        let x = &moe_inputs[layer];
 
         // reference output M(x; θ) with the full expert set
         let full_mask = Tensor::ones(&[n]);
-        let full_out = {
-            let args = vec![
-                router.clone(),
-                w1.clone(),
-                w2.clone(),
-                runtime::tensor_to_literal(&full_mask)?,
-                x.clone(),
-            ];
-            runtime::literal_to_tensor(&art.run(&args)?[0])?
-        };
+        let full_out = backend.layer_recon(router, w1, w2, &full_mask, x)?;
 
         let mut best: Option<(f64, Vec<usize>)> = None;
         for subset in subsets(n, n_prune) {
@@ -161,14 +143,7 @@ pub fn prune_combinatorial(
             for &e in &subset {
                 mask.data_mut()[e] = 0.0;
             }
-            let args = vec![
-                router.clone(),
-                w1.clone(),
-                w2.clone(),
-                runtime::tensor_to_literal(&mask)?,
-                x.clone(),
-            ];
-            let out = runtime::literal_to_tensor(&art.run(&args)?[0])?;
+            let out = backend.layer_recon(router, w1, w2, &mask, x)?;
             let loss = full_out.fro_dist(&out); // Eq. 4
             if best.as_ref().map(|(b, _)| loss < *b).unwrap_or(true) {
                 best = Some((loss, subset));

@@ -102,9 +102,11 @@ pub struct LayerPruneReport {
 pub struct PruneReport {
     pub layers: Vec<LayerPruneReport>,
     pub experts_pruned: usize,
-    /// Forward passes spent making the decision — **0** for λ₂=0, the
-    /// paper's O(1) claim (coactivation collection, when enabled, is a
-    /// constant number of calibration passes, also O(1) in n).
+    /// Forward passes spent making the decision. [`ExpertPruner::prune`]
+    /// itself never executes the model, so this is **0** for λ₂=0 — the
+    /// paper's O(1) claim. When λ₂≠0 it equals the calibration probe
+    /// passes `coactivation::collect` spent building the supplied stats
+    /// (`CoactivationStats::probe_passes` — still O(1) in n).
     pub decision_forward_passes: u64,
 }
 
@@ -228,7 +230,7 @@ impl ExpertPruner {
         PruneReport {
             layers,
             experts_pruned: total_pruned,
-            decision_forward_passes: 0,
+            decision_forward_passes: coact.map(|c| c.probe_passes).unwrap_or(0),
         }
     }
 

@@ -22,7 +22,7 @@ pub mod unstructured;
 use crate::coactivation::{self, CoactivationStats};
 use crate::data::CorpusGenerator;
 use crate::model::ParamSet;
-use crate::runtime::ModelBundle;
+use crate::runtime::Backend;
 use anyhow::Result;
 
 pub use expert::{ExpertPruneConfig, ExpertPruner, PruneReport};
@@ -54,7 +54,7 @@ impl StunPipeline {
     /// Run both stages in place on `params`.
     pub fn run(
         &self,
-        bundle: &ModelBundle,
+        backend: &dyn Backend,
         params: &mut ParamSet,
         gen: &mut CorpusGenerator,
     ) -> Result<StunReport> {
@@ -62,7 +62,7 @@ impl StunPipeline {
         let expert_report = if self.expert.ratio > 0.0 {
             let coact: Option<CoactivationStats> = if self.expert.lambda2 != 0.0 {
                 Some(coactivation::collect(
-                    bundle,
+                    backend,
                     params,
                     gen,
                     self.calib_batches,
@@ -70,6 +70,8 @@ impl StunPipeline {
             } else {
                 None
             };
+            // the λ₂ coactivation collection is the only forward-pass
+            // spend of the decision; prune() reads it off the stats
             Some(ExpertPruner::prune(params, coact.as_ref(), &self.expert))
         } else {
             None
@@ -80,7 +82,7 @@ impl StunPipeline {
         let rate = residual_rate(self.total_sparsity, expert_stage_sparsity);
         if rate > 0.0 {
             let norms =
-                unstructured::ActNorms::collect(bundle, params, gen, self.calib_batches)?;
+                unstructured::ActNorms::collect(backend, params, gen, self.calib_batches)?;
             unstructured::prune(params, &norms, rate, &self.unstructured)?;
         }
         Ok(StunReport {
@@ -115,6 +117,62 @@ mod tests {
         assert_eq!(residual_rate(0.4, 0.5), 0.0);
         // exactly at target
         assert_eq!(residual_rate(0.4, 0.4), 0.0);
+    }
+
+    #[test]
+    fn decision_forward_passes_zero_without_coactivation() {
+        // λ₂ = 0: the decision must cost exactly zero forward passes (the
+        // O(1) headline configuration).
+        let backend = crate::runtime::NativeBackend::new(crate::model::ModelConfig::test_tiny());
+        let mut params = crate::model::ParamSet::init(backend.config(), 41);
+        let mut gen = CorpusGenerator::new(crate::data::CorpusConfig::for_vocab(
+            backend.config().vocab,
+            backend.config().seq,
+            42,
+        ));
+        let report = StunPipeline {
+            expert: ExpertPruneConfig {
+                ratio: 0.25,
+                lambda2: 0.0,
+                ..Default::default()
+            },
+            unstructured: UnstructuredConfig::default(),
+            total_sparsity: 0.3,
+            calib_batches: 3,
+        }
+        .run(&backend, &mut params, &mut gen)
+        .unwrap();
+        assert_eq!(report.expert_report.unwrap().decision_forward_passes, 0);
+    }
+
+    #[test]
+    fn decision_forward_passes_counts_coactivation_batches() {
+        // λ₂ ≠ 0: the decision cost equals the coactivation calibration
+        // pass count (one router_probe execution per batch).
+        let backend = crate::runtime::NativeBackend::new(crate::model::ModelConfig::test_tiny());
+        let mut params = crate::model::ParamSet::init(backend.config(), 43);
+        let mut gen = CorpusGenerator::new(crate::data::CorpusConfig::for_vocab(
+            backend.config().vocab,
+            backend.config().seq,
+            44,
+        ));
+        let calib = 3;
+        let report = StunPipeline {
+            expert: ExpertPruneConfig {
+                ratio: 0.25,
+                lambda2: 0.5,
+                ..Default::default()
+            },
+            unstructured: UnstructuredConfig::default(),
+            total_sparsity: 0.3,
+            calib_batches: calib,
+        }
+        .run(&backend, &mut params, &mut gen)
+        .unwrap();
+        assert_eq!(
+            report.expert_report.unwrap().decision_forward_passes,
+            calib as u64
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 use crate::data::CorpusGenerator;
 use crate::model::ParamSet;
-use crate::runtime::{self, ModelBundle};
+use crate::runtime::Backend;
 use anyhow::{bail, Result};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,8 +51,10 @@ impl Default for UnstructuredConfig {
 /// Calibration activation norms per weight matrix (Wanda's ‖X‖).
 #[derive(Clone, Debug)]
 pub struct ActNorms {
-    /// \[L\]\[D\] — inputs to wqkv (and wo reuses attn context norms? no:
-    /// wo gets its own — see `attn_ctx`note below).
+    /// \[L\]\[D\] — attention block input norms. Used for `wqkv`, and
+    /// reused as the proxy norm for `wo` (the probe tracks the
+    /// residual-stream magnitude, which dominates the context scale —
+    /// see the `wo` group in [`groups`]).
     pub attn_in: Vec<Vec<f32>>,
     /// \[L\]\[E\]\[D\] — MoE inputs per expert (routed tokens only).
     pub moe_in: Vec<Vec<Vec<f32>>>,
@@ -64,34 +66,27 @@ pub struct ActNorms {
 }
 
 impl ActNorms {
-    /// Accumulate square-sums from the `actnorm_probe` artifact over
-    /// `n_batches` calibration batches, then sqrt.
+    /// Accumulate square-sums from the backend's `actnorm_probe` contract
+    /// over `n_batches` calibration batches, then sqrt.
     pub fn collect(
-        bundle: &ModelBundle,
+        backend: &dyn Backend,
         params: &ParamSet,
         gen: &mut CorpusGenerator,
         n_batches: usize,
     ) -> Result<ActNorms> {
-        let cfg = &bundle.config;
-        let art = bundle.artifact("actnorm_probe")?;
+        let cfg = backend.config();
         let (l, e, d, f) = (cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff);
         let mut attn_sq = vec![vec![0f64; d]; l];
         let mut moe_in_sq = vec![vec![vec![0f64; d]; e]; l];
         let mut moe_hid_sq = vec![vec![vec![0f64; f]; e]; l];
         let mut head_sq = vec![0f64; d];
-        let param_lits = runtime::params_to_literals(params)?;
-        let mask_lit = runtime::expert_mask_literal(params)?;
         for _ in 0..n_batches {
             let (tokens, _) = gen.batch(cfg.eval_batch);
-            let tok_lit = runtime::int_tensor_to_literal(&tokens)?;
-            let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
-            args.push(&mask_lit);
-            args.push(&tok_lit);
-            let outs = art.run_ref(&args)?;
-            let attn = runtime::literal_to_tensor(&outs[0])?; // [L,D]
-            let min = runtime::literal_to_tensor(&outs[1])?; // [L,E,D]
-            let mhid = runtime::literal_to_tensor(&outs[2])?; // [L,E,F]
-            let head = runtime::literal_to_tensor(&outs[3])?; // [D]
+            let probe = backend.actnorm_probe(params, &tokens)?;
+            let attn = &probe.attn_in_sq; // [L,D]
+            let min = &probe.moe_in_sq; // [L,E,D]
+            let mhid = &probe.moe_hid_sq; // [L,E,F]
+            let head = &probe.head_in_sq; // [D]
             for li in 0..l {
                 for k in 0..d {
                     attn_sq[li][k] += attn.data()[li * d + k] as f64;

@@ -5,6 +5,11 @@
 //! returns the rows so benches and EXPERIMENTS.md generation can reuse
 //! them. Trained checkpoints are cached under `runs/<config>.stz`; pass
 //! `--retrain` to the CLI to refresh.
+//!
+//! Execution goes through [`load_backend`], which picks the PJRT artifact
+//! path when it is compiled in (`--features pjrt`) and available, and the
+//! pure-Rust [`NativeBackend`] otherwise — so every figure/table runs on
+//! a bare CI box. `STUN_BACKEND=native|pjrt` forces the choice.
 
 use crate::coordinator::{burst_workload, Batcher, ExpertStore};
 use crate::data::{CorpusConfig, CorpusGenerator};
@@ -13,10 +18,10 @@ use crate::model::ParamSet;
 use crate::pruning::expert::{ClusterMethod, ExpertPruneConfig, ExpertPruner, ReconstructMode};
 use crate::pruning::unstructured::{ActNorms, UnstructuredConfig, UnstructuredMethod};
 use crate::pruning::{self, combinatorial, robustness, StunPipeline};
-use crate::runtime::{Engine, ModelBundle};
+use crate::runtime::{Backend, NativeBackend};
 use crate::train::{self, TrainConfig, Trainer};
 use crate::util::render_table;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::Path;
 
 /// Experiment-wide knobs (kept small so benches can shrink them).
@@ -33,8 +38,8 @@ pub struct Protocol {
 
 impl Default for Protocol {
     fn default() -> Self {
-        // sized for the single-core CPU-PJRT testbed: one full `report
-        // all` fits in tens of minutes while keeping ≥24 items per task
+        // sized for the single-core CPU testbed: one full `report all`
+        // fits in tens of minutes while keeping ≥24 items per task
         Protocol {
             train_steps: 300,
             calib_batches: 4,
@@ -80,43 +85,82 @@ impl Protocol {
     }
 }
 
-/// Load artifacts for `config` from the repo's artifacts dir.
-pub fn load_bundle(engine: &Engine, config: &str) -> Result<ModelBundle> {
-    let base = std::env::var("STUN_ARTIFACTS").unwrap_or_else(|_| {
+/// The artifacts directory (`STUN_ARTIFACTS` or `<crate>/artifacts`).
+pub fn artifacts_base() -> String {
+    std::env::var("STUN_ARTIFACTS").unwrap_or_else(|_| {
         Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("artifacts")
             .to_string_lossy()
             .into_owned()
-    });
-    ModelBundle::load(engine, Path::new(&base).join(config))
-        .with_context(|| format!("artifacts for '{config}' — run `make artifacts`"))
+    })
+}
+
+/// Build the execution backend for `config`.
+///
+/// Selection order: `STUN_BACKEND=native` forces the pure-Rust backend;
+/// `STUN_BACKEND=pjrt` forces PJRT (an error without the `pjrt` feature);
+/// otherwise PJRT is used when compiled in AND its artifacts exist, with
+/// the native backend as the universal fallback.
+pub fn load_backend(config: &str) -> Result<Box<dyn Backend>> {
+    let forced = std::env::var("STUN_BACKEND").ok();
+    match forced.as_deref() {
+        Some("native") => return Ok(Box::new(NativeBackend::by_name(config)?)),
+        Some("pjrt") => {
+            #[cfg(feature = "pjrt")]
+            {
+                let dir = Path::new(&artifacts_base()).join(config);
+                return Ok(Box::new(crate::runtime::PjrtBackend::load(dir)?));
+            }
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!(
+                "STUN_BACKEND=pjrt but this binary was built without the `pjrt` feature"
+            );
+        }
+        Some(other) => anyhow::bail!("unknown STUN_BACKEND '{other}' (native|pjrt)"),
+        None => {}
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = Path::new(&artifacts_base()).join(config);
+        if dir.join("manifest.json").exists() {
+            match crate::runtime::PjrtBackend::load(&dir) {
+                Ok(be) => return Ok(Box::new(be)),
+                // never benchmark the wrong backend silently: say why the
+                // artifact path was skipped before falling back
+                Err(e) => eprintln!(
+                    "[backend] {config}: PJRT artifacts present but unusable \
+                     ({e}); falling back to native (STUN_BACKEND=pjrt to force)"
+                ),
+            }
+        }
+    }
+    Ok(Box::new(NativeBackend::by_name(config)?))
 }
 
 /// Train (or load the cached run of) a model config.
 pub fn ensure_trained(
-    engine: &Engine,
     config: &str,
     proto: &Protocol,
-) -> Result<(ModelBundle, ParamSet)> {
-    let bundle = load_bundle(engine, config)?;
+) -> Result<(Box<dyn Backend>, ParamSet)> {
+    let backend = load_backend(config)?;
     let run_path = Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("runs")
         .join(format!("{config}-s{}.stz", proto.train_steps));
     if !proto.retrain && run_path.exists() {
-        let params = train::load_run(&bundle.config, run_path.to_str().unwrap())?;
-        return Ok((bundle, params));
+        let params = train::load_run(backend.config(), run_path.to_str().unwrap())?;
+        return Ok((backend, params));
     }
-    let mut params = ParamSet::init(&bundle.config, 42);
+    let mut params = ParamSet::init(backend.config(), 42);
     let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-        bundle.config.vocab,
-        bundle.config.seq,
+        backend.config().vocab,
+        backend.config().seq,
         42,
     ));
     let trainer = Trainer::new(TrainConfig {
         steps: proto.train_steps,
         ..Default::default()
     });
-    let log = trainer.train(&bundle, &mut params, &mut gen)?;
+    let log = trainer.train(backend.as_ref(), &mut params, &mut gen)?;
     eprintln!(
         "[train] {config}: loss {:.3} -> {:.3} in {:.1}s",
         log.first_loss(),
@@ -124,7 +168,7 @@ pub fn ensure_trained(
         log.seconds
     );
     train::save_run(&params, &log, run_path.to_str().unwrap())?;
-    Ok((bundle, params))
+    Ok((backend, params))
 }
 
 fn calib_gen(cfg: &crate::model::ModelConfig) -> CorpusGenerator {
@@ -134,17 +178,17 @@ fn calib_gen(cfg: &crate::model::ModelConfig) -> CorpusGenerator {
 
 /// Evaluate a paramset → (GSM8K-proxy, mc-average, per-task rows).
 fn evaluate(
-    bundle: &ModelBundle,
+    backend: &dyn Backend,
     params: &ParamSet,
     proto: &Protocol,
 ) -> Result<crate::eval::EvalReport> {
-    let h = EvalHarness::new(bundle, params)?;
+    let h = EvalHarness::new(backend, params)?;
     h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)
 }
 
 /// Apply STUN (expert ratio → unstructured to total) — shared helper.
 fn stun_variant(
-    bundle: &ModelBundle,
+    backend: &dyn Backend,
     base: &ParamSet,
     expert_ratio: f64,
     total_sparsity: f64,
@@ -164,20 +208,20 @@ fn stun_variant(
         total_sparsity,
         calib_batches: proto.calib_batches,
     };
-    let mut gen = calib_gen(&bundle.config);
-    let report = pipeline.run(bundle, &mut params, &mut gen)?;
+    let mut gen = calib_gen(backend.config());
+    let report = pipeline.run(backend, &mut params, &mut gen)?;
     Ok((params, report))
 }
 
 /// Unstructured-only baseline at a total sparsity.
 fn unstructured_only(
-    bundle: &ModelBundle,
+    backend: &dyn Backend,
     base: &ParamSet,
     total_sparsity: f64,
     method: UnstructuredMethod,
     proto: &Protocol,
 ) -> Result<ParamSet> {
-    let (params, _r) = stun_variant(bundle, base, 0.0, total_sparsity, method, proto)?;
+    let (params, _r) = stun_variant(backend, base, 0.0, total_sparsity, method, proto)?;
     Ok(params)
 }
 
@@ -196,24 +240,24 @@ pub struct SweepRow {
 /// GSM8K-proxy accuracy vs total sparsity for STUN / OWL-only / Wanda-only
 /// (Fig. 1 for one config; Fig. 2 runs it per config).
 pub fn sparsity_sweep(
-    engine: &Engine,
     config: &str,
     sparsities: &[f64],
     expert_ratio: f64,
     proto: &Protocol,
 ) -> Result<Vec<SweepRow>> {
-    let (bundle, base) = ensure_trained(engine, config, proto)?;
+    let (backend, base) = ensure_trained(config, proto)?;
+    let backend = backend.as_ref();
     let mut rows = Vec::new();
     for &s in sparsities {
         let ratio = if s > 0.0 { expert_ratio.min(s) } else { 0.0 };
         let (stun_p, _) =
-            stun_variant(&bundle, &base, ratio, s, UnstructuredMethod::Owl, proto)?;
-        let owl_p = unstructured_only(&bundle, &base, s, UnstructuredMethod::Owl, proto)?;
+            stun_variant(backend, &base, ratio, s, UnstructuredMethod::Owl, proto)?;
+        let owl_p = unstructured_only(backend, &base, s, UnstructuredMethod::Owl, proto)?;
         let wanda_p =
-            unstructured_only(&bundle, &base, s, UnstructuredMethod::Wanda, proto)?;
-        let stun = evaluate(&bundle, &stun_p, proto)?;
-        let owl = evaluate(&bundle, &owl_p, proto)?;
-        let wanda = evaluate(&bundle, &wanda_p, proto)?;
+            unstructured_only(backend, &base, s, UnstructuredMethod::Wanda, proto)?;
+        let stun = evaluate(backend, &stun_p, proto)?;
+        let owl = evaluate(backend, &owl_p, proto)?;
+        let wanda = evaluate(backend, &wanda_p, proto)?;
         let gsm = |r: &crate::eval::EvalReport| r.rows[0].1;
         rows.push(SweepRow {
             sparsity: s,
@@ -231,14 +275,8 @@ pub fn sparsity_sweep(
     Ok(rows)
 }
 
-pub fn fig1(engine: &Engine, proto: &Protocol) -> Result<String> {
-    let sweep = sparsity_sweep(
-        engine,
-        "moe-32x",
-        &[0.0, 0.2, 0.4, 0.55, 0.7],
-        0.25,
-        proto,
-    )?;
+pub fn fig1(proto: &Protocol) -> Result<String> {
+    let sweep = sparsity_sweep("moe-32x", &[0.0, 0.2, 0.4, 0.55, 0.7], 0.25, proto)?;
     let rows: Vec<Vec<String>> = sweep
         .iter()
         .map(|r| {
@@ -256,11 +294,11 @@ pub fn fig1(engine: &Engine, proto: &Protocol) -> Result<String> {
     ))
 }
 
-pub fn fig2(engine: &Engine, proto: &Protocol) -> Result<String> {
+pub fn fig2(proto: &Protocol) -> Result<String> {
     let mut out = String::new();
     // (a) many small experts → (c) few large experts, matched capacity
     for (config, ratio) in [("moe-32x", 0.25), ("moe-8x", 0.25), ("moe-4l", 0.25)] {
-        let sweep = sparsity_sweep(engine, config, &[0.4, 0.65], ratio, proto)?;
+        let sweep = sparsity_sweep(config, &[0.4, 0.65], ratio, proto)?;
         out.push_str(&format!("\n== {config} ==\n"));
         let rows: Vec<Vec<String>> = sweep
             .iter()
@@ -273,10 +311,7 @@ pub fn fig2(engine: &Engine, proto: &Protocol) -> Result<String> {
                 ]
             })
             .collect();
-        out.push_str(&render_table(
-            &["sparsity", "STUN", "OWL", "gap"],
-            &rows,
-        ));
+        out.push_str(&render_table(&["sparsity", "STUN", "OWL", "gap"], &rows));
     }
     Ok(out)
 }
@@ -285,7 +320,7 @@ pub fn fig2(engine: &Engine, proto: &Protocol) -> Result<String> {
 // Table 1: STUN vs unstructured-only across models/sparsities.
 // ===========================================================================
 
-pub fn table1(engine: &Engine, proto: &Protocol) -> Result<String> {
+pub fn table1(proto: &Protocol) -> Result<String> {
     let mut out_rows: Vec<Vec<String>> = Vec::new();
     let cases: Vec<(&str, f64, f64)> = vec![
         // (config, total sparsity, expert ratio) — mirroring the paper's
@@ -298,9 +333,10 @@ pub fn table1(engine: &Engine, proto: &Protocol) -> Result<String> {
     let mut evaluated: std::collections::HashMap<String, crate::eval::EvalReport> =
         Default::default();
     for (config, sparsity, ratio) in cases {
-        let (bundle, base) = ensure_trained(engine, config, proto)?;
+        let (backend, base) = ensure_trained(config, proto)?;
+        let backend = backend.as_ref();
         if !evaluated.contains_key(config) {
-            let r = evaluate(&bundle, &base, proto)?;
+            let r = evaluate(backend, &base, proto)?;
             push_t1_row(&mut out_rows, config, 0.0, "unpruned", &r);
             evaluated.insert(config.to_string(), r);
         }
@@ -311,8 +347,8 @@ pub fn table1(engine: &Engine, proto: &Protocol) -> Result<String> {
             ("Wanda", UnstructuredMethod::Wanda, false),
         ] {
             let er = if use_expert { ratio } else { 0.0 };
-            let (p, _) = stun_variant(&bundle, &base, er, sparsity, method, proto)?;
-            let r = evaluate(&bundle, &p, proto)?;
+            let (p, _) = stun_variant(backend, &base, er, sparsity, method, proto)?;
+            let r = evaluate(backend, &p, proto)?;
             push_t1_row(&mut out_rows, config, sparsity, label, &r);
         }
     }
@@ -350,16 +386,17 @@ fn push_t1_row(
 // Table 2: O(1) expert pruning vs the combinatorial baseline.
 // ===========================================================================
 
-pub fn table2(engine: &Engine, proto: &Protocol) -> Result<String> {
-    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+pub fn table2(proto: &Protocol) -> Result<String> {
+    let (backend, base) = ensure_trained("moe-8x", proto)?;
+    let backend = backend.as_ref();
     let mut rows: Vec<Vec<String>> = Vec::new();
 
-    let r0 = evaluate(&bundle, &base, proto)?;
+    let r0 = evaluate(backend, &base, proto)?;
     rows.push(t2_row("unpruned", "-", 0, &r0));
 
     for expert_sparsity in [0.25, 0.5] {
         let n_prune =
-            ((bundle.config.n_experts as f64) * expert_sparsity).round() as usize;
+            ((backend.config().n_experts as f64) * expert_sparsity).round() as usize;
 
         // ours: O(1)
         let mut ours = base.clone();
@@ -373,7 +410,7 @@ pub fn table2(engine: &Engine, proto: &Protocol) -> Result<String> {
             },
         );
         let ours_cost = crate::runtime::execution_count() - e0;
-        let r = evaluate(&bundle, &ours, proto)?;
+        let r = evaluate(backend, &ours, proto)?;
         rows.push(t2_row(
             &format!("Ours O(1) @{:.0}%", expert_sparsity * 100.0),
             &format!("{ours_cost} fwd"),
@@ -383,10 +420,10 @@ pub fn table2(engine: &Engine, proto: &Protocol) -> Result<String> {
 
         // Lu et al. combinatorial
         let mut lu = base.clone();
-        let mut gen = calib_gen(&bundle.config);
-        let inputs = combinatorial::capture_moe_inputs(&bundle, &lu, &mut gen)?;
-        let report = combinatorial::prune_combinatorial(&bundle, &mut lu, &inputs, n_prune)?;
-        let r = evaluate(&bundle, &lu, proto)?;
+        let mut gen = calib_gen(backend.config());
+        let inputs = combinatorial::capture_moe_inputs(backend, &lu, &mut gen)?;
+        let report = combinatorial::prune_combinatorial(backend, &mut lu, &inputs, n_prune)?;
+        let r = evaluate(backend, &lu, proto)?;
         rows.push(t2_row(
             &format!("Lu et al. @{:.0}%", expert_sparsity * 100.0),
             &format!("{} fwd", report.forward_passes),
@@ -425,15 +462,16 @@ fn t2_row(label: &str, cost: &str, n_prune: usize, r: &crate::eval::EvalReport) 
 // Figure 3: non-MoE (dense) structured-then-unstructured.
 // ===========================================================================
 
-pub fn fig3(engine: &Engine, proto: &Protocol) -> Result<String> {
-    let (bundle, base) = ensure_trained(engine, "dense", proto)?;
+pub fn fig3(proto: &Protocol) -> Result<String> {
+    let (backend, base) = ensure_trained("dense", proto)?;
+    let backend = backend.as_ref();
     let mut rows = Vec::new();
     for s in [0.4, 0.6, 0.7] {
         // STUN-dense: 5% structured neurons, then OWL to total s
         let mut stun_p = base.clone();
         {
-            let mut gen = calib_gen(&bundle.config);
-            let norms = ActNorms::collect(&bundle, &stun_p, &mut gen, proto.calib_batches)?;
+            let mut gen = calib_gen(backend.config());
+            let norms = ActNorms::collect(backend, &stun_p, &mut gen, proto.calib_batches)?;
             crate::pruning::structured_dense::prune_neurons(&mut stun_p, &norms, 0.05)?;
             let rate = pruning::residual_rate(s, stun_p.overall_sparsity());
             crate::pruning::unstructured::prune(
@@ -443,27 +481,25 @@ pub fn fig3(engine: &Engine, proto: &Protocol) -> Result<String> {
                 &UnstructuredConfig::default(),
             )?;
         }
-        let owl_p = unstructured_only(&bundle, &base, s, UnstructuredMethod::Owl, proto)?;
-        let r_stun = evaluate(&bundle, &stun_p, proto)?;
-        let r_owl = evaluate(&bundle, &owl_p, proto)?;
+        let owl_p = unstructured_only(backend, &base, s, UnstructuredMethod::Owl, proto)?;
+        let r_stun = evaluate(backend, &stun_p, proto)?;
+        let r_owl = evaluate(backend, &owl_p, proto)?;
         rows.push(vec![
             format!("{:.0}%", s * 100.0),
             format!("{:.1}", r_stun.rows[0].1),
             format!("{:.1}", r_owl.rows[0].1),
         ]);
     }
-    Ok(render_table(
-        &["sparsity", "struct(5%)+OWL", "OWL"],
-        &rows,
-    ))
+    Ok(render_table(&["sparsity", "struct(5%)+OWL", "OWL"], &rows))
 }
 
 // ===========================================================================
 // Table 3/4/5: ablations (clustering algorithm, reconstruction mode).
 // ===========================================================================
 
-pub fn table3(engine: &Engine, proto: &Protocol) -> Result<String> {
-    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+pub fn table3(proto: &Protocol) -> Result<String> {
+    let (backend, base) = ensure_trained("moe-8x", proto)?;
+    let backend = backend.as_ref();
     let mut rows = Vec::new();
     let variants: Vec<(&str, ClusterMethod, ReconstructMode, usize)> = vec![
         ("Ours (agglo, κ=3)", ClusterMethod::Agglomerative, ReconstructMode::Selective, 3),
@@ -485,7 +521,7 @@ pub fn table3(engine: &Engine, proto: &Protocol) -> Result<String> {
                 ..Default::default()
             },
         );
-        let r = evaluate(&bundle, &p, proto)?;
+        let r = evaluate(backend, &p, proto)?;
         rows.push(vec![
             label.to_string(),
             format!("{:.1}", r.mc_average()),
@@ -499,8 +535,9 @@ pub fn table3(engine: &Engine, proto: &Protocol) -> Result<String> {
 // §5 robustness: kurtosis table.
 // ===========================================================================
 
-pub fn kurtosis_report(engine: &Engine, proto: &Protocol) -> Result<String> {
-    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+pub fn kurtosis_report(proto: &Protocol) -> Result<String> {
+    let (backend, base) = ensure_trained("moe-8x", proto)?;
+    let backend = backend.as_ref();
     let mut expert = base.clone();
     ExpertPruner::prune(
         &mut expert,
@@ -513,8 +550,8 @@ pub fn kurtosis_report(engine: &Engine, proto: &Protocol) -> Result<String> {
     let matched = expert.overall_sparsity();
     let mut unstr = base.clone();
     {
-        let mut gen = calib_gen(&bundle.config);
-        let norms = ActNorms::collect(&bundle, &unstr, &mut gen, proto.calib_batches)?;
+        let mut gen = calib_gen(backend.config());
+        let norms = ActNorms::collect(backend, &unstr, &mut gen, proto.calib_batches)?;
         crate::pruning::unstructured::prune(
             &mut unstr,
             &norms,
@@ -538,10 +575,11 @@ pub fn kurtosis_report(engine: &Engine, proto: &Protocol) -> Result<String> {
 // Serving comparison (coordinator demo).
 // ===========================================================================
 
-pub fn serving_report(engine: &Engine, proto: &Protocol, n_requests: usize) -> Result<String> {
-    let (bundle, base) = ensure_trained(engine, "moe-8x", proto)?;
+pub fn serving_report(proto: &Protocol, n_requests: usize) -> Result<String> {
+    let (backend, base) = ensure_trained("moe-8x", proto)?;
+    let backend = backend.as_ref();
     let mut pruned = base.clone();
-    let mut gen = calib_gen(&bundle.config);
+    let mut gen = calib_gen(backend.config());
     StunPipeline {
         expert: ExpertPruneConfig {
             ratio: 0.25,
@@ -551,15 +589,15 @@ pub fn serving_report(engine: &Engine, proto: &Protocol, n_requests: usize) -> R
         total_sparsity: 0.4,
         calib_batches: proto.calib_batches,
     }
-    .run(&bundle, &mut pruned, &mut gen)?;
+    .run(backend, &mut pruned, &mut gen)?;
 
     // store sized to fit the PRUNED working set but not the dense one
     let capacity = ExpertStore::working_set(&pruned);
     let mut rows = Vec::new();
     for (label, params) in [("dense", &base), ("stun-pruned", &pruned)] {
         let store = ExpertStore::new(capacity, std::time::Duration::from_micros(200));
-        let mut batcher = Batcher::new(&bundle, params, store)?;
-        let queue = burst_workload(&bundle.config, n_requests, 6, 17);
+        let mut batcher = Batcher::new(backend, params, store)?;
+        let queue = burst_workload(backend.config(), n_requests, 6, 17);
         let (_resp, m) = batcher.serve(queue)?;
         rows.push(vec![
             label.to_string(),
@@ -595,5 +633,14 @@ mod tests {
         let d = Protocol::default();
         assert!(q.train_steps < d.train_steps);
         assert!(q.n_mc < d.n_mc);
+    }
+
+    #[test]
+    fn load_backend_defaults_to_native_without_artifacts() {
+        // no artifacts are checked in, and the default build has no pjrt
+        // feature — every config must resolve to a working backend
+        let be = load_backend("tiny").unwrap();
+        assert_eq!(be.config().name, "tiny");
+        assert!(load_backend("no-such-config").is_err());
     }
 }

@@ -1,0 +1,639 @@
+//! PJRT backend (feature `pjrt`): load AOT HLO-text artifacts and execute
+//! them through the `xla` crate.
+//!
+//! This is the only module that touches `xla`. It wraps:
+//!
+//! * [`Engine`] — a PJRT CPU client (one per process).
+//! * [`ModelBundle`] — one compiled model config: parses
+//!   `artifacts/<cfg>/manifest.json`, lazily compiles each
+//!   `<artifact>.hlo.txt` on first use, and validates I/O arity against
+//!   the manifest.
+//! * [`Artifact`] — a compiled executable plus its manifest I/O specs and
+//!   an execution counter (the unit in which the paper's O(1) vs
+//!   O(kⁿ/√n) complexity claim is measured).
+//! * [`PjrtBackend`] — the [`Backend`] impl over a bundle, so every
+//!   caller above the runtime layer is backend-agnostic.
+//!
+//! Artifacts are lowered with `return_tuple=True`, so PJRT hands back a
+//! single tuple buffer; [`Artifact::run`] decomposes it into one
+//! `Literal` per manifest output. Conversions between [`Tensor`] /
+//! [`IntTensor`] and `xla::Literal` live here too.
+//!
+//! NOTE: the default workspace wires the `xla` dependency to an offline
+//! API stub (`vendor/xla`) whose client constructor fails cleanly; swap
+//! it for the real crates.io `xla = "0.1.6"` (plus an `xla_extension`
+//! install) to execute artifacts. See `vendor/xla/src/lib.rs`.
+
+use super::{ActNormProbe, Backend, LossOutput, TrainState, EXECUTIONS};
+use crate::model::{ModelConfig, ParamSet};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let dtype = match j.get("dtype")?.as_str()? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        };
+        Ok(IoSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype,
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The PJRT client. Construct once per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// A device-resident input: host literal + its device buffer, kept
+/// together because PJRT host→device copies are asynchronous (see
+/// [`Artifact::stage`]).
+pub struct Staged {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+/// A compiled artifact + manifest metadata.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    exe: xla::PjRtLoadedExecutable,
+    runs: AtomicU64,
+    client: xla::PjRtClient,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns one `Literal` per manifest
+    /// output (tuple root decomposed).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_ref(&refs)
+    }
+
+    /// Execute with borrowed literal inputs.
+    ///
+    /// Inputs are uploaded to Rust-owned [`xla::PjRtBuffer`]s and executed
+    /// via `execute_b`, NOT via the crate's literal `execute`: that C++
+    /// wrapper `release()`s the input device buffers without ever deleting
+    /// them, leaking the full argument size per call (36 GB OOM over a
+    /// report run — see vendor/xla/xla_rs/xla_rs.cc `status execute`).
+    /// `PjRtBuffer` has a proper Drop, so this path is leak-free.
+    pub fn run_ref(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        // args literals outlive the synchronous run_buffers call below, so
+        // bare buffers (no Staged guard) are safe here.
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("{}: upload: {e:?}", self.name))
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(&refs)
+    }
+
+    /// Stage a literal on device. Returns a [`Staged`] guard that owns
+    /// BOTH the host literal and the device buffer: PJRT's
+    /// `BufferFromHostLiteral` copies asynchronously, so the literal must
+    /// outlive the transfer (dropping it early is a use-after-free — it
+    /// SIGSEGVed the test suite before this guard existed).
+    pub fn stage(&self, lit: xla::Literal) -> Result<Staged> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("{}: upload: {e:?}", self.name))?;
+        Ok(Staged { _lit: lit, buf })
+    }
+
+    /// Stage a borrowed literal (clones the host side into the guard).
+    pub fn stage_ref(&self, lit: &xla::Literal) -> Result<Staged> {
+        self.stage(lit.clone())
+    }
+
+    /// Execute with device-resident inputs — the hot-path variant: large,
+    /// unchanging parameter buffers can be uploaded once per session
+    /// instead of per batch (EXPERIMENTS.md §Perf).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            );
+        }
+        EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        let mut result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let device0 = result
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("{}: no device outputs", self.name))?;
+        let mut outs = Vec::new();
+        for buf in &device0 {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
+            // return_tuple=True roots come back as a single tuple literal.
+            match lit.shape() {
+                Ok(xla::Shape::Tuple(_)) => {
+                    let mut l = lit;
+                    outs.extend(
+                        l.decompose_tuple()
+                            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))?,
+                    );
+                }
+                _ => outs.push(lit),
+            }
+        }
+        if outs.len() != self.outputs.len() {
+            bail!(
+                "{}: manifest says {} outputs, runtime produced {}",
+                self.name,
+                self.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Number of times this artifact has executed.
+    pub fn run_count(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+}
+
+/// One model config's artifact registry (lazy compilation).
+pub struct ModelBundle {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub param_specs: Vec<IoSpec>,
+    pub recon_tokens: usize,
+    artifact_files: HashMap<String, String>,
+    artifact_specs: HashMap<String, (Vec<IoSpec>, Vec<IoSpec>)>,
+    compiled: RefCell<HashMap<String, Rc<Artifact>>>,
+    client: xla::PjRtClient,
+}
+
+impl ModelBundle {
+    pub fn load(engine: &Engine, dir: impl AsRef<Path>) -> Result<ModelBundle> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", manifest_path.display()))?;
+        let config = ModelConfig::from_json(j.get("config")?)?;
+        let param_specs = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(IoSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let recon_tokens = j.get("recon_tokens")?.as_usize()?;
+        let mut artifact_files = HashMap::new();
+        let mut artifact_specs = HashMap::new();
+        for (name, art) in j.get("artifacts")?.as_obj()? {
+            let file = art.get("file")?.as_str()?.to_string();
+            let ins = art
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outs = art
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifact_files.insert(name.clone(), file);
+            artifact_specs.insert(name.clone(), (ins, outs));
+        }
+        Ok(ModelBundle {
+            dir,
+            config,
+            param_specs,
+            recon_tokens,
+            artifact_files,
+            artifact_specs,
+            compiled: RefCell::new(HashMap::new()),
+            client: engine.client.clone(),
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.artifact_files.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Fetch (compiling on first use) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.compiled.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let file = self
+            .artifact_files
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}' in {}", self.dir.display()))?;
+        let (inputs, outputs) = self.artifact_specs.get(name).unwrap().clone();
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let artifact = Rc::new(Artifact {
+            name: name.to_string(),
+            inputs,
+            outputs,
+            exe,
+            runs: AtomicU64::new(0),
+            client: self.client.clone(),
+        });
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> Tensor conversions.
+// ---------------------------------------------------------------------------
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.shape().is_empty() {
+        return Ok(xla::Literal::scalar(t.item()));
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape int literal: {e:?}"))
+}
+
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal data: {e:?}"))?;
+    Tensor::new(&dims, data)
+}
+
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar literal: {e:?}"))
+}
+
+/// Convert a ParamSet's tensors into the literal list the artifacts expect
+/// (canonical order).
+pub fn params_to_literals(ps: &ParamSet) -> Result<Vec<xla::Literal>> {
+    ps.tensors().iter().map(tensor_to_literal).collect()
+}
+
+pub fn expert_mask_literal(ps: &ParamSet) -> Result<xla::Literal> {
+    tensor_to_literal(&ps.expert_mask)
+}
+
+// ---------------------------------------------------------------------------
+// Backend impl.
+// ---------------------------------------------------------------------------
+
+/// [`Backend`] over a compiled artifact bundle.
+///
+/// Parameters (plus the expert mask) are kept **device-resident**: they
+/// are uploaded once and reused across calls until the caller's
+/// `ParamSet` contents change (detected by an FNV content fingerprint —
+/// hashing is a read-only pass over the weights, roughly an order of
+/// magnitude cheaper than the literal conversion + host→device copy it
+/// avoids). This preserves the staged hot path the pre-trait
+/// `EvalHarness` used (EXPERIMENTS.md §Perf); only the token tensors are
+/// uploaded per batch.
+pub struct PjrtBackend {
+    engine: Engine,
+    bundle: ModelBundle,
+    staged: RefCell<Option<StagedParams>>,
+}
+
+/// Device-resident parameter buffers: params in canonical order, then
+/// the expert mask (the prefix every forward/probe artifact expects).
+struct StagedParams {
+    fingerprint: u64,
+    bufs: Vec<Staged>,
+}
+
+/// FNV-1a over all parameter bits + expert mask.
+fn param_fingerprint(ps: &ParamSet) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for t in ps.tensors().iter().chain(std::iter::once(&ps.expert_mask)) {
+        for &x in t.data() {
+            h ^= x.to_bits() as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+impl PjrtBackend {
+    /// Load the artifact bundle at `dir` (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let engine = Engine::new()?;
+        let bundle = ModelBundle::load(&engine, dir)?;
+        Ok(PjrtBackend {
+            engine,
+            bundle,
+            staged: RefCell::new(None),
+        })
+    }
+
+    pub fn bundle(&self) -> &ModelBundle {
+        &self.bundle
+    }
+
+    /// Upload params ++ mask if the cached device buffers are stale.
+    fn ensure_staged(&self, art: &Artifact, params: &ParamSet) -> Result<()> {
+        let fp = param_fingerprint(params);
+        if let Some(sp) = self.staged.borrow().as_ref() {
+            if sp.fingerprint == fp {
+                return Ok(());
+            }
+        }
+        let mut bufs = Vec::with_capacity(params.tensors().len() + 1);
+        for lit in params_to_literals(params)? {
+            bufs.push(art.stage(lit)?);
+        }
+        bufs.push(art.stage(expert_mask_literal(params)?)?);
+        *self.staged.borrow_mut() = Some(StagedParams {
+            fingerprint: fp,
+            bufs,
+        });
+        Ok(())
+    }
+
+    /// Run `artifact` with device-resident params ++ mask followed by the
+    /// given per-call token tensors.
+    fn run_with_params(
+        &self,
+        name: &str,
+        params: &ParamSet,
+        ints: &[&IntTensor],
+    ) -> Result<Vec<xla::Literal>> {
+        let art = self.bundle.artifact(name)?;
+        self.ensure_staged(&art, params)?;
+        let mut extra: Vec<Staged> = Vec::with_capacity(ints.len());
+        for t in ints {
+            extra.push(art.stage(int_tensor_to_literal(t)?)?);
+        }
+        let staged = self.staged.borrow();
+        let sp = staged.as_ref().expect("staged above");
+        let mut args: Vec<&xla::PjRtBuffer> = sp.bufs.iter().map(|s| &s.buf).collect();
+        args.extend(extra.iter().map(|s| &s.buf));
+        art.run_buffers(&args)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.engine.platform())
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.bundle.config
+    }
+
+    fn recon_tokens(&self) -> usize {
+        self.bundle.recon_tokens
+    }
+
+    fn fwd_logits(&self, params: &ParamSet, tokens: &IntTensor) -> Result<Tensor> {
+        let outs = self.run_with_params("fwd_logits", params, &[tokens])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    fn fwd_loss(
+        &self,
+        params: &ParamSet,
+        tokens: &IntTensor,
+        targets: &IntTensor,
+    ) -> Result<LossOutput> {
+        let outs = self.run_with_params("fwd_loss", params, &[tokens, targets])?;
+        Ok(LossOutput {
+            mean: literal_to_f32(&outs[0])?,
+            total: literal_to_f32(&outs[1])?,
+            count: literal_to_f32(&outs[2])?,
+            tok_logp: literal_to_tensor(&outs[3])?,
+        })
+    }
+
+    fn router_probe(&self, params: &ParamSet, tokens: &IntTensor) -> Result<Tensor> {
+        let outs = self.run_with_params("router_probe", params, &[tokens])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    fn actnorm_probe(&self, params: &ParamSet, tokens: &IntTensor) -> Result<ActNormProbe> {
+        let outs = self.run_with_params("actnorm_probe", params, &[tokens])?;
+        Ok(ActNormProbe {
+            attn_in_sq: literal_to_tensor(&outs[0])?,
+            moe_in_sq: literal_to_tensor(&outs[1])?,
+            moe_hid_sq: literal_to_tensor(&outs[2])?,
+            head_in_sq: literal_to_tensor(&outs[3])?,
+        })
+    }
+
+    fn hidden_probe(&self, params: &ParamSet, tokens: &IntTensor) -> Result<Tensor> {
+        let outs = self.run_with_params("hidden_probe", params, &[tokens])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    fn layer_recon(
+        &self,
+        router: &Tensor,
+        w1: &Tensor,
+        w2: &Tensor,
+        expert_mask: &Tensor,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let art = self.bundle.artifact("layer_recon")?;
+        let args = vec![
+            tensor_to_literal(router)?,
+            tensor_to_literal(w1)?,
+            tensor_to_literal(w2)?,
+            tensor_to_literal(expert_mask)?,
+            tensor_to_literal(x)?,
+        ];
+        literal_to_tensor(&art.run(&args)?[0])
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        step: f32,
+        lr: f32,
+        tokens: &IntTensor,
+        targets: &IntTensor,
+    ) -> Result<f32> {
+        let art = self.bundle.artifact("train_step")?;
+        let n_p = state.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n_p + 4);
+        for t in state.params.iter().chain(&state.m).chain(&state.v) {
+            args.push(tensor_to_literal(t)?);
+        }
+        args.push(scalar_literal(step));
+        args.push(scalar_literal(lr));
+        args.push(int_tensor_to_literal(tokens)?);
+        args.push(int_tensor_to_literal(targets)?);
+        let mut outs = art.run(&args)?;
+        let loss = literal_to_f32(outs.last().unwrap())?;
+        let mut it = outs.drain(..);
+        for slot in [&mut state.params, &mut state.m, &mut state.v] {
+            for t in slot.iter_mut() {
+                let lit = it.next().ok_or_else(|| anyhow!("train_step: short output"))?;
+                *t = literal_to_tensor(&lit)?;
+            }
+        }
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    /// PJRT + artifacts are optional on CI; these tests skip (rather than
+    /// fail) when either is unavailable. NativeBackend carries the
+    /// always-on coverage (runtime/native.rs, tests/integration.rs).
+    fn bundle() -> Option<(Engine, ModelBundle)> {
+        let dir = artifacts_dir()?;
+        let engine = Engine::new().ok()?;
+        let b = ModelBundle::load(&engine, dir).ok()?;
+        Some((engine, b))
+    }
+
+    #[test]
+    fn bundle_parses_manifest() {
+        let Some((_e, b)) = bundle() else { return };
+        assert_eq!(b.config.name, "tiny");
+        assert_eq!(b.param_specs.len(), b.config.param_specs().len());
+        assert!(b.artifact_names().contains(&"fwd_logits".to_string()));
+    }
+
+    #[test]
+    fn layer_recon_executes_and_matches_manifest_arity() {
+        let Some((_e, b)) = bundle() else { return };
+        let art = b.artifact("layer_recon").unwrap();
+        let cfg = &b.config;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let router = Tensor::randn(&[cfg.n_experts, cfg.d_model], &mut rng);
+        let w1 = Tensor::randn(&[cfg.n_experts, cfg.d_model, cfg.d_ff], &mut rng);
+        let w2 = Tensor::randn(&[cfg.n_experts, cfg.d_ff, cfg.d_model], &mut rng);
+        let mask = Tensor::ones(&[cfg.n_experts]);
+        let x = Tensor::randn(&[b.recon_tokens, cfg.d_model], &mut rng);
+        let args = vec![
+            tensor_to_literal(&router).unwrap(),
+            tensor_to_literal(&w1).unwrap(),
+            tensor_to_literal(&w2).unwrap(),
+            tensor_to_literal(&mask).unwrap(),
+            tensor_to_literal(&x).unwrap(),
+        ];
+        let before = art.run_count();
+        let outs = art.run(&args).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(art.run_count(), before + 1);
+        let y = literal_to_tensor(&outs[0]).unwrap();
+        assert_eq!(y.shape(), &[b.recon_tokens, cfg.d_model]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some((_e, b)) = bundle() else { return };
+        let art = b.artifact("layer_recon").unwrap();
+        assert!(art.run(&[]).is_err());
+    }
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        if Engine::new().is_err() {
+            return; // xla stub / no PJRT runtime
+        }
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

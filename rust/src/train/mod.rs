@@ -1,16 +1,16 @@
-//! Rust-driven training loop over the AOT `train_step` artifact.
+//! Rust-driven training loop over the backend's `train_step` contract.
 //!
-//! The entire optimisation step (forward, backward through the Pallas
-//! kernel's custom VJP, AdamW update) is one XLA executable; this module
-//! owns the *loop*: batch generation, LR schedule (linear warmup + cosine
-//! decay), loss logging, and checkpointing. Parameters and optimiser state
-//! stay as `xla::Literal`s between steps — they are only materialised into
-//! [`Tensor`]s for checkpoints.
+//! One optimisation step (forward, backward, AdamW update) is a single
+//! backend execution — an XLA executable on the PJRT backend, a manual
+//! reverse-mode pass on the native backend. This module owns the *loop*:
+//! batch generation, LR schedule (linear warmup + cosine decay), loss
+//! logging, and checkpointing; parameters and optimiser moments live in a
+//! [`TrainState`] the backend updates in place.
 
 use crate::checkpoint::Checkpoint;
 use crate::data::CorpusGenerator;
 use crate::model::ParamSet;
-use crate::runtime::{self, ModelBundle};
+use crate::runtime::{Backend, TrainState};
 use anyhow::{bail, Result};
 
 #[derive(Clone, Debug)]
@@ -85,11 +85,11 @@ impl Trainer {
     /// Train `params` in place; returns the loss log.
     pub fn train(
         &self,
-        bundle: &ModelBundle,
+        backend: &dyn Backend,
         params: &mut ParamSet,
         gen: &mut CorpusGenerator,
     ) -> Result<TrainLog> {
-        let cfg = &bundle.config;
+        let cfg = backend.config();
         if gen.cfg.seq != cfg.seq || gen.cfg.vocab != cfg.vocab {
             bail!(
                 "corpus shape ({}, {}) does not match model ({}, {})",
@@ -99,54 +99,30 @@ impl Trainer {
                 cfg.seq
             );
         }
-        let art = bundle.artifact("train_step")?;
-        let n_p = cfg.param_specs().len();
         let t0 = std::time::Instant::now();
-
-        // live state as literals: params ++ m ++ v
-        let mut p_lits = runtime::params_to_literals(params)?;
-        let mut m_lits: Vec<xla::Literal> = params
-            .tensors()
-            .iter()
-            .map(|t| runtime::tensor_to_literal(&crate::tensor::Tensor::zeros(t.shape())))
-            .collect::<Result<_>>()?;
-        let mut v_lits = m_lits.clone();
+        let mut state = TrainState::new(params);
 
         let mut log = TrainLog::default();
         for step in 0..self.config.steps {
             let (tokens, targets) = gen.batch(cfg.train_batch);
-            // move the state literals into the call (no host copies; the
-            // next state comes back in the outputs)
-            let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n_p + 4);
-            args.append(&mut p_lits);
-            args.append(&mut m_lits);
-            args.append(&mut v_lits);
-            args.push(runtime::scalar_literal((step + 1) as f32));
-            args.push(runtime::scalar_literal(lr_at(&self.config, step) as f32));
-            args.push(runtime::int_tensor_to_literal(&tokens)?);
-            args.push(runtime::int_tensor_to_literal(&targets)?);
-            let mut outs = art.run(&args)?;
-            let loss = runtime::literal_to_f32(outs.last().unwrap())? as f64;
+            let loss = backend.train_step(
+                &mut state,
+                (step + 1) as f32,
+                lr_at(&self.config, step) as f32,
+                &tokens,
+                &targets,
+            )? as f64;
             if !loss.is_finite() {
                 bail!("training diverged at step {step}: loss {loss}");
             }
-            // reslot state
-            let mut it = outs.drain(..);
-            p_lits = (&mut it).take(n_p).collect();
-            m_lits = (&mut it).take(n_p).collect();
-            v_lits = (&mut it).take(n_p).collect();
             if step % self.config.log_every == 0 || step + 1 == self.config.steps {
                 log.losses.push((step, loss));
             }
         }
 
         // materialise final params back into the ParamSet
-        let tensors: Vec<crate::tensor::Tensor> = p_lits
-            .iter()
-            .map(runtime::literal_to_tensor)
-            .collect::<Result<_>>()?;
         let mask = params.expert_mask.clone();
-        *params = ParamSet::from_tensors(cfg, tensors)?;
+        *params = ParamSet::from_tensors(cfg, state.params)?;
         params.expert_mask = mask;
         log.seconds = t0.elapsed().as_secs_f64();
         Ok(log)
