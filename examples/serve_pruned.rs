@@ -44,18 +44,20 @@ fn main() -> Result<()> {
     }
     .run(backend, &mut pruned, &mut corpus)?;
 
-    // memory budget sized to the pruned working set: the dense model
-    // must page experts, the pruned one fits
-    let budget = ExpertStore::working_set(&pruned);
+    // memory budget (bytes) sized to the pruned working set: the dense
+    // model must page experts, the pruned one fits — and pruned experts
+    // are cheaper per-expert (CSR bytes), so more of them stay resident
+    let budget = ExpertStore::working_set_bytes(&pruned);
     println!(
-        "expert slots: {budget} (dense needs {}, pruned needs {})\n",
-        ExpertStore::working_set(&params),
-        ExpertStore::working_set(&pruned)
+        "expert memory budget: {:.0} KB (dense needs {:.0} KB, pruned {:.0} KB)\n",
+        budget as f64 / 1024.0,
+        ExpertStore::working_set_bytes(&params) as f64 / 1024.0,
+        ExpertStore::working_set_bytes(&pruned) as f64 / 1024.0
     );
 
     println!(
-        "{:<12} {:>8} {:>9} {:>12} {:>8} {:>10} {:>10}",
-        "model", "experts", "tok/s", "tok/s(eff)", "swaps", "p50", "p95"
+        "{:<12} {:>9} {:>9} {:>12} {:>8} {:>10} {:>10}",
+        "model", "mem(KB)", "tok/s", "tok/s(eff)", "swaps", "p50", "p95"
     );
     for (label, ps) in [("dense", &params), ("stun-pruned", &pruned)] {
         let store = ExpertStore::new(budget, Duration::from_micros(200));
@@ -64,9 +66,9 @@ fn main() -> Result<()> {
         let (responses, m) = batcher.serve(queue)?;
         assert_eq!(responses.len(), n_requests);
         println!(
-            "{:<12} {:>8} {:>9.1} {:>12.1} {:>8} {:>10.1?} {:>10.1?}",
+            "{:<12} {:>9.0} {:>9.1} {:>12.1} {:>8} {:>10.1?} {:>10.1?}",
             label,
-            ExpertStore::working_set(ps),
+            ExpertStore::working_set_bytes(ps) as f64 / 1024.0,
             m.tokens_per_sec(),
             m.effective_tokens_per_sec(),
             m.expert_swaps,

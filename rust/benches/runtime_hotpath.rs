@@ -1,6 +1,9 @@
 //! Bench: runtime hot paths — per-call latency of every Backend contract
 //! (forward, loss, probes, layer reconstruction, one train step) on the
-//! selected backend for each config.
+//! selected backend for each config, plus the dense-vs-CSR decode arms
+//! across unstructured sparsity levels {0, 0.4, 0.7, 0.9}: the sparse
+//! execution engine must beat the dense path ≥2× at 90% sparsity and stay
+//! at parity (dense fallback) at 0%.
 //!
 //! Runs on the native backend by default; `--features pjrt` builds with
 //! artifacts present measure the AOT executable path instead
@@ -9,7 +12,8 @@
 
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
-use stun::runtime::{Backend, TrainState};
+use stun::pruning::unstructured::{self, ActNorms, UnstructuredConfig, UnstructuredMethod};
+use stun::runtime::{Backend, CompiledForward as _, TrainState};
 use stun::tensor::Tensor;
 use stun::util::bench::Bench;
 use stun::util::rng::Rng;
@@ -64,5 +68,46 @@ fn main() {
                 .train_step(&mut state, step, 1e-3, &ttok, &ttgt)
                 .unwrap();
         });
+
+        // dense vs CSR decode arms: the latency pruning actually buys.
+        // Magnitude pruning (no calibration) sets the sparsity level;
+        // compile() picks dense storage at 0.0 (fallback, parity) and CSR
+        // at the higher levels (the ≥2× win at 0.9).
+        for sparsity in [0.0f64, 0.4, 0.7, 0.9] {
+            let mut ps = ParamSet::init(&cfg, 7);
+            if sparsity > 0.0 {
+                unstructured::prune(
+                    &mut ps,
+                    &ActNorms::uniform(&cfg),
+                    sparsity,
+                    &UnstructuredConfig {
+                        method: UnstructuredMethod::Magnitude,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            }
+            let dense = bench.run(&format!("{config}/decode dense s={sparsity:.1}"), || {
+                backend.fwd_logits(&ps, &tokens).unwrap();
+            });
+            match backend.compile(&ps).expect("compile") {
+                Some(compiled) => {
+                    let sparse = bench.run(
+                        &format!("{config}/decode {} s={sparsity:.1}", compiled.name()),
+                        || {
+                            compiled.fwd_logits(&tokens).unwrap();
+                        },
+                    );
+                    println!(
+                        "    -> compiled speedup {:.2}x over dense fwd_logits",
+                        dense.mean_secs() / sparse.mean_secs()
+                    );
+                }
+                None => println!(
+                    "    ({} backend exposes no compiled decode path)",
+                    backend.name()
+                ),
+            }
+        }
     }
 }

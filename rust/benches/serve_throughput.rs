@@ -1,6 +1,8 @@
 //! Bench: coordinator serving throughput — dense vs STUN-pruned model
 //! under a fixed expert-memory budget (the deployment claim behind MoE
-//! pruning), plus batcher scaling over burst sizes.
+//! pruning), batcher scaling over burst sizes, and the dense-vs-sparse
+//! execution arms across sparsity levels {0, 0.4, 0.7, 0.9} (the CSR
+//! engine turning pruning into decode throughput).
 
 use std::time::Duration;
 use stun::coordinator::{burst_workload, Batcher, ExpertStore};
@@ -46,7 +48,7 @@ fn main() {
         "requests", "dense tok/s", "pruned tok/s", "d-swaps", "p-swaps"
     );
     for n in [4usize, 8, 16, 32] {
-        let capacity = ExpertStore::working_set(&pruned);
+        let capacity = ExpertStore::working_set_bytes(&pruned);
         let mut results = Vec::new();
         for ps in [&params, &pruned] {
             let store = ExpertStore::new(capacity, Duration::from_micros(200));
@@ -63,6 +65,52 @@ fn main() {
             results[1].tokens_per_sec(),
             results[0].expert_swaps,
             results[1].expert_swaps
+        );
+    }
+
+    // dense-execution vs compiled-sparse-execution arms: same pruned
+    // model, same byte budget — only the decode kernels differ.
+    println!("\n### decode arms: dense vs sparse execution (tiny)");
+    println!(
+        "{:>9} {:>9} {:>12} {:>13} {:>8} {:>9}",
+        "sparsity", "mem(KB)", "dense tok/s", "sparse tok/s", "swaps", "speedup"
+    );
+    for s in [0.0f64, 0.4, 0.7, 0.9] {
+        let mut ps = params.clone();
+        if s > 0.0 {
+            StunPipeline {
+                expert: ExpertPruneConfig {
+                    ratio: 0.25,
+                    ..Default::default()
+                },
+                unstructured: UnstructuredConfig::default(),
+                total_sparsity: s,
+                calib_batches: 2,
+            }
+            .run(backend, &mut ps, &mut gen)
+            .expect("stun");
+        }
+        let capacity = ExpertStore::working_set_bytes(&ps).max(1);
+        let mut tput = [0.0f64; 2];
+        let mut swaps = 0u64;
+        for (i, use_compiled) in [false, true].into_iter().enumerate() {
+            let store = ExpertStore::new(capacity, Duration::from_micros(200));
+            let mut batcher =
+                Batcher::with_exec(backend, &ps, store, use_compiled).expect("batcher");
+            let (_r, m) = batcher
+                .serve(burst_workload(backend.config(), 8, 6, 5))
+                .expect("serve");
+            tput[i] = m.tokens_per_sec();
+            swaps = m.expert_swaps;
+        }
+        println!(
+            "{:>9.1} {:>9.0} {:>12.1} {:>13.1} {:>8} {:>8.2}x",
+            s,
+            capacity as f64 / 1024.0,
+            tput[0],
+            tput[1],
+            swaps,
+            tput[1] / tput[0].max(1e-9)
         );
     }
 }

@@ -1,16 +1,29 @@
 //! `.stz` checkpoint format — named f32 tensors + a metadata string.
 //!
-//! Layout (little-endian):
+//! Version 2 layout (little-endian):
 //! ```text
-//! magic   [8]  b"STZCKPT1"
+//! magic   [8]  b"STZCKPT2"
 //! meta    u32 len + utf8 bytes      (JSON blob: config, step, notes)
 //! count   u32
 //! per tensor:
 //!   name  u16 len + utf8 bytes
 //!   ndim  u8
 //!   dims  ndim × u32
-//!   data  prod(dims) × f32
+//!   enc   u8                        (0 = dense, 1 = bitmap-sparse)
+//!   dense:  prod(dims) × f32
+//!   sparse: nnz u64
+//!           bitmap ⌈n/8⌉ bytes      (bit i set ⇔ element i stored)
+//!           nnz × f32               (values in index order)
 //! ```
+//! The writer picks the smaller encoding per tensor, so pruned
+//! checkpoints shrink roughly 3× at 70% sparsity (⅛ byte of bitmap + the
+//! surviving values, vs 4 bytes per element dense) while unpruned tensors
+//! stay byte-identical to dense. Zero-ness is judged on the f32 bit
+//! pattern, so `-0.0` survives round-trips exactly.
+//!
+//! Version 1 (`STZCKPT1`, dense-only, no `enc` byte) still loads;
+//! [`Checkpoint::save_v1`] writes it for older readers.
+//!
 //! Tensors keep their insertion order, which for model checkpoints is the
 //! canonical `param_specs` order shared with the Python side.
 
@@ -20,7 +33,11 @@ use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"STZCKPT1";
+const MAGIC_V1: &[u8; 8] = b"STZCKPT1";
+const MAGIC_V2: &[u8; 8] = b"STZCKPT2";
+/// v2 tensor payload encodings.
+const ENC_DENSE: u8 = 0;
+const ENC_SPARSE: u8 = 1;
 
 #[derive(Clone, Debug, Default)]
 pub struct Checkpoint {
@@ -87,8 +104,19 @@ impl Checkpoint {
 
     // ------------------------------------------------------------------ IO
 
+    /// Save in the current (v2) format: per-tensor dense or bitmap-sparse
+    /// payloads, whichever is smaller.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
+        self.save_impl(path.as_ref(), 2)
+    }
+
+    /// Legacy `STZCKPT1` writer (dense-only payloads) — kept for interop
+    /// with older readers and the backward-compat tests.
+    pub fn save_v1(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.save_impl(path.as_ref(), 1)
+    }
+
+    fn save_impl(&self, path: &Path, version: u8) -> Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
@@ -98,7 +126,7 @@ impl Checkpoint {
             std::fs::File::create(path)
                 .with_context(|| format!("creating {}", path.display()))?,
         );
-        w.write_all(MAGIC)?;
+        w.write_all(if version == 1 { MAGIC_V1 } else { MAGIC_V2 })?;
         let meta = self.meta.as_bytes();
         w.write_all(&(meta.len() as u32).to_le_bytes())?;
         w.write_all(meta)?;
@@ -111,14 +139,30 @@ impl Checkpoint {
             for &d in t.shape() {
                 w.write_all(&(d as u32).to_le_bytes())?;
             }
-            // bulk-write the f32 payload
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(
-                    t.data().as_ptr() as *const u8,
-                    t.data().len() * 4,
-                )
-            };
-            w.write_all(bytes)?;
+            let n = t.data().len();
+            // zero-ness by bit pattern: -0.0 is stored, so round-trips
+            // are bit-exact
+            let nnz = t.data().iter().filter(|x| x.to_bits() != 0).count();
+            let sparse_bytes = 8 + n.div_ceil(8) + nnz * 4;
+            if version >= 2 && sparse_bytes < n * 4 {
+                w.write_all(&[ENC_SPARSE])?;
+                w.write_all(&(nnz as u64).to_le_bytes())?;
+                let mut bitmap = vec![0u8; n.div_ceil(8)];
+                let mut vals = Vec::with_capacity(nnz);
+                for (i, &x) in t.data().iter().enumerate() {
+                    if x.to_bits() != 0 {
+                        bitmap[i / 8] |= 1 << (i % 8);
+                        vals.push(x);
+                    }
+                }
+                w.write_all(&bitmap)?;
+                write_f32s(&mut w, &vals)?;
+            } else {
+                if version >= 2 {
+                    w.write_all(&[ENC_DENSE])?;
+                }
+                write_f32s(&mut w, t.data())?;
+            }
         }
         w.flush()?;
         Ok(())
@@ -132,9 +176,13 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let version: u8 = if &magic == MAGIC_V1 {
+            1
+        } else if &magic == MAGIC_V2 {
+            2
+        } else {
             bail!("{}: not an .stz checkpoint", path.display());
-        }
+        };
         let meta_len = read_u32(&mut r)? as usize;
         let mut meta = vec![0u8; meta_len];
         r.read_exact(&mut meta)?;
@@ -150,15 +198,57 @@ impl Checkpoint {
                 dims.push(read_u32(&mut r)? as usize);
             }
             let n: usize = dims.iter().product();
-            let mut data = vec![0f32; n];
-            let bytes: &mut [u8] = unsafe {
-                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+            let enc = if version == 1 { ENC_DENSE } else { read_u8(&mut r)? };
+            let data = match enc {
+                ENC_DENSE => read_f32s(&mut r, n)?,
+                ENC_SPARSE => {
+                    let nnz = read_u64(&mut r)? as usize;
+                    if nnz > n {
+                        bail!("sparse tensor claims {nnz} non-zeros in {n} elements");
+                    }
+                    let mut bitmap = vec![0u8; n.div_ceil(8)];
+                    r.read_exact(&mut bitmap)?;
+                    let vals = read_f32s(&mut r, nnz)?;
+                    let mut data = vec![0f32; n];
+                    let mut vi = 0usize;
+                    for (i, slot) in data.iter_mut().enumerate() {
+                        if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+                            if vi >= nnz {
+                                bail!("sparse bitmap popcount exceeds stored nnz {nnz}");
+                            }
+                            *slot = vals[vi];
+                            vi += 1;
+                        }
+                    }
+                    if vi != nnz {
+                        bail!("sparse bitmap popcount {vi} != stored nnz {nnz}");
+                    }
+                    data
+                }
+                other => bail!("unknown tensor encoding {other}"),
             };
-            r.read_exact(bytes)?;
             ckpt.push(String::from_utf8(name)?, Tensor::new(&dims, data)?)?;
         }
         Ok(ckpt)
     }
+}
+
+/// Bulk-write an f32 slice as little-endian bytes.
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+/// Bulk-read `n` little-endian f32s.
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut data = vec![0f32; n];
+    let bytes: &mut [u8] =
+        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4) };
+    r.read_exact(bytes)?;
+    Ok(data)
 }
 
 fn read_u8(r: &mut impl Read) -> Result<u8> {
@@ -177,6 +267,12 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -249,6 +345,99 @@ mod tests {
         c.save(&p).unwrap();
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    /// A checkpoint mixing dense and very-sparse tensors, including the
+    /// bit-exactness corner cases (-0.0, a fully-zero tensor).
+    fn mixed_sparsity_checkpoint() -> Checkpoint {
+        let mut rng = Rng::new(17);
+        let mut c = Checkpoint::new(r#"{"step": 7}"#);
+        c.push("dense", Tensor::randn(&[32, 16], &mut rng)).unwrap();
+        let mut sparse = Tensor::zeros(&[64, 64]);
+        for (i, v) in sparse.data_mut().iter_mut().enumerate() {
+            if i % 10 == 0 {
+                *v = rng.normal();
+            }
+        }
+        sparse.data_mut()[3] = -0.0; // stored: zero-ness is bit-level
+        c.push("sparse90", sparse).unwrap();
+        c.push("allzero", Tensor::zeros(&[128])).unwrap();
+        c
+    }
+
+    #[test]
+    fn v2_sparse_roundtrip_is_bit_exact() {
+        let c = mixed_sparsity_checkpoint();
+        let p = tmp("v2sparse");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.meta, c.meta);
+        for (name, t) in c.iter() {
+            let b = back.get(name).unwrap();
+            assert_eq!(b.shape(), t.shape(), "{name}");
+            for (x, y) in t.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn v2_shrinks_sparse_checkpoints_on_disk() {
+        // 70%-sparse payload: v2 ≈ bitmap + 30% of the values → ~3× smaller
+        let mut rng = Rng::new(19);
+        let mut t = Tensor::zeros(&[256, 256]);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            if i % 10 < 3 {
+                *v = rng.normal();
+            }
+        }
+        let mut c = Checkpoint::new("");
+        c.push("w", t).unwrap();
+        let p2 = tmp("v2size");
+        let p1 = tmp("v1size");
+        c.save(&p2).unwrap();
+        c.save_v1(&p1).unwrap();
+        let (s2, s1) = (
+            std::fs::metadata(&p2).unwrap().len(),
+            std::fs::metadata(&p1).unwrap().len(),
+        );
+        assert!(
+            (s1 as f64) / (s2 as f64) > 2.8,
+            "v1 {s1} bytes vs v2 {s2} bytes"
+        );
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let c = mixed_sparsity_checkpoint();
+        let p = tmp("v1compat");
+        c.save_v1(&p).unwrap();
+        // byte 8 onwards of a v1 file has no enc markers; magic says so
+        assert_eq!(&std::fs::read(&p).unwrap()[..8], b"STZCKPT1");
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.meta, c.meta);
+        for (name, t) in c.iter() {
+            assert_eq!(back.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corrupt_sparse_section_rejected() {
+        let mut c = Checkpoint::new("");
+        c.push("w", Tensor::zeros(&[64])).unwrap(); // all-zero → sparse enc
+        let p = tmp("badsparse");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flip a bitmap bit so popcount (1) disagrees with stored nnz (0)
+        let len = bytes.len();
+        bytes[len - 1] |= 0x80;
+        std::fs::write(&p, &bytes).unwrap();
         assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).ok();
     }

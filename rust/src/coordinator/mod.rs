@@ -3,17 +3,23 @@
 //! The paper's introduction argues MoEs are pruned so they can be *served*
 //! with less GPU memory. This module demonstrates that end to end:
 //!
-//! * [`ExpertStore`] — a memory-capacity model for expert weights: a fixed
-//!   number of resident expert slots with LRU eviction. Dense models
-//!   overflow the store and pay per-swap latency; pruned models fit. The
-//!   swap count is the serving-side metric the memory reduction buys down.
+//! * [`ExpertStore`] — a memory-capacity model for expert weights: a
+//!   byte-accurate budget with O(1) HashMap-indexed LRU eviction. Each
+//!   expert occupies its real storage footprint (CSR bytes once pruning
+//!   makes CSR cheaper, zero for dead experts), so pruned models pack
+//!   more residency into the same budget. Dense models overflow the store
+//!   and pay per-swap latency; pruned models fit. The swap count is the
+//!   serving-side metric the memory reduction buys down.
 //! * [`Batcher`] — continuous batching: a FIFO of decode requests is
 //!   packed into fixed-size batches; finished sequences leave, new ones
 //!   join every step (the vLLM-style request loop, single-threaded
-//!   because PJRT handles are not `Send`). Expert-store touches come from
-//!   the backend's *real* top-k router decisions when it exposes them
-//!   (`fwd_logits_routed`); otherwise a documented uniform-routing
-//!   fallback approximates the traffic.
+//!   because PJRT handles are not `Send`). Decode runs on the backend's
+//!   compiled sparse path ([`crate::runtime::Backend::compile`]) when one
+//!   exists — CSR expert kernels turn pruning into real throughput — and
+//!   falls back to the per-call `fwd_logits_routed` contract otherwise.
+//!   Expert-store touches come from the *real* top-k router decisions
+//!   when the executor exposes them; otherwise a documented
+//!   uniform-routing fallback approximates the traffic.
 //! * [`Server`] — request intake via `std::sync::mpsc` from any number of
 //!   producer threads; the engine thread owns the backend and streams
 //!   responses back over per-request channels.
@@ -23,10 +29,10 @@
 
 use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, CompiledForward};
 use crate::tensor::IntTensor;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -34,11 +40,40 @@ use std::time::{Duration, Instant};
 // Expert residency / memory model.
 // ---------------------------------------------------------------------------
 
+/// Linked-list slot index meaning "none".
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    key: (usize, usize),
+    bytes: usize,
+    prev: usize,
+    next: usize,
+}
+
 /// LRU store modelling limited fast memory for expert weights.
+///
+/// Capacity is **byte-accurate**: each resident expert occupies its actual
+/// storage footprint ([`ParamSet::expert_resident_bytes`] — CSR bytes once
+/// unstructured pruning makes CSR cheaper than dense, zero for dead
+/// experts), so a pruned model genuinely packs more experts into the same
+/// budget instead of merely occupying fewer uniform slots.
+///
+/// Recency bookkeeping is a HashMap-indexed doubly-linked list, so a
+/// [`ExpertStore::touch`] is O(1) per token regardless of how many experts
+/// are resident (the previous `VecDeque::iter().position()` scan was O(n)
+/// on the serving loop's hottest path).
 #[derive(Debug)]
 pub struct ExpertStore {
-    capacity: usize,
-    resident: VecDeque<(usize, usize)>, // (layer, expert), front = LRU
+    capacity_bytes: usize,
+    used_bytes: usize,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    index: HashMap<(usize, usize), usize>,
+    /// Least-recently-used end of the list (next eviction victim).
+    lru: usize,
+    /// Most-recently-used end of the list.
+    mru: usize,
     pub swaps: u64,
     pub hits: u64,
     /// Simulated penalty per swap (models HBM↔host traffic).
@@ -46,42 +81,129 @@ pub struct ExpertStore {
 }
 
 impl ExpertStore {
-    pub fn new(capacity: usize, swap_penalty: Duration) -> ExpertStore {
+    pub fn new(capacity_bytes: usize, swap_penalty: Duration) -> ExpertStore {
         ExpertStore {
-            capacity,
-            resident: VecDeque::new(),
+            capacity_bytes,
+            used_bytes: 0,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            lru: NIL,
+            mru: NIL,
             swaps: 0,
             hits: 0,
             swap_penalty,
         }
     }
 
-    /// Touch an expert; returns the stall penalty if it had to be paged in.
-    pub fn touch(&mut self, layer: usize, expert: usize) -> Duration {
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.nodes[i].prev, self.nodes[i].next);
+        if p != NIL {
+            self.nodes[p].next = n;
+        } else {
+            self.lru = n;
+        }
+        if n != NIL {
+            self.nodes[n].prev = p;
+        } else {
+            self.mru = p;
+        }
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = NIL;
+    }
+
+    fn attach_mru(&mut self, i: usize) {
+        self.nodes[i].prev = self.mru;
+        self.nodes[i].next = NIL;
+        if self.mru != NIL {
+            self.nodes[self.mru].next = i;
+        }
+        self.mru = i;
+        if self.lru == NIL {
+            self.lru = i;
+        }
+    }
+
+    /// Touch an expert that occupies `bytes` when resident; returns the
+    /// stall penalty if it had to be paged in. An expert larger than the
+    /// whole store resides alone (over budget) rather than thrashing.
+    pub fn touch(&mut self, layer: usize, expert: usize, bytes: usize) -> Duration {
         let key = (layer, expert);
-        if let Some(pos) = self.resident.iter().position(|&k| k == key) {
-            self.resident.remove(pos);
-            self.resident.push_back(key);
+        if let Some(&i) = self.index.get(&key) {
+            self.detach(i);
+            self.attach_mru(i);
+            self.used_bytes = self.used_bytes - self.nodes[i].bytes + bytes;
+            self.nodes[i].bytes = bytes;
             self.hits += 1;
+            // a grown footprint (e.g. recomputed after re-pruning) can
+            // push the store over budget: evict from the LRU end — never
+            // the just-touched expert — until it fits again
+            while self.used_bytes > self.capacity_bytes && self.lru != i {
+                let victim = self.lru;
+                self.detach(victim);
+                self.index.remove(&self.nodes[victim].key);
+                self.used_bytes -= self.nodes[victim].bytes;
+                self.free.push(victim);
+            }
             return Duration::ZERO;
         }
-        if self.resident.len() >= self.capacity {
-            self.resident.pop_front();
+        // page in: evict from the LRU end until the newcomer fits
+        while self.used_bytes + bytes > self.capacity_bytes && self.lru != NIL {
+            let victim = self.lru;
+            self.detach(victim);
+            self.index.remove(&self.nodes[victim].key);
+            self.used_bytes -= self.nodes[victim].bytes;
+            self.free.push(victim);
         }
-        self.resident.push_back(key);
+        let node = Node {
+            key,
+            bytes,
+            prev: NIL,
+            next: NIL,
+        };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.attach_mru(i);
+        self.index.insert(key, i);
+        self.used_bytes += bytes;
         self.swaps += 1;
         self.swap_penalty
     }
 
-    /// Working set for a model: every alive expert of every layer.
-    pub fn working_set(params: &ParamSet) -> usize {
+    /// Working-set bytes for a model: the resident footprint of every
+    /// alive expert of every layer (dead experts cost nothing).
+    pub fn working_set_bytes(params: &ParamSet) -> usize {
         (0..params.config.n_layers)
-            .map(|l| params.alive_experts(l).len())
+            .map(|l| {
+                (0..params.config.n_experts)
+                    .map(|e| params.expert_resident_bytes(l, e))
+                    .sum::<usize>()
+            })
             .sum()
     }
 
     pub fn resident_count(&self) -> usize {
-        self.resident.len()
+        self.index.len()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn is_resident(&self, layer: usize, expert: usize) -> bool {
+        self.index.contains_key(&(layer, expert))
     }
 }
 
@@ -157,10 +279,17 @@ struct Active {
 /// Continuous batcher over a single model.
 pub struct Batcher<'b> {
     backend: &'b dyn Backend,
-    params: ParamSet,
+    /// Dense weights for the per-call fallback path. `None` when a
+    /// compiled executor runs decode — keeping a second full weight copy
+    /// alive would defeat the byte accounting this module exists for.
+    params: Option<ParamSet>,
     pub store: ExpertStore,
     /// Alive experts per layer, for the uniform-routing fallback.
     params_alive: Vec<Vec<usize>>,
+    /// \[L\]\[E\] resident byte footprint per expert (0 = dead).
+    expert_bytes: Vec<Vec<usize>>,
+    /// Decode-optimised executable, when the backend compiles one.
+    compiled: Option<Box<dyn CompiledForward>>,
 }
 
 impl<'b> Batcher<'b> {
@@ -169,14 +298,51 @@ impl<'b> Batcher<'b> {
         params: &ParamSet,
         store: ExpertStore,
     ) -> Result<Batcher<'b>> {
+        Self::with_exec(backend, params, store, true)
+    }
+
+    /// `use_compiled = false` forces the per-call dense `Backend` path
+    /// even when a compiled executor exists — the baseline arm of the
+    /// dense-vs-sparse serving benches.
+    pub fn with_exec(
+        backend: &'b dyn Backend,
+        params: &ParamSet,
+        store: ExpertStore,
+        use_compiled: bool,
+    ) -> Result<Batcher<'b>> {
+        let compiled = if use_compiled {
+            backend.compile(params)?
+        } else {
+            None
+        };
         Ok(Batcher {
             backend,
-            params: params.clone(),
             params_alive: (0..params.config.n_layers)
                 .map(|l| params.alive_experts(l))
                 .collect(),
+            expert_bytes: (0..params.config.n_layers)
+                .map(|l| {
+                    (0..params.config.n_experts)
+                        .map(|e| params.expert_resident_bytes(l, e))
+                        .collect()
+                })
+                .collect(),
+            params: if compiled.is_some() {
+                None
+            } else {
+                Some(params.clone())
+            },
             store,
+            compiled,
         })
+    }
+
+    /// Label of the executor the decode loop actually uses.
+    pub fn exec_name(&self) -> String {
+        match &self.compiled {
+            Some(c) => c.name(),
+            None => self.backend.name(),
+        }
     }
 
     /// One decode step over the active set: run the model, touch the
@@ -205,7 +371,14 @@ impl<'b> Batcher<'b> {
             positions[bi] = seq.len() - 1;
             tokens.row_mut(bi)[..seq.len()].copy_from_slice(&seq);
         }
-        let (logits, routing) = self.backend.fwd_logits_routed(&self.params, &tokens)?;
+        let (logits, routing) = match &self.compiled {
+            Some(c) => c.fwd_logits_routed(&tokens)?,
+            None => {
+                // construction invariant: exactly one of compiled/params
+                let p = self.params.as_ref().expect("dense path retains params");
+                self.backend.fwd_logits_routed(p, &tokens)?
+            }
+        };
         metrics.decode_steps += 1;
 
         // memory model: each decode step touches the top-k experts per
@@ -223,7 +396,9 @@ impl<'b> Batcher<'b> {
                         for slot in 0..k {
                             let e = r.data()[base + slot];
                             if e >= 0 {
-                                stall += self.store.touch(layer, e as usize);
+                                let e = e as usize;
+                                stall +=
+                                    self.store.touch(layer, e, self.expert_bytes[layer][e]);
                             }
                         }
                     }
@@ -240,7 +415,7 @@ impl<'b> Batcher<'b> {
                         for slot in 0..k {
                             let e = alive[(s_idx + slot * 7 + metrics.decode_steps as usize)
                                 % alive.len()];
-                            stall += self.store.touch(layer, e);
+                            stall += self.store.touch(layer, e, self.expert_bytes[layer][e]);
                         }
                     }
                 }
@@ -477,31 +652,119 @@ mod tests {
 
     #[test]
     fn expert_store_lru_and_swap_counting() {
-        let mut s = ExpertStore::new(2, Duration::from_micros(100));
-        assert!(s.touch(0, 0) > Duration::ZERO); // cold
-        assert!(s.touch(0, 1) > Duration::ZERO); // cold
-        assert_eq!(s.touch(0, 0), Duration::ZERO); // hit
-        assert!(s.touch(0, 2) > Duration::ZERO); // evicts LRU (0,1)
-        assert!(s.touch(0, 1) > Duration::ZERO); // (0,1) was evicted
+        // room for two 100-byte experts
+        let mut s = ExpertStore::new(200, Duration::from_micros(100));
+        assert!(s.touch(0, 0, 100) > Duration::ZERO); // cold
+        assert!(s.touch(0, 1, 100) > Duration::ZERO); // cold
+        assert_eq!(s.touch(0, 0, 100), Duration::ZERO); // hit
+        assert!(s.touch(0, 2, 100) > Duration::ZERO); // evicts LRU (0,1)
+        assert!(s.touch(0, 1, 100) > Duration::ZERO); // (0,1) was evicted
         assert_eq!(s.swaps, 4);
         assert_eq!(s.hits, 1);
         assert_eq!(s.resident_count(), 2);
+        assert_eq!(s.resident_bytes(), 200);
+        assert!(s.is_resident(0, 1) && s.is_resident(0, 2));
     }
 
     #[test]
-    fn working_set_shrinks_with_pruning() {
+    fn byte_capacity_packs_more_small_experts() {
+        // the same 200-byte budget holds four 50-byte (pruned) experts
+        let mut s = ExpertStore::new(200, Duration::from_micros(100));
+        for e in 0..4 {
+            s.touch(0, e, 50);
+        }
+        assert_eq!(s.resident_count(), 4);
+        assert_eq!(s.swaps, 4);
+        // a fifth evicts exactly the LRU one
+        s.touch(0, 4, 50);
+        assert!(!s.is_resident(0, 0));
+        assert!(s.is_resident(0, 1));
+        assert_eq!(s.resident_count(), 4);
+        // a big 150-byte expert evicts as many as it needs
+        s.touch(1, 0, 150);
+        assert_eq!(s.resident_bytes(), 200);
+        assert!(s.is_resident(1, 0));
+    }
+
+    #[test]
+    fn hit_with_grown_footprint_evicts_to_stay_in_budget() {
+        let mut s = ExpertStore::new(100, Duration::from_micros(1));
+        s.touch(0, 0, 40);
+        s.touch(0, 1, 40);
+        // (0,1) grows on a hit: (0,0) must be evicted to make room
+        assert_eq!(s.touch(0, 1, 90), Duration::ZERO);
+        assert_eq!(s.hits, 1);
+        assert!(!s.is_resident(0, 0));
+        assert!(s.is_resident(0, 1));
+        assert_eq!(s.resident_bytes(), 90);
+        // growing beyond the whole budget keeps only the touched expert
+        s.touch(0, 1, 300);
+        assert_eq!(s.resident_count(), 1);
+        assert_eq!(s.resident_bytes(), 300);
+    }
+
+    #[test]
+    fn oversized_expert_resides_alone_over_budget() {
+        let mut s = ExpertStore::new(100, Duration::from_micros(1));
+        s.touch(0, 0, 40);
+        s.touch(0, 1, 40);
+        s.touch(0, 2, 500); // larger than the whole store
+        assert_eq!(s.resident_count(), 1);
+        assert!(s.is_resident(0, 2));
+        assert_eq!(s.resident_bytes(), 500);
+        // next touch evicts it again
+        s.touch(0, 0, 40);
+        assert!(!s.is_resident(0, 2));
+    }
+
+    #[test]
+    fn lru_order_survives_many_interleaved_touches() {
+        // drive the linked list through enough churn to catch pointer bugs
+        let mut s = ExpertStore::new(4 * 10, Duration::from_micros(1));
+        for round in 0..50usize {
+            for e in 0..8usize {
+                s.touch(0, (round * 3 + e) % 11, 10);
+            }
+        }
+        assert_eq!(s.resident_count(), 4);
+        assert_eq!(s.resident_bytes(), 40);
+        assert_eq!(s.swaps + s.hits, 50 * 8);
+    }
+
+    #[test]
+    fn working_set_bytes_shrinks_with_pruning() {
         let cfg = ModelConfig::test_tiny();
         let mut ps = ParamSet::init(&cfg, 91);
-        let full = ExpertStore::working_set(&ps);
-        assert_eq!(full, cfg.n_layers * cfg.n_experts);
+        let full = ExpertStore::working_set_bytes(&ps);
+        // dense random weights: every expert costs its dense footprint
+        assert_eq!(full, cfg.n_layers * cfg.n_experts * ps.expert_bytes_dense());
         ps.prune_expert(0, 1);
         ps.prune_expert(1, 2);
-        assert_eq!(ExpertStore::working_set(&ps), full - 2);
+        assert_eq!(
+            ExpertStore::working_set_bytes(&ps),
+            full - 2 * ps.expert_bytes_dense()
+        );
+        // unstructured sparsity shrinks the byte footprint further (CSR)
+        let norms = crate::pruning::unstructured::ActNorms::uniform(&cfg);
+        crate::pruning::unstructured::prune(
+            &mut ps,
+            &norms,
+            0.8,
+            &crate::pruning::unstructured::UnstructuredConfig {
+                method: crate::pruning::unstructured::UnstructuredMethod::Magnitude,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            ExpertStore::working_set_bytes(&ps) < (full - 2 * ps.expert_bytes_dense()) / 2,
+            "80%-sparse experts should cost well under half their dense bytes"
+        );
     }
 
     #[test]
     fn pruned_model_fits_store_dense_thrashes() {
-        // capacity = 6 slots; dense tiny needs 8, pruned(50%) needs 4.
+        // budget = pruned working set; dense tiny needs 2× that.
         let cfg = ModelConfig::test_tiny();
         let dense = ParamSet::init(&cfg, 93);
         let mut pruned = dense.clone();
@@ -509,8 +772,9 @@ mod tests {
             pruned.prune_expert(l, 0);
             pruned.prune_expert(l, 1);
         }
-        assert!(ExpertStore::working_set(&dense) > 6);
-        assert!(ExpertStore::working_set(&pruned) <= 6);
+        let budget = ExpertStore::working_set_bytes(&pruned);
+        assert!(ExpertStore::working_set_bytes(&dense) > budget);
+        assert_eq!(ExpertStore::working_set_bytes(&dense), 2 * budget);
     }
 
     #[test]
@@ -529,20 +793,47 @@ mod tests {
     fn serve_end_to_end_on_native_backend() {
         let backend = NativeBackend::new(ModelConfig::test_tiny());
         let params = ParamSet::init(backend.config(), 95);
-        let store = ExpertStore::new(64, Duration::from_micros(50));
+        let store = ExpertStore::new(
+            ExpertStore::working_set_bytes(&params),
+            Duration::from_micros(50),
+        );
         let mut batcher = Batcher::new(&backend, &params, store).unwrap();
+        // the native backend compiles a sparse-capable executor
+        assert!(batcher.exec_name().starts_with("compiled"));
         let queue = burst_workload(backend.config(), 5, 4, 7);
         let (responses, metrics) = batcher.serve(queue).unwrap();
         assert_eq!(responses.len(), 5);
         assert_eq!(metrics.completed, 5);
         assert!(metrics.generated_tokens >= 5);
         assert!(metrics.tokens_per_sec() > 0.0);
-        // the native backend exposes routing, so every step used it
+        // the compiled executor exposes routing, so every step used it
         assert_eq!(metrics.routed_steps, metrics.decode_steps);
         for r in &responses {
             assert!(!r.tokens.is_empty());
             assert!(r.tokens.len() <= 4);
         }
+    }
+
+    #[test]
+    fn dense_and_compiled_exec_generate_identical_tokens() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 96);
+        let mut outputs = Vec::new();
+        for use_compiled in [false, true] {
+            let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
+            let mut batcher =
+                Batcher::with_exec(&backend, &params, store, use_compiled).unwrap();
+            let queue = burst_workload(backend.config(), 4, 5, 13);
+            let (mut responses, _m) = batcher.serve(queue).unwrap();
+            responses.sort_by_key(|r| r.id);
+            outputs.push(
+                responses
+                    .into_iter()
+                    .map(|r| r.tokens)
+                    .collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(outputs[0], outputs[1], "greedy decode must not diverge");
     }
 
     #[test]
@@ -555,24 +846,23 @@ mod tests {
         params.prune_expert(0, 0);
         params.prune_expert(0, 1);
         params.prune_expert(0, 2); // only expert 3 lives in layer 0
-        let store = ExpertStore::new(64, Duration::from_micros(10));
+        let store = ExpertStore::new(usize::MAX / 2, Duration::from_micros(10));
         let mut batcher = Batcher::new(&backend, &params, store).unwrap();
         let queue = burst_workload(backend.config(), 4, 3, 11);
         let (_responses, metrics) = batcher.serve(queue).unwrap();
         assert!(metrics.routed_steps > 0);
         // layer-0 residency can only ever contain (0, 3)
-        assert!(batcher
-            .store
-            .resident
-            .iter()
-            .all(|&(l, e)| l != 0 || e == 3));
+        for e in 0..3 {
+            assert!(!batcher.store.is_resident(0, e));
+        }
+        assert!(batcher.store.is_resident(0, 3));
     }
 
     #[test]
     fn server_smoke_over_producer_threads() {
         let backend = NativeBackend::new(ModelConfig::test_tiny());
         let params = ParamSet::init(backend.config(), 99);
-        let store = ExpertStore::new(64, Duration::from_micros(10));
+        let store = ExpertStore::new(usize::MAX / 2, Duration::from_micros(10));
         let batcher = Batcher::new(&backend, &params, store).unwrap();
         let server = Server::new(batcher);
         let cfg = backend.config().clone();

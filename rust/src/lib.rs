@@ -33,6 +33,24 @@
 //!   `pjrt`-gated integration test pins cross-backend `fwd_logits`
 //!   agreement.
 //!
+//! ## Sparse execution engine
+//!
+//! Pruning masks are *executed*, not just bookkept: [`sparse`] compiles a
+//! pruned [`model::ParamSet`] into a [`sparse::CompiledModel`] — per-expert
+//! CSR weight storage with cache-friendly sparse kernels on the decode hot
+//! path, structurally-dead experts row-compressed away entirely, and a
+//! per-tensor dense fallback above the ~50% density threshold
+//! ([`sparse::SparseConfig`]) so unpruned models pay no regression. The
+//! serving stack uses it end to end: [`runtime::Backend::compile`] hands
+//! the coordinator a [`runtime::CompiledForward`] executor,
+//! [`coordinator::ExpertStore`] budgets residency in *bytes* (CSR bytes
+//! once pruning makes CSR cheaper, O(1) HashMap-indexed LRU), and
+//! [`checkpoint`] writes `STZCKPT2` files with bitmap-sparse tensor
+//! sections (~3× smaller at 70% sparsity; `STZCKPT1` still loads).
+//! Dense/sparse `fwd_logits` equivalence (≤1e-5) is pinned by
+//! `tests/sparse_exec.rs`; the dense-vs-CSR speed arms live in
+//! `benches/runtime_hotpath.rs` and `benches/serve_throughput.rs`.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -54,6 +72,7 @@ pub mod model;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
+pub mod sparse;
 pub mod tensor;
 pub mod train;
 pub mod util;
@@ -69,9 +88,10 @@ pub mod prelude {
     pub use crate::pruning::expert::{ExpertPruneConfig, ExpertPruner};
     pub use crate::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
     pub use crate::pruning::StunPipeline;
-    pub use crate::runtime::{Backend, NativeBackend};
+    pub use crate::runtime::{Backend, CompiledForward, NativeBackend};
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::{Engine, ModelBundle, PjrtBackend};
+    pub use crate::sparse::{CompiledModel, CompressionReport, SparseConfig};
     pub use crate::tensor::Tensor;
     pub use crate::train::{TrainConfig, Trainer};
     pub use anyhow::{anyhow, bail, Context, Result};

@@ -5,6 +5,7 @@
 //! stun train  --config moe-8x --steps 300    # train on the synthetic corpus
 //! stun prune  --config moe-8x --ratio 0.25   # expert pruning only (stage 1)
 //! stun stun   --config moe-8x --sparsity 0.4 # full STUN pipeline
+//!             [--report-out r.json]          # JSON report incl. compression
 //! stun eval   --config moe-8x [--ckpt f.stz] # task-suite evaluation
 //! stun serve  --config moe-8x --requests 32  # batching server demo
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
@@ -193,6 +194,16 @@ fn cmd_prune(args: &Args) -> Result<()> {
         );
     }
     println!("sparsity: {:.1}%", params.overall_sparsity() * 100.0);
+    println!(
+        "compression: {:.2}x ({} dense -> {} effective bytes)",
+        report.compression.ratio(),
+        report.compression.bytes_dense,
+        report.compression.bytes_effective
+    );
+    if let Some(path) = args.str_opt("report-out") {
+        std::fs::write(path, report.compression.to_json().to_string())?;
+        println!("wrote {path}");
+    }
     if let Some(out) = args.str_opt("out") {
         params
             .to_checkpoint(&format!(r#"{{"pruned":"expert","config":"{config}"}}"#))
@@ -228,6 +239,16 @@ fn cmd_stun(args: &Args) -> Result<()> {
         report.unstructured_rate * 100.0,
         report.final_sparsity * 100.0
     );
+    println!(
+        "compression: {:.2}x ({} dense -> {} effective bytes)",
+        report.compression.ratio(),
+        report.compression.bytes_dense,
+        report.compression.bytes_effective
+    );
+    if let Some(path) = args.str_opt("report-out") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote {path}");
+    }
     if let Some(out) = args.str_opt("out") {
         params
             .to_checkpoint(&format!(r#"{{"pruned":"stun","config":"{config}"}}"#))

@@ -323,6 +323,43 @@ impl ParamSet {
         zeros as f64 / total.max(1) as f64
     }
 
+    // ------------------------------------------------- sparsity accounting
+
+    /// Non-zero weight count in one expert's w1+w2 slabs.
+    pub fn expert_nnz(&self, layer: usize, expert: usize) -> usize {
+        let nz = |s: &[f32]| s.iter().filter(|&&x| x != 0.0).count();
+        nz(self.w1(layer).subtensor(expert)) + nz(self.w2(layer).subtensor(expert))
+    }
+
+    /// f32 bytes of one expert's weights stored dense (config-wide).
+    pub fn expert_bytes_dense(&self) -> usize {
+        4 * self.config.params_per_expert()
+    }
+
+    /// Bytes of one expert's weights stored as two CSR matrices
+    /// (`[d,f]` + `[f,d]`), sized by the shared
+    /// [`crate::sparse::csr_bytes`] rule so serving-tier budgets match
+    /// compiled/checkpoint sizes exactly.
+    pub fn expert_bytes_csr(&self, layer: usize, expert: usize) -> usize {
+        let nz = |s: &[f32]| s.iter().filter(|&&x| x != 0.0).count();
+        let n1 = nz(self.w1(layer).subtensor(expert));
+        let n2 = nz(self.w2(layer).subtensor(expert));
+        crate::sparse::csr_bytes(self.config.d_model, n1)
+            + crate::sparse::csr_bytes(self.config.d_ff, n2)
+    }
+
+    /// Bytes the serving tier must keep resident for this expert: 0 when
+    /// the expert is structurally dead (row-compressed away), otherwise
+    /// the cheaper of dense and CSR storage — the unit
+    /// `coordinator::ExpertStore` budgets in.
+    pub fn expert_resident_bytes(&self, layer: usize, expert: usize) -> usize {
+        if !self.is_expert_alive(layer, expert) {
+            return 0;
+        }
+        self.expert_bytes_dense()
+            .min(self.expert_bytes_csr(layer, expert))
+    }
+
     /// All live (non-zero) prunable weights concatenated — input for the
     /// kurtosis robustness probe.
     pub fn live_prunable_weights(&self) -> Vec<f32> {
@@ -477,6 +514,30 @@ mod tests {
         assert_eq!(m32.n_experts * m32.d_ff, m8.n_experts * m8.d_ff);
         assert_eq!(m4.n_experts * m4.d_ff, m8.n_experts * m8.d_ff);
         assert!(ModelConfig::builtin("missing").is_none());
+    }
+
+    #[test]
+    fn expert_byte_accounting_tracks_pruning() {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 6);
+        // random init: essentially no zeros, CSR costs more than dense
+        assert_eq!(ps.expert_nnz(0, 0), cfg.params_per_expert());
+        assert!(ps.expert_bytes_csr(0, 0) > ps.expert_bytes_dense());
+        assert_eq!(ps.expert_resident_bytes(0, 0), ps.expert_bytes_dense());
+        // zero out 90% of one expert's weights → CSR wins
+        let theta: Vec<f32> = ps
+            .expert_theta(0, 0)
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if i % 10 == 0 { x } else { 0.0 })
+            .collect();
+        ps.set_expert_theta(0, 0, &theta);
+        assert!(ps.expert_bytes_csr(0, 0) < ps.expert_bytes_dense());
+        assert_eq!(ps.expert_resident_bytes(0, 0), ps.expert_bytes_csr(0, 0));
+        // dead experts cost nothing resident
+        ps.prune_expert(0, 0);
+        assert_eq!(ps.expert_resident_bytes(0, 0), 0);
+        assert_eq!(ps.expert_nnz(0, 0), 0);
     }
 
     #[test]

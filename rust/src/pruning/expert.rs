@@ -108,6 +108,9 @@ pub struct PruneReport {
     /// passes `coactivation::collect` spent building the supplied stats
     /// (`CoactivationStats::probe_passes` — still O(1) in n).
     pub decision_forward_passes: u64,
+    /// Per-layer nnz and dense-vs-CSR byte accounting of the pruned
+    /// weights (stage-1 state; `StunReport` carries the final numbers).
+    pub compression: crate::sparse::CompressionReport,
 }
 
 pub struct ExpertPruner;
@@ -231,6 +234,7 @@ impl ExpertPruner {
             layers,
             experts_pruned: total_pruned,
             decision_forward_passes: coact.map(|c| c.probe_passes).unwrap_or(0),
+            compression: crate::sparse::CompressionReport::from_params(params),
         }
     }
 

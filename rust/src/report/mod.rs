@@ -591,8 +591,9 @@ pub fn serving_report(proto: &Protocol, n_requests: usize) -> Result<String> {
     }
     .run(backend, &mut pruned, &mut gen)?;
 
-    // store sized to fit the PRUNED working set but not the dense one
-    let capacity = ExpertStore::working_set(&pruned);
+    // store sized (in bytes) to fit the PRUNED working set but not the
+    // dense one — pruned experts genuinely pack more residency
+    let capacity = ExpertStore::working_set_bytes(&pruned);
     let mut rows = Vec::new();
     for (label, params) in [("dense", &base), ("stun-pruned", &pruned)] {
         let store = ExpertStore::new(capacity, std::time::Duration::from_micros(200));
@@ -601,7 +602,10 @@ pub fn serving_report(proto: &Protocol, n_requests: usize) -> Result<String> {
         let (_resp, m) = batcher.serve(queue)?;
         rows.push(vec![
             label.to_string(),
-            format!("{}", ExpertStore::working_set(params)),
+            format!(
+                "{:.0}",
+                ExpertStore::working_set_bytes(params) as f64 / 1024.0
+            ),
             format!("{:.1}", m.tokens_per_sec()),
             format!("{:.1}", m.effective_tokens_per_sec()),
             format!("{}", m.expert_swaps),
@@ -612,7 +616,7 @@ pub fn serving_report(proto: &Protocol, n_requests: usize) -> Result<String> {
     Ok(render_table(
         &[
             "model",
-            "experts",
+            "mem(KB)",
             "tok/s",
             "tok/s(eff)",
             "swaps",

@@ -95,6 +95,26 @@ impl TrainState {
     }
 }
 
+/// A parameter set compiled for decode-only execution: immutable weights
+/// in whatever storage the backend chose (e.g. per-expert CSR in
+/// [`crate::sparse::CompiledModel`]). Obtained from [`Backend::compile`];
+/// the serving coordinator prefers this path when it exists.
+///
+/// Implementations MUST produce logits that match the backend's dense
+/// `fwd_logits` within 1e-5 and tick [`EXECUTIONS`] once per forward.
+pub trait CompiledForward {
+    /// Short human-readable label of the compiled execution strategy.
+    fn name(&self) -> String;
+
+    /// Full forward pass: tokens \[B, S\] → logits \[B, S, V\].
+    fn fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor>;
+
+    /// Forward pass that additionally reports the router's top-k
+    /// decisions as \[L, B·S, K\] expert indices (−1 = empty slot), with
+    /// the same contract as [`Backend::fwd_logits_routed`].
+    fn fwd_logits_routed(&self, tokens: &IntTensor) -> Result<(Tensor, Option<IntTensor>)>;
+}
+
 /// An execution backend. One instance serves one model configuration;
 /// parameters travel with every call (the PJRT backend converts them to
 /// device literals, the native backend reads them in place).
@@ -157,6 +177,15 @@ pub trait Backend {
         expert_mask: &Tensor,
         x: &Tensor,
     ) -> Result<Tensor>;
+
+    /// Compile `params` into a decode-optimised executable form, when the
+    /// backend supports one. The native backend returns a
+    /// [`crate::sparse::CompiledModel`] (per-tensor dense/CSR storage);
+    /// backends without a compiled path return `Ok(None)` and callers fall
+    /// back to the per-call `fwd_logits*` contract.
+    fn compile(&self, _params: &ParamSet) -> Result<Option<Box<dyn CompiledForward>>> {
+        Ok(None)
+    }
 
     /// One AdamW step on `state` in place; returns the step's mean loss.
     /// `step` is the 1-based step counter (for bias correction).

@@ -32,8 +32,9 @@ use crate::model::{ModelConfig, ParamSet};
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, Result};
 
-/// Matches `python/compile/model.py NEG_INF`.
-const NEG_INF: f32 = -1e9;
+/// Matches `python/compile/model.py NEG_INF`. Shared with the sparse
+/// compiled path so router masking is bit-identical across both.
+pub(crate) const NEG_INF: f32 = -1e9;
 /// Matches `rmsnorm(..., eps=1e-6)`.
 const RMS_EPS: f32 = 1e-6;
 /// Token id 0 is padding (loss positions with target==PAD are masked).
@@ -103,24 +104,13 @@ impl NativeBackend {
         let t_total = bsz * s;
         let idx = ParamIdx::new(cfg.n_layers);
 
-        // h = embed[tokens] + pos_embed
-        let embed = params[idx.embed].data();
-        let pos = params[idx.pos].data();
-        let mut h = vec![0f32; t_total * d];
-        for b in 0..bsz {
-            for si in 0..s {
-                let tok = tokens.data()[b * s + si];
-                if tok < 0 || tok as usize >= v {
-                    bail!("token id {tok} out of vocab range 0..{v}");
-                }
-                let dst = &mut h[(b * s + si) * d..(b * s + si) * d + d];
-                let src = &embed[tok as usize * d..tok as usize * d + d];
-                let prow = &pos[si * d..si * d + d];
-                for i in 0..d {
-                    dst[i] = src[i] + prow[i];
-                }
-            }
-        }
+        let mut h = embed_fwd(
+            params[idx.embed].data(),
+            params[idx.pos].data(),
+            tokens,
+            d,
+            v,
+        )?;
 
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
@@ -585,6 +575,23 @@ impl Backend for NativeBackend {
         Tensor::new(x.shape(), moe.y)
     }
 
+    fn compile(
+        &self,
+        params: &ParamSet,
+    ) -> Result<Option<Box<dyn super::CompiledForward>>> {
+        if params.config != self.config {
+            bail!(
+                "cannot compile params for config '{}' on a '{}' backend",
+                params.config.name,
+                self.config.name
+            );
+        }
+        Ok(Some(Box::new(crate::sparse::CompiledModel::compile(
+            params,
+            &crate::sparse::SparseConfig::default(),
+        ))))
+    }
+
     fn train_step(
         &self,
         state: &mut TrainState,
@@ -715,8 +722,10 @@ impl ParamIdx {
 // ---------------------------------------------------------------------------
 
 /// out += a @ b, a: [m,k], b: [k,n] (ikj ordering, skips zero a-entries —
-/// pruned weights make these genuinely sparse).
-fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+/// pruned weights make these genuinely sparse). Also the dense fallback
+/// arm of `sparse::WeightMat`, so compiled-dense execution is the exact
+/// same kernel.
+pub(crate) fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     for i in 0..m {
         let orow = &mut out[i * n..i * n + n];
         for p in 0..k {
@@ -765,8 +774,84 @@ fn matmul_abt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
     }
 }
 
-/// Row-wise RMSNorm: y = x · rsqrt(mean(x²)+ε) · g.
-fn rmsnorm_fwd(x: &[f32], g: &[f32], d: usize) -> Vec<f32> {
+/// Token embedding + positional add: tokens \[B,S\] → h \[B·S·D\].
+/// Shared between `run_forward` and the sparse compiled path.
+pub(crate) fn embed_fwd(
+    embed: &[f32],
+    pos: &[f32],
+    tokens: &IntTensor,
+    d: usize,
+    v: usize,
+) -> Result<Vec<f32>> {
+    let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
+    let mut h = vec![0f32; bsz * s * d];
+    for b in 0..bsz {
+        for si in 0..s {
+            let tok = tokens.data()[b * s + si];
+            if tok < 0 || tok as usize >= v {
+                bail!("token id {tok} out of vocab range 0..{v}");
+            }
+            let dst = &mut h[(b * s + si) * d..(b * s + si) * d + d];
+            let src = &embed[tok as usize * d..tok as usize * d + d];
+            let prow = &pos[si * d..si * d + d];
+            for i in 0..d {
+                dst[i] = src[i] + prow[i];
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// Route one token (model.py Eq. 1–3): fill `lg` with the softmaxed
+/// router probabilities over mask-offset logits, then select up to `k`
+/// experts by first-max argmax iterations, calling `emit(slot, expert,
+/// gate)` for each selection. A gate ≤ 0 marks a masked leftover slot
+/// (fewer than k alive experts) — callers skip its compute. `lg`/`used`
+/// are caller-provided scratch of length E. Shared between the dense
+/// `moe_fwd` and the sparse compiled path so the routing semantics — the
+/// thing dense/sparse equivalence hinges on — exist exactly once.
+pub(crate) fn route_token(
+    xt: &[f32],
+    router: &[f32],
+    lmask: &[f32],
+    k: usize,
+    lg: &mut [f32],
+    used: &mut [bool],
+    mut emit: impl FnMut(usize, usize, f32),
+) {
+    let e = lg.len();
+    let d = xt.len();
+    for ei in 0..e {
+        let wr = &router[ei * d..ei * d + d];
+        let mut acc = 0f32;
+        for i in 0..d {
+            acc += xt[i] * wr[i];
+        }
+        // pruned experts get −1e9 added to their logit: the softmax
+        // renormalises over survivors (≡ physical removal)
+        lg[ei] = acc + (lmask[ei] - 1.0) * (-NEG_INF);
+    }
+    softmax_inplace(lg);
+    for u in used.iter_mut() {
+        *u = false;
+    }
+    for slot in 0..k.min(e) {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (ei, &p) in lg.iter().enumerate() {
+            if !used[ei] && p > best_v {
+                best_v = p;
+                best = ei;
+            }
+        }
+        used[best] = true;
+        emit(slot, best, lg[best]);
+    }
+}
+
+/// Row-wise RMSNorm: y = x · rsqrt(mean(x²)+ε) · g. Shared with the
+/// sparse compiled path.
+pub(crate) fn rmsnorm_fwd(x: &[f32], g: &[f32], d: usize) -> Vec<f32> {
     let rows = x.len() / d;
     let mut y = vec![0f32; x.len()];
     for r in 0..rows {
@@ -817,8 +902,9 @@ fn rmsnorm_bwd(
     }
 }
 
-/// Numerically stable softmax (writes over `v`).
-fn softmax_inplace(v: &mut [f32]) {
+/// Numerically stable softmax (writes over `v`). Shared with the sparse
+/// compiled path.
+pub(crate) fn softmax_inplace(v: &mut [f32]) {
     let mut maxv = f32::NEG_INFINITY;
     for &x in v.iter() {
         if x > maxv {
@@ -858,8 +944,9 @@ fn log_prob(row: &[f32], target: usize) -> f64 {
 }
 
 /// Causal multi-head attention forward from packed qkv.
-/// Returns (probs \[B·H·S·S\], merged-head context \[T·D\]).
-fn attention_fwd(
+/// Returns (probs \[B·H·S·S\], merged-head context \[T·D\]). Shared with
+/// the sparse compiled path.
+pub(crate) fn attention_fwd(
     cfg: &ModelConfig,
     bsz: usize,
     s: usize,
@@ -1023,37 +1110,12 @@ fn moe_fwd(
     let mut used = vec![false; e];
     for t in 0..t_total {
         let xt = &x[t * d..t * d + d];
-        for ei in 0..e {
-            let wr = &router[ei * d..ei * d + d];
-            let mut acc = 0f32;
-            for i in 0..d {
-                acc += xt[i] * wr[i];
-            }
-            // pruned experts get −1e9 added to their logit: the softmax
-            // renormalises over survivors (≡ physical removal)
-            lg[ei] = acc + (lmask[ei] - 1.0) * (-NEG_INF);
-        }
-        softmax_inplace(&mut lg);
-        probs[t * e..t * e + e].copy_from_slice(&lg);
-        for u in used.iter_mut() {
-            *u = false;
-        }
-        for slot in 0..k.min(e) {
-            let mut best = 0usize;
-            let mut best_v = f32::NEG_INFINITY;
-            for ei in 0..e {
-                if !used[ei] && lg[ei] > best_v {
-                    best_v = lg[ei];
-                    best = ei;
-                }
-            }
-            used[best] = true;
-            let g = lg[best];
+        route_token(xt, router, lmask, k, &mut lg, &mut used, |slot, best, g| {
             gates[t * e + best] = g;
             if g <= 0.0 {
                 // masked leftover slot (fewer than k alive experts):
                 // contributes nothing, keep sel = −1
-                continue;
+                return;
             }
             sel[t * k + slot] = best as i32;
             {
@@ -1095,7 +1157,8 @@ fn moe_fwd(
             for di in 0..d {
                 yrow[di] += g * orow[di];
             }
-        }
+        });
+        probs[t * e..t * e + e].copy_from_slice(&lg);
     }
     MoeOut {
         y,

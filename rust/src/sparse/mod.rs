@@ -1,0 +1,625 @@
+//! Sparse execution engine — turns pruning masks into decode speed.
+//!
+//! STUN's serving argument is that a pruned MoE is *cheaper to run*, not
+//! just smaller on paper. This module makes that real on the native
+//! backend: [`CompiledModel::compile`] takes a pruned [`ParamSet`] and
+//! produces an immutable decode-optimised model where
+//!
+//! * every prunable weight matrix (`wqkv`, `wo`, per-expert `w1`/`w2`
+//!   slabs, `lm_head`) is stored either dense or as a [`CsrMatrix`],
+//!   chosen per tensor by the nnz threshold in [`SparseConfig`] — an
+//!   unpruned model compiles fully dense and pays no regression;
+//! * structurally-dead experts (stage-1 expert pruning) are
+//!   row-compressed away entirely ([`CompiledExpert::Dead`] stores no
+//!   bytes at all);
+//! * the forward pass replays the exact graph semantics of
+//!   `runtime::native::run_forward` (same RMSNorm ε, router mask offsets,
+//!   first-max top-k, accumulation order), so dense and compiled logits
+//!   agree within 1e-5 — pinned by `tests/sparse_exec.rs`.
+//!
+//! [`CompiledModel`] implements [`crate::runtime::CompiledForward`], which
+//! is how `coordinator::Batcher` picks it up for the serving decode loop.
+//! [`CompressionReport`] is the bookkeeping side of the same story:
+//! per-layer nnz and dense-vs-CSR byte accounting for the JSON prune
+//! reports.
+
+pub mod csr;
+
+pub use csr::{csr_bytes, CsrMatrix};
+
+use crate::model::{ModelConfig, ParamSet};
+use crate::runtime::native::{attention_fwd, embed_fwd, matmul, rmsnorm_fwd, route_token};
+use crate::runtime::{check_tokens, count_execution, CompiledForward};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Knobs of the compile pass.
+#[derive(Clone, Debug)]
+pub struct SparseConfig {
+    /// A weight matrix is stored CSR when `nnz / total <= density_threshold`
+    /// AND CSR is byte-smaller than dense, dense otherwise. CSR spends
+    /// 8 bytes + one indirection per non-zero vs 4 streamed bytes per
+    /// dense element, so ~0.5 is where CSR starts winning on decode time;
+    /// the byte check keeps `CompileStats::bytes_compiled` in agreement
+    /// with the min(dense, CSR) accounting that `ExpertStore` budgets
+    /// with. Density 1.0 (unpruned) always takes the dense fallback.
+    pub density_threshold: f64,
+}
+
+impl Default for SparseConfig {
+    fn default() -> Self {
+        SparseConfig {
+            density_threshold: 0.5,
+        }
+    }
+}
+
+/// One weight matrix in whichever storage the compile pass chose.
+#[derive(Clone, Debug)]
+pub enum WeightMat {
+    Dense {
+        rows: usize,
+        cols: usize,
+        data: Vec<f32>,
+    },
+    Csr(CsrMatrix),
+}
+
+impl WeightMat {
+    /// Pick dense vs CSR for a row-major `[rows, cols]` slab.
+    pub fn compile(data: &[f32], rows: usize, cols: usize, cfg: &SparseConfig) -> WeightMat {
+        debug_assert_eq!(data.len(), rows * cols);
+        let nnz = data.iter().filter(|&&x| x != 0.0).count();
+        let density = nnz as f64 / (rows * cols).max(1) as f64;
+        if density <= cfg.density_threshold && csr_bytes(rows, nnz) < rows * cols * 4 {
+            WeightMat::Csr(CsrMatrix::from_dense(data, rows, cols))
+        } else {
+            WeightMat::Dense {
+                rows,
+                cols,
+                data: data.to_vec(),
+            }
+        }
+    }
+
+    pub fn is_csr(&self) -> bool {
+        matches!(self, WeightMat::Csr(_))
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            WeightMat::Dense { data, .. } => data.iter().filter(|&&x| x != 0.0).count(),
+            WeightMat::Csr(c) => c.nnz(),
+        }
+    }
+
+    /// Bytes of the chosen storage.
+    pub fn bytes(&self) -> usize {
+        match self {
+            WeightMat::Dense { data, .. } => data.len() * 4,
+            WeightMat::Csr(c) => c.bytes(),
+        }
+    }
+
+    /// `out += a @ self`, `a: [m, rows]`, `out: [m, cols]`. The dense arm
+    /// is the exact i→p→j kernel of `runtime::native`; the CSR arm visits
+    /// the same rows in the same order restricted to stored weights.
+    pub fn matmul_acc(&self, a: &[f32], out: &mut [f32], m: usize) {
+        match self {
+            WeightMat::Dense { rows, cols, data } => matmul(a, data, out, m, *rows, *cols),
+            WeightMat::Csr(c) => c.matmul_acc(a, out, m),
+        }
+    }
+}
+
+/// Per-expert compiled weights. Dead experts (structured pruning) keep no
+/// storage at all — the row-compressed limit of CSR.
+#[derive(Clone, Debug)]
+pub enum CompiledExpert {
+    Dead,
+    Alive {
+        /// `[d_model, d_ff]` up-projection.
+        w1: WeightMat,
+        /// `[d_ff, d_model]` down-projection.
+        w2: WeightMat,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct CompiledLayer {
+    ln1: Vec<f32>,
+    wqkv: WeightMat,
+    wo: WeightMat,
+    ln2: Vec<f32>,
+    /// `[E, D]` router rows (dense: tiny and never pruned).
+    router: Vec<f32>,
+    experts: Vec<CompiledExpert>,
+    /// `[E]` 1.0 = alive — the −1e9 router offset mask.
+    expert_mask: Vec<f32>,
+}
+
+/// What the compile pass decided, for reports and benches.
+#[derive(Clone, Debug, Default)]
+pub struct CompileStats {
+    /// Weight matrices considered (wqkv, wo, lm_head, alive expert slabs).
+    pub tensors: usize,
+    /// Of those, stored CSR.
+    pub csr_tensors: usize,
+    /// Experts row-compressed away entirely.
+    pub experts_dead: usize,
+    /// f32 bytes if every considered matrix (and dead slab) stayed dense.
+    pub bytes_dense: usize,
+    /// Actual bytes of the compiled weight storage.
+    pub bytes_compiled: usize,
+}
+
+/// A [`ParamSet`] compiled for decode: per-tensor dense/CSR storage plus a
+/// forward pass that matches the dense path within 1e-5.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    config: ModelConfig,
+    embed: Vec<f32>,
+    pos: Vec<f32>,
+    layers: Vec<CompiledLayer>,
+    ln_f: Vec<f32>,
+    lm_head: WeightMat,
+    stats: CompileStats,
+}
+
+impl CompiledModel {
+    /// Compile a parameter set. Dense/CSR is chosen per tensor by
+    /// `scfg.density_threshold`; masked experts compile to
+    /// [`CompiledExpert::Dead`].
+    pub fn compile(params: &ParamSet, scfg: &SparseConfig) -> CompiledModel {
+        let cfg = params.config.clone();
+        let (d, f, e) = (cfg.d_model, cfg.d_ff, cfg.n_experts);
+        let mut stats = CompileStats::default();
+        let track = |w: WeightMat, stats: &mut CompileStats, dense_elems: usize| {
+            stats.tensors += 1;
+            if w.is_csr() {
+                stats.csr_tensors += 1;
+            }
+            stats.bytes_dense += dense_elems * 4;
+            stats.bytes_compiled += w.bytes();
+            w
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let wqkv_t = params.get(&format!("layer{l}.wqkv")).unwrap();
+            let wo_t = params.get(&format!("layer{l}.wo")).unwrap();
+            let wqkv = track(
+                WeightMat::compile(wqkv_t.data(), d, 3 * d, scfg),
+                &mut stats,
+                d * 3 * d,
+            );
+            let wo = track(
+                WeightMat::compile(wo_t.data(), d, d, scfg),
+                &mut stats,
+                d * d,
+            );
+            let w1_t = params.w1(l);
+            let w2_t = params.w2(l);
+            let mut experts = Vec::with_capacity(e);
+            for ei in 0..e {
+                if !params.is_expert_alive(l, ei) {
+                    stats.experts_dead += 1;
+                    stats.bytes_dense += 2 * d * f * 4;
+                    experts.push(CompiledExpert::Dead);
+                    continue;
+                }
+                let w1 = track(
+                    WeightMat::compile(w1_t.subtensor(ei), d, f, scfg),
+                    &mut stats,
+                    d * f,
+                );
+                let w2 = track(
+                    WeightMat::compile(w2_t.subtensor(ei), f, d, scfg),
+                    &mut stats,
+                    f * d,
+                );
+                experts.push(CompiledExpert::Alive { w1, w2 });
+            }
+            let mask_row: Vec<f32> = (0..e)
+                .map(|ei| params.expert_mask.at2(l, ei))
+                .collect();
+            layers.push(CompiledLayer {
+                ln1: params.get(&format!("layer{l}.ln1")).unwrap().data().to_vec(),
+                wqkv,
+                wo,
+                ln2: params.get(&format!("layer{l}.ln2")).unwrap().data().to_vec(),
+                router: params.router(l).data().to_vec(),
+                experts,
+                expert_mask: mask_row,
+            });
+        }
+        let lm_head_t = params.get("lm_head").unwrap();
+        let lm_head = track(
+            WeightMat::compile(lm_head_t.data(), d, cfg.vocab, scfg),
+            &mut stats,
+            d * cfg.vocab,
+        );
+        CompiledModel {
+            embed: params.get("embed").unwrap().data().to_vec(),
+            pos: params.get("pos_embed").unwrap().data().to_vec(),
+            ln_f: params.get("ln_f").unwrap().data().to_vec(),
+            layers,
+            lm_head,
+            stats,
+            config: cfg,
+        }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    pub fn stats(&self) -> &CompileStats {
+        &self.stats
+    }
+
+    /// The decode forward. Mirrors `native::run_forward` op-for-op but
+    /// keeps no training caches and dispatches every prunable matmul
+    /// through [`WeightMat`].
+    fn forward(
+        &self,
+        tokens: &IntTensor,
+        want_routing: bool,
+    ) -> Result<(Tensor, Option<IntTensor>)> {
+        count_execution();
+        check_tokens(&self.config, tokens)?;
+        let cfg = &self.config;
+        let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
+        let (d, v, e, f, k) = (cfg.d_model, cfg.vocab, cfg.n_experts, cfg.d_ff, cfg.top_k);
+        let t_total = bsz * s;
+
+        let mut h = embed_fwd(&self.embed, &self.pos, tokens, d, v)?;
+
+        let mut routing = if want_routing {
+            vec![-1i32; cfg.n_layers * t_total * k]
+        } else {
+            Vec::new()
+        };
+        // scratch reused across layers and tokens
+        let mut lg = vec![0f32; e];
+        let mut used = vec![false; e];
+        let mut hid = vec![0f32; f];
+        let mut orow = vec![0f32; d];
+        let mut ytok = vec![0f32; d];
+
+        for (l, layer) in self.layers.iter().enumerate() {
+            let a_in = rmsnorm_fwd(&h, &layer.ln1, d);
+            let mut qkv = vec![0f32; t_total * 3 * d];
+            layer.wqkv.matmul_acc(&a_in, &mut qkv, t_total);
+            let (_probs, ctx) = attention_fwd(cfg, bsz, s, &qkv);
+            let mut attn_out = vec![0f32; t_total * d];
+            layer.wo.matmul_acc(&ctx, &mut attn_out, t_total);
+            for i in 0..h.len() {
+                h[i] += attn_out[i];
+            }
+
+            let x = rmsnorm_fwd(&h, &layer.ln2, d);
+            for t in 0..t_total {
+                let xt = &x[t * d..t * d + d];
+                for y in ytok.iter_mut() {
+                    *y = 0.0;
+                }
+                route_token(
+                    xt,
+                    &layer.router,
+                    &layer.expert_mask,
+                    k,
+                    &mut lg,
+                    &mut used,
+                    |slot, best, g| {
+                        if g <= 0.0 {
+                            // masked leftover slot — matches the dense path
+                            return;
+                        }
+                        if want_routing {
+                            routing[(l * t_total + t) * k + slot] = best as i32;
+                        }
+                        // a Dead expert can only be selected when a layer
+                        // is fully masked; its (zeroed) weights contribute
+                        // nothing either way, so skipping preserves
+                        // equivalence
+                        if let CompiledExpert::Alive { w1, w2 } = &layer.experts[best] {
+                            for hv in hid.iter_mut() {
+                                *hv = 0.0;
+                            }
+                            w1.matmul_acc(xt, &mut hid, 1);
+                            for hv in hid.iter_mut() {
+                                if *hv < 0.0 {
+                                    *hv = 0.0;
+                                }
+                            }
+                            for o in orow.iter_mut() {
+                                *o = 0.0;
+                            }
+                            w2.matmul_acc(&hid, &mut orow, 1);
+                            for di in 0..d {
+                                ytok[di] += g * orow[di];
+                            }
+                        }
+                    },
+                );
+                let hrow = &mut h[t * d..t * d + d];
+                for di in 0..d {
+                    hrow[di] += ytok[di];
+                }
+            }
+        }
+
+        let hf = rmsnorm_fwd(&h, &self.ln_f, d);
+        let mut logits = vec![0f32; t_total * v];
+        self.lm_head.matmul_acc(&hf, &mut logits, t_total);
+        let logits = Tensor::new(&[bsz, s, v], logits)?;
+        let routing = if want_routing {
+            Some(IntTensor::new(&[cfg.n_layers, t_total, k], routing)?)
+        } else {
+            None
+        };
+        Ok((logits, routing))
+    }
+}
+
+impl CompiledForward for CompiledModel {
+    fn name(&self) -> String {
+        format!(
+            "compiled({}/{} csr, {} dead)",
+            self.stats.csr_tensors, self.stats.tensors, self.stats.experts_dead
+        )
+    }
+
+    fn fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor> {
+        Ok(self.forward(tokens, false)?.0)
+    }
+
+    fn fwd_logits_routed(&self, tokens: &IntTensor) -> Result<(Tensor, Option<IntTensor>)> {
+        self.forward(tokens, true)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compression accounting.
+// ---------------------------------------------------------------------------
+
+/// Per-layer nnz / byte accounting over the prunable weights.
+#[derive(Clone, Debug)]
+pub struct LayerCompression {
+    /// `n_layers` denotes the lm_head pseudo-layer (as in OWL budgets).
+    pub layer: usize,
+    pub nnz: usize,
+    pub total: usize,
+    pub bytes_dense: usize,
+    /// Raw all-CSR cost (dead experts row-compressed to 0).
+    pub bytes_csr: usize,
+    /// Per-tensor min(dense, CSR) — what the compile pass / `STZCKPT2`
+    /// actually store, and what [`CompressionReport::ratio`] measures.
+    pub bytes_effective: usize,
+}
+
+/// What pruning bought in storage terms: dense vs CSR vs effective bytes
+/// per layer, emitted into the JSON prune reports.
+#[derive(Clone, Debug)]
+pub struct CompressionReport {
+    pub layers: Vec<LayerCompression>,
+    pub nnz: usize,
+    pub total: usize,
+    pub bytes_dense: usize,
+    pub bytes_csr: usize,
+    pub bytes_effective: usize,
+}
+
+impl CompressionReport {
+    pub fn from_params(params: &ParamSet) -> CompressionReport {
+        let cfg = &params.config;
+        let (d, f, e) = (cfg.d_model, cfg.d_ff, cfg.n_experts);
+        let nnz_of = |s: &[f32]| s.iter().filter(|&&x| x != 0.0).count();
+        let mut layers = Vec::with_capacity(cfg.n_layers + 1);
+        for l in 0..cfg.n_layers {
+            let mut lc = LayerCompression {
+                layer: l,
+                nnz: 0,
+                total: 0,
+                bytes_dense: 0,
+                bytes_csr: 0,
+                bytes_effective: 0,
+            };
+            for (name, rows) in [(format!("layer{l}.wqkv"), d), (format!("layer{l}.wo"), d)] {
+                let t = params.get(&name).unwrap();
+                let n = nnz_of(t.data());
+                lc.nnz += n;
+                lc.total += t.len();
+                lc.bytes_dense += t.len() * 4;
+                lc.bytes_csr += csr_bytes(rows, n);
+                lc.bytes_effective += csr_bytes(rows, n).min(t.len() * 4);
+            }
+            for ei in 0..e {
+                lc.total += 2 * d * f;
+                lc.bytes_dense += 2 * d * f * 4;
+                if !params.is_expert_alive(l, ei) {
+                    // dead experts are row-compressed away: zero bytes
+                    continue;
+                }
+                let n1 = nnz_of(params.w1(l).subtensor(ei));
+                let n2 = nnz_of(params.w2(l).subtensor(ei));
+                lc.nnz += n1 + n2;
+                lc.bytes_csr += csr_bytes(d, n1) + csr_bytes(f, n2);
+                lc.bytes_effective += csr_bytes(d, n1).min(d * f * 4);
+                lc.bytes_effective += csr_bytes(f, n2).min(f * d * 4);
+            }
+            layers.push(lc);
+        }
+        let head = params.get("lm_head").unwrap();
+        let head_nnz = nnz_of(head.data());
+        layers.push(LayerCompression {
+            layer: cfg.n_layers,
+            nnz: head_nnz,
+            total: head.len(),
+            bytes_dense: head.len() * 4,
+            bytes_csr: csr_bytes(d, head_nnz),
+            bytes_effective: csr_bytes(d, head_nnz).min(head.len() * 4),
+        });
+        let mut report = CompressionReport {
+            nnz: 0,
+            total: 0,
+            bytes_dense: 0,
+            bytes_csr: 0,
+            bytes_effective: 0,
+            layers,
+        };
+        for lc in &report.layers {
+            report.nnz += lc.nnz;
+            report.total += lc.total;
+            report.bytes_dense += lc.bytes_dense;
+            report.bytes_csr += lc.bytes_csr;
+            report.bytes_effective += lc.bytes_effective;
+        }
+        report
+    }
+
+    /// Effective compression: dense bytes over the bytes actually stored
+    /// (per-tensor min of dense and CSR — never below 1.0, since dense is
+    /// always available as the fallback).
+    pub fn ratio(&self) -> f64 {
+        self.bytes_dense as f64 / self.bytes_effective.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|lc| {
+                Json::obj(vec![
+                    ("layer", Json::Num(lc.layer as f64)),
+                    ("nnz", Json::Num(lc.nnz as f64)),
+                    ("total", Json::Num(lc.total as f64)),
+                    ("bytes_dense", Json::Num(lc.bytes_dense as f64)),
+                    ("bytes_csr", Json::Num(lc.bytes_csr as f64)),
+                    ("bytes_effective", Json::Num(lc.bytes_effective as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("layers", Json::Arr(layers)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            ("total", Json::Num(self.total as f64)),
+            ("bytes_dense", Json::Num(self.bytes_dense as f64)),
+            ("bytes_csr", Json::Num(self.bytes_csr as f64)),
+            ("bytes_effective", Json::Num(self.bytes_effective as f64)),
+            ("compression_ratio", Json::Num(self.ratio())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_params(seed: u64) -> ParamSet {
+        ParamSet::init(&ModelConfig::test_tiny(), seed)
+    }
+
+    #[test]
+    fn unpruned_model_compiles_fully_dense() {
+        let ps = tiny_params(1);
+        let cm = CompiledModel::compile(&ps, &SparseConfig::default());
+        assert_eq!(cm.stats().csr_tensors, 0, "random init has no zeros");
+        assert_eq!(cm.stats().experts_dead, 0);
+        assert_eq!(cm.stats().bytes_compiled, cm.stats().bytes_dense);
+    }
+
+    #[test]
+    fn pruned_experts_compile_dead_and_shrink() {
+        let mut ps = tiny_params(2);
+        ps.prune_expert(0, 1);
+        ps.prune_expert(1, 3);
+        let cm = CompiledModel::compile(&ps, &SparseConfig::default());
+        assert_eq!(cm.stats().experts_dead, 2);
+        assert!(cm.stats().bytes_compiled < cm.stats().bytes_dense);
+    }
+
+    #[test]
+    fn threshold_zero_keeps_everything_dense() {
+        let mut ps = tiny_params(3);
+        ps.prune_expert(0, 0);
+        let scfg = SparseConfig {
+            density_threshold: 0.0,
+        };
+        let cm = CompiledModel::compile(&ps, &scfg);
+        // density can never be <= 0 with any nonzero weight present
+        assert_eq!(cm.stats().csr_tensors, 0);
+    }
+
+    #[test]
+    fn weightmat_dispatch_matches_between_arms() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let (rows, cols, m) = (16, 24, 3);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|i| if i % 3 == 0 { rng.normal() } else { 0.0 })
+            .collect();
+        let a: Vec<f32> = (0..m * rows).map(|_| rng.normal()).collect();
+        let dense = WeightMat::compile(
+            &data,
+            rows,
+            cols,
+            &SparseConfig {
+                density_threshold: 0.0,
+            },
+        );
+        let sparse = WeightMat::compile(
+            &data,
+            rows,
+            cols,
+            &SparseConfig {
+                density_threshold: 1.0,
+            },
+        );
+        assert!(!dense.is_csr());
+        assert!(sparse.is_csr());
+        assert_eq!(dense.nnz(), sparse.nnz());
+        let mut out_d = vec![0f32; m * cols];
+        let mut out_s = vec![0f32; m * cols];
+        dense.matmul_acc(&a, &mut out_d, m);
+        sparse.matmul_acc(&a, &mut out_s, m);
+        for (x, y) in out_d.iter().zip(&out_s) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn compression_report_counts_dead_experts_as_free() {
+        let mut ps = tiny_params(7);
+        let before = CompressionReport::from_params(&ps);
+        // unpruned dense weights: every tensor takes the dense fallback,
+        // so effective storage equals dense and the ratio is exactly 1
+        assert_eq!(before.bytes_effective, before.bytes_dense);
+        assert!((before.ratio() - 1.0).abs() < 1e-12);
+        ps.prune_expert(0, 2);
+        let after = CompressionReport::from_params(&ps);
+        assert_eq!(before.total, after.total);
+        assert!(after.nnz < before.nnz);
+        assert!(after.bytes_csr < before.bytes_csr);
+        assert!(after.bytes_effective < before.bytes_effective);
+        assert_eq!(before.bytes_dense, after.bytes_dense);
+        assert!(after.ratio() > before.ratio());
+        // layer entries: n_layers + lm_head pseudo-layer
+        assert_eq!(after.layers.len(), ps.config.n_layers + 1);
+        assert_eq!(after.layers.last().unwrap().layer, ps.config.n_layers);
+    }
+
+    #[test]
+    fn compression_json_has_headline_fields() {
+        let ps = tiny_params(9);
+        let j = CompressionReport::from_params(&ps).to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("compression_ratio").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            parsed.get("layers").unwrap().as_arr().unwrap().len(),
+            ps.config.n_layers + 1
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! Dense↔sparse execution equivalence — the correctness contract of the
+//! sparse engine (`stun::sparse`): a compiled model must produce the same
+//! logits (within 1e-5) and the same routing decisions as the dense
+//! `Backend::fwd_logits*` path, at every sparsity level and with
+//! structurally-dead experts, while the compile pass takes the dense
+//! fallback on unpruned weights.
+
+use stun::model::{ModelConfig, ParamSet};
+use stun::pruning::unstructured::{self, ActNorms, UnstructuredConfig, UnstructuredMethod};
+use stun::runtime::{Backend, CompiledForward, NativeBackend};
+use stun::sparse::{CompiledModel, SparseConfig};
+use stun::tensor::IntTensor;
+use stun::util::rng::Rng;
+
+fn tiny() -> NativeBackend {
+    NativeBackend::new(ModelConfig::test_tiny())
+}
+
+fn tokens_for(cfg: &ModelConfig, seed: u64) -> IntTensor {
+    let mut rng = Rng::new(seed);
+    let mut t = IntTensor::zeros(&[cfg.eval_batch, cfg.seq]);
+    for v in t.data_mut().iter_mut() {
+        *v = (1 + rng.below(cfg.vocab - 1)) as i32;
+    }
+    t
+}
+
+/// Magnitude-prune a fresh paramset to `sparsity` over prunable weights.
+fn pruned_params(cfg: &ModelConfig, sparsity: f64, seed: u64) -> ParamSet {
+    let mut ps = ParamSet::init(cfg, seed);
+    if sparsity > 0.0 {
+        unstructured::prune(
+            &mut ps,
+            &ActNorms::uniform(cfg),
+            sparsity,
+            &UnstructuredConfig {
+                method: UnstructuredMethod::Magnitude,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    }
+    ps
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn compiled_logits_match_dense_across_sparsities() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let tokens = tokens_for(&cfg, 5);
+    for &s in &[0.0f64, 0.4, 0.9] {
+        let ps = pruned_params(&cfg, s, 3);
+        let dense = backend.fwd_logits(&ps, &tokens).unwrap();
+        let compiled = backend.compile(&ps).unwrap().expect("native compiles");
+        let sparse = compiled.fwd_logits(&tokens).unwrap();
+        assert_eq!(dense.shape(), sparse.shape());
+        let max = max_abs_diff(dense.data(), sparse.data());
+        assert!(max < 1e-5, "s={s}: max |Δlogit| = {max}");
+    }
+}
+
+#[test]
+fn compiled_routing_matches_dense() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let tokens = tokens_for(&cfg, 7);
+    let ps = pruned_params(&cfg, 0.4, 9);
+    let (dense_logits, dense_routing) = backend.fwd_logits_routed(&ps, &tokens).unwrap();
+    let compiled = backend.compile(&ps).unwrap().expect("native compiles");
+    let (sparse_logits, sparse_routing) = compiled.fwd_logits_routed(&tokens).unwrap();
+    assert!(max_abs_diff(dense_logits.data(), sparse_logits.data()) < 1e-5);
+    assert_eq!(
+        dense_routing.expect("dense routing"),
+        sparse_routing.expect("sparse routing"),
+        "router decisions must be identical"
+    );
+}
+
+#[test]
+fn dead_experts_row_compress_and_stay_equivalent() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let tokens = tokens_for(&cfg, 11);
+    // structured (expert) + unstructured pruning combined
+    let mut ps = pruned_params(&cfg, 0.4, 13);
+    ps.prune_expert(0, 2);
+    ps.prune_expert(1, 0);
+    ps.prune_expert(1, 1);
+    let dense = backend.fwd_logits(&ps, &tokens).unwrap();
+    let cm = CompiledModel::compile(&ps, &SparseConfig::default());
+    assert_eq!(cm.stats().experts_dead, 3, "dead experts row-compressed");
+    let sparse = cm.fwd_logits(&tokens).unwrap();
+    let max = max_abs_diff(dense.data(), sparse.data());
+    assert!(max < 1e-5, "max |Δlogit| = {max}");
+}
+
+#[test]
+fn compile_pass_picks_dense_fallback_at_zero_sparsity() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let ps = pruned_params(&cfg, 0.0, 15);
+    let cm = CompiledModel::compile(&ps, &SparseConfig::default());
+    assert_eq!(cm.stats().csr_tensors, 0, "unpruned weights stay dense");
+    assert_eq!(cm.stats().experts_dead, 0);
+    // and CSR kicks in at high sparsity, shrinking the weight bytes
+    let ps9 = pruned_params(&cfg, 0.9, 15);
+    let cm9 = CompiledModel::compile(&ps9, &SparseConfig::default());
+    assert!(cm9.stats().csr_tensors > 0);
+    assert!(
+        cm9.stats().bytes_compiled < cm9.stats().bytes_dense / 2,
+        "{} vs {}",
+        cm9.stats().bytes_compiled,
+        cm9.stats().bytes_dense
+    );
+}
+
+#[test]
+fn compile_rejects_mismatched_config() {
+    let backend = tiny();
+    let other = ParamSet::init(&ModelConfig::builtin("moe-8x").unwrap(), 1);
+    assert!(backend.compile(&other).is_err());
+}
