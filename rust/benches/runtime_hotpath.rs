@@ -1,9 +1,10 @@
 //! Bench: runtime hot paths — per-call latency of every Backend contract
 //! (forward, loss, probes, layer reconstruction, one train step) on the
-//! selected backend for each config, plus the dense-vs-CSR decode arms
-//! across unstructured sparsity levels {0, 0.4, 0.7, 0.9}: the sparse
-//! execution engine must beat the dense path ≥2× at 90% sparsity and stay
-//! at parity (dense fallback) at 0%.
+//! selected backend for each config, plus the dense-vs-CSR decode *and*
+//! dense-vs-compiled eval (`fwd_loss`) arms across unstructured sparsity
+//! levels {0, 0.4, 0.7, 0.9}: the sparse execution engine must beat the
+//! dense path ≥2× at 90% sparsity and stay at parity (dense fallback)
+//! at 0%.
 //!
 //! Runs on the native backend by default; `--features pjrt` builds with
 //! artifacts present measure the AOT executable path instead
@@ -12,7 +13,7 @@
 
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
-use stun::pruning::unstructured::{self, ActNorms, UnstructuredConfig, UnstructuredMethod};
+use stun::pruning::unstructured;
 use stun::runtime::{Backend, CompiledForward as _, TrainState};
 use stun::tensor::Tensor;
 use stun::util::bench::Bench;
@@ -75,20 +76,13 @@ fn main() {
         // at the higher levels (the ≥2× win at 0.9).
         for sparsity in [0.0f64, 0.4, 0.7, 0.9] {
             let mut ps = ParamSet::init(&cfg, 7);
-            if sparsity > 0.0 {
-                unstructured::prune(
-                    &mut ps,
-                    &ActNorms::uniform(&cfg),
-                    sparsity,
-                    &UnstructuredConfig {
-                        method: UnstructuredMethod::Magnitude,
-                        ..Default::default()
-                    },
-                )
-                .unwrap();
-            }
+            unstructured::magnitude_prune(&mut ps, sparsity).unwrap();
             let dense = bench.run(&format!("{config}/decode dense s={sparsity:.1}"), || {
                 backend.fwd_logits(&ps, &tokens).unwrap();
+            });
+            // the eval loop's unit cost: batched masked fwd_loss
+            let dense_eval = bench.run(&format!("{config}/eval loss dense s={sparsity:.1}"), || {
+                backend.fwd_loss(&ps, &tokens, &targets).unwrap();
             });
             match backend.compile(&ps).expect("compile") {
                 Some(compiled) => {
@@ -102,9 +96,19 @@ fn main() {
                         "    -> compiled speedup {:.2}x over dense fwd_logits",
                         dense.mean_secs() / sparse.mean_secs()
                     );
+                    let sparse_eval = bench.run(
+                        &format!("{config}/eval loss compiled s={sparsity:.1}"),
+                        || {
+                            compiled.fwd_loss(&tokens, &targets).unwrap();
+                        },
+                    );
+                    println!(
+                        "    -> compiled eval speedup {:.2}x over dense fwd_loss",
+                        dense_eval.mean_secs() / sparse_eval.mean_secs()
+                    );
                 }
                 None => println!(
-                    "    ({} backend exposes no compiled decode path)",
+                    "    ({} backend exposes no compiled decode/eval path)",
                     backend.name()
                 ),
             }

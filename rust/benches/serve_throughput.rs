@@ -1,20 +1,25 @@
 //! Bench: coordinator serving throughput — dense vs STUN-pruned model
 //! under a fixed expert-memory budget (the deployment claim behind MoE
-//! pruning), batcher scaling over burst sizes, and the dense-vs-sparse
+//! pruning), batcher scaling over burst sizes, the dense-vs-sparse
 //! execution arms across sparsity levels {0, 0.4, 0.7, 0.9} (the CSR
-//! engine turning pruning into decode throughput).
+//! engine turning pruning into decode throughput), and the
+//! dense-vs-compiled `EvalHarness` arms on the same grid (the compiled
+//! eval path turning pruning into pipeline wall-clock).
 
 use std::time::Duration;
 use stun::coordinator::{burst_workload, Batcher, ExpertStore};
+use stun::eval::EvalHarness;
 use stun::model::ParamSet;
 use stun::pruning::expert::ExpertPruneConfig;
 use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
 use stun::report::{self, Protocol};
 use stun::runtime::Backend;
+use stun::util::bench::Bench;
 
 fn main() {
     let proto = Protocol::bench();
+    let bench = Bench::from_env();
 
     // headline comparison on the trained checkpoint
     let table = report::serving_report(&proto, 24).expect("serving");
@@ -75,6 +80,7 @@ fn main() {
         "{:>9} {:>9} {:>12} {:>13} {:>8} {:>9}",
         "sparsity", "mem(KB)", "dense tok/s", "sparse tok/s", "swaps", "speedup"
     );
+    let mut eval_rows = Vec::new();
     for s in [0.0f64, 0.4, 0.7, 0.9] {
         let mut ps = params.clone();
         if s > 0.0 {
@@ -111,6 +117,42 @@ fn main() {
             tput[1],
             swaps,
             tput[1] / tput[0].max(1e-9)
+        );
+
+        // eval arms: the same pruned model scored through the dense
+        // per-call backend vs the compiled executor (EvalHarness picks
+        // it up from Backend::compile); warmed multi-iteration means via
+        // the Bench harness — one-shot wall-clock is jitter-dominated at
+        // this scale
+        let (n_gen, n_mc) = (proto.n_gen.min(4), proto.n_mc.min(6));
+        let dense_h = EvalHarness::new_dense(backend, &ps).expect("harness");
+        let dense_r = bench.run(&format!("eval dense s={s:.1}"), || {
+            dense_h
+                .full_report(proto.eval_seed, n_gen, n_mc, 1)
+                .expect("dense eval");
+        });
+        let compiled_h = EvalHarness::new(backend, &ps).expect("harness");
+        let executor = compiled_h.executor();
+        let compiled_r = bench.run(&format!("eval compiled s={s:.1}"), || {
+            compiled_h
+                .full_report(proto.eval_seed, n_gen, n_mc, 1)
+                .expect("compiled eval");
+        });
+        eval_rows.push((s, dense_r.mean_secs(), compiled_r.mean_secs(), executor));
+    }
+
+    println!("\n### eval arms: dense vs compiled EvalHarness (tiny, mean secs)");
+    println!(
+        "{:>9} {:>12} {:>15} {:>9}  executor",
+        "sparsity", "dense s", "compiled s", "speedup"
+    );
+    for (s, dense_secs, compiled_secs, executor) in eval_rows {
+        println!(
+            "{:>9.1} {:>12.3} {:>15.3} {:>8.2}x  {executor}",
+            s,
+            dense_secs,
+            compiled_secs,
+            dense_secs / compiled_secs.max(1e-9)
         );
     }
 }

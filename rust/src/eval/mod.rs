@@ -4,15 +4,35 @@
 //! * **multiple choice** — length-normalised continuation log-likelihood:
 //!   each (item, choice) pair becomes one row of a `fwd_loss` batch whose
 //!   targets are PAD everywhere except the choice span; the backend's
-//!   per-token logp output is summed over the span.
+//!   per-token logp output is summed over the span. Overflowing prompts
+//!   are truncated from the front with the choice span kept intact (the
+//!   target mask shifts with the drained tokens), and the choice panel is
+//!   sized by the item set — any number of choices per item is fine.
 //! * **generative exact-match** — batched greedy decoding through
 //!   `fwd_logits`, stopping at `;` (the answer terminator), then exact
 //!   token match against the gold answer (the GSM8K protocol).
+//!   `max_new` is clamped to the sequence budget, and prompts are
+//!   front-truncated to leave room for it.
 //! * **perplexity** — exact aggregation of `fwd_loss`'s (total, count)
 //!   outputs over held-out batches.
 //!
 //! The harness is backend-agnostic: it drives any [`Backend`] (native or
-//! PJRT) and holds its own copy of the parameters for the session.
+//! PJRT) and holds exactly one weight copy for the session — the
+//! compiled form when the backend provides one, a dense `ParamSet`
+//! otherwise.
+//!
+//! ## Compiled execution
+//!
+//! [`EvalHarness::new`] calls [`Backend::compile`] once per session; when
+//! the backend returns a [`CompiledForward`] executor (the native backend
+//! always does — `sparse::CompiledModel` with per-tensor dense/CSR
+//! storage and the batched expert-gather), every `fwd_loss`/`fwd_logits`
+//! of the evaluation loop runs through it, so pruned models evaluate at
+//! compiled-sparse speed instead of dense matmuls over zero-filled
+//! tensors. Backends without a compiled path (and
+//! [`EvalHarness::new_dense`]) fall back to the per-call [`Backend`]
+//! contract. The two paths must agree within 1e-5 per report row —
+//! pinned by `tests/eval_parity.rs`.
 
 pub mod tasks;
 
@@ -20,14 +40,22 @@ pub use tasks::{GenItem, McItem, TaskKind, TaskSuite};
 
 use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
-use crate::runtime::Backend;
-use crate::tensor::IntTensor;
+use crate::runtime::{Backend, CompiledForward, LossOutput};
+use crate::tensor::{IntTensor, Tensor};
 use anyhow::Result;
 
 /// Evaluation session for one parameter state on one backend.
 pub struct EvalHarness<'b> {
     backend: &'b dyn Backend,
-    params: ParamSet,
+    exec: EvalExec,
+}
+
+/// The session's execution path. Exactly one weight copy lives here:
+/// either the backend's compiled form or the dense fallback `ParamSet`
+/// for the per-call [`Backend`] contract.
+enum EvalExec {
+    Compiled(Box<dyn CompiledForward>),
+    Dense(ParamSet),
 }
 
 #[derive(Clone, Debug)]
@@ -59,12 +87,92 @@ impl EvalReport {
     }
 }
 
+/// Build one multiple-choice scoring row: `[BOS] prompt choice` packed
+/// into a length-`s` window plus next-token targets that are PAD outside
+/// the choice span, and the *surviving* span length (the length
+/// normaliser — a choice longer than the window loses front tokens, and
+/// normalising by the nominal length would deflate its score). When
+/// `prompt + choice` overflows the window, tokens are drained from the
+/// front (keeping BOS) and the span start shifts left by exactly the
+/// drained count, so the target mask always lands on the surviving
+/// choice tokens.
+pub(crate) fn build_mc_row(
+    prompt: &[i32],
+    choice: &[i32],
+    s: usize,
+) -> (Vec<i32>, Vec<i32>, usize) {
+    let mut seq: Vec<i32> = Vec::with_capacity(1 + prompt.len() + choice.len());
+    seq.push(crate::data::BOS);
+    seq.extend_from_slice(prompt);
+    let mut span_start = seq.len();
+    seq.extend_from_slice(choice);
+    if seq.len() > s {
+        // truncate from the front, keep the span
+        let overflow = seq.len() - s;
+        seq.drain(1..1 + overflow);
+        span_start = span_start.saturating_sub(overflow).max(1);
+    }
+    let span_start = span_start.min(seq.len());
+    seq.resize(s, PAD);
+    // targets: next-token labels, PAD outside the choice span
+    let mut tgt = vec![PAD; s];
+    let first = span_start.max(1);
+    let span_end = (first + choice.len()).min(s);
+    for pos in first..span_end {
+        tgt[pos - 1] = seq[pos];
+    }
+    (seq, tgt, span_end - first)
+}
+
 impl<'b> EvalHarness<'b> {
+    /// New session; compiles the parameters into the backend's decode/eval
+    /// executor when one exists ([`Backend::compile`]), with the dense
+    /// per-call path as the fallback.
     pub fn new(backend: &'b dyn Backend, params: &ParamSet) -> Result<EvalHarness<'b>> {
+        let exec = match backend.compile(params)? {
+            Some(c) => EvalExec::Compiled(c),
+            None => EvalExec::Dense(params.clone()),
+        };
+        Ok(EvalHarness { backend, exec })
+    }
+
+    /// New session pinned to the dense per-call [`Backend`] path even when
+    /// a compiled executor exists — the parity baseline.
+    pub fn new_dense(backend: &'b dyn Backend, params: &ParamSet) -> Result<EvalHarness<'b>> {
         Ok(EvalHarness {
             backend,
-            params: params.clone(),
+            exec: EvalExec::Dense(params.clone()),
         })
+    }
+
+    /// Whether this session scores through a compiled executor.
+    pub fn uses_compiled(&self) -> bool {
+        matches!(self.exec, EvalExec::Compiled(_))
+    }
+
+    /// Human-readable execution-path label (compiled executor name, or the
+    /// backend name when running the dense per-call path).
+    pub fn executor(&self) -> String {
+        match &self.exec {
+            EvalExec::Compiled(c) => c.name(),
+            EvalExec::Dense(_) => format!("dense({})", self.backend.name()),
+        }
+    }
+
+    // ------------------------------------------------------ execution
+
+    fn exec_fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor> {
+        match &self.exec {
+            EvalExec::Compiled(c) => c.fwd_logits(tokens),
+            EvalExec::Dense(p) => self.backend.fwd_logits(p, tokens),
+        }
+    }
+
+    fn exec_fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput> {
+        match &self.exec {
+            EvalExec::Compiled(c) => c.fwd_loss(tokens, targets),
+            EvalExec::Dense(p) => self.backend.fwd_loss(p, tokens, targets),
+        }
     }
 
     // ------------------------------------------------------------ loglik
@@ -73,7 +181,7 @@ impl<'b> EvalHarness<'b> {
     /// `rows` are (tokens, targets) with PAD targets outside the span.
     fn batch_loglik(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<Vec<f64>> {
         let cfg = self.backend.config();
-        let out = self.backend.fwd_loss(&self.params, tokens, targets)?;
+        let out = self.exec_fwd_loss(tokens, targets)?;
         let (b, s) = (cfg.eval_batch, cfg.seq);
         Ok((0..b)
             .map(|bi| {
@@ -100,36 +208,20 @@ impl<'b> EvalHarness<'b> {
         let mut rows = Vec::new();
         for (ii, item) in items.iter().enumerate() {
             for (ci, choice) in item.choices.iter().enumerate() {
-                let mut seq: Vec<i32> = Vec::with_capacity(s);
-                seq.push(crate::data::BOS);
-                seq.extend(&item.prompt);
-                let span_start = seq.len();
-                seq.extend(choice);
-                if seq.len() > s {
-                    // truncate from the front, keep the span
-                    let overflow = seq.len() - s;
-                    seq.drain(1..1 + overflow);
-                }
-                let span_start = span_start.saturating_sub(seq.len().saturating_sub(s.min(seq.len())));
-                let span_start = span_start.min(seq.len());
-                seq.resize(s, PAD);
-                // targets: next-token labels, PAD outside the choice span
-                let mut tgt = vec![PAD; s];
-                let first = span_start.max(1);
-                for pos in first..(first + choice.len()).min(s) {
-                    tgt[pos - 1] = seq[pos];
-                }
+                let (tokens, targets, span_len) = build_mc_row(&item.prompt, choice, s);
                 rows.push(Row {
                     item: ii,
                     choice: ci,
-                    len_norm: choice.len() as f64,
-                    tokens: seq,
-                    targets: tgt,
+                    len_norm: span_len as f64,
+                    tokens,
+                    targets,
                 });
             }
         }
-        // batched scoring
-        let mut scores = vec![vec![f64::NEG_INFINITY; 8]; items.len()];
+        // batched scoring; the score panel is sized by the widest item
+        // (no fixed choice cap)
+        let max_choices = items.iter().map(|i| i.choices.len()).max().unwrap_or(0);
+        let mut scores = vec![vec![f64::NEG_INFINITY; max_choices]; items.len()];
         let mut i = 0;
         while i < rows.len() {
             let chunk = &rows[i..(i + b).min(rows.len())];
@@ -165,6 +257,8 @@ impl<'b> EvalHarness<'b> {
     // --------------------------------------------------------- generative
 
     /// Batched greedy decoding; returns generated continuations.
+    /// `max_new` is clamped to the sequence budget (at most `seq − 1` new
+    /// tokens, keeping ≥ 1 prompt token to condition on).
     pub fn generate(
         &self,
         prompts: &[Vec<i32>],
@@ -173,6 +267,8 @@ impl<'b> EvalHarness<'b> {
     ) -> Result<Vec<Vec<i32>>> {
         let cfg = self.backend.config();
         let (b, s, v) = (cfg.eval_batch, cfg.seq, cfg.vocab);
+        let max_new = max_new.min(s.saturating_sub(1));
+        let keep = s.saturating_sub(max_new).max(1);
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
         let mut base = 0;
         while base < prompts.len() {
@@ -181,9 +277,12 @@ impl<'b> EvalHarness<'b> {
             let mut seqs: Vec<Vec<i32>> = (0..chunk_n)
                 .map(|i| {
                     let mut p = prompts[base + i].clone();
-                    if p.len() > s - max_new {
+                    if p.len() > keep {
                         // keep the tail (the question), drop oldest context
-                        p.drain(0..p.len() - (s - max_new));
+                        p.drain(0..p.len() - keep);
+                    }
+                    if p.is_empty() {
+                        p.push(crate::data::BOS);
                     }
                     p
                 })
@@ -200,7 +299,7 @@ impl<'b> EvalHarness<'b> {
                         row[j] = t;
                     }
                 }
-                let logits = self.backend.fwd_logits(&self.params, &tokens)?;
+                let logits = self.exec_fwd_logits(&tokens)?;
                 for bi in 0..chunk_n {
                     if done[bi] {
                         continue;
@@ -268,7 +367,7 @@ impl<'b> EvalHarness<'b> {
         let mut count = 0.0f64;
         for _ in 0..n_batches {
             let (tokens, targets) = gen.batch(self.backend.config().eval_batch);
-            let out = self.backend.fwd_loss(&self.params, &tokens, &targets)?;
+            let out = self.exec_fwd_loss(&tokens, &targets)?;
             total += out.total as f64;
             count += out.count as f64;
         }
@@ -323,6 +422,78 @@ mod tests {
         assert!((0.0..=100.0).contains(&acc));
     }
 
+    /// Regression (span misalignment): when `prompt + choice` overflows
+    /// the sequence window, the drained-overflow shift must keep the
+    /// target mask exactly on the surviving choice tokens. The old code
+    /// recomputed `span_start` with a no-op expression, so overflowing
+    /// rows scored an empty (all-PAD) span.
+    #[test]
+    fn mc_row_span_survives_front_truncation() {
+        let s = 16usize;
+        let choice: Vec<i32> = vec![7, 8, 9];
+        let prompt: Vec<i32> = (10..30).collect(); // 1 + 20 + 3 > 16
+        let (seq, tgt, span_len) = build_mc_row(&prompt, &choice, s);
+        assert_eq!(seq.len(), s);
+        assert_eq!(tgt.len(), s);
+        assert_eq!(span_len, choice.len());
+        // front-truncation keeps BOS and the full choice at the tail
+        assert_eq!(seq[0], crate::data::BOS);
+        assert_eq!(&seq[s - 3..], &choice[..]);
+        // targets are PAD except exactly the choice span, labelling each
+        // choice token at the position that predicts it
+        let non_pad: Vec<(usize, i32)> = tgt
+            .iter()
+            .enumerate()
+            .filter(|&(_, &t)| t != PAD)
+            .map(|(i, &t)| (i, t))
+            .collect();
+        assert_eq!(non_pad, vec![(s - 4, 7), (s - 3, 8), (s - 2, 9)]);
+    }
+
+    #[test]
+    fn mc_row_without_overflow_is_unchanged() {
+        let s = 16usize;
+        let (seq, tgt, span_len) = build_mc_row(&[5, 6], &[7, 8], s);
+        assert_eq!(&seq[..5], &[crate::data::BOS, 5, 6, 7, 8]);
+        assert!(seq[5..].iter().all(|&t| t == PAD));
+        assert_eq!(span_len, 2);
+        // span covers positions 3..5 → targets at 2 and 3
+        assert_eq!(tgt[2], 7);
+        assert_eq!(tgt[3], 8);
+        assert!(tgt.iter().enumerate().all(|(i, &t)| i == 2 || i == 3 || t == PAD));
+    }
+
+    /// Regression (length normalisation): a choice longer than the window
+    /// keeps only its tail, so the normaliser must be the surviving span
+    /// length, not the nominal choice length.
+    #[test]
+    fn mc_row_giant_choice_normalizes_by_surviving_span() {
+        let s = 16usize;
+        let choice: Vec<i32> = (2..42).collect(); // longer than the window
+        let (seq, tgt, span_len) = build_mc_row(&[50, 51], &choice, s);
+        assert_eq!(span_len, s - 1);
+        // the surviving tokens are the choice's tail, right after BOS
+        assert_eq!(&seq[1..], &choice[choice.len() - (s - 1)..]);
+        assert_eq!(tgt.iter().filter(|&&t| t != PAD).count(), s - 1);
+    }
+
+    /// Regression (hard-coded 8-choice panel): items with more than 8
+    /// choices used to panic on an out-of-bounds score write.
+    #[test]
+    fn score_mc_supports_more_than_eight_choices() {
+        let be = backend();
+        let params = ParamSet::init(be.config(), 83);
+        let h = EvalHarness::new(&be, &params).unwrap();
+        let choices: Vec<Vec<i32>> = (2..14).map(|t| vec![t]).collect();
+        let items = vec![McItem {
+            prompt: vec![20, 21, 22],
+            choices,
+            correct: 9,
+        }];
+        let acc = h.score_mc(&items).unwrap();
+        assert!((0.0..=100.0).contains(&acc));
+    }
+
     #[test]
     fn gen_scoring_runs() {
         let be = backend();
@@ -333,6 +504,25 @@ mod tests {
         let shots = suite.few_shot_prefix(1);
         let acc = h.score_gen(&items, &shots).unwrap();
         assert!((0.0..=100.0).contains(&acc));
+    }
+
+    /// Regression (usize underflow): `max_new >= seq` used to underflow
+    /// the prompt-budget subtraction and panic. It must clamp instead.
+    #[test]
+    fn generate_handles_max_new_equal_to_seq() {
+        let be = backend();
+        let params = ParamSet::init(be.config(), 85);
+        let h = EvalHarness::new(&be, &params).unwrap();
+        let s = be.config().seq;
+        let long: Vec<i32> = (0..s as i32 + 8).map(|x| 2 + (x % 5)).collect();
+        for max_new in [s, s + 3] {
+            let outs = h.generate(&[vec![2, 3, 4], long.clone()], max_new, -1).unwrap();
+            assert_eq!(outs.len(), 2);
+            for o in &outs {
+                assert!(!o.is_empty());
+                assert!(o.len() < s, "generated {} tokens for seq {s}", o.len());
+            }
+        }
     }
 
     #[test]
@@ -374,6 +564,18 @@ mod tests {
         let items = suite.mc_items(TaskKind::BoolqLike, 8);
         let acc = h.score_mc(&items).unwrap();
         assert!((0.0..=100.0).contains(&acc));
+    }
+
+    #[test]
+    fn native_sessions_compile_and_dense_sessions_do_not() {
+        let be = backend();
+        let params = ParamSet::init(be.config(), 87);
+        let h = EvalHarness::new(&be, &params).unwrap();
+        assert!(h.uses_compiled(), "native backend must hand eval a compiled executor");
+        assert!(h.executor().starts_with("compiled("), "{}", h.executor());
+        let hd = EvalHarness::new_dense(&be, &params).unwrap();
+        assert!(!hd.uses_compiled());
+        assert_eq!(hd.executor(), "dense(native)");
     }
 
     #[test]

@@ -40,15 +40,24 @@
 //! CSR weight storage with cache-friendly sparse kernels on the decode hot
 //! path, structurally-dead experts row-compressed away entirely, and a
 //! per-tensor dense fallback above the ~50% density threshold
-//! ([`sparse::SparseConfig`]) so unpruned models pay no regression. The
-//! serving stack uses it end to end: [`runtime::Backend::compile`] hands
-//! the coordinator a [`runtime::CompiledForward`] executor,
-//! [`coordinator::ExpertStore`] budgets residency in *bytes* (CSR bytes
-//! once pruning makes CSR cheaper, O(1) HashMap-indexed LRU), and
-//! [`checkpoint`] writes `STZCKPT2` files with bitmap-sparse tensor
-//! sections (~3× smaller at 70% sparsity; `STZCKPT1` still loads).
-//! Dense/sparse `fwd_logits` equivalence (≤1e-5) is pinned by
-//! `tests/sparse_exec.rs`; the dense-vs-CSR speed arms live in
+//! ([`sparse::SparseConfig`]) so unpruned models pay no regression. MoE
+//! layers run through a batched expert-gather (tokens grouped by routed
+//! expert; each expert's rows stream once per group), so the compiled
+//! path wins on batched evaluation, not just single-token decode. The
+//! serving *and* evaluation stacks use it end to end:
+//! [`runtime::Backend::compile`] hands out a
+//! [`runtime::CompiledForward`] executor (`fwd_logits` + batched masked
+//! `fwd_loss`), `coordinator::Batcher` decodes through it,
+//! [`eval::EvalHarness`] compiles once per session and scores multiple
+//! choice / generation / perplexity through it (dense per-call fallback
+//! when `compile` returns `None`), [`coordinator::ExpertStore`] budgets
+//! residency in *bytes* (CSR bytes once pruning makes CSR cheaper, O(1)
+//! HashMap-indexed LRU), and [`checkpoint`] writes `STZCKPT2` files with
+//! bitmap-sparse tensor sections (~3× smaller at 70% sparsity;
+//! `STZCKPT1` still loads). Dense/sparse `fwd_logits` + `fwd_loss`
+//! equivalence (≤1e-5) is pinned by `tests/sparse_exec.rs`, full
+//! dense-vs-compiled `EvalReport` parity by `tests/eval_parity.rs`; the
+//! dense-vs-CSR decode and eval speed arms live in
 //! `benches/runtime_hotpath.rs` and `benches/serve_throughput.rs`.
 //!
 //! ## Quick tour

@@ -4,9 +4,12 @@
 //! stun info                                   # backend + config inventory
 //! stun train  --config moe-8x --steps 300    # train on the synthetic corpus
 //! stun prune  --config moe-8x --ratio 0.25   # expert pruning only (stage 1)
+//!             [--eval]                       # post-prune eval (compiled path)
 //! stun stun   --config moe-8x --sparsity 0.4 # full STUN pipeline
 //!             [--report-out r.json]          # JSON report incl. compression
+//!             [--eval]                       # post-prune eval (compiled path)
 //! stun eval   --config moe-8x [--ckpt f.stz] # task-suite evaluation
+//!             [--dense-eval]                 # force the per-call dense path
 //! stun serve  --config moe-8x --requests 32  # batching server demo
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
 //! stun sample --n 5                          # show synthetic-corpus samples
@@ -17,6 +20,11 @@
 //! `--features pjrt` use the AOT HLO artifacts under `artifacts/<config>/`
 //! when present. Select explicitly with `--backend native|pjrt` or the
 //! `STUN_BACKEND` env var.
+//!
+//! Evaluation (`stun eval`, and `--eval` on `prune`/`stun`) compiles the
+//! parameters once per session (`Backend::compile`) and scores through
+//! the sparse executor — pruned models evaluate at compiled-CSR speed.
+//! `--dense-eval` pins the per-call dense path for A/B comparison.
 
 use anyhow::{bail, Result};
 use stun::data::{CorpusConfig, CorpusGenerator};
@@ -210,6 +218,9 @@ fn cmd_prune(args: &Args) -> Result<()> {
             .save(out)?;
         println!("saved {out}");
     }
+    if args.has("eval") {
+        run_eval(args, backend.as_ref(), &params, false)?;
+    }
     Ok(())
 }
 
@@ -255,26 +266,48 @@ fn cmd_stun(args: &Args) -> Result<()> {
             .save(out)?;
         println!("saved {out}");
     }
+    if args.has("eval") {
+        run_eval(args, backend.as_ref(), &params, false)?;
+    }
+    Ok(())
+}
+
+/// Shared evaluation driver: compiled executor by default (one
+/// `Backend::compile` per session), dense per-call path with
+/// `--dense-eval`.
+fn run_eval(
+    args: &Args,
+    backend: &dyn Backend,
+    params: &ParamSet,
+    with_ppl: bool,
+) -> Result<()> {
+    let proto = proto_from(args)?;
+    let h = if args.has("dense-eval") {
+        stun::eval::EvalHarness::new_dense(backend, params)?
+    } else {
+        stun::eval::EvalHarness::new(backend, params)?
+    };
+    println!("eval executor: {}", h.executor());
+    let r = h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)?;
+    for (name, acc) in &r.rows {
+        println!("{name:<20} {acc:5.1}");
+    }
+    println!("{:<20} {:5.1}", "Avg(mc)", r.mc_average());
+    if with_ppl {
+        let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
+            backend.config().vocab,
+            backend.config().seq,
+            proto.eval_seed ^ 0x99,
+        ));
+        println!("{:<20} {:5.2}", "perplexity", h.perplexity(&mut gen, 4)?);
+    }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let backend = backend_from(args)?;
     let params = load_params(args, backend.as_ref())?;
-    let proto = proto_from(args)?;
-    let h = stun::eval::EvalHarness::new(backend.as_ref(), &params)?;
-    let r = h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)?;
-    for (name, acc) in &r.rows {
-        println!("{name:<20} {acc:5.1}");
-    }
-    println!("{:<20} {:5.1}", "Avg(mc)", r.mc_average());
-    let mut gen = CorpusGenerator::new(CorpusConfig::for_vocab(
-        backend.config().vocab,
-        backend.config().seq,
-        proto.eval_seed ^ 0x99,
-    ));
-    println!("{:<20} {:5.2}", "perplexity", h.perplexity(&mut gen, 4)?);
-    Ok(())
+    run_eval(args, backend.as_ref(), &params, true)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

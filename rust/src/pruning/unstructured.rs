@@ -202,6 +202,26 @@ fn groups<'a>(params: &ParamSet, norms: &'a ActNorms) -> Vec<Group<'a>> {
     gs
 }
 
+/// Calibration-free magnitude pruning of `params` to `rate` over the
+/// prunable weights (uniform activation norms). The single shared
+/// sparsification of the dense↔compiled equivalence tests and the bench
+/// decode/eval arms, so every arm prunes identically.
+pub fn magnitude_prune(params: &mut ParamSet, rate: f64) -> Result<()> {
+    if rate <= 0.0 {
+        return Ok(());
+    }
+    let norms = ActNorms::uniform(&params.config);
+    prune(
+        params,
+        &norms,
+        rate,
+        &UnstructuredConfig {
+            method: UnstructuredMethod::Magnitude,
+            ..Default::default()
+        },
+    )
+}
+
 /// Apply unstructured pruning in place at `rate` (fraction of currently
 /// non-zero prunable weights to remove).
 pub fn prune(

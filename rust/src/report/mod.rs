@@ -177,6 +177,12 @@ fn calib_gen(cfg: &crate::model::ModelConfig) -> CorpusGenerator {
 }
 
 /// Evaluate a paramset → (GSM8K-proxy, mc-average, per-task rows).
+///
+/// Runs through the backend's compiled executor when one exists
+/// (`EvalHarness::new` calls `Backend::compile` once per session), so the
+/// eval loops that dominate every figure/table's wall-clock execute the
+/// pruned models at compiled-CSR speed rather than as dense matmuls over
+/// zero-filled tensors.
 fn evaluate(
     backend: &dyn Backend,
     params: &ParamSet,

@@ -95,13 +95,17 @@ impl TrainState {
     }
 }
 
-/// A parameter set compiled for decode-only execution: immutable weights
-/// in whatever storage the backend chose (e.g. per-expert CSR in
+/// A parameter set compiled for decode-and-eval execution: immutable
+/// weights in whatever storage the backend chose (e.g. per-expert CSR in
 /// [`crate::sparse::CompiledModel`]). Obtained from [`Backend::compile`];
-/// the serving coordinator prefers this path when it exists.
+/// the serving coordinator prefers this path for decode and
+/// [`crate::eval::EvalHarness`] prefers it for the whole evaluation loop
+/// (multiple choice, greedy generation, perplexity).
 ///
-/// Implementations MUST produce logits that match the backend's dense
-/// `fwd_logits` within 1e-5 and tick [`EXECUTIONS`] once per forward.
+/// Implementations MUST replay the backend's dense graph: logits within
+/// 1e-5 of `Backend::fwd_logits`, `fwd_loss` outputs within 1e-5 of
+/// `Backend::fwd_loss` on the same inputs, and one [`EXECUTIONS`] tick
+/// per forward.
 pub trait CompiledForward {
     /// Short human-readable label of the compiled execution strategy.
     fn name(&self) -> String;
@@ -113,6 +117,12 @@ pub trait CompiledForward {
     /// decisions as \[L, B·S, K\] expert indices (−1 = empty slot), with
     /// the same contract as [`Backend::fwd_logits_routed`].
     fn fwd_logits_routed(&self, tokens: &IntTensor) -> Result<(Tensor, Option<IntTensor>)>;
+
+    /// Batched masked cross-entropy with the exact output contract of
+    /// [`Backend::fwd_loss`]: mean/total/count over non-PAD target
+    /// positions plus the \[B, S\] per-token logp tensor the evaluation
+    /// harness sums over choice spans.
+    fn fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput>;
 }
 
 /// An execution backend. One instance serves one model configuration;

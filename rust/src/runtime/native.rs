@@ -172,29 +172,7 @@ impl NativeBackend {
 
     /// PAD-masked cross-entropy over logits (loss_fn in model.py).
     fn loss_from_logits(&self, cache: &FwdCache, targets: &IntTensor) -> LossOutput {
-        let v = self.config.vocab;
-        let (bsz, s) = (cache.bsz, cache.s);
-        let mut tok = vec![0f32; bsz * s];
-        let mut total = 0f64;
-        let mut count = 0f64;
-        for r in 0..bsz * s {
-            let tgt = targets.data()[r];
-            if tgt == PAD {
-                continue;
-            }
-            let row = &cache.logits[r * v..r * v + v];
-            let lp = log_prob(row, tgt as usize);
-            tok[r] = lp as f32;
-            total -= lp;
-            count += 1.0;
-        }
-        let denom = count.max(1.0);
-        LossOutput {
-            mean: (total / denom) as f32,
-            total: total as f32,
-            count: denom as f32,
-            tok_logp: Tensor::new(&[bsz, s], tok).unwrap(),
-        }
+        masked_loss(&cache.logits, targets, cache.bsz, cache.s, self.config.vocab)
     }
 
     /// Reverse-mode gradients of the mean PAD-masked loss w.r.t. every
@@ -926,6 +904,40 @@ pub(crate) fn softmax_inplace(v: &mut [f32]) {
 fn softmax_into(src: &[f32], dst: &mut [f32]) {
     dst.copy_from_slice(src);
     softmax_inplace(dst);
+}
+
+/// PAD-masked cross-entropy over raw `[B·S, V]` logits — THE scoring
+/// function of the `fwd_loss` contract, shared between the dense backend
+/// and `sparse::CompiledModel` so identical logits can never score
+/// differently across the two execution paths.
+pub(crate) fn masked_loss(
+    logits: &[f32],
+    targets: &IntTensor,
+    bsz: usize,
+    s: usize,
+    v: usize,
+) -> LossOutput {
+    let mut tok = vec![0f32; bsz * s];
+    let mut total = 0f64;
+    let mut count = 0f64;
+    for r in 0..bsz * s {
+        let tgt = targets.data()[r];
+        if tgt == PAD {
+            continue;
+        }
+        let row = &logits[r * v..r * v + v];
+        let lp = log_prob(row, tgt as usize);
+        tok[r] = lp as f32;
+        total -= lp;
+        count += 1.0;
+    }
+    let denom = count.max(1.0);
+    LossOutput {
+        mean: (total / denom) as f32,
+        total: total as f32,
+        count: denom as f32,
+        tok_logp: Tensor::new(&[bsz, s], tok).unwrap(),
+    }
 }
 
 /// log softmax(row)[target], accumulated in f64 for stability.

@@ -377,6 +377,12 @@ pub fn expert_mask_literal(ps: &ParamSet) -> Result<xla::Literal> {
 /// avoids). This preserves the staged hot path the pre-trait
 /// `EvalHarness` used (EXPERIMENTS.md §Perf); only the token tensors are
 /// uploaded per batch.
+///
+/// This backend exposes no [`super::CompiledForward`] executor
+/// (`Backend::compile` keeps its default `Ok(None)`): the AOT artifacts
+/// *are* the compiled form here, so `EvalHarness` and the serving
+/// coordinator take their dense per-call fallback, which on this backend
+/// is already the staged device-resident path.
 pub struct PjrtBackend {
     engine: Engine,
     bundle: ModelBundle,

@@ -15,10 +15,21 @@
 //! * the forward pass replays the exact graph semantics of
 //!   `runtime::native::run_forward` (same RMSNorm ε, router mask offsets,
 //!   first-max top-k, accumulation order), so dense and compiled logits
-//!   agree within 1e-5 — pinned by `tests/sparse_exec.rs`.
+//!   agree within 1e-5 — pinned by `tests/sparse_exec.rs`;
+//! * MoE layers execute through a **batched expert-gather**: the whole
+//!   batch is routed first, token positions are grouped by selected
+//!   expert, and each expert's (CSR or dense) weight rows stream once per
+//!   *group* rather than once per token — the memory-traffic win that
+//!   makes batched evaluation pay off, not just single-token decode;
+//! * [`CompiledModel::fwd_loss`] reuses the dense backend's masked-NLL
+//!   reduction (`runtime::native::masked_loss`) on the compiled logits,
+//!   so `EvalHarness` can run multiple choice, greedy generation, and
+//!   perplexity entirely on the compiled path — parity with the dense
+//!   reports is pinned by `tests/eval_parity.rs`.
 //!
 //! [`CompiledModel`] implements [`crate::runtime::CompiledForward`], which
-//! is how `coordinator::Batcher` picks it up for the serving decode loop.
+//! is how `coordinator::Batcher` picks it up for the serving decode loop
+//! and `eval::EvalHarness` picks it up for the evaluation loop.
 //! [`CompressionReport`] is the bookkeeping side of the same story:
 //! per-layer nnz and dense-vs-CSR byte accounting for the JSON prune
 //! reports.
@@ -28,8 +39,10 @@ pub mod csr;
 pub use csr::{csr_bytes, CsrMatrix};
 
 use crate::model::{ModelConfig, ParamSet};
-use crate::runtime::native::{attention_fwd, embed_fwd, matmul, rmsnorm_fwd, route_token};
-use crate::runtime::{check_tokens, count_execution, CompiledForward};
+use crate::runtime::native::{
+    attention_fwd, embed_fwd, masked_loss, matmul, rmsnorm_fwd, route_token,
+};
+use crate::runtime::{check_tokens, count_execution, CompiledForward, LossOutput};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::json::Json;
 use anyhow::Result;
@@ -259,9 +272,15 @@ impl CompiledModel {
         &self.stats
     }
 
-    /// The decode forward. Mirrors `native::run_forward` op-for-op but
-    /// keeps no training caches and dispatches every prunable matmul
-    /// through [`WeightMat`].
+    /// The decode/eval forward. Mirrors `native::run_forward` op-for-op
+    /// but keeps no training caches, dispatches every prunable matmul
+    /// through [`WeightMat`], and executes each MoE layer through a
+    /// *batched expert-gather*: tokens are routed first, grouped by
+    /// selected expert, and each expert's weight rows then stream ONCE
+    /// over its whole token group (`m = group size`) instead of once per
+    /// token. Per-(token, slot) outputs are buffered and reduced in slot
+    /// order, so the floating-point accumulation order — and hence the
+    /// logits — stay identical to the dense path.
     fn forward(
         &self,
         tokens: &IntTensor,
@@ -281,11 +300,17 @@ impl CompiledModel {
         } else {
             Vec::new()
         };
-        // scratch reused across layers and tokens
+        // routing scratch reused across layers and tokens
         let mut lg = vec![0f32; e];
         let mut used = vec![false; e];
-        let mut hid = vec![0f32; f];
-        let mut orow = vec![0f32; d];
+        // expert-gather scratch: per-expert (token, slot, gate) groups,
+        // gathered inputs / hiddens / outputs, and the per-(token, slot)
+        // weighted outputs reduced in slot order afterwards
+        let mut groups: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); e];
+        let mut xbuf = vec![0f32; t_total * d];
+        let mut hidbuf = vec![0f32; t_total * f];
+        let mut outbuf = vec![0f32; t_total * d];
+        let mut slot_out = vec![0f32; t_total * k * d];
         let mut ytok = vec![0f32; d];
 
         for (l, layer) in self.layers.iter().enumerate() {
@@ -300,11 +325,12 @@ impl CompiledModel {
             }
 
             let x = rmsnorm_fwd(&h, &layer.ln2, d);
+            // phase 1: route every token, grouping positions by expert
+            for g in groups.iter_mut() {
+                g.clear();
+            }
             for t in 0..t_total {
                 let xt = &x[t * d..t * d + d];
-                for y in ytok.iter_mut() {
-                    *y = 0.0;
-                }
                 route_token(
                     xt,
                     &layer.router,
@@ -320,30 +346,54 @@ impl CompiledModel {
                         if want_routing {
                             routing[(l * t_total + t) * k + slot] = best as i32;
                         }
-                        // a Dead expert can only be selected when a layer
-                        // is fully masked; its (zeroed) weights contribute
-                        // nothing either way, so skipping preserves
-                        // equivalence
-                        if let CompiledExpert::Alive { w1, w2 } = &layer.experts[best] {
-                            for hv in hid.iter_mut() {
-                                *hv = 0.0;
-                            }
-                            w1.matmul_acc(xt, &mut hid, 1);
-                            for hv in hid.iter_mut() {
-                                if *hv < 0.0 {
-                                    *hv = 0.0;
-                                }
-                            }
-                            for o in orow.iter_mut() {
-                                *o = 0.0;
-                            }
-                            w2.matmul_acc(&hid, &mut orow, 1);
-                            for di in 0..d {
-                                ytok[di] += g * orow[di];
-                            }
-                        }
+                        groups[best].push((t, slot, g));
                     },
                 );
+            }
+            // phase 2: stream each expert's rows once per token *group*
+            slot_out.fill(0.0);
+            for (ei, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                // a Dead expert can only be selected when a layer is
+                // fully masked; its (zeroed) weights contribute nothing
+                // either way, so skipping preserves equivalence
+                if let CompiledExpert::Alive { w1, w2 } = &layer.experts[ei] {
+                    let gn = group.len();
+                    for (r, &(t, _slot, _g)) in group.iter().enumerate() {
+                        xbuf[r * d..r * d + d].copy_from_slice(&x[t * d..t * d + d]);
+                    }
+                    hidbuf[..gn * f].fill(0.0);
+                    w1.matmul_acc(&xbuf[..gn * d], &mut hidbuf[..gn * f], gn);
+                    for hv in hidbuf[..gn * f].iter_mut() {
+                        if *hv < 0.0 {
+                            *hv = 0.0;
+                        }
+                    }
+                    outbuf[..gn * d].fill(0.0);
+                    w2.matmul_acc(&hidbuf[..gn * f], &mut outbuf[..gn * d], gn);
+                    for (r, &(t, slot, g)) in group.iter().enumerate() {
+                        let orow = &outbuf[r * d..r * d + d];
+                        let dst = &mut slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
+                        for di in 0..d {
+                            dst[di] = g * orow[di];
+                        }
+                    }
+                }
+            }
+            // phase 3: reduce per-slot outputs in slot order (the dense
+            // path's exact accumulation order) into the residual stream
+            for t in 0..t_total {
+                for y in ytok.iter_mut() {
+                    *y = 0.0;
+                }
+                for slot in 0..k {
+                    let src = &slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
+                    for di in 0..d {
+                        ytok[di] += src[di];
+                    }
+                }
                 let hrow = &mut h[t * d..t * d + d];
                 for di in 0..d {
                     hrow[di] += ytok[di];
@@ -378,6 +428,14 @@ impl CompiledForward for CompiledModel {
 
     fn fwd_logits_routed(&self, tokens: &IntTensor) -> Result<(Tensor, Option<IntTensor>)> {
         self.forward(tokens, true)
+    }
+
+    fn fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput> {
+        let (logits, _) = self.forward(tokens, false)?;
+        let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
+        // same masked-NLL reduction as the dense backend (shared code):
+        // identical logits can never score differently across paths
+        Ok(masked_loss(logits.data(), targets, bsz, s, self.config.vocab))
     }
 }
 

@@ -1,0 +1,99 @@
+//! Compiled↔dense evaluation parity — the correctness contract of the
+//! compiled eval path: an `EvalHarness` scoring through the backend's
+//! `CompiledForward` executor must reproduce the dense per-call backend's
+//! `EvalReport` row-for-row (within 1e-5) and its perplexity, for
+//! unpruned, unstructured-pruned, and dead-expert models. This is the
+//! tier-1 gate against dense/compiled drift.
+
+use stun::data::{CorpusConfig, CorpusGenerator};
+use stun::eval::EvalHarness;
+use stun::model::{ModelConfig, ParamSet};
+use stun::pruning::unstructured;
+use stun::runtime::{Backend, NativeBackend};
+
+fn tiny() -> NativeBackend {
+    NativeBackend::new(ModelConfig::test_tiny())
+}
+
+/// Magnitude-prune a fresh paramset to `sparsity` over prunable weights.
+fn pruned_params(cfg: &ModelConfig, sparsity: f64, seed: u64) -> ParamSet {
+    let mut ps = ParamSet::init(cfg, seed);
+    unstructured::magnitude_prune(&mut ps, sparsity).unwrap();
+    ps
+}
+
+/// Full-report + perplexity parity between the compiled executor and the
+/// dense per-call path on the same parameters.
+fn assert_parity(backend: &NativeBackend, params: &ParamSet, seed: u64) {
+    let compiled = EvalHarness::new(backend, params).unwrap();
+    assert!(
+        compiled.uses_compiled(),
+        "native backend must hand eval a compiled executor"
+    );
+    let dense = EvalHarness::new_dense(backend, params).unwrap();
+    assert!(!dense.uses_compiled());
+
+    let rc = compiled.full_report(seed, 3, 4, 1).unwrap();
+    let rd = dense.full_report(seed, 3, 4, 1).unwrap();
+    assert_eq!(rc.rows.len(), rd.rows.len());
+    for ((nc, vc), (nd, vd)) in rc.rows.iter().zip(&rd.rows) {
+        assert_eq!(nc, nd);
+        assert!(
+            (vc - vd).abs() < 1e-5,
+            "{nc}: compiled {vc} vs dense {vd}"
+        );
+    }
+
+    let cfg = backend.config();
+    let mut g1 = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, seed ^ 0x77));
+    let mut g2 = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, seed ^ 0x77));
+    let pc = compiled.perplexity(&mut g1, 2).unwrap();
+    let pd = dense.perplexity(&mut g2, 2).unwrap();
+    assert!(
+        (pc - pd).abs() <= 1e-5 * pd.max(1.0),
+        "perplexity: compiled {pc} vs dense {pd}"
+    );
+}
+
+#[test]
+fn unpruned_reports_match() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let params = pruned_params(&cfg, 0.0, 31);
+    assert_parity(&backend, &params, 11);
+}
+
+#[test]
+fn seventy_percent_pruned_runs_compiled_csr_and_matches() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let params = pruned_params(&cfg, 0.7, 33);
+    // executor-path assertion: the 70%-sparsity model must actually score
+    // through the compiled CSR executor, not a dense fallback
+    let h = EvalHarness::new(&backend, &params).unwrap();
+    assert!(h.uses_compiled());
+    // name format is "compiled(<csr>/<tensors> csr, <dead> dead)"
+    assert!(
+        !h.executor().starts_with("compiled(0/"),
+        "70% sparsity must compile at least one tensor to CSR, got '{}'",
+        h.executor()
+    );
+    assert_parity(&backend, &params, 13);
+}
+
+#[test]
+fn dead_expert_reports_match() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    // structured (expert) + unstructured pruning combined
+    let mut params = pruned_params(&cfg, 0.4, 35);
+    params.prune_expert(0, 1);
+    params.prune_expert(1, 2);
+    let h = EvalHarness::new(&backend, &params).unwrap();
+    assert!(
+        h.executor().contains("2 dead"),
+        "dead experts must be row-compressed, got '{}'",
+        h.executor()
+    );
+    assert_parity(&backend, &params, 17);
+}

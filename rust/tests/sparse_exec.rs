@@ -6,7 +6,7 @@
 //! fallback on unpruned weights.
 
 use stun::model::{ModelConfig, ParamSet};
-use stun::pruning::unstructured::{self, ActNorms, UnstructuredConfig, UnstructuredMethod};
+use stun::pruning::unstructured;
 use stun::runtime::{Backend, CompiledForward, NativeBackend};
 use stun::sparse::{CompiledModel, SparseConfig};
 use stun::tensor::IntTensor;
@@ -28,18 +28,7 @@ fn tokens_for(cfg: &ModelConfig, seed: u64) -> IntTensor {
 /// Magnitude-prune a fresh paramset to `sparsity` over prunable weights.
 fn pruned_params(cfg: &ModelConfig, sparsity: f64, seed: u64) -> ParamSet {
     let mut ps = ParamSet::init(cfg, seed);
-    if sparsity > 0.0 {
-        unstructured::prune(
-            &mut ps,
-            &ActNorms::uniform(cfg),
-            sparsity,
-            &UnstructuredConfig {
-                method: UnstructuredMethod::Magnitude,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-    }
+    unstructured::magnitude_prune(&mut ps, sparsity).unwrap();
     ps
 }
 
@@ -119,6 +108,28 @@ fn compile_pass_picks_dense_fallback_at_zero_sparsity() {
         cm9.stats().bytes_compiled,
         cm9.stats().bytes_dense
     );
+}
+
+#[test]
+fn compiled_fwd_loss_matches_dense_across_sparsities() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let mut gen = stun::data::CorpusGenerator::new(stun::data::CorpusConfig::for_vocab(
+        cfg.vocab, cfg.seq, 21,
+    ));
+    let (tokens, targets) = gen.batch(cfg.eval_batch);
+    for &s in &[0.0f64, 0.4, 0.9] {
+        let ps = pruned_params(&cfg, s, 23);
+        let dense = backend.fwd_loss(&ps, &tokens, &targets).unwrap();
+        let compiled = backend.compile(&ps).unwrap().expect("native compiles");
+        let sparse = compiled.fwd_loss(&tokens, &targets).unwrap();
+        assert_eq!(dense.count, sparse.count, "s={s}");
+        assert!((dense.mean - sparse.mean).abs() < 1e-5, "s={s}");
+        assert!((dense.total - sparse.total).abs() < 1e-3, "s={s}");
+        assert_eq!(dense.tok_logp.shape(), sparse.tok_logp.shape());
+        let max = max_abs_diff(dense.tok_logp.data(), sparse.tok_logp.data());
+        assert!(max < 1e-5, "s={s}: max |Δlogp| = {max}");
+    }
 }
 
 #[test]
