@@ -4,7 +4,10 @@
 //! dense-vs-compiled eval (`fwd_loss`) arms across unstructured sparsity
 //! levels {0, 0.4, 0.7, 0.9}: the sparse execution engine must beat the
 //! dense path ≥2× at 90% sparsity and stay at parity (dense fallback)
-//! at 0%.
+//! at 0%. The same sparsity grid carries full-recompute-vs-incremental
+//! *session* arms (prefill + per-token decode steps): the KV-cached path
+//! must beat re-running the full window at every sparsity level — the
+//! per-token serving win.
 //!
 //! Runs on the native backend by default; `--features pjrt` builds with
 //! artifacts present measure the AOT executable path instead
@@ -14,7 +17,8 @@
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
 use stun::pruning::unstructured;
-use stun::runtime::{Backend, CompiledForward as _, TrainState};
+use stun::runtime::session::{greedy_token, recompute_step};
+use stun::runtime::{Backend, CompiledForward as _, DecodeState, TrainState};
 use stun::tensor::Tensor;
 use stun::util::bench::Bench;
 use stun::util::rng::Rng;
@@ -105,6 +109,52 @@ fn main() {
                     println!(
                         "    -> compiled eval speedup {:.2}x over dense fwd_loss",
                         dense_eval.mean_secs() / sparse_eval.mean_secs()
+                    );
+
+                    // full-recompute vs incremental session arms: prefill
+                    // a half-window prompt, then decode token-by-token.
+                    // Same executor, same windows — only the step kernels
+                    // differ, so the ratio is the pure per-token win of
+                    // the KV cache.
+                    let prompt: Vec<i32> = tokens.row(0)[..cfg.seq / 2].to_vec();
+                    let n_steps = (cfg.seq / 2).saturating_sub(2).max(1);
+                    let rec = bench.run(
+                        &format!("{config}/session recompute s={sparsity:.1}"),
+                        || {
+                            let mut st = DecodeState::new(&cfg, 1);
+                            st.begin(0, &prompt);
+                            let out = recompute_step(&cfg, &st, &[0], |t| {
+                                compiled.fwd_logits_routed(t)
+                            })
+                            .unwrap();
+                            let mut tok = greedy_token(out.logits.row(0));
+                            for _ in 0..n_steps {
+                                st.push(0, tok);
+                                let out = recompute_step(&cfg, &st, &[0], |t| {
+                                    compiled.fwd_logits_routed(t)
+                                })
+                                .unwrap();
+                                tok = greedy_token(out.logits.row(0));
+                            }
+                        },
+                    );
+                    let inc = bench.run(
+                        &format!("{config}/session incremental s={sparsity:.1}"),
+                        || {
+                            let mut st = compiled.new_session(1);
+                            let out = compiled.prefill(&mut st, 0, &prompt).unwrap();
+                            let mut tok = greedy_token(out.logits.row(0));
+                            for _ in 0..n_steps {
+                                let out = compiled.decode(&mut st, &[(0, tok)]).unwrap();
+                                tok = greedy_token(out.logits.row(0));
+                            }
+                        },
+                    );
+                    println!(
+                        "    -> incremental decode speedup {:.2}x over full recompute \
+                         ({} tokens/iter)",
+                        rec.mean_secs() / inc.mean_secs(),
+                        n_steps + 1
                     );
                 }
                 None => println!(

@@ -1,13 +1,21 @@
 //! Bench: coordinator serving throughput — dense vs STUN-pruned model
 //! under a fixed expert-memory budget (the deployment claim behind MoE
-//! pruning), batcher scaling over burst sizes, the dense-vs-sparse
-//! execution arms across sparsity levels {0, 0.4, 0.7, 0.9} (the CSR
-//! engine turning pruning into decode throughput), and the
-//! dense-vs-compiled `EvalHarness` arms on the same grid (the compiled
-//! eval path turning pruning into pipeline wall-clock).
+//! pruning), batcher scaling over burst sizes, the serving-executor grid
+//! {dense-recompute, compiled-recompute, compiled-incremental} across
+//! sparsity levels {0, 0.4, 0.7, 0.9} — incremental KV-cached decode
+//! must beat full-recompute decode in tokens/s at *every* arm — a
+//! staggered-arrival workload (queue-depth effects under honored arrival
+//! offsets), and the dense-vs-compiled `EvalHarness` arms on the same
+//! grid.
+//!
+//! The executor × sparsity grid (and the staggered row) is also written
+//! to `BENCH_serve.json` (`BENCH_SERVE_OUT` overrides the path) so CI
+//! can archive the perf trajectory as a machine-readable artifact.
+//! `STUN_SERVE_ARMS_ONLY=1` skips the trained-model headline and the
+//! eval arms — the quick CI profile.
 
 use std::time::Duration;
-use stun::coordinator::{burst_workload, Batcher, ExpertStore};
+use stun::coordinator::{burst_workload, staggered_workload, Batcher, ExpertStore};
 use stun::eval::EvalHarness;
 use stun::model::ParamSet;
 use stun::pruning::expert::ExpertPruneConfig;
@@ -16,70 +24,80 @@ use stun::pruning::StunPipeline;
 use stun::report::{self, Protocol};
 use stun::runtime::Backend;
 use stun::util::bench::Bench;
+use stun::util::json::Json;
 
 fn main() {
     let proto = Protocol::bench();
     let bench = Bench::from_env();
+    let arms_only = std::env::var("STUN_SERVE_ARMS_ONLY").is_ok();
 
-    // headline comparison on the trained checkpoint
-    let table = report::serving_report(&proto, 24).expect("serving");
-    println!("### serving: dense vs stun-pruned (trained moe-8x)\n{table}");
+    if !arms_only {
+        // headline comparison on the trained checkpoint
+        let table = report::serving_report(&proto, 24).expect("serving");
+        println!("### serving: dense vs stun-pruned (trained moe-8x)\n{table}");
+    }
 
     // batcher scaling on the tiny config (fast)
     let backend = report::load_backend("tiny").expect("backend");
     let backend = backend.as_ref();
     let params = ParamSet::init(backend.config(), 7);
-    let mut pruned = params.clone();
     let mut gen = stun::data::CorpusGenerator::new(stun::data::CorpusConfig::for_vocab(
         backend.config().vocab,
         backend.config().seq,
         4242,
     ));
-    StunPipeline {
-        expert: ExpertPruneConfig {
-            ratio: 0.25,
-            ..Default::default()
-        },
-        unstructured: UnstructuredConfig::default(),
-        total_sparsity: 0.4,
-        calib_batches: 2,
-    }
-    .run(backend, &mut pruned, &mut gen)
-    .expect("stun");
 
-    println!("\n### burst-size scaling (tiny)");
-    println!(
-        "{:>8} {:>12} {:>12} {:>10} {:>10}",
-        "requests", "dense tok/s", "pruned tok/s", "d-swaps", "p-swaps"
-    );
-    for n in [4usize, 8, 16, 32] {
-        let capacity = ExpertStore::working_set_bytes(&pruned);
-        let mut results = Vec::new();
-        for ps in [&params, &pruned] {
-            let store = ExpertStore::new(capacity, Duration::from_micros(200));
-            let mut batcher = Batcher::new(backend, ps, store).expect("batcher");
-            let (_r, m) = batcher
-                .serve(burst_workload(backend.config(), n, 6, 3))
-                .expect("serve");
-            results.push(m);
+    if !arms_only {
+        let mut pruned = params.clone();
+        StunPipeline {
+            expert: ExpertPruneConfig {
+                ratio: 0.25,
+                ..Default::default()
+            },
+            unstructured: UnstructuredConfig::default(),
+            total_sparsity: 0.4,
+            calib_batches: 2,
         }
+        .run(backend, &mut pruned, &mut gen)
+        .expect("stun");
+
+        println!("\n### burst-size scaling (tiny)");
         println!(
-            "{:>8} {:>12.1} {:>12.1} {:>10} {:>10}",
-            n,
-            results[0].tokens_per_sec(),
-            results[1].tokens_per_sec(),
-            results[0].expert_swaps,
-            results[1].expert_swaps
+            "{:>8} {:>12} {:>12} {:>10} {:>10}",
+            "requests", "dense tok/s", "pruned tok/s", "d-swaps", "p-swaps"
         );
+        for n in [4usize, 8, 16, 32] {
+            let capacity = ExpertStore::working_set_bytes(&pruned);
+            let mut results = Vec::new();
+            for ps in [&params, &pruned] {
+                let store = ExpertStore::new(capacity, Duration::from_micros(200));
+                let mut batcher = Batcher::new(backend, ps, store).expect("batcher");
+                let (_r, m) = batcher
+                    .serve(burst_workload(backend.config(), n, 6, 3))
+                    .expect("serve");
+                results.push(m);
+            }
+            println!(
+                "{:>8} {:>12.1} {:>12.1} {:>10} {:>10}",
+                n,
+                results[0].tokens_per_sec(),
+                results[1].tokens_per_sec(),
+                results[0].expert_swaps,
+                results[1].expert_swaps
+            );
+        }
     }
 
-    // dense-execution vs compiled-sparse-execution arms: same pruned
-    // model, same byte budget — only the decode kernels differ.
-    println!("\n### decode arms: dense vs sparse execution (tiny)");
+    // serving-executor grid: same pruned model, same byte budget — the
+    // three decode paths differ only in kernels/stepping. Incremental
+    // must win at every sparsity (it does O(1) positions per token where
+    // recompute pays the whole window).
+    println!("\n### decode arms: recompute vs incremental sessions (tiny)");
     println!(
-        "{:>9} {:>9} {:>12} {:>13} {:>8} {:>9}",
-        "sparsity", "mem(KB)", "dense tok/s", "sparse tok/s", "swaps", "speedup"
+        "{:>9} {:>9} {:>12} {:>13} {:>13} {:>9}",
+        "sparsity", "mem(KB)", "dense tok/s", "c-rec tok/s", "c-inc tok/s", "inc-gain"
     );
+    let mut arm_rows: Vec<Json> = Vec::new();
     let mut eval_rows = Vec::new();
     for s in [0.0f64, 0.4, 0.7, 0.9] {
         let mut ps = params.clone();
@@ -97,62 +115,124 @@ fn main() {
             .expect("stun");
         }
         let capacity = ExpertStore::working_set_bytes(&ps).max(1);
-        let mut tput = [0.0f64; 2];
+        // (label, use_compiled, incremental)
+        let arms = [
+            ("dense_recompute", false, false),
+            ("compiled_recompute", true, false),
+            ("compiled_incremental", true, true),
+        ];
+        let mut tput = [0.0f64; 3];
         let mut swaps = 0u64;
-        for (i, use_compiled) in [false, true].into_iter().enumerate() {
+        for (i, (_label, use_compiled, incremental)) in arms.iter().enumerate() {
             let store = ExpertStore::new(capacity, Duration::from_micros(200));
             let mut batcher =
-                Batcher::with_exec(backend, &ps, store, use_compiled).expect("batcher");
+                Batcher::with_policy(backend, &ps, store, *use_compiled, *incremental)
+                    .expect("batcher");
             let (_r, m) = batcher
                 .serve(burst_workload(backend.config(), 8, 6, 5))
                 .expect("serve");
             tput[i] = m.tokens_per_sec();
             swaps = m.expert_swaps;
         }
+        let gain = tput[2] / tput[1].max(1e-9);
         println!(
-            "{:>9.1} {:>9.0} {:>12.1} {:>13.1} {:>8} {:>8.2}x",
+            "{:>9.1} {:>9.0} {:>12.1} {:>13.1} {:>13.1} {:>8.2}x",
             s,
             capacity as f64 / 1024.0,
             tput[0],
             tput[1],
-            swaps,
-            tput[1] / tput[0].max(1e-9)
+            tput[2],
+            gain
         );
+        arm_rows.push(Json::obj(vec![
+            ("sparsity", Json::Num(s)),
+            ("expert_swaps", Json::Num(swaps as f64)),
+            ("dense_recompute_tok_s", Json::Num(tput[0])),
+            ("compiled_recompute_tok_s", Json::Num(tput[1])),
+            ("compiled_incremental_tok_s", Json::Num(tput[2])),
+            ("incremental_speedup", Json::Num(gain)),
+        ]));
 
-        // eval arms: the same pruned model scored through the dense
-        // per-call backend vs the compiled executor (EvalHarness picks
-        // it up from Backend::compile); warmed multi-iteration means via
-        // the Bench harness — one-shot wall-clock is jitter-dominated at
-        // this scale
-        let (n_gen, n_mc) = (proto.n_gen.min(4), proto.n_mc.min(6));
-        let dense_h = EvalHarness::new_dense(backend, &ps).expect("harness");
-        let dense_r = bench.run(&format!("eval dense s={s:.1}"), || {
-            dense_h
-                .full_report(proto.eval_seed, n_gen, n_mc, 1)
-                .expect("dense eval");
-        });
-        let compiled_h = EvalHarness::new(backend, &ps).expect("harness");
-        let executor = compiled_h.executor();
-        let compiled_r = bench.run(&format!("eval compiled s={s:.1}"), || {
-            compiled_h
-                .full_report(proto.eval_seed, n_gen, n_mc, 1)
-                .expect("compiled eval");
-        });
-        eval_rows.push((s, dense_r.mean_secs(), compiled_r.mean_secs(), executor));
+        if !arms_only {
+            // eval arms: the same pruned model scored through the dense
+            // per-call backend vs the compiled executor (EvalHarness picks
+            // it up from Backend::compile); warmed multi-iteration means
+            // via the Bench harness — one-shot wall-clock is
+            // jitter-dominated at this scale
+            let (n_gen, n_mc) = (proto.n_gen.min(4), proto.n_mc.min(6));
+            let dense_h = EvalHarness::new_dense(backend, &ps).expect("harness");
+            let dense_r = bench.run(&format!("eval dense s={s:.1}"), || {
+                dense_h
+                    .full_report(proto.eval_seed, n_gen, n_mc, 1)
+                    .expect("dense eval");
+            });
+            let compiled_h = EvalHarness::new(backend, &ps).expect("harness");
+            let executor = compiled_h.executor();
+            let compiled_r = bench.run(&format!("eval compiled s={s:.1}"), || {
+                compiled_h
+                    .full_report(proto.eval_seed, n_gen, n_mc, 1)
+                    .expect("compiled eval");
+            });
+            eval_rows.push((s, dense_r.mean_secs(), compiled_r.mean_secs(), executor));
+        }
     }
 
-    println!("\n### eval arms: dense vs compiled EvalHarness (tiny, mean secs)");
+    // staggered arrivals: offsets honored by the serve loop, so queueing
+    // (and hence Response::queued) is real rather than the all-at-t0 stamp
+    let gap = Duration::from_micros(300);
+    let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
+    let mut batcher = Batcher::new(backend, &params, store).expect("batcher");
+    let (responses, m) = batcher
+        .serve(staggered_workload(backend.config(), 16, 6, 9, gap))
+        .expect("staggered serve");
+    let mean_queued_us = responses
+        .iter()
+        .map(|r| r.queued.as_secs_f64() * 1e6)
+        .sum::<f64>()
+        / responses.len().max(1) as f64;
+    println!("\n### staggered arrivals (tiny, 16 req, gap {gap:?})");
     println!(
-        "{:>9} {:>12} {:>15} {:>9}  executor",
-        "sparsity", "dense s", "compiled s", "speedup"
+        "tok/s {:.1}  p50 {:?}  p95 {:?}  mean-queued {:.0}µs",
+        m.tokens_per_sec(),
+        m.p50_latency,
+        m.p95_latency,
+        mean_queued_us
     );
-    for (s, dense_secs, compiled_secs, executor) in eval_rows {
+    let staggered = Json::obj(vec![
+        ("gap_us", Json::Num(gap.as_secs_f64() * 1e6)),
+        ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
+        ("p50_latency_us", Json::Num(m.p50_latency.as_secs_f64() * 1e6)),
+        ("p95_latency_us", Json::Num(m.p95_latency.as_secs_f64() * 1e6)),
+        ("mean_queued_us", Json::Num(mean_queued_us)),
+    ]);
+
+    if !arms_only {
+        println!("\n### eval arms: dense vs compiled EvalHarness (tiny, mean secs)");
         println!(
-            "{:>9.1} {:>12.3} {:>15.3} {:>8.2}x  {executor}",
-            s,
-            dense_secs,
-            compiled_secs,
-            dense_secs / compiled_secs.max(1e-9)
+            "{:>9} {:>12} {:>15} {:>9}  executor",
+            "sparsity", "dense s", "compiled s", "speedup"
         );
+        for (s, dense_secs, compiled_secs, executor) in eval_rows {
+            println!(
+                "{:>9.1} {:>12.3} {:>15.3} {:>8.2}x  {executor}",
+                s,
+                dense_secs,
+                compiled_secs,
+                dense_secs / compiled_secs.max(1e-9)
+            );
+        }
     }
+
+    // machine-readable perf record — CI uploads this as an artifact so
+    // the serving-throughput trajectory accumulates across commits
+    let out = Json::obj(vec![
+        ("bench", Json::Str("serve_throughput".into())),
+        ("config", Json::Str("tiny".into())),
+        ("arms", Json::Arr(arm_rows)),
+        ("staggered", staggered),
+    ]);
+    let path =
+        std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("write BENCH_serve.json");
+    println!("\nwrote {path}");
 }

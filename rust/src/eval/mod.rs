@@ -8,11 +8,13 @@
 //!   are truncated from the front with the choice span kept intact (the
 //!   target mask shifts with the drained tokens), and the choice panel is
 //!   sized by the item set — any number of choices per item is fine.
-//! * **generative exact-match** — batched greedy decoding through
-//!   `fwd_logits`, stopping at `;` (the answer terminator), then exact
-//!   token match against the gold answer (the GSM8K protocol).
-//!   `max_new` is clamped to the sequence budget, and prompts are
-//!   front-truncated to leave room for it.
+//! * **generative exact-match** — batched greedy decoding through the
+//!   incremental decode-session API (prompts prefilled once, then
+//!   one-token KV-cached steps; see `runtime::session`), stopping at `;`
+//!   (the answer terminator), then exact token match against the gold
+//!   answer (the GSM8K protocol). `max_new` is clamped to the sequence
+//!   budget, and prompts are front-truncated to leave room for it — so
+//!   the window never slides mid-generation.
 //! * **perplexity** — exact aggregation of `fwd_loss`'s (total, count)
 //!   outputs over held-out batches.
 //!
@@ -40,8 +42,9 @@ pub use tasks::{GenItem, McItem, TaskKind, TaskSuite};
 
 use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
-use crate::runtime::{Backend, CompiledForward, LossOutput};
-use crate::tensor::{IntTensor, Tensor};
+use crate::runtime::session::greedy_token;
+use crate::runtime::{Backend, CompiledForward, DecodeState, LossOutput, StepOutput};
+use crate::tensor::IntTensor;
 use anyhow::Result;
 
 /// Evaluation session for one parameter state on one backend.
@@ -161,17 +164,38 @@ impl<'b> EvalHarness<'b> {
 
     // ------------------------------------------------------ execution
 
-    fn exec_fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor> {
-        match &self.exec {
-            EvalExec::Compiled(c) => c.fwd_logits(tokens),
-            EvalExec::Dense(p) => self.backend.fwd_logits(p, tokens),
-        }
-    }
-
     fn exec_fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput> {
         match &self.exec {
             EvalExec::Compiled(c) => c.fwd_loss(tokens, targets),
             EvalExec::Dense(p) => self.backend.fwd_loss(p, tokens, targets),
+        }
+    }
+
+    // ------------------------------------------------- decode sessions
+
+    fn sess_new(&self, slots: usize) -> DecodeState {
+        match &self.exec {
+            EvalExec::Compiled(c) => c.new_session(slots),
+            EvalExec::Dense(_) => self.backend.new_session(slots),
+        }
+    }
+
+    fn sess_prefill(
+        &self,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<StepOutput> {
+        match &self.exec {
+            EvalExec::Compiled(c) => c.prefill(state, slot, prompt),
+            EvalExec::Dense(p) => self.backend.prefill(p, state, slot, prompt),
+        }
+    }
+
+    fn sess_decode(&self, state: &mut DecodeState, steps: &[(usize, i32)]) -> Result<StepOutput> {
+        match &self.exec {
+            EvalExec::Compiled(c) => c.decode(state, steps),
+            EvalExec::Dense(p) => self.backend.decode(p, state, steps),
         }
     }
 
@@ -259,6 +283,15 @@ impl<'b> EvalHarness<'b> {
     /// Batched greedy decoding; returns generated continuations.
     /// `max_new` is clamped to the sequence budget (at most `seq − 1` new
     /// tokens, keeping ≥ 1 prompt token to condition on).
+    ///
+    /// Runs on the incremental decode-session API: each chunk sequence
+    /// gets a session slot, its (front-truncated) prompt is prefilled
+    /// once, and every further token costs a one-position decode step —
+    /// KV-cached on the compiled executor, full-recompute on the dense
+    /// fallback. Prompts are pre-truncated to `seq − max_new`, so the
+    /// window never slides mid-generation and the caches stay valid for
+    /// the whole continuation. Greedy token streams are identical to the
+    /// full-recompute loop (pinned by `tests/decode_session.rs`).
     pub fn generate(
         &self,
         prompts: &[Vec<i32>],
@@ -266,61 +299,51 @@ impl<'b> EvalHarness<'b> {
         stop: i32,
     ) -> Result<Vec<Vec<i32>>> {
         let cfg = self.backend.config();
-        let (b, s, v) = (cfg.eval_batch, cfg.seq, cfg.vocab);
+        let (b, s) = (cfg.eval_batch, cfg.seq);
         let max_new = max_new.min(s.saturating_sub(1));
         let keep = s.saturating_sub(max_new).max(1);
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        if max_new == 0 {
+            return Ok(outputs);
+        }
         let mut base = 0;
         while base < prompts.len() {
             let chunk_n = (prompts.len() - base).min(b);
-            // live sequences for this chunk
-            let mut seqs: Vec<Vec<i32>> = (0..chunk_n)
-                .map(|i| {
-                    let mut p = prompts[base + i].clone();
-                    if p.len() > keep {
-                        // keep the tail (the question), drop oldest context
-                        p.drain(0..p.len() - keep);
-                    }
-                    if p.is_empty() {
-                        p.push(crate::data::BOS);
-                    }
-                    p
-                })
-                .collect();
+            let mut state = self.sess_new(chunk_n);
             let mut done = vec![false; chunk_n];
-            for _ in 0..max_new {
-                if done.iter().all(|&d| d) {
+            let mut last = vec![0i32; chunk_n];
+            for i in 0..chunk_n {
+                let mut p = prompts[base + i].clone();
+                if p.len() > keep {
+                    // keep the tail (the question), drop oldest context
+                    p.drain(0..p.len() - keep);
+                }
+                // (an empty prompt gets BOS inside the session)
+                let out = self.sess_prefill(&mut state, i, &p)?;
+                let t = greedy_token(out.logits.row(0));
+                outputs[base + i].push(t);
+                if t == stop || state.hist_len(i) + 1 >= s {
+                    done[i] = true;
+                } else {
+                    last[i] = t;
+                }
+            }
+            for _ in 1..max_new {
+                let steps: Vec<(usize, i32)> = (0..chunk_n)
+                    .filter(|&i| !done[i])
+                    .map(|i| (i, last[i]))
+                    .collect();
+                if steps.is_empty() {
                     break;
                 }
-                let mut tokens = IntTensor::zeros(&[b, s]);
-                for (bi, seq) in seqs.iter().enumerate() {
-                    let row = tokens.row_mut(bi);
-                    for (j, &t) in seq.iter().enumerate().take(s) {
-                        row[j] = t;
-                    }
-                }
-                let logits = self.exec_fwd_logits(&tokens)?;
-                for bi in 0..chunk_n {
-                    if done[bi] {
-                        continue;
-                    }
-                    let pos = seqs[bi].len() - 1;
-                    let row = &logits.data()[(bi * s + pos) * v..(bi * s + pos + 1) * v];
-                    let mut best = 0usize;
-                    let mut best_v = f32::NEG_INFINITY;
-                    // never emit PAD
-                    for (t, &x) in row.iter().enumerate().skip(1) {
-                        if x > best_v {
-                            best = t;
-                            best_v = x;
-                        }
-                    }
-                    let t = best as i32;
-                    outputs[base + bi].push(t);
-                    if t == stop || seqs[bi].len() + 1 >= s {
-                        done[bi] = true;
+                let out = self.sess_decode(&mut state, &steps)?;
+                for (ri, &(i, _)) in steps.iter().enumerate() {
+                    let t = greedy_token(out.logits.row(ri));
+                    outputs[base + i].push(t);
+                    if t == stop || state.hist_len(i) + 1 >= s {
+                        done[i] = true;
                     } else {
-                        seqs[bi].push(t);
+                        last[i] = t;
                     }
                 }
             }

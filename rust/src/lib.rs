@@ -60,6 +60,27 @@
 //! dense-vs-CSR decode and eval speed arms live in
 //! `benches/runtime_hotpath.rs` and `benches/serve_throughput.rs`.
 //!
+//! ## Incremental decode sessions
+//!
+//! Generation is served through KV-cached sessions rather than
+//! full-window recomputes ([`runtime::session`]): a
+//! [`runtime::DecodeState`] holds per-layer, per-slot K/V caches plus
+//! window bookkeeping; `prefill(slot, prompt)` fills a slot's cache once
+//! and returns last-position logits, and each `decode` step computes one
+//! attention query + one-token expert-gather per active sequence —
+//! O(1) forward positions per generated token instead of O(S).
+//! [`sparse::CompiledModel`] implements the session natively (the same
+//! shared kernels as the full forward, so greedy token streams are
+//! identical — pinned by `tests/decode_session.rs`, including the
+//! window-slide cache-invalidation edge where the session re-prefills);
+//! every other backend inherits a full-recompute fallback that speaks
+//! the same API on right-sized batches. `coordinator::Batcher` admits
+//! each request by prefilling a session slot and steps all active slots
+//! one token at a time (arrival offsets honored, nearest-rank latency
+//! percentiles), and [`eval::EvalHarness`] generates through the same
+//! sessions. `benches/serve_throughput.rs` records the
+//! recompute-vs-incremental grid to `BENCH_serve.json`.
+//!
 //! ## Quick tour
 //!
 //! ```no_run

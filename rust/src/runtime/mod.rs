@@ -20,14 +20,22 @@
 //! graph execution ("GPU calls" in the paper's terms), so the
 //! O(1)-vs-O(kⁿ/√n) complexity measurements in `pruning::combinatorial`
 //! and the benches mean the same thing on either backend.
+//!
+//! Generation additionally speaks the incremental decode-session API
+//! ([`session`]): `new_session`/`prefill`/`decode` over a [`DecodeState`]
+//! of per-layer, per-slot K/V caches. [`crate::sparse::CompiledModel`]
+//! implements it natively (O(1) forward positions per token); both traits
+//! ship a full-recompute default so every backend keeps the contract.
 
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod session;
 
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Engine, ModelBundle, PjrtBackend};
+pub use session::{DecodeState, StepOutput};
 
 use crate::model::{ModelConfig, ParamSet};
 use crate::tensor::{IntTensor, Tensor};
@@ -105,10 +113,14 @@ impl TrainState {
 /// Implementations MUST replay the backend's dense graph: logits within
 /// 1e-5 of `Backend::fwd_logits`, `fwd_loss` outputs within 1e-5 of
 /// `Backend::fwd_loss` on the same inputs, and one [`EXECUTIONS`] tick
-/// per forward.
+/// per forward (a session `prefill`/`decode` step counts as one forward).
 pub trait CompiledForward {
     /// Short human-readable label of the compiled execution strategy.
     fn name(&self) -> String;
+
+    /// Model configuration the executor was compiled for (sizes the
+    /// decode-session state and the fallback step batches).
+    fn config(&self) -> &ModelConfig;
 
     /// Full forward pass: tokens \[B, S\] → logits \[B, S, V\].
     fn fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor>;
@@ -123,6 +135,41 @@ pub trait CompiledForward {
     /// positions plus the \[B, S\] per-token logp tensor the evaluation
     /// harness sums over choice spans.
     fn fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput>;
+
+    // ------------------------------------------------- decode sessions
+
+    /// Fresh incremental-decode state with `slots` sequence slots.
+    fn new_session(&self, slots: usize) -> DecodeState {
+        DecodeState::new(self.config(), slots)
+    }
+
+    /// Begin a sequence in `slot` (recycling it) and return logits +
+    /// routing at the prompt's last position. Implementations that keep
+    /// K/V caches ([`crate::sparse::CompiledModel`]) fill them here; the
+    /// default replays the step through [`CompiledForward::fwd_logits_routed`]
+    /// via [`session::recompute_step`].
+    ///
+    /// Greedy parity contract: a prefill-then-[`CompiledForward::decode`]
+    /// loop must emit token streams identical to repeatedly running the
+    /// full-sequence forward over the growing window (incl. the
+    /// keep-tail window slide), with last-position logits within 1e-5 —
+    /// pinned by `tests/decode_session.rs`.
+    fn prefill(&self, state: &mut DecodeState, slot: usize, prompt: &[i32]) -> Result<StepOutput> {
+        state.begin(slot, prompt);
+        session::recompute_step(self.config(), state, &[slot], |t| self.fwd_logits_routed(t))
+    }
+
+    /// Accept one token per `(slot, token)` pair and return the next
+    /// position's logits + routing, one row per pair in order. Slots must
+    /// be distinct and previously prefilled. The default re-prefills
+    /// every stepped window through the full-sequence forward.
+    fn decode(&self, state: &mut DecodeState, steps: &[(usize, i32)]) -> Result<StepOutput> {
+        for &(slot, tok) in steps {
+            state.push(slot, tok);
+        }
+        let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
+        session::recompute_step(self.config(), state, &slots, |t| self.fwd_logits_routed(t))
+    }
 }
 
 /// An execution backend. One instance serves one model configuration;
@@ -195,6 +242,54 @@ pub trait Backend {
     /// back to the per-call `fwd_logits*` contract.
     fn compile(&self, _params: &ParamSet) -> Result<Option<Box<dyn CompiledForward>>> {
         Ok(None)
+    }
+
+    // ------------------------------------------------- decode sessions
+    //
+    // The dense fallback of the session API: any backend speaks
+    // prefill/decode even without KV-cache kernels, by re-prefilling the
+    // whole window through `fwd_logits_routed` on every step (batch sized
+    // to the stepped slots, never `eval_batch` padding rows). Serving and
+    // eval loops are written against this contract once; backends with a
+    // compiled executor get the genuinely incremental path from
+    // [`CompiledForward::prefill`]/[`CompiledForward::decode`] instead.
+
+    /// Fresh incremental-decode state with `slots` sequence slots.
+    fn new_session(&self, slots: usize) -> DecodeState {
+        DecodeState::new(self.config(), slots)
+    }
+
+    /// Begin a sequence in `slot` and return logits + routing at the
+    /// prompt's last position (full-recompute fallback).
+    fn prefill(
+        &self,
+        params: &ParamSet,
+        state: &mut DecodeState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<StepOutput> {
+        state.begin(slot, prompt);
+        session::recompute_step(self.config(), state, &[slot], |t| {
+            self.fwd_logits_routed(params, t)
+        })
+    }
+
+    /// Accept one token per `(slot, token)` pair and return the next
+    /// position's logits + routing (full-recompute fallback: re-prefills
+    /// every stepped window).
+    fn decode(
+        &self,
+        params: &ParamSet,
+        state: &mut DecodeState,
+        steps: &[(usize, i32)],
+    ) -> Result<StepOutput> {
+        for &(slot, tok) in steps {
+            state.push(slot, tok);
+        }
+        let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
+        session::recompute_step(self.config(), state, &slots, |t| {
+            self.fwd_logits_routed(params, t)
+        })
     }
 
     /// One AdamW step on `state` in place; returns the step's mean loss.

@@ -955,9 +955,80 @@ fn log_prob(row: &[f32], target: usize) -> f64 {
     row[target] as f64 - (maxv as f64 + sum.ln())
 }
 
+/// One causal-attention query row — THE attention kernel, shared between
+/// the full-sequence forward ([`attention_fwd`], which the training, eval,
+/// and full-recompute decode paths all run) and the KV-cached incremental
+/// decode session (`sparse::CompiledModel::decode`), so the two cannot
+/// drift: scaled q·k scores over context rows `0..n_ctx`, a numerically
+/// stable softmax, then the probability-weighted V sum into `ctx_row`
+/// (overwritten).
+///
+/// K/V rows are read at `kbuf[j·k_stride + k_off..][..hd]` (resp. `vbuf`):
+/// the full-sequence path points both buffers at the packed qkv tensor
+/// (stride `3d`, offsets `d + h·hd` / `2d + h·hd`), the incremental path
+/// at the session's per-slot K/V cache (stride `d`, offset `h·hd`).
+/// `scores` is caller scratch with `len ≥ n_ctx`; it is left holding the
+/// attention probabilities for callers that cache them (the backward
+/// pass).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_ctx_row(
+    q: &[f32],
+    kbuf: &[f32],
+    k_stride: usize,
+    k_off: usize,
+    vbuf: &[f32],
+    v_stride: usize,
+    v_off: usize,
+    n_ctx: usize,
+    scale: f32,
+    scores: &mut [f32],
+    ctx_row: &mut [f32],
+) {
+    let hd = q.len();
+    // causal scores + softmax over the context (future positions get
+    // −1e9 in the jnp graph, i.e. exactly zero probability)
+    let mut maxv = f32::NEG_INFINITY;
+    for j in 0..n_ctx {
+        let krow = &kbuf[j * k_stride + k_off..][..hd];
+        let mut acc = 0f32;
+        for z in 0..hd {
+            acc += q[z] * krow[z];
+        }
+        let sc = acc * scale;
+        scores[j] = sc;
+        if sc > maxv {
+            maxv = sc;
+        }
+    }
+    let mut sum = 0f32;
+    for sc in scores[..n_ctx].iter_mut() {
+        let e = (*sc - maxv).exp();
+        *sc = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for sc in scores[..n_ctx].iter_mut() {
+        *sc *= inv;
+    }
+    for x in ctx_row.iter_mut() {
+        *x = 0.0;
+    }
+    for (j, &p) in scores[..n_ctx].iter().enumerate() {
+        if p == 0.0 {
+            continue;
+        }
+        let vrow = &vbuf[j * v_stride + v_off..][..hd];
+        for (c, &vv) in ctx_row.iter_mut().zip(vrow) {
+            *c += p * vv;
+        }
+    }
+}
+
 /// Causal multi-head attention forward from packed qkv.
 /// Returns (probs \[B·H·S·S\], merged-head context \[T·D\]). Shared with
-/// the sparse compiled path.
+/// the sparse compiled path; per-query work delegates to [`attn_ctx_row`],
+/// the same kernel the incremental decode session runs against its K/V
+/// cache.
 pub(crate) fn attention_fwd(
     cfg: &ModelConfig,
     bsz: usize,
@@ -971,53 +1042,23 @@ pub(crate) fn attention_fwd(
     let mut probs = vec![0f32; bsz * nh * s * s];
     let mut ctx = vec![0f32; bsz * s * d];
     for b in 0..bsz {
+        let qkv_b = &qkv[b * s * 3 * d..(b + 1) * s * 3 * d];
         for h in 0..nh {
-            let q_off = h * hd;
-            let k_off = d + h * hd;
-            let v_off = 2 * d + h * hd;
             let pbase = (b * nh + h) * s * s;
             for i in 0..s {
-                // causal scores + softmax over 0..=i (future positions get
-                // −1e9 in the jnp graph, i.e. exactly zero probability)
-                {
-                    let qrow = &qkv[(b * s + i) * 3 * d + q_off..][..hd];
-                    let prow = &mut probs[pbase + i * s..pbase + i * s + s];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for j in 0..=i {
-                        let krow = &qkv[(b * s + j) * 3 * d + k_off..][..hd];
-                        let mut acc = 0f32;
-                        for z in 0..hd {
-                            acc += qrow[z] * krow[z];
-                        }
-                        let sc = acc * scale;
-                        prow[j] = sc;
-                        if sc > maxv {
-                            maxv = sc;
-                        }
-                    }
-                    let mut sum = 0f32;
-                    for j in 0..=i {
-                        let e = (prow[j] - maxv).exp();
-                        prow[j] = e;
-                        sum += e;
-                    }
-                    let inv = 1.0 / sum;
-                    for j in 0..=i {
-                        prow[j] *= inv;
-                    }
-                }
-                let prow = &probs[pbase + i * s..pbase + i * s + s];
-                let crow = &mut ctx[(b * s + i) * d + h * hd..][..hd];
-                for j in 0..=i {
-                    let p = prow[j];
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vrow = &qkv[(b * s + j) * 3 * d + v_off..][..hd];
-                    for z in 0..hd {
-                        crow[z] += p * vrow[z];
-                    }
-                }
+                attn_ctx_row(
+                    &qkv_b[i * 3 * d + h * hd..][..hd],
+                    qkv_b,
+                    3 * d,
+                    d + h * hd,
+                    qkv_b,
+                    3 * d,
+                    2 * d + h * hd,
+                    i + 1,
+                    scale,
+                    &mut probs[pbase + i * s..pbase + i * s + s],
+                    &mut ctx[(b * s + i) * d + h * hd..][..hd],
+                );
             }
         }
     }

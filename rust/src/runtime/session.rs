@@ -1,0 +1,380 @@
+//! Incremental decode sessions — the KV-cached serving hot path.
+//!
+//! A full-recompute decode loop pays O(S) work per generated token: every
+//! step re-runs the whole `[B, S]` forward (complete attention over the
+//! window, logits at every position) just to read one next-token
+//! distribution per sequence. [`DecodeState`] turns decoding into an
+//! *incremental* session instead: per-layer, per-slot K/V caches plus
+//! position counters, so a step computes attention for the **new** query
+//! position only and runs the MoE/head kernels over one token per
+//! sequence.
+//!
+//! The contract is split between this module and the executors:
+//!
+//! * [`DecodeState`] (here) owns the cache storage and *all* window
+//!   bookkeeping — the full token history per slot, the live context
+//!   window (the last `seq − 1` tokens once the history overflows, the
+//!   exact rule of the old full-recompute loop), and the
+//!   incremental-vs-invalidate decision ([`DecodeState::pending`]): once
+//!   the window slides, every cached position's token/positional pairing
+//!   changes, so the cache is dropped and the executor re-prefills the
+//!   whole window. Keeping this logic in one kernel-agnostic place is
+//!   what makes the incremental and recompute paths provably see the
+//!   same windows.
+//! * `sparse::CompiledModel` implements [`prefill`/`decode`]
+//!   (`crate::runtime::CompiledForward::prefill`) natively against the
+//!   cache — the per-token O(1)-forward path.
+//! * [`recompute_step`] (here) is the shared *fallback*: it replays a
+//!   session step through any full-sequence `fwd_logits_routed`, sizing
+//!   the batch to the stepped slots (never `eval_batch` padding rows).
+//!   The `Backend`/`CompiledForward` default methods use it, which is
+//!   how backends without KV kernels (e.g. the PJRT artifact contract)
+//!   keep the session API: they simply re-prefill the window every step.
+//!
+//! Parity is the invariant everything hangs off: for greedy decoding the
+//! incremental path must produce **identical token streams** to the
+//! full-recompute path, including across window slides —
+//! `tests/decode_session.rs` pins this on the dense, compiled-recompute,
+//! and compiled-incremental paths, with last-position logits within 1e-5.
+
+use crate::model::ModelConfig;
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{bail, ensure, Result};
+
+/// Output of one session step ([`crate::runtime::CompiledForward::prefill`]
+/// or `decode`): the model state at each stepped slot's current last
+/// position — exactly what a serving loop needs to sample the next token
+/// and account expert traffic, and nothing it would throw away.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// `[n, vocab]` logits at the last position, one row per stepped slot
+    /// (in step order).
+    pub logits: Tensor,
+    /// `[L, n, K]` router selections at the same positions (−1 = masked
+    /// leftover slot); `None` when the executor exposes no routing.
+    pub routing: Option<IntTensor>,
+}
+
+/// Per-layer, per-slot K/V caches plus position counters for a batch of
+/// decode sessions. Created by `new_session` on a backend or compiled
+/// executor; one slot holds one live sequence (the serving coordinator
+/// recycles slots as requests retire).
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    seq: usize,
+    d_model: usize,
+    n_slots: usize,
+    /// Per layer: K rows, `[n_slots · seq · d_model]` (slot-major).
+    k: Vec<Vec<f32>>,
+    /// Per layer: V rows, same layout as `k`.
+    v: Vec<Vec<f32>>,
+    /// Full token history per slot (prompt + accepted tokens).
+    hist: Vec<Vec<i32>>,
+    /// History index of the token cached at window position 0.
+    cached_from: Vec<usize>,
+    /// Number of cached window positions per slot.
+    cached: Vec<usize>,
+}
+
+impl DecodeState {
+    /// Fresh state with `slots` empty sequence slots for `cfg`-shaped
+    /// executors.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> DecodeState {
+        let per_layer = slots * cfg.seq * cfg.d_model;
+        DecodeState {
+            seq: cfg.seq,
+            d_model: cfg.d_model,
+            n_slots: slots,
+            k: (0..cfg.n_layers).map(|_| vec![0f32; per_layer]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0f32; per_layer]).collect(),
+            hist: vec![Vec::new(); slots],
+            cached_from: vec![0; slots],
+            cached: vec![0; slots],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Whether this state's cache geometry matches `cfg` (executors check
+    /// before touching the cache).
+    pub fn compatible(&self, cfg: &ModelConfig) -> bool {
+        self.seq == cfg.seq && self.d_model == cfg.d_model && self.k.len() == cfg.n_layers
+    }
+
+    /// Tokens in the slot's full history (prompt + accepted tokens).
+    pub fn hist_len(&self, slot: usize) -> usize {
+        self.hist[slot].len()
+    }
+
+    /// Begin a fresh sequence in `slot`, recycling whatever lived there.
+    /// Empty prompts get a single BOS token — the same floor the
+    /// full-recompute decode loop applied.
+    pub fn begin(&mut self, slot: usize, prompt: &[i32]) {
+        let h = &mut self.hist[slot];
+        h.clear();
+        if prompt.is_empty() {
+            h.push(crate::data::BOS);
+        } else {
+            h.extend_from_slice(prompt);
+        }
+        self.cached_from[slot] = 0;
+        self.cached[slot] = 0;
+    }
+
+    /// Append an accepted token to the slot's history. The next
+    /// `prefill`/`decode` step computes its position.
+    pub fn push(&mut self, slot: usize, tok: i32) {
+        self.hist[slot].push(tok);
+    }
+
+    /// Free a slot (serving-side recycling on request retirement).
+    pub fn reset(&mut self, slot: usize) {
+        self.hist[slot].clear();
+        self.cached_from[slot] = 0;
+        self.cached[slot] = 0;
+    }
+
+    fn window_start(&self, slot: usize) -> usize {
+        let n = self.hist[slot].len();
+        if n >= self.seq {
+            // keep the tail (the live context), drop oldest tokens — the
+            // exact keep-(seq−1) rule of the full-recompute decode loop
+            n - (self.seq - 1)
+        } else {
+            0
+        }
+    }
+
+    /// The live context window: what a full-sequence forward would see
+    /// for this slot right now.
+    pub fn window(&self, slot: usize) -> &[i32] {
+        &self.hist[slot][self.window_start(slot)..]
+    }
+
+    /// True once the window no longer starts at history position 0 (the
+    /// sequence overflowed `seq` and old tokens fell off the front).
+    pub fn slid(&self, slot: usize) -> bool {
+        self.window_start(slot) > 0
+    }
+
+    /// Cached window positions (0 after a slide until the next step
+    /// re-prefills).
+    pub fn cached_len(&self, slot: usize) -> usize {
+        self.cached[slot]
+    }
+
+    /// Plan the next incremental step for `slot`: if the window slid
+    /// since the last committed step, the cache is invalidated (every
+    /// cached position now pairs a different token with its positional
+    /// embedding) and the whole window is returned for re-prefill;
+    /// otherwise only the uncached suffix is. Returns `(first window
+    /// position to compute, the tokens at those positions)`; the executor
+    /// runs its kernels and then calls [`DecodeState::commit`].
+    pub fn pending(&mut self, slot: usize) -> (usize, Vec<i32>) {
+        let ws = self.window_start(slot);
+        if self.cached_from[slot] != ws {
+            self.cached_from[slot] = ws;
+            self.cached[slot] = 0;
+        }
+        let pos0 = self.cached[slot];
+        (pos0, self.hist[slot][ws + pos0..].to_vec())
+    }
+
+    /// Record that `n` more window positions are now cached.
+    pub fn commit(&mut self, slot: usize, n: usize) {
+        self.cached[slot] += n;
+        debug_assert!(self.cached[slot] <= self.seq);
+    }
+
+    /// One layer's K/V cache rows for `slot`, each `[seq, d_model]`
+    /// row-major — the executor writes new positions and attends over
+    /// `0..=pos`.
+    pub fn kv_mut(&mut self, layer: usize, slot: usize) -> (&mut [f32], &mut [f32]) {
+        let n = self.seq * self.d_model;
+        (
+            &mut self.k[layer][slot * n..(slot + 1) * n],
+            &mut self.v[layer][slot * n..(slot + 1) * n],
+        )
+    }
+
+    /// Shared-borrow view of one layer's K/V cache rows for `slot`.
+    pub fn kv(&self, layer: usize, slot: usize) -> (&[f32], &[f32]) {
+        let n = self.seq * self.d_model;
+        (
+            &self.k[layer][slot * n..(slot + 1) * n],
+            &self.v[layer][slot * n..(slot + 1) * n],
+        )
+    }
+}
+
+/// Greedy sampling that never emits PAD (token id 0) — THE decode policy
+/// shared by the serving coordinator and the eval harness's generator, so
+/// the two loops cannot drift.
+pub fn greedy_token(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (t, &x) in row.iter().enumerate().skip(1) {
+        if x > best_v {
+            best = t;
+            best_v = x;
+        }
+    }
+    best as i32
+}
+
+/// Replay one session step through a full-sequence forward — the shared
+/// fallback behind the `Backend`/`CompiledForward` default `prefill`/
+/// `decode` methods (and the explicit full-recompute arms of the decode
+/// benches). Builds a `[n, seq]` batch sized to the stepped `slots` (a
+/// single active sequence never pays for padding rows), runs `fwd`, and
+/// gathers each slot's last-position logits/routing into a
+/// [`StepOutput`]. Semantically this re-prefills every slot's whole
+/// window on every step; it exists so executors without KV-cache kernels
+/// still speak the session API.
+pub fn recompute_step<F>(
+    cfg: &ModelConfig,
+    state: &DecodeState,
+    slots: &[usize],
+    fwd: F,
+) -> Result<StepOutput>
+where
+    F: FnOnce(&IntTensor) -> Result<(Tensor, Option<IntTensor>)>,
+{
+    let (n, s, v) = (slots.len(), cfg.seq, cfg.vocab);
+    ensure!(n > 0, "recompute_step: no slots to step");
+    let mut tokens = IntTensor::zeros(&[n, s]);
+    let mut last = Vec::with_capacity(n);
+    for (i, &slot) in slots.iter().enumerate() {
+        let win = state.window(slot);
+        if win.is_empty() {
+            bail!("recompute_step: slot {slot} was never begun");
+        }
+        tokens.row_mut(i)[..win.len()].copy_from_slice(win);
+        last.push(win.len() - 1);
+    }
+    let (logits, routing) = fwd(&tokens)?;
+    let mut out = vec![0f32; n * v];
+    for (i, &pos) in last.iter().enumerate() {
+        out[i * v..(i + 1) * v].copy_from_slice(&logits.data()[(i * s + pos) * v..][..v]);
+    }
+    let routing = match routing {
+        Some(r) => {
+            let (nl, k) = (cfg.n_layers, cfg.top_k);
+            let t_total = n * s;
+            let mut sel = vec![-1i32; nl * n * k];
+            for l in 0..nl {
+                for (i, &pos) in last.iter().enumerate() {
+                    let src = &r.data()[(l * t_total + i * s + pos) * k..][..k];
+                    sel[(l * n + i) * k..][..k].copy_from_slice(src);
+                }
+            }
+            Some(IntTensor::new(&[nl, n, k], sel)?)
+        }
+        None => None,
+    };
+    Ok(StepOutput {
+        logits: Tensor::new(&[n, v], out)?,
+        routing,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::test_tiny()
+    }
+
+    #[test]
+    fn begin_push_window_bookkeeping() {
+        let c = cfg();
+        let mut st = DecodeState::new(&c, 2);
+        assert!(st.compatible(&c));
+        assert_eq!(st.slots(), 2);
+        st.begin(0, &[5, 6, 7]);
+        assert_eq!(st.hist_len(0), 3);
+        assert_eq!(st.window(0), &[5, 6, 7]);
+        assert!(!st.slid(0));
+        st.push(0, 8);
+        assert_eq!(st.window(0), &[5, 6, 7, 8]);
+        // other slots untouched
+        assert_eq!(st.hist_len(1), 0);
+        st.reset(0);
+        assert_eq!(st.hist_len(0), 0);
+    }
+
+    #[test]
+    fn empty_prompt_gets_bos() {
+        let mut st = DecodeState::new(&cfg(), 1);
+        st.begin(0, &[]);
+        assert_eq!(st.window(0), &[crate::data::BOS]);
+    }
+
+    #[test]
+    fn pending_is_incremental_until_the_window_slides() {
+        let c = cfg();
+        let mut st = DecodeState::new(&c, 1);
+        st.begin(0, &[2, 3, 4]);
+        let (pos0, toks) = st.pending(0);
+        assert_eq!((pos0, toks.as_slice()), (0, &[2, 3, 4][..]));
+        st.commit(0, 3);
+        assert_eq!(st.cached_len(0), 3);
+        st.push(0, 5);
+        let (pos0, toks) = st.pending(0);
+        assert_eq!((pos0, toks.as_slice()), (3, &[5][..]));
+        st.commit(0, 1);
+
+        // grow the history to exactly seq: the window keeps the last
+        // seq − 1 tokens and the cache is invalidated
+        for t in 0..(c.seq - 4) as i32 {
+            st.push(0, 10 + t);
+        }
+        assert_eq!(st.hist_len(0), c.seq);
+        assert!(st.slid(0));
+        assert_eq!(st.window(0).len(), c.seq - 1);
+        let (pos0, toks) = st.pending(0);
+        assert_eq!(pos0, 0, "slide must invalidate the cache");
+        assert_eq!(toks.len(), c.seq - 1);
+        assert_eq!(toks[0], st.window(0)[0]);
+        st.commit(0, toks.len());
+        // every further token slides again: full re-prefill each step
+        st.push(0, 99);
+        let (pos0, toks) = st.pending(0);
+        assert_eq!(pos0, 0);
+        assert_eq!(toks.len(), c.seq - 1);
+        assert_eq!(*toks.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn greedy_never_picks_pad() {
+        // PAD (index 0) has the largest logit but must be skipped
+        let row = vec![9.0, 1.0, 3.0, 2.0];
+        assert_eq!(greedy_token(&row), 2);
+        // ties resolve to the first maximum (strict >)
+        let row = vec![0.0, 4.0, 4.0];
+        assert_eq!(greedy_token(&row), 1);
+    }
+
+    #[test]
+    fn kv_views_are_per_slot_and_per_layer() {
+        let c = cfg();
+        let mut st = DecodeState::new(&c, 2);
+        {
+            let (k, v) = st.kv_mut(1, 1);
+            assert_eq!(k.len(), c.seq * c.d_model);
+            assert_eq!(v.len(), c.seq * c.d_model);
+            k[0] = 7.0;
+        }
+        let (k0, _) = st.kv(1, 0);
+        assert!(k0.iter().all(|&x| x == 0.0), "slot 0 cache must be untouched");
+        let (k1, _) = st.kv(1, 1);
+        assert_eq!(k1[0], 7.0);
+    }
+}

@@ -25,7 +25,18 @@
 //!   reduction (`runtime::native::masked_loss`) on the compiled logits,
 //!   so `EvalHarness` can run multiple choice, greedy generation, and
 //!   perplexity entirely on the compiled path — parity with the dense
-//!   reports is pinned by `tests/eval_parity.rs`.
+//!   reports is pinned by `tests/eval_parity.rs`;
+//! * decoding runs through **incremental sessions**
+//!   (`crate::runtime::CompiledForward::prefill`/`decode` over a
+//!   [`crate::runtime::DecodeState`]): prompts fill per-layer, per-slot
+//!   K/V caches once, then each generated token costs one attention
+//!   query against the cache plus a one-token expert-gather — O(1)
+//!   positions per token where the full-recompute loop pays the whole
+//!   window. Every kernel is the per-row twin of the full forward
+//!   (shared `attn_ctx_row`, shared expert-gather), so incremental
+//!   greedy streams are *identical* to full recompute — including across
+//!   window slides, where the session invalidates the cache and
+//!   re-prefills (pinned by `tests/decode_session.rs`).
 //!
 //! [`CompiledModel`] implements [`crate::runtime::CompiledForward`], which
 //! is how `coordinator::Batcher` picks it up for the serving decode loop
@@ -40,12 +51,14 @@ pub use csr::{csr_bytes, CsrMatrix};
 
 use crate::model::{ModelConfig, ParamSet};
 use crate::runtime::native::{
-    attention_fwd, embed_fwd, masked_loss, matmul, rmsnorm_fwd, route_token,
+    attention_fwd, attn_ctx_row, embed_fwd, masked_loss, matmul, rmsnorm_fwd, route_token,
 };
-use crate::runtime::{check_tokens, count_execution, CompiledForward, LossOutput};
+use crate::runtime::{
+    check_tokens, count_execution, CompiledForward, DecodeState, LossOutput, StepOutput,
+};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::json::Json;
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 /// Knobs of the compile pass.
 #[derive(Clone, Debug)]
@@ -150,6 +163,156 @@ struct CompiledLayer {
     experts: Vec<CompiledExpert>,
     /// `[E]` 1.0 = alive — the −1e9 router offset mask.
     expert_mask: Vec<f32>,
+}
+
+/// Scratch buffers for the batched expert-gather, reused across layers
+/// and (on the incremental session path) across every slot of one step,
+/// so the decode hot loop stays allocation-light. `cap` is the most
+/// tokens one gather will see.
+struct MoeScratch {
+    /// Per expert: the (token, slot, gate) triples routed to it.
+    groups: Vec<Vec<(usize, usize, f32)>>,
+    /// Gathered expert inputs, `[cap · D]`.
+    xbuf: Vec<f32>,
+    /// Gathered hidden activations, `[cap · F]`.
+    hidbuf: Vec<f32>,
+    /// Gathered expert outputs, `[cap · D]`.
+    outbuf: Vec<f32>,
+    /// Per-(token, slot) weighted outputs, `[cap · K · D]`, reduced in
+    /// slot order afterwards.
+    slot_out: Vec<f32>,
+    /// Router logits/probabilities scratch, `[E]`.
+    lg: Vec<f32>,
+    /// Top-k selection scratch, `[E]`.
+    used: Vec<bool>,
+    /// Per-token reduction scratch, `[D]`.
+    ytok: Vec<f32>,
+    /// Expert id per (token, slot) of the latest gather, `[cap · K]`
+    /// (−1 = masked leftover slot).
+    sel: Vec<i32>,
+}
+
+impl MoeScratch {
+    fn new(cfg: &ModelConfig, cap: usize) -> MoeScratch {
+        let (d, f, e, k) = (cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k);
+        MoeScratch {
+            groups: vec![Vec::new(); e],
+            xbuf: vec![0f32; cap * d],
+            hidbuf: vec![0f32; cap * f],
+            outbuf: vec![0f32; cap * d],
+            slot_out: vec![0f32; cap * k * d],
+            lg: vec![0f32; e],
+            used: vec![false; e],
+            ytok: vec![0f32; d],
+            sel: vec![-1i32; cap * k],
+        }
+    }
+}
+
+/// One MoE layer over `x` (`[n, D]` post-ln2 rows) through the batched
+/// expert-gather, adding the block output into the residual rows `h`.
+/// Fills `scr.sel[..n·K]` with the per-(token, slot) expert selections.
+///
+/// Three phases, shared verbatim by the full-sequence forward and the
+/// incremental decode session: (1) route every token, grouping positions
+/// by selected expert; (2) stream each expert's (CSR or dense) weight
+/// rows once per *group* rather than once per token; (3) reduce the
+/// per-(token, slot) outputs in slot order — the dense path's exact
+/// floating-point accumulation order, so the logits cannot drift between
+/// paths or batch compositions.
+fn moe_gather(
+    layer: &CompiledLayer,
+    cfg: &ModelConfig,
+    x: &[f32],
+    n: usize,
+    h: &mut [f32],
+    scr: &mut MoeScratch,
+) {
+    let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
+    let MoeScratch {
+        groups,
+        xbuf,
+        hidbuf,
+        outbuf,
+        slot_out,
+        lg,
+        used,
+        ytok,
+        sel,
+    } = scr;
+    // phase 1: route every token, grouping positions by expert
+    for g in groups.iter_mut() {
+        g.clear();
+    }
+    sel[..n * k].fill(-1);
+    for t in 0..n {
+        let xt = &x[t * d..t * d + d];
+        route_token(
+            xt,
+            &layer.router,
+            &layer.expert_mask,
+            k,
+            &mut lg[..],
+            &mut used[..],
+            |slot, best, g| {
+                if g <= 0.0 {
+                    // masked leftover slot — matches the dense path
+                    return;
+                }
+                sel[t * k + slot] = best as i32;
+                groups[best].push((t, slot, g));
+            },
+        );
+    }
+    // phase 2: stream each expert's rows once per token *group*
+    slot_out[..n * k * d].fill(0.0);
+    for (ei, group) in groups.iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        // a Dead expert can only be selected when a layer is fully
+        // masked; its (zeroed) weights contribute nothing either way,
+        // so skipping preserves equivalence
+        if let CompiledExpert::Alive { w1, w2 } = &layer.experts[ei] {
+            let gn = group.len();
+            for (r, &(t, _slot, _g)) in group.iter().enumerate() {
+                xbuf[r * d..r * d + d].copy_from_slice(&x[t * d..t * d + d]);
+            }
+            hidbuf[..gn * f].fill(0.0);
+            w1.matmul_acc(&xbuf[..gn * d], &mut hidbuf[..gn * f], gn);
+            for hv in hidbuf[..gn * f].iter_mut() {
+                if *hv < 0.0 {
+                    *hv = 0.0;
+                }
+            }
+            outbuf[..gn * d].fill(0.0);
+            w2.matmul_acc(&hidbuf[..gn * f], &mut outbuf[..gn * d], gn);
+            for (r, &(t, slot, g)) in group.iter().enumerate() {
+                let orow = &outbuf[r * d..r * d + d];
+                let dst = &mut slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
+                for (dv, &ov) in dst.iter_mut().zip(orow) {
+                    *dv = g * ov;
+                }
+            }
+        }
+    }
+    // phase 3: reduce per-slot outputs in slot order (the dense path's
+    // exact accumulation order) into the residual stream
+    for t in 0..n {
+        for y in ytok.iter_mut() {
+            *y = 0.0;
+        }
+        for slot in 0..k {
+            let src = &slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
+            for (y, &sv) in ytok.iter_mut().zip(src) {
+                *y += sv;
+            }
+        }
+        let hrow = &mut h[t * d..t * d + d];
+        for (hv, &yv) in hrow.iter_mut().zip(ytok.iter()) {
+            *hv += yv;
+        }
+    }
 }
 
 /// What the compile pass decided, for reports and benches.
@@ -290,7 +453,7 @@ impl CompiledModel {
         check_tokens(&self.config, tokens)?;
         let cfg = &self.config;
         let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
-        let (d, v, e, f, k) = (cfg.d_model, cfg.vocab, cfg.n_experts, cfg.d_ff, cfg.top_k);
+        let (d, v, k) = (cfg.d_model, cfg.vocab, cfg.top_k);
         let t_total = bsz * s;
 
         let mut h = embed_fwd(&self.embed, &self.pos, tokens, d, v)?;
@@ -300,18 +463,7 @@ impl CompiledModel {
         } else {
             Vec::new()
         };
-        // routing scratch reused across layers and tokens
-        let mut lg = vec![0f32; e];
-        let mut used = vec![false; e];
-        // expert-gather scratch: per-expert (token, slot, gate) groups,
-        // gathered inputs / hiddens / outputs, and the per-(token, slot)
-        // weighted outputs reduced in slot order afterwards
-        let mut groups: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); e];
-        let mut xbuf = vec![0f32; t_total * d];
-        let mut hidbuf = vec![0f32; t_total * f];
-        let mut outbuf = vec![0f32; t_total * d];
-        let mut slot_out = vec![0f32; t_total * k * d];
-        let mut ytok = vec![0f32; d];
+        let mut scr = MoeScratch::new(cfg, t_total);
 
         for (l, layer) in self.layers.iter().enumerate() {
             let a_in = rmsnorm_fwd(&h, &layer.ln1, d);
@@ -325,79 +477,10 @@ impl CompiledModel {
             }
 
             let x = rmsnorm_fwd(&h, &layer.ln2, d);
-            // phase 1: route every token, grouping positions by expert
-            for g in groups.iter_mut() {
-                g.clear();
-            }
-            for t in 0..t_total {
-                let xt = &x[t * d..t * d + d];
-                route_token(
-                    xt,
-                    &layer.router,
-                    &layer.expert_mask,
-                    k,
-                    &mut lg,
-                    &mut used,
-                    |slot, best, g| {
-                        if g <= 0.0 {
-                            // masked leftover slot — matches the dense path
-                            return;
-                        }
-                        if want_routing {
-                            routing[(l * t_total + t) * k + slot] = best as i32;
-                        }
-                        groups[best].push((t, slot, g));
-                    },
-                );
-            }
-            // phase 2: stream each expert's rows once per token *group*
-            slot_out.fill(0.0);
-            for (ei, group) in groups.iter().enumerate() {
-                if group.is_empty() {
-                    continue;
-                }
-                // a Dead expert can only be selected when a layer is
-                // fully masked; its (zeroed) weights contribute nothing
-                // either way, so skipping preserves equivalence
-                if let CompiledExpert::Alive { w1, w2 } = &layer.experts[ei] {
-                    let gn = group.len();
-                    for (r, &(t, _slot, _g)) in group.iter().enumerate() {
-                        xbuf[r * d..r * d + d].copy_from_slice(&x[t * d..t * d + d]);
-                    }
-                    hidbuf[..gn * f].fill(0.0);
-                    w1.matmul_acc(&xbuf[..gn * d], &mut hidbuf[..gn * f], gn);
-                    for hv in hidbuf[..gn * f].iter_mut() {
-                        if *hv < 0.0 {
-                            *hv = 0.0;
-                        }
-                    }
-                    outbuf[..gn * d].fill(0.0);
-                    w2.matmul_acc(&hidbuf[..gn * f], &mut outbuf[..gn * d], gn);
-                    for (r, &(t, slot, g)) in group.iter().enumerate() {
-                        let orow = &outbuf[r * d..r * d + d];
-                        let dst = &mut slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
-                        for di in 0..d {
-                            dst[di] = g * orow[di];
-                        }
-                    }
-                }
-            }
-            // phase 3: reduce per-slot outputs in slot order (the dense
-            // path's exact accumulation order) into the residual stream
-            for t in 0..t_total {
-                for y in ytok.iter_mut() {
-                    *y = 0.0;
-                }
-                for slot in 0..k {
-                    let src = &slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
-                    for di in 0..d {
-                        ytok[di] += src[di];
-                    }
-                }
-                let hrow = &mut h[t * d..t * d + d];
-                for di in 0..d {
-                    hrow[di] += ytok[di];
-                }
+            moe_gather(layer, cfg, &x, t_total, &mut h, &mut scr);
+            if want_routing {
+                routing[l * t_total * k..(l + 1) * t_total * k]
+                    .copy_from_slice(&scr.sel[..t_total * k]);
             }
         }
 
@@ -412,6 +495,139 @@ impl CompiledModel {
         };
         Ok((logits, routing))
     }
+
+    /// One incremental session step over `slots` (each distinct and
+    /// previously begun): process every slot's uncached window suffix
+    /// through the KV-cached kernels — attention computes only the new
+    /// query positions against the cached K/V, the expert-gather runs
+    /// only over the new tokens, and logits/routing are produced at the
+    /// last position alone. On a window slide, [`DecodeState::pending`]
+    /// hands back the whole window (cache invalidation + re-prefill),
+    /// which is exactly what the full-recompute path pays every step.
+    ///
+    /// Every kernel here is the per-row-identical twin of the
+    /// full-sequence forward (`embed_fwd` arithmetic, shared
+    /// `attn_ctx_row`, shared `moe_gather`, the same `WeightMat`
+    /// dispatch), so incremental logits replay the full path's bit for
+    /// bit — the greedy-parity contract of the session API. One
+    /// [`crate::runtime::EXECUTIONS`] tick per step, like one batched
+    /// forward.
+    fn session_step(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
+        let cfg = &self.config;
+        ensure!(
+            state.compatible(cfg),
+            "decode state does not match config '{}'",
+            cfg.name
+        );
+        ensure!(!slots.is_empty(), "session_step: no slots to step");
+        count_execution();
+        let (d, v, k, nh) = (cfg.d_model, cfg.vocab, cfg.top_k, cfg.n_heads);
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let n_out = slots.len();
+
+        // plan every slot first (this is where slide-invalidation
+        // happens), so scratch can be sized to the largest suffix
+        let mut plans = Vec::with_capacity(n_out);
+        for &slot in slots {
+            ensure!(slot < state.slots(), "slot {slot} out of range");
+            let (pos0, toks) = state.pending(slot);
+            ensure!(
+                !toks.is_empty(),
+                "slot {slot} has no pending tokens (not begun, or stepped twice)"
+            );
+            ensure!(pos0 + toks.len() <= cfg.seq, "slot {slot} overflows the window");
+            plans.push((slot, pos0, toks));
+        }
+        let cap = plans.iter().map(|(_, _, t)| t.len()).max().unwrap_or(1);
+        // one scratch allocation set per session step, shared by every
+        // slot and layer — a one-token decode must not pay per-token
+        // allocator traffic on the path this module exists to speed up
+        let mut scr = MoeScratch::new(cfg, cap);
+        let mut scores = vec![0f32; cfg.seq];
+        let mut h_buf = vec![0f32; cap * d];
+        let mut qkv_buf = vec![0f32; cap * 3 * d];
+        let mut ctx_buf = vec![0f32; cap * d];
+        let mut attn_buf = vec![0f32; cap * d];
+
+        let mut logits = vec![0f32; n_out * v];
+        let mut sel_out = vec![-1i32; cfg.n_layers * n_out * k];
+        for (oi, (slot, pos0, toks)) in plans.iter().enumerate() {
+            let (slot, pos0, n) = (*slot, *pos0, toks.len());
+            let h = &mut h_buf[..n * d];
+            let qkv = &mut qkv_buf[..n * 3 * d];
+            let ctx = &mut ctx_buf[..n * d];
+            let attn_out = &mut attn_buf[..n * d];
+            // embed the new tokens at their window positions (overwrites
+            // every row, so no pre-zero is needed)
+            for (i, &tok) in toks.iter().enumerate() {
+                if tok < 0 || tok as usize >= v {
+                    bail!("token id {tok} out of vocab range 0..{v}");
+                }
+                let dst = &mut h[i * d..(i + 1) * d];
+                let src = &self.embed[tok as usize * d..][..d];
+                let prow = &self.pos[(pos0 + i) * d..][..d];
+                for z in 0..d {
+                    dst[z] = src[z] + prow[z];
+                }
+            }
+            for (l, layer) in self.layers.iter().enumerate() {
+                let a_in = rmsnorm_fwd(h, &layer.ln1, d);
+                qkv.fill(0.0);
+                layer.wqkv.matmul_acc(&a_in, qkv, n);
+                // append the new K/V rows to the cache, then attend each
+                // new query over every cached position (incl. the new
+                // ones — a multi-token prefill is causal within itself)
+                {
+                    let (kc, vc) = state.kv_mut(l, slot);
+                    for i in 0..n {
+                        kc[(pos0 + i) * d..][..d].copy_from_slice(&qkv[i * 3 * d + d..][..d]);
+                        vc[(pos0 + i) * d..][..d]
+                            .copy_from_slice(&qkv[i * 3 * d + 2 * d..][..d]);
+                    }
+                }
+                let (kc, vc) = state.kv(l, slot);
+                // ctx rows are fully overwritten per head (heads
+                // partition d), so no pre-zero is needed
+                for i in 0..n {
+                    for hix in 0..nh {
+                        attn_ctx_row(
+                            &qkv[i * 3 * d + hix * hd..][..hd],
+                            kc,
+                            d,
+                            hix * hd,
+                            vc,
+                            d,
+                            hix * hd,
+                            pos0 + i + 1,
+                            scale,
+                            &mut scores,
+                            &mut ctx[i * d + hix * hd..][..hd],
+                        );
+                    }
+                }
+                attn_out.fill(0.0);
+                layer.wo.matmul_acc(ctx, attn_out, n);
+                for (hv, &av) in h.iter_mut().zip(attn_out.iter()) {
+                    *hv += av;
+                }
+                let x = rmsnorm_fwd(h, &layer.ln2, d);
+                moe_gather(layer, cfg, &x, n, h, &mut scr);
+                // routing is reported for the last new position only —
+                // the position the serving loop samples and accounts
+                sel_out[(l * n_out + oi) * k..][..k]
+                    .copy_from_slice(&scr.sel[(n - 1) * k..n * k]);
+            }
+            let hf = rmsnorm_fwd(&h[(n - 1) * d..n * d], &self.ln_f, d);
+            self.lm_head
+                .matmul_acc(&hf, &mut logits[oi * v..(oi + 1) * v], 1);
+            state.commit(slot, n);
+        }
+        Ok(StepOutput {
+            logits: Tensor::new(&[n_out, v], logits)?,
+            routing: Some(IntTensor::new(&[cfg.n_layers, n_out, k], sel_out)?),
+        })
+    }
 }
 
 impl CompiledForward for CompiledModel {
@@ -420,6 +636,10 @@ impl CompiledForward for CompiledModel {
             "compiled({}/{} csr, {} dead)",
             self.stats.csr_tensors, self.stats.tensors, self.stats.experts_dead
         )
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
     }
 
     fn fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor> {
@@ -436,6 +656,24 @@ impl CompiledForward for CompiledModel {
         // same masked-NLL reduction as the dense backend (shared code):
         // identical logits can never score differently across paths
         Ok(masked_loss(logits.data(), targets, bsz, s, self.config.vocab))
+    }
+
+    /// Native incremental prefill: caches the prompt's K/V and returns
+    /// last-position logits without computing a single wasted position.
+    fn prefill(&self, state: &mut DecodeState, slot: usize, prompt: &[i32]) -> Result<StepOutput> {
+        state.begin(slot, prompt);
+        self.session_step(state, &[slot])
+    }
+
+    /// Native incremental decode: one new attention query + one-token
+    /// expert-gather per stepped slot (full window re-prefill only after
+    /// a window slide).
+    fn decode(&self, state: &mut DecodeState, steps: &[(usize, i32)]) -> Result<StepOutput> {
+        for &(slot, tok) in steps {
+            state.push(slot, tok);
+        }
+        let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
+        self.session_step(state, &slots)
     }
 }
 
@@ -667,6 +905,52 @@ mod tests {
         // layer entries: n_layers + lm_head pseudo-layer
         assert_eq!(after.layers.len(), ps.config.n_layers + 1);
         assert_eq!(after.layers.last().unwrap().layer, ps.config.n_layers);
+    }
+
+    #[test]
+    fn incremental_session_replays_the_full_forward() {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 11);
+        crate::pruning::unstructured::magnitude_prune(&mut ps, 0.7).unwrap();
+        let cm = CompiledModel::compile(&ps, &SparseConfig::default());
+        let prompt: Vec<i32> = (0..12).map(|i| 2 + (i % 9)).collect();
+        // full forward over the padded window
+        let mut tokens = IntTensor::zeros(&[1, cfg.seq]);
+        tokens.row_mut(0)[..prompt.len()].copy_from_slice(&prompt);
+        let (full, full_routing) = cm.fwd_logits_routed(&tokens).unwrap();
+        let pos = prompt.len() - 1;
+        let want = &full.data()[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        // prefill must reproduce the last-position logits and routing
+        let mut st = cm.new_session(1);
+        let out = cm.prefill(&mut st, 0, &prompt).unwrap();
+        assert_eq!(out.logits.shape(), &[1, cfg.vocab]);
+        for (a, b) in out.logits.row(0).iter().zip(want) {
+            assert!((a - b).abs() <= 1e-5, "{a} vs {b}");
+        }
+        let sess_r = out.routing.expect("routing");
+        let full_r = full_routing.expect("routing");
+        for l in 0..cfg.n_layers {
+            assert_eq!(
+                &sess_r.data()[l * cfg.top_k..(l + 1) * cfg.top_k],
+                &full_r.data()[(l * cfg.seq + pos) * cfg.top_k..][..cfg.top_k],
+            );
+        }
+        assert_eq!(st.cached_len(0), prompt.len());
+    }
+
+    #[test]
+    fn session_step_rejects_mismatched_state() {
+        let cfg = ModelConfig::test_tiny();
+        let ps = ParamSet::init(&cfg, 13);
+        let cm = CompiledModel::compile(&ps, &SparseConfig::default());
+        let mut other = ModelConfig::test_tiny();
+        other.d_model = 32;
+        other.n_heads = 1;
+        let mut st = crate::runtime::DecodeState::new(&other, 1);
+        assert!(cm.prefill(&mut st, 0, &[2, 3]).is_err());
+        // an empty step list is an error, not a panic
+        let mut st = cm.new_session(1);
+        assert!(cm.decode(&mut st, &[]).is_err());
     }
 
     #[test]

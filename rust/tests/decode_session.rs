@@ -1,0 +1,283 @@
+//! Incremental-decode parity gate: KV-cached sessions must replay the
+//! full-recompute decode loop exactly.
+//!
+//! Three execution paths generate greedy token streams over the same
+//! models and prompts:
+//!
+//! 1. **reference** — the old full-recompute loop, inlined here: rebuild
+//!    the (keep-tail-windowed) sequence every step, run the compiled
+//!    full-sequence forward, read logits at the last live position;
+//! 2. **compiled incremental** — `CompiledModel`'s `prefill`/`decode`
+//!    overrides (per-layer K/V caches, one-position attention, one-token
+//!    expert-gather, window-slide invalidation + re-prefill);
+//! 3. **dense fallback** — the `Backend` default session methods
+//!    (full recompute through `fwd_logits_routed` on a right-sized
+//!    batch).
+//!
+//! The streams must be **identical** (greedy decode leaves no tolerance
+//! to hide in), including generations that overflow `seq` and slide the
+//! window — the cache-invalidation edge. Last-position logits are pinned
+//! at 1e-5 between the incremental and recompute paths.
+
+use stun::data::BOS;
+use stun::model::{ModelConfig, ParamSet};
+use stun::pruning::unstructured;
+use stun::runtime::session::{greedy_token, recompute_step};
+use stun::runtime::{Backend, CompiledForward, DecodeState, NativeBackend};
+use stun::tensor::IntTensor;
+
+fn tiny() -> NativeBackend {
+    NativeBackend::new(ModelConfig::test_tiny())
+}
+
+/// Model variants the session paths must agree on: unpruned dense,
+/// 70%-unstructured (CSR kernels engaged), and expert-pruned.
+fn model_variants(cfg: &ModelConfig) -> Vec<(&'static str, ParamSet)> {
+    let base = ParamSet::init(cfg, 41);
+    let mut sparse = base.clone();
+    unstructured::magnitude_prune(&mut sparse, 0.7).unwrap();
+    let mut dead = base.clone();
+    dead.prune_expert(0, 1);
+    dead.prune_expert(1, 2);
+    vec![("dense", base), ("csr-0.7", sparse), ("expert-pruned", dead)]
+}
+
+/// The pre-session decode loop, verbatim: full forward over the padded
+/// window every step, logits at the last live position, greedy next
+/// token (never PAD), keep-tail window slide at `seq` overflow.
+fn reference_stream(
+    exec: &dyn CompiledForward,
+    prompt: &[i32],
+    n_tokens: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let cfg = exec.config().clone();
+    let (s, v) = (cfg.seq, cfg.vocab);
+    let mut seq: Vec<i32> = prompt.to_vec();
+    if seq.is_empty() {
+        seq.push(BOS);
+    }
+    let mut out = Vec::new();
+    let mut last_logits = Vec::new();
+    for _ in 0..n_tokens {
+        let mut win = seq.clone();
+        if win.len() >= s {
+            win.drain(0..win.len() - (s - 1));
+        }
+        let mut tokens = IntTensor::zeros(&[1, s]);
+        tokens.row_mut(0)[..win.len()].copy_from_slice(&win);
+        let (logits, _) = exec.fwd_logits_routed(&tokens).unwrap();
+        let pos = win.len() - 1;
+        let row = &logits.data()[pos * v..(pos + 1) * v];
+        last_logits = row.to_vec();
+        let tok = greedy_token(row);
+        out.push(tok);
+        seq.push(tok);
+    }
+    (out, last_logits)
+}
+
+/// Greedy stream through a session (`prefill` + one-token `decode`s),
+/// returning the tokens and the final step's logits row.
+fn session_stream<P, D>(
+    mut state: DecodeState,
+    mut prefill: P,
+    mut decode: D,
+    prompt: &[i32],
+    n_tokens: usize,
+) -> (Vec<i32>, Vec<f32>)
+where
+    P: FnMut(&mut DecodeState, &[i32]) -> stun::prelude::Result<stun::runtime::StepOutput>,
+    D: FnMut(&mut DecodeState, i32) -> stun::prelude::Result<stun::runtime::StepOutput>,
+{
+    let out0 = prefill(&mut state, prompt).unwrap();
+    assert_eq!(out0.logits.shape()[0], 1, "prefill returns one row per slot");
+    let mut last_logits = out0.logits.row(0).to_vec();
+    let mut toks = vec![greedy_token(out0.logits.row(0))];
+    for _ in 1..n_tokens {
+        let out = decode(&mut state, *toks.last().unwrap()).unwrap();
+        assert_eq!(
+            out.logits.shape()[0],
+            1,
+            "a single active sequence must never pay for padding rows"
+        );
+        last_logits = out.logits.row(0).to_vec();
+        toks.push(greedy_token(out.logits.row(0)));
+    }
+    (toks, last_logits)
+}
+
+fn assert_streams_match(cfg_name: &str, prompt_len: usize, n_tokens: usize) {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    for (label, params) in model_variants(&cfg) {
+        let compiled = backend.compile(&params).unwrap().expect("native compiles");
+        let prompt: Vec<i32> = (0..prompt_len as i32).map(|i| 2 + (i % 37)).collect();
+
+        let (want, want_logits) = reference_stream(compiled.as_ref(), &prompt, n_tokens);
+
+        // compiled incremental (KV-cached session)
+        let (inc, inc_logits) = session_stream(
+            compiled.new_session(1),
+            |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+            |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+            &prompt,
+            n_tokens,
+        );
+        assert_eq!(
+            inc, want,
+            "[{cfg_name}/{label}] incremental diverged from full recompute"
+        );
+        for (a, b) in inc_logits.iter().zip(&want_logits) {
+            assert!(
+                (a - b).abs() <= 1e-5,
+                "[{cfg_name}/{label}] last-position logits drifted: {a} vs {b}"
+            );
+        }
+
+        // dense Backend fallback session (full recompute per step)
+        let (dense, dense_logits) = session_stream(
+            backend.new_session(1),
+            |st: &mut DecodeState, p: &[i32]| backend.prefill(&params, st, 0, p),
+            |st: &mut DecodeState, t: i32| backend.decode(&params, st, &[(0, t)]),
+            &prompt,
+            n_tokens,
+        );
+        assert_eq!(
+            dense, want,
+            "[{cfg_name}/{label}] dense fallback diverged from full recompute"
+        );
+        for (a, b) in dense_logits.iter().zip(&want_logits) {
+            assert!(
+                (a - b).abs() <= 1e-5,
+                "[{cfg_name}/{label}] dense last-position logits drifted: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_matches_recompute_within_the_window() {
+    // prompt + generation fit comfortably inside seq=64: every decode
+    // step after prefill is a genuine one-position increment
+    assert_streams_match("in-window", 12, 8);
+}
+
+#[test]
+fn window_slide_keeps_all_paths_identical() {
+    // prompt of seq−3 plus 8 tokens crosses seq: the history overflows,
+    // the window slides every subsequent step, and the incremental path
+    // must invalidate + re-prefill to stay byte-identical
+    let s = ModelConfig::test_tiny().seq;
+    assert_streams_match("window-slide", s - 3, 8);
+}
+
+#[test]
+fn oversized_prompts_window_like_the_recompute_path() {
+    // a prompt already longer than seq is windowed to its last seq−1
+    // tokens at prefill time, exactly like the recompute loop
+    let s = ModelConfig::test_tiny().seq;
+    assert_streams_match("long-prompt", s + 9, 5);
+}
+
+#[test]
+fn empty_prompt_gets_bos_on_every_path() {
+    assert_streams_match("empty-prompt", 0, 4);
+}
+
+#[test]
+fn batched_decode_rows_match_single_slot_streams() {
+    // Two slots stepped together must produce the same streams as each
+    // stepped alone — the batched gather may regroup work across slots
+    // but never change per-token arithmetic.
+    let backend = tiny();
+    let params = ParamSet::init(backend.config(), 43);
+    let compiled = backend.compile(&params).unwrap().unwrap();
+    let pa: Vec<i32> = (0..10).map(|i| 3 + (i % 11)).collect();
+    let pb: Vec<i32> = (0..17).map(|i| 5 + (i % 7)).collect();
+    let n = 6;
+
+    let (solo_a, _) = session_stream(
+        compiled.new_session(1),
+        |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+        |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+        &pa,
+        n,
+    );
+    let (solo_b, _) = session_stream(
+        compiled.new_session(1),
+        |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+        |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+        &pb,
+        n,
+    );
+
+    let mut state = compiled.new_session(2);
+    let oa = compiled.prefill(&mut state, 0, &pa).unwrap();
+    let ob = compiled.prefill(&mut state, 1, &pb).unwrap();
+    let mut ta = greedy_token(oa.logits.row(0));
+    let mut tb = greedy_token(ob.logits.row(0));
+    let (mut got_a, mut got_b) = (vec![ta], vec![tb]);
+    for _ in 1..n {
+        let out = compiled.decode(&mut state, &[(0, ta), (1, tb)]).unwrap();
+        assert_eq!(out.logits.shape()[0], 2);
+        let r = out.routing.as_ref().expect("compiled path exposes routing");
+        assert_eq!(r.shape(), &[backend.config().n_layers, 2, backend.config().top_k]);
+        ta = greedy_token(out.logits.row(0));
+        tb = greedy_token(out.logits.row(1));
+        got_a.push(ta);
+        got_b.push(tb);
+    }
+    assert_eq!(got_a, solo_a);
+    assert_eq!(got_b, solo_b);
+}
+
+#[test]
+fn recompute_step_sizes_batch_to_stepped_slots() {
+    // the shared fallback builds [n, seq] from the stepped slots — a
+    // single slot means one row, regardless of eval_batch
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let params = ParamSet::init(&cfg, 47);
+    let mut state = DecodeState::new(&cfg, cfg.eval_batch);
+    state.begin(3, &[4, 5, 6]);
+    let out = recompute_step(&cfg, &state, &[3], |t| {
+        assert_eq!(t.shape(), &[1, cfg.seq], "batch must be sized to the active set");
+        backend.fwd_logits_routed(&params, t)
+    })
+    .unwrap();
+    assert_eq!(out.logits.shape(), &[1, cfg.vocab]);
+    let r = out.routing.expect("native backend exposes routing");
+    assert_eq!(r.shape(), &[cfg.n_layers, 1, cfg.top_k]);
+}
+
+#[test]
+fn session_routing_matches_full_forward_routing() {
+    // prefill's [L, 1, K] routing must equal the full forward's routing
+    // at the prompt's last position
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let mut params = ParamSet::init(&cfg, 53);
+    params.prune_expert(0, 0);
+    let compiled = backend.compile(&params).unwrap().unwrap();
+    let prompt: Vec<i32> = (0..9).map(|i| 2 + i).collect();
+
+    let mut state = compiled.new_session(1);
+    let out = compiled.prefill(&mut state, 0, &prompt).unwrap();
+    let sess_r = out.routing.expect("routing");
+
+    let mut tokens = IntTensor::zeros(&[1, cfg.seq]);
+    tokens.row_mut(0)[..prompt.len()].copy_from_slice(&prompt);
+    let (_, full_r) = compiled.fwd_logits_routed(&tokens).unwrap();
+    let full_r = full_r.expect("routing");
+    let pos = prompt.len() - 1;
+    for l in 0..cfg.n_layers {
+        for k in 0..cfg.top_k {
+            // sess_r is [L, 1, K]; full_r is [L, B·S, K] with B = 1
+            assert_eq!(
+                sess_r.data()[l * cfg.top_k + k],
+                full_r.data()[(l * cfg.seq + pos) * cfg.top_k + k],
+                "layer {l} slot {k}"
+            );
+        }
+    }
+}
