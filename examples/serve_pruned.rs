@@ -46,29 +46,45 @@ fn main() -> Result<()> {
 
     // memory budget (bytes) sized to the pruned working set: the dense
     // model must page experts, the pruned one fits — and pruned experts
-    // are cheaper per-expert (CSR bytes), so more of them stay resident
-    let budget = ExpertStore::working_set_bytes(&pruned);
+    // are cheaper per-expert (CSR bytes), so more of them stay resident.
+    // `--quant u16|u8` shrinks the accounting further (quantized serving).
+    let quant = QuantScheme::parse(&args.str_or("quant", "f32"))?;
+    let budget = ExpertStore::working_set_bytes(&pruned, QuantScheme::F32);
     println!(
-        "expert memory budget: {:.0} KB (dense needs {:.0} KB, pruned {:.0} KB)\n",
+        "expert memory budget: {:.0} KB (dense needs {:.0} KB, pruned {:.0} KB, \
+         pruned@{} {:.0} KB)\n",
         budget as f64 / 1024.0,
-        ExpertStore::working_set_bytes(&params) as f64 / 1024.0,
-        ExpertStore::working_set_bytes(&pruned) as f64 / 1024.0
+        ExpertStore::working_set_bytes(&params, QuantScheme::F32) as f64 / 1024.0,
+        ExpertStore::working_set_bytes(&pruned, QuantScheme::F32) as f64 / 1024.0,
+        quant.name(),
+        ExpertStore::working_set_bytes(&pruned, quant) as f64 / 1024.0
     );
 
     println!(
         "{:<12} {:>9} {:>9} {:>12} {:>8} {:>10} {:>10}",
         "model", "mem(KB)", "tok/s", "tok/s(eff)", "swaps", "p50", "p95"
     );
-    for (label, ps) in [("dense", &params), ("stun-pruned", &pruned)] {
+    let mut arms = vec![
+        ("dense".to_string(), &params, QuantScheme::F32),
+        ("stun-pruned".to_string(), &pruned, QuantScheme::F32),
+    ];
+    if quant.is_quantized() {
+        arms.push((format!("stun+{}", quant.name()), &pruned, quant));
+    }
+    for (label, ps, scheme) in arms {
         let store = ExpertStore::new(budget, Duration::from_micros(200));
-        let mut batcher = Batcher::new(backend, ps, store)?;
+        let scfg = SparseConfig {
+            quant: scheme,
+            ..Default::default()
+        };
+        let mut batcher = Batcher::with_config(backend, ps, store, true, true, &scfg)?;
         let queue = burst_workload(&cfg, n_requests, 8, 17);
         let (responses, m) = batcher.serve(queue)?;
         assert_eq!(responses.len(), n_requests);
         println!(
             "{:<12} {:>9.0} {:>9.1} {:>12.1} {:>8} {:>10.1?} {:>10.1?}",
             label,
-            ExpertStore::working_set_bytes(ps) as f64 / 1024.0,
+            ExpertStore::working_set_bytes(ps, scheme) as f64 / 1024.0,
             m.tokens_per_sec(),
             m.effective_tokens_per_sec(),
             m.expert_swaps,

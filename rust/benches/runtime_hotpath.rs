@@ -7,7 +7,10 @@
 //! at 0%. The same sparsity grid carries full-recompute-vs-incremental
 //! *session* arms (prefill + per-token decode steps): the KV-cached path
 //! must beat re-running the full window at every sparsity level — the
-//! per-token serving win.
+//! per-token serving win. Each sparsity level additionally runs **quant
+//! arms** (u16/u8 compiled executors, full forward + incremental
+//! session), so the dequant-on-the-fly cost is on the record next to
+//! the byte savings.
 //!
 //! Runs on the native backend by default; `--features pjrt` builds with
 //! artifacts present measure the AOT executable path instead
@@ -17,8 +20,10 @@
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
 use stun::pruning::unstructured;
+use stun::quant::QuantScheme;
 use stun::runtime::session::{greedy_token, recompute_step};
 use stun::runtime::{Backend, CompiledForward as _, DecodeState, TrainState};
+use stun::sparse::SparseConfig;
 use stun::tensor::Tensor;
 use stun::util::bench::Bench;
 use stun::util::rng::Rng;
@@ -156,6 +161,49 @@ fn main() {
                         rec.mean_secs() / inc.mean_secs(),
                         n_steps + 1
                     );
+
+                    // quant arms: the same model compiled to u16/u8
+                    // storage — full forward and incremental session —
+                    // so the dequant-on-the-fly cost is measured beside
+                    // the f32 engine at every sparsity level
+                    for quant in [QuantScheme::U16, QuantScheme::U8] {
+                        let scfg = SparseConfig {
+                            quant,
+                            ..Default::default()
+                        };
+                        let Some(qc) = backend.compile_with(&ps, &scfg).expect("compile")
+                        else {
+                            continue;
+                        };
+                        let qdec = bench.run(
+                            &format!("{config}/decode {} s={sparsity:.1}", qc.name()),
+                            || {
+                                qc.fwd_logits(&tokens).unwrap();
+                            },
+                        );
+                        let qinc = bench.run(
+                            &format!(
+                                "{config}/session incremental {} s={sparsity:.1}",
+                                quant.name()
+                            ),
+                            || {
+                                let mut st = qc.new_session(1);
+                                let out = qc.prefill(&mut st, 0, &prompt).unwrap();
+                                let mut tok = greedy_token(out.logits.row(0));
+                                for _ in 0..n_steps {
+                                    let out = qc.decode(&mut st, &[(0, tok)]).unwrap();
+                                    tok = greedy_token(out.logits.row(0));
+                                }
+                            },
+                        );
+                        println!(
+                            "    -> {} arms: fwd {:.2}x vs dense, incremental {:.2}x \
+                             vs f32 incremental",
+                            quant.name(),
+                            dense.mean_secs() / qdec.mean_secs(),
+                            inc.mean_secs() / qinc.mean_secs()
+                        );
+                    }
                 }
                 None => println!(
                     "    ({} backend exposes no compiled decode/eval path)",

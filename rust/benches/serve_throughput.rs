@@ -3,14 +3,16 @@
 //! pruning), batcher scaling over burst sizes, the serving-executor grid
 //! {dense-recompute, compiled-recompute, compiled-incremental} across
 //! sparsity levels {0, 0.4, 0.7, 0.9} — incremental KV-cached decode
-//! must beat full-recompute decode in tokens/s at *every* arm — a
+//! must beat full-recompute decode in tokens/s at *every* arm — plus
+//! **quant arms** ({f32, u16, u8} compiled-incremental serving with
+//! quant-sized working sets) on the same sparsity grid, a
 //! staggered-arrival workload (queue-depth effects under honored arrival
 //! offsets), and the dense-vs-compiled `EvalHarness` arms on the same
 //! grid.
 //!
-//! The executor × sparsity grid (and the staggered row) is also written
-//! to `BENCH_serve.json` (`BENCH_SERVE_OUT` overrides the path) so CI
-//! can archive the perf trajectory as a machine-readable artifact.
+//! The {executor × sparsity × quant} surface (and the staggered row) is
+//! written to `BENCH_serve.json` (`BENCH_SERVE_OUT` overrides the path)
+//! so CI can archive the perf trajectory as a machine-readable artifact.
 //! `STUN_SERVE_ARMS_ONLY=1` skips the trained-model headline and the
 //! eval arms — the quick CI profile.
 
@@ -21,8 +23,10 @@ use stun::model::ParamSet;
 use stun::pruning::expert::ExpertPruneConfig;
 use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
+use stun::quant::QuantScheme;
 use stun::report::{self, Protocol};
 use stun::runtime::Backend;
+use stun::sparse::SparseConfig;
 use stun::util::bench::Bench;
 use stun::util::json::Json;
 
@@ -32,8 +36,10 @@ fn main() {
     let arms_only = std::env::var("STUN_SERVE_ARMS_ONLY").is_ok();
 
     if !arms_only {
-        // headline comparison on the trained checkpoint
-        let table = report::serving_report(&proto, 24).expect("serving");
+        // headline comparison on the trained checkpoint (incl. the u16
+        // quantized serving row)
+        let table =
+            report::serving_report(&proto, 24, QuantScheme::U16).expect("serving");
         println!("### serving: dense vs stun-pruned (trained moe-8x)\n{table}");
     }
 
@@ -67,7 +73,7 @@ fn main() {
             "requests", "dense tok/s", "pruned tok/s", "d-swaps", "p-swaps"
         );
         for n in [4usize, 8, 16, 32] {
-            let capacity = ExpertStore::working_set_bytes(&pruned);
+            let capacity = ExpertStore::working_set_bytes(&pruned, QuantScheme::F32);
             let mut results = Vec::new();
             for ps in [&params, &pruned] {
                 let store = ExpertStore::new(capacity, Duration::from_micros(200));
@@ -114,7 +120,7 @@ fn main() {
             .run(backend, &mut ps, &mut gen)
             .expect("stun");
         }
-        let capacity = ExpertStore::working_set_bytes(&ps).max(1);
+        let capacity = ExpertStore::working_set_bytes(&ps, QuantScheme::F32).max(1);
         // (label, use_compiled, incremental)
         let arms = [
             ("dense_recompute", false, false),
@@ -144,6 +150,40 @@ fn main() {
             tput[2],
             gain
         );
+        // quant arms: same pruned model, compiled-incremental decode
+        // from {f32, u16, u8} storage, each with its own quant-sized
+        // working-set budget — the {executor × sparsity × quant} surface
+        let mut quant_arms: Vec<Json> = Vec::new();
+        for quant in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+            let ws = ExpertStore::working_set_bytes(&ps, quant).max(1);
+            let tok_s = if quant == QuantScheme::F32 {
+                tput[2] // already measured above
+            } else {
+                let scfg = SparseConfig {
+                    quant,
+                    ..Default::default()
+                };
+                let store = ExpertStore::new(ws, Duration::from_micros(200));
+                let mut batcher =
+                    Batcher::with_config(backend, &ps, store, true, true, &scfg)
+                        .expect("batcher");
+                let (_r, m) = batcher
+                    .serve(burst_workload(backend.config(), 8, 6, 5))
+                    .expect("serve");
+                m.tokens_per_sec()
+            };
+            quant_arms.push(Json::obj(vec![
+                ("quant", Json::Str(quant.name().into())),
+                ("incremental_tok_s", Json::Num(tok_s)),
+                ("working_set_bytes", Json::Num(ws as f64)),
+            ]));
+            println!(
+                "          quant {:<4} {:>9.1} KB ws {:>12.1} tok/s",
+                quant.name(),
+                ws as f64 / 1024.0,
+                tok_s
+            );
+        }
         arm_rows.push(Json::obj(vec![
             ("sparsity", Json::Num(s)),
             ("expert_swaps", Json::Num(swaps as f64)),
@@ -151,6 +191,7 @@ fn main() {
             ("compiled_recompute_tok_s", Json::Num(tput[1])),
             ("compiled_incremental_tok_s", Json::Num(tput[2])),
             ("incremental_speedup", Json::Num(gain)),
+            ("quant_arms", Json::Arr(quant_arms)),
         ]));
 
         if !arms_only {

@@ -1,32 +1,50 @@
 //! `.stz` checkpoint format — named f32 tensors + a metadata string.
 //!
-//! Version 2 layout (little-endian):
+//! Version 3 layout (little-endian):
 //! ```text
-//! magic   [8]  b"STZCKPT2"
+//! magic   [8]  b"STZCKPT3"
 //! meta    u32 len + utf8 bytes      (JSON blob: config, step, notes)
 //! count   u32
 //! per tensor:
 //!   name  u16 len + utf8 bytes
 //!   ndim  u8
 //!   dims  ndim × u32
-//!   enc   u8                        (0 = dense, 1 = bitmap-sparse)
-//!   dense:  prod(dims) × f32
-//!   sparse: nnz u64
+//!   enc   u8    (0 = dense f32 | 1 = bitmap-sparse f32
+//!                | 2 = quant dense | 3 = quant bitmap-sparse)
+//!   enc 0:  prod(dims) × f32
+//!   enc 1:  nnz u64
 //!           bitmap ⌈n/8⌉ bytes      (bit i set ⇔ element i stored)
 //!           nnz × f32               (values in index order)
+//!   enc 2:  scheme u8               (1 = u16, 2 = u8)
+//!           rows × f32 scales       (rows = prod(dims[..ndim−1]))
+//!           n × code                (per-row absmax codes, LE)
+//!   enc 3:  scheme u8
+//!           nnz u64
+//!           bitmap ⌈n/8⌉ bytes
+//!           rows × f32 scales
+//!           nnz × code              (stored elements in index order)
 //! ```
-//! The writer picks the smaller encoding per tensor, so pruned
-//! checkpoints shrink roughly 3× at 70% sparsity (⅛ byte of bitmap + the
-//! surviving values, vs 4 bytes per element dense) while unpruned tensors
-//! stay byte-identical to dense. Zero-ness is judged on the f32 bit
-//! pattern, so `-0.0` survives round-trips exactly.
+//! Encodings 0/1 are lossless: the writer picks the smaller of the two
+//! per tensor, pruned checkpoints shrink roughly 3× at 70% sparsity, and
+//! zero-ness is judged on the f32 bit pattern so `-0.0` survives
+//! round-trips exactly. Encodings 2/3 are the *quantized sections*
+//! written by [`Checkpoint::save_quant`]: matrix-shaped tensors
+//! (`ndim ≥ 2`) store per-row absmax-affine codes with one f32 scale per
+//! row (`crate::quant`), 1-D tensors (norm gains) always stay lossless
+//! f32. Quantization error contract on load: per-row max error relative
+//! to the row's absmax ≤ 1e-3 for u16, ≤ 2e-2 for u8 — the same bounds
+//! the compiled quantized executor is specified against.
 //!
-//! Version 1 (`STZCKPT1`, dense-only, no `enc` byte) still loads;
-//! [`Checkpoint::save_v1`] writes it for older readers.
+//! Version 2 (`STZCKPT2`, encodings 0/1 only) and version 1
+//! (`STZCKPT1`, dense-only, no `enc` byte) still load;
+//! [`Checkpoint::save_v2`] / [`Checkpoint::save_v1`] write them for
+//! older readers. The matrixed round-trip test below pins bit-exact f32
+//! sections across every version.
 //!
 //! Tensors keep their insertion order, which for model checkpoints is the
 //! canonical `param_specs` order shared with the Python side.
 
+use crate::quant::{self, QuantCodes, QuantScheme};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -35,9 +53,15 @@ use std::path::Path;
 
 const MAGIC_V1: &[u8; 8] = b"STZCKPT1";
 const MAGIC_V2: &[u8; 8] = b"STZCKPT2";
-/// v2 tensor payload encodings.
+const MAGIC_V3: &[u8; 8] = b"STZCKPT3";
+/// Tensor payload encodings (2/3 are v3-only).
 const ENC_DENSE: u8 = 0;
 const ENC_SPARSE: u8 = 1;
+const ENC_QUANT_DENSE: u8 = 2;
+const ENC_QUANT_SPARSE: u8 = 3;
+/// Scheme bytes of quantized sections.
+const SCHEME_U16: u8 = 1;
+const SCHEME_U8: u8 = 2;
 
 #[derive(Clone, Debug, Default)]
 pub struct Checkpoint {
@@ -104,19 +128,33 @@ impl Checkpoint {
 
     // ------------------------------------------------------------------ IO
 
-    /// Save in the current (v2) format: per-tensor dense or bitmap-sparse
-    /// payloads, whichever is smaller.
+    /// Save in the current (v3) format with lossless f32 sections:
+    /// per-tensor dense or bitmap-sparse payloads, whichever is smaller.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        self.save_impl(path.as_ref(), 2)
+        self.save_impl(path.as_ref(), 3, QuantScheme::F32)
+    }
+
+    /// Save as v3 with quantized sections: matrix-shaped tensors
+    /// (`ndim ≥ 2`) store per-row absmax codes at `scheme`'s width
+    /// (dense or bitmap-sparse, whichever is smaller), 1-D tensors stay
+    /// lossless f32. `QuantScheme::F32` degrades to [`Checkpoint::save`].
+    pub fn save_quant(&self, path: impl AsRef<Path>, scheme: QuantScheme) -> Result<()> {
+        self.save_impl(path.as_ref(), 3, scheme)
+    }
+
+    /// Legacy `STZCKPT2` writer (f32 dense/bitmap-sparse sections only) —
+    /// kept for older readers and the backward-compat tests.
+    pub fn save_v2(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.save_impl(path.as_ref(), 2, QuantScheme::F32)
     }
 
     /// Legacy `STZCKPT1` writer (dense-only payloads) — kept for interop
     /// with older readers and the backward-compat tests.
     pub fn save_v1(&self, path: impl AsRef<Path>) -> Result<()> {
-        self.save_impl(path.as_ref(), 1)
+        self.save_impl(path.as_ref(), 1, QuantScheme::F32)
     }
 
-    fn save_impl(&self, path: &Path, version: u8) -> Result<()> {
+    fn save_impl(&self, path: &Path, version: u8, scheme: QuantScheme) -> Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
@@ -126,7 +164,12 @@ impl Checkpoint {
             std::fs::File::create(path)
                 .with_context(|| format!("creating {}", path.display()))?,
         );
-        w.write_all(if version == 1 { MAGIC_V1 } else { MAGIC_V2 })?;
+        let magic = match version {
+            1 => MAGIC_V1,
+            2 => MAGIC_V2,
+            _ => MAGIC_V3,
+        };
+        w.write_all(magic)?;
         let meta = self.meta.as_bytes();
         w.write_all(&(meta.len() as u32).to_le_bytes())?;
         w.write_all(meta)?;
@@ -140,21 +183,22 @@ impl Checkpoint {
                 w.write_all(&(d as u32).to_le_bytes())?;
             }
             let n = t.data().len();
-            // zero-ness by bit pattern: -0.0 is stored, so round-trips
-            // are bit-exact
+            let cols = t.shape().last().copied().unwrap_or(0);
+            if version >= 3
+                && scheme.is_quantized()
+                && t.shape().len() >= 2
+                && cols > 0
+                && n > 0
+            {
+                write_quant_section(&mut w, t, scheme)?;
+                continue;
+            }
             let nnz = t.data().iter().filter(|x| x.to_bits() != 0).count();
             let sparse_bytes = 8 + n.div_ceil(8) + nnz * 4;
             if version >= 2 && sparse_bytes < n * 4 {
                 w.write_all(&[ENC_SPARSE])?;
                 w.write_all(&(nnz as u64).to_le_bytes())?;
-                let mut bitmap = vec![0u8; n.div_ceil(8)];
-                let mut vals = Vec::with_capacity(nnz);
-                for (i, &x) in t.data().iter().enumerate() {
-                    if x.to_bits() != 0 {
-                        bitmap[i / 8] |= 1 << (i % 8);
-                        vals.push(x);
-                    }
-                }
+                let (bitmap, vals) = gather_by_bitmap(t.data());
                 w.write_all(&bitmap)?;
                 write_f32s(&mut w, &vals)?;
             } else {
@@ -180,6 +224,8 @@ impl Checkpoint {
             1
         } else if &magic == MAGIC_V2 {
             2
+        } else if &magic == MAGIC_V3 {
+            3
         } else {
             bail!("{}: not an .stz checkpoint", path.display());
         };
@@ -209,28 +255,147 @@ impl Checkpoint {
                     let mut bitmap = vec![0u8; n.div_ceil(8)];
                     r.read_exact(&mut bitmap)?;
                     let vals = read_f32s(&mut r, nnz)?;
-                    let mut data = vec![0f32; n];
-                    let mut vi = 0usize;
-                    for (i, slot) in data.iter_mut().enumerate() {
-                        if bitmap[i / 8] & (1 << (i % 8)) != 0 {
-                            if vi >= nnz {
-                                bail!("sparse bitmap popcount exceeds stored nnz {nnz}");
-                            }
-                            *slot = vals[vi];
-                            vi += 1;
-                        }
-                    }
-                    if vi != nnz {
-                        bail!("sparse bitmap popcount {vi} != stored nnz {nnz}");
-                    }
-                    data
+                    scatter_by_bitmap(&bitmap, &vals, n)?
                 }
-                other => bail!("unknown tensor encoding {other}"),
+                ENC_QUANT_DENSE | ENC_QUANT_SPARSE if version >= 3 => {
+                    read_quant_section(&mut r, enc, &dims, n)?
+                }
+                other => bail!("unknown tensor encoding {other} (version {version})"),
             };
             ckpt.push(String::from_utf8(name)?, Tensor::new(&dims, data)?)?;
         }
         Ok(ckpt)
     }
+}
+
+/// Gather a tensor's stored elements: the bitmap (bit i set ⇔ element i
+/// stored) plus the values in index order. Zero-ness is judged on the
+/// f32 bit pattern — `-0.0` IS stored — which is THE rule of every
+/// sparse section; the f32 and quantized writers both go through here
+/// so the two formats can never disagree on it.
+fn gather_by_bitmap(data: &[f32]) -> (Vec<u8>, Vec<f32>) {
+    let n = data.len();
+    let mut bitmap = vec![0u8; n.div_ceil(8)];
+    let mut vals = Vec::new();
+    for (i, &x) in data.iter().enumerate() {
+        if x.to_bits() != 0 {
+            bitmap[i / 8] |= 1 << (i % 8);
+            vals.push(x);
+        }
+    }
+    (bitmap, vals)
+}
+
+/// Scatter bitmap-ordered `vals` into a dense f32 buffer of `n` slots,
+/// validating that the bitmap popcount matches the stored value count.
+fn scatter_by_bitmap(bitmap: &[u8], vals: &[f32], n: usize) -> Result<Vec<f32>> {
+    let nnz = vals.len();
+    let mut data = vec![0f32; n];
+    let mut vi = 0usize;
+    for (i, slot) in data.iter_mut().enumerate() {
+        if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+            if vi >= nnz {
+                bail!("sparse bitmap popcount exceeds stored nnz {nnz}");
+            }
+            *slot = vals[vi];
+            vi += 1;
+        }
+    }
+    if vi != nnz {
+        bail!("sparse bitmap popcount {vi} != stored nnz {nnz}");
+    }
+    Ok(data)
+}
+
+/// Write a v3 quantized section (enc 2 or 3, whichever is smaller) for a
+/// matrix-shaped tensor: per-row absmax codes + one f32 scale per row.
+fn write_quant_section(w: &mut impl Write, t: &Tensor, scheme: QuantScheme) -> Result<()> {
+    let n = t.data().len();
+    let cols = *t.shape().last().expect("ndim >= 2");
+    let rows = n / cols;
+    let cb = scheme.value_bytes();
+    // one zero-ness scan (the shared gather) feeds the size decision,
+    // the section header, and the per-row spans alike
+    let (bitmap, vals) = gather_by_bitmap(t.data());
+    let nnz = vals.len();
+    let dense_bytes = rows * 4 + n * cb;
+    let sparse_bytes = 8 + n.div_ceil(8) + rows * 4 + nnz * cb;
+    let scheme_byte = match scheme {
+        QuantScheme::U16 => SCHEME_U16,
+        QuantScheme::U8 => SCHEME_U8,
+        QuantScheme::F32 => bail!("f32 tensors take the dense/sparse f32 encodings"),
+    };
+    if sparse_bytes < dense_bytes {
+        w.write_all(&[ENC_QUANT_SPARSE, scheme_byte])?;
+        w.write_all(&(nnz as u64).to_le_bytes())?;
+        // spans from the bitmap — the exact traversal the loader replays
+        let mut spans = vec![0usize; rows];
+        for i in 0..n {
+            if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+                spans[i / cols] += 1;
+            }
+        }
+        let (scales, codes) = quant::quantize_spans(&vals, &spans, scheme);
+        w.write_all(&bitmap)?;
+        write_f32s(w, &scales)?;
+        write_codes(w, &codes)?;
+    } else {
+        w.write_all(&[ENC_QUANT_DENSE, scheme_byte])?;
+        let spans = vec![cols; rows];
+        let (scales, codes) = quant::quantize_spans(t.data(), &spans, scheme);
+        write_f32s(w, &scales)?;
+        write_codes(w, &codes)?;
+    }
+    Ok(())
+}
+
+/// Read a v3 quantized section back into dense f32 data (lossy by the
+/// documented per-row error contract, exact zeros restored exactly).
+fn read_quant_section(
+    r: &mut impl Read,
+    enc: u8,
+    dims: &[usize],
+    n: usize,
+) -> Result<Vec<f32>> {
+    if dims.len() < 2 {
+        bail!("quantized section on a {}-d tensor", dims.len());
+    }
+    let cols = *dims.last().expect("ndim >= 2");
+    if cols == 0 || n == 0 {
+        bail!("quantized section on an empty tensor");
+    }
+    let rows = n / cols;
+    let scheme = match read_u8(r)? {
+        SCHEME_U16 => QuantScheme::U16,
+        SCHEME_U8 => QuantScheme::U8,
+        other => bail!("unknown quant scheme byte {other}"),
+    };
+    if enc == ENC_QUANT_DENSE {
+        let scales = read_f32s(r, rows)?;
+        let codes = read_codes(r, n, scheme)?;
+        return Ok(quant::dequantize_spans(&scales, &codes, &vec![cols; rows]));
+    }
+    let nnz = read_u64(r)? as usize;
+    if nnz > n {
+        bail!("quant-sparse tensor claims {nnz} non-zeros in {n} elements");
+    }
+    let mut bitmap = vec![0u8; n.div_ceil(8)];
+    r.read_exact(&mut bitmap)?;
+    let scales = read_f32s(r, rows)?;
+    let codes = read_codes(r, nnz, scheme)?;
+    let mut spans = vec![0usize; rows];
+    let mut popcount = 0usize;
+    for i in 0..n {
+        if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+            spans[i / cols] += 1;
+            popcount += 1;
+        }
+    }
+    if popcount != nnz {
+        bail!("quant-sparse bitmap popcount {popcount} != stored nnz {nnz}");
+    }
+    let vals = quant::dequantize_spans(&scales, &codes, &spans);
+    scatter_by_bitmap(&bitmap, &vals, n)
 }
 
 /// Bulk-write an f32 slice as little-endian bytes.
@@ -249,6 +414,42 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
         unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4) };
     r.read_exact(bytes)?;
     Ok(data)
+}
+
+/// Write a quantized code array as little-endian bytes.
+fn write_codes(w: &mut impl Write, codes: &QuantCodes) -> Result<()> {
+    match codes {
+        QuantCodes::U16(v) => {
+            let mut bytes = Vec::with_capacity(v.len() * 2);
+            for &c in v {
+                bytes.extend_from_slice(&c.to_le_bytes());
+            }
+            w.write_all(&bytes)?;
+        }
+        QuantCodes::U8(v) => w.write_all(v)?,
+    }
+    Ok(())
+}
+
+/// Read `n` quantized codes at `scheme`'s width.
+fn read_codes(r: &mut impl Read, n: usize, scheme: QuantScheme) -> Result<QuantCodes> {
+    match scheme {
+        QuantScheme::U16 => {
+            let mut bytes = vec![0u8; n * 2];
+            r.read_exact(&mut bytes)?;
+            let codes = bytes
+                .chunks_exact(2)
+                .map(|b| u16::from_le_bytes([b[0], b[1]]))
+                .collect();
+            Ok(QuantCodes::U16(codes))
+        }
+        QuantScheme::U8 => {
+            let mut bytes = vec![0u8; n];
+            r.read_exact(&mut bytes)?;
+            Ok(QuantCodes::U8(bytes))
+        }
+        QuantScheme::F32 => bail!("f32 sections hold plain floats, not codes"),
+    }
 }
 
 fn read_u8(r: &mut impl Read) -> Result<u8> {
@@ -367,26 +568,43 @@ mod tests {
         c
     }
 
+    /// The one matrixed back-compat gate: every writer version
+    /// (STZCKPT1 dense-only, STZCKPT2 bitmap-sparse, STZCKPT3 with f32
+    /// sections) must round-trip the same mixed checkpoint through
+    /// [`Checkpoint::load`] with **bit-exact** f32 payloads — including
+    /// the `-0.0` and all-zero corner cases — and carry its declared
+    /// magic. This replaces the old scattered per-version tests.
     #[test]
-    fn v2_sparse_roundtrip_is_bit_exact() {
+    fn every_version_roundtrips_f32_sections_bit_exactly() {
+        type Saver = fn(&Checkpoint, &std::path::Path) -> Result<()>;
+        let matrix: [(&str, &[u8; 8], Saver); 3] = [
+            ("v1", b"STZCKPT1", |c, p| c.save_v1(p)),
+            ("v2", b"STZCKPT2", |c, p| c.save_v2(p)),
+            ("v3", b"STZCKPT3", |c, p| c.save(p)),
+        ];
         let c = mixed_sparsity_checkpoint();
-        let p = tmp("v2sparse");
-        c.save(&p).unwrap();
-        let back = Checkpoint::load(&p).unwrap();
-        assert_eq!(back.meta, c.meta);
-        for (name, t) in c.iter() {
-            let b = back.get(name).unwrap();
-            assert_eq!(b.shape(), t.shape(), "{name}");
-            for (x, y) in t.data().iter().zip(b.data()) {
-                assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+        for (label, magic, save) in matrix {
+            let p = tmp(&format!("matrix-{label}"));
+            save(&c, &p).unwrap();
+            assert_eq!(&std::fs::read(&p).unwrap()[..8], magic, "{label}");
+            let back = Checkpoint::load(&p).unwrap();
+            assert_eq!(back.meta, c.meta, "{label}");
+            assert_eq!(back.names(), c.names(), "{label}");
+            for (name, t) in c.iter() {
+                let b = back.get(name).unwrap();
+                assert_eq!(b.shape(), t.shape(), "{label}/{name}");
+                for (x, y) in t.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{label}/{name}");
+                }
             }
+            std::fs::remove_file(p).ok();
         }
-        std::fs::remove_file(p).ok();
     }
 
     #[test]
-    fn v2_shrinks_sparse_checkpoints_on_disk() {
-        // 70%-sparse payload: v2 ≈ bitmap + 30% of the values → ~3× smaller
+    fn sparse_sections_shrink_checkpoints_on_disk() {
+        // 70%-sparse payload: bitmap + 30% of the values → ~3× smaller
+        // than the dense-only v1 layout; quantized v3 sections go further
         let mut rng = Rng::new(19);
         let mut t = Tensor::zeros(&[256, 256]);
         for (i, v) in t.data_mut().iter_mut().enumerate() {
@@ -396,34 +614,85 @@ mod tests {
         }
         let mut c = Checkpoint::new("");
         c.push("w", t).unwrap();
-        let p2 = tmp("v2size");
-        let p1 = tmp("v1size");
-        c.save(&p2).unwrap();
-        c.save_v1(&p1).unwrap();
-        let (s2, s1) = (
-            std::fs::metadata(&p2).unwrap().len(),
-            std::fs::metadata(&p1).unwrap().len(),
-        );
-        assert!(
-            (s1 as f64) / (s2 as f64) > 2.8,
-            "v1 {s1} bytes vs v2 {s2} bytes"
-        );
-        std::fs::remove_file(p1).ok();
-        std::fs::remove_file(p2).ok();
+        let sizes: Vec<u64> = [
+            ("v1", None),
+            ("v3f32", Some(QuantScheme::F32)),
+            ("v3u16", Some(QuantScheme::U16)),
+            ("v3u8", Some(QuantScheme::U8)),
+        ]
+        .iter()
+        .map(|(label, scheme)| {
+            let p = tmp(&format!("size-{label}"));
+            match scheme {
+                None => c.save_v1(&p).unwrap(),
+                Some(s) => c.save_quant(&p, *s).unwrap(),
+            }
+            let s = std::fs::metadata(&p).unwrap().len();
+            std::fs::remove_file(p).ok();
+            s
+        })
+        .collect();
+        let (v1, f32s, u16s, u8s) = (sizes[0], sizes[1], sizes[2], sizes[3]);
+        assert!((v1 as f64) / (f32s as f64) > 2.8, "v1 {v1} vs v3-f32 {f32s}");
+        assert!(u16s < f32s, "u16 {u16s} vs f32 {f32s}");
+        assert!(u8s < u16s, "u8 {u8s} vs u16 {u16s}");
     }
 
     #[test]
-    fn v1_files_still_load() {
+    fn quant_sections_obey_the_error_contract() {
         let c = mixed_sparsity_checkpoint();
-        let p = tmp("v1compat");
-        c.save_v1(&p).unwrap();
-        // byte 8 onwards of a v1 file has no enc markers; magic says so
-        assert_eq!(&std::fs::read(&p).unwrap()[..8], b"STZCKPT1");
-        let back = Checkpoint::load(&p).unwrap();
-        assert_eq!(back.meta, c.meta);
-        for (name, t) in c.iter() {
-            assert_eq!(back.get(name).unwrap(), t, "{name}");
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let p = tmp(&format!("quant-{}", scheme.name()));
+            c.save_quant(&p, scheme).unwrap();
+            let back = Checkpoint::load(&p).unwrap();
+            for (name, t) in c.iter() {
+                let b = back.get(name).unwrap();
+                assert_eq!(b.shape(), t.shape(), "{name}");
+                if t.shape().len() < 2 {
+                    // 1-D tensors stay lossless f32
+                    for (x, y) in t.data().iter().zip(b.data()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+                    }
+                    continue;
+                }
+                let cols = *t.shape().last().unwrap();
+                let rows = t.data().len() / cols;
+                for r in 0..rows {
+                    let row = &t.data()[r * cols..(r + 1) * cols];
+                    let brow = &b.data()[r * cols..(r + 1) * cols];
+                    let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                    for (x, y) in row.iter().zip(brow) {
+                        if *x == 0.0 {
+                            // exact zeros come back as exact +0.0
+                            assert_eq!(y.to_bits(), 0f32.to_bits(), "{name} row {r}");
+                        } else {
+                            assert!(
+                                ((x - y).abs() as f64) <= scheme.error_bound() * absmax as f64,
+                                "{name} row {r}: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
+            }
+            std::fs::remove_file(p).ok();
         }
+    }
+
+    #[test]
+    fn quant_scheme_byte_is_validated() {
+        let mut c = Checkpoint::new("");
+        c.push("w", Tensor::ones(&[8, 8])).unwrap();
+        let p = tmp("badscheme");
+        c.save_quant(&p, QuantScheme::U8).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // the scheme byte follows the enc byte of the (only) tensor:
+        // magic(8) + meta_len(4) + count(4) + name_len(2)+1 + ndim(1) +
+        // dims(8) + enc(1) → scheme at offset 29
+        assert_eq!(bytes[28], super::ENC_QUANT_DENSE);
+        assert_eq!(bytes[29], super::SCHEME_U8);
+        bytes[29] = 9;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).ok();
     }
 

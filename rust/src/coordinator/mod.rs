@@ -6,10 +6,13 @@
 //! * [`ExpertStore`] — a memory-capacity model for expert weights: a
 //!   byte-accurate budget with O(1) HashMap-indexed LRU eviction. Each
 //!   expert occupies its real storage footprint (CSR bytes once pruning
-//!   makes CSR cheaper, zero for dead experts), so pruned models pack
-//!   more residency into the same budget. Dense models overflow the store
-//!   and pay per-swap latency; pruned models fit. The swap count is the
-//!   serving-side metric the memory reduction buys down.
+//!   makes CSR cheaper, quantized bytes when the executor was compiled
+//!   with `SparseConfig::quant` — all via the one
+//!   [`crate::quant::tensor_store_bytes`] rule — and zero for dead
+//!   experts), so pruned and quantized models pack more residency into
+//!   the same budget. Dense models overflow the store and pay per-swap
+//!   latency; pruned models fit. The swap count is the serving-side
+//!   metric the memory reduction buys down.
 //! * [`Batcher`] — continuous batching over incremental decode sessions:
 //!   each of the `eval_batch` [`crate::runtime::DecodeState`] slots holds
 //!   one live sequence with its per-layer K/V cache. A request is
@@ -37,8 +40,10 @@
 
 use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
+use crate::quant::QuantScheme;
 use crate::runtime::session::{greedy_token, recompute_step};
 use crate::runtime::{Backend, CompiledForward, DecodeState, StepOutput};
+use crate::sparse::SparseConfig;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -186,13 +191,17 @@ impl ExpertStore {
         self.swap_penalty
     }
 
-    /// Working-set bytes for a model: the resident footprint of every
-    /// alive expert of every layer (dead experts cost nothing).
-    pub fn working_set_bytes(params: &ParamSet) -> usize {
+    /// Working-set bytes for a model served under storage scheme
+    /// `scheme`: the resident footprint of every alive expert of every
+    /// layer (dead experts cost nothing). Quantized schemes shrink every
+    /// footprint by the shared [`crate::quant::tensor_store_bytes`] rule
+    /// — at u16 a 70%-sparse model's working set is ≥1.8× smaller than
+    /// its f32-CSR working set (pinned by `tests/quant_parity.rs`).
+    pub fn working_set_bytes(params: &ParamSet, scheme: QuantScheme) -> usize {
         (0..params.config.n_layers)
             .map(|l| {
                 (0..params.config.n_experts)
-                    .map(|e| params.expert_resident_bytes(l, e))
+                    .map(|e| params.expert_resident_bytes(l, e, scheme))
                     .sum::<usize>()
             })
             .sum()
@@ -357,7 +366,8 @@ impl<'b> Batcher<'b> {
     /// false` forces full-recompute session steps even on the compiled
     /// executor (the dense path always re-prefills — that *is* its
     /// fallback contract). The bench grid runs
-    /// {dense, compiled-recompute, compiled-incremental}.
+    /// {dense, compiled-recompute, compiled-incremental}. Compiles under
+    /// the default [`SparseConfig`] (f32 payloads).
     pub fn with_policy(
         backend: &'b dyn Backend,
         params: &ParamSet,
@@ -365,10 +375,48 @@ impl<'b> Batcher<'b> {
         use_compiled: bool,
         incremental: bool,
     ) -> Result<Batcher<'b>> {
+        Self::with_config(
+            backend,
+            params,
+            store,
+            use_compiled,
+            incremental,
+            &SparseConfig::default(),
+        )
+    }
+
+    /// [`Batcher::with_policy`] with explicit compile knobs. With
+    /// `scfg.quant` set to u16/u8 the compiled executor decodes straight
+    /// from quantized storage, and the [`ExpertStore`] byte table is
+    /// sized by the *same* scheme — LRU admission reflects the bytes the
+    /// executor actually holds resident, not the f32 footprint. The
+    /// dense per-call path (`use_compiled = false`) serves f32 weights
+    /// and accounts f32 bytes regardless of `scfg`. The byte table uses
+    /// the shared min(dense, CSR) rule of
+    /// [`crate::quant::tensor_store_bytes`], which matches the compile
+    /// pass exactly at the default `density_threshold` (0.5); a
+    /// non-default threshold can make the compile pass store the larger
+    /// form, and residency is then accounted at the rule's (smaller)
+    /// cost.
+    pub fn with_config(
+        backend: &'b dyn Backend,
+        params: &ParamSet,
+        store: ExpertStore,
+        use_compiled: bool,
+        incremental: bool,
+        scfg: &SparseConfig,
+    ) -> Result<Batcher<'b>> {
         let compiled = if use_compiled {
-            backend.compile(params)?
+            backend.compile_with(params, scfg)?
         } else {
             None
+        };
+        // byte accounting must follow the weights the decode loop holds:
+        // the compiled executor's scheme, or f32 on the dense fallback
+        let scheme = if compiled.is_some() {
+            scfg.quant
+        } else {
+            QuantScheme::F32
         };
         let b = backend.config().eval_batch;
         let state = match &compiled {
@@ -383,7 +431,7 @@ impl<'b> Batcher<'b> {
             expert_bytes: (0..params.config.n_layers)
                 .map(|l| {
                     (0..params.config.n_experts)
-                        .map(|e| params.expert_resident_bytes(l, e))
+                        .map(|e| params.expert_resident_bytes(l, e, scheme))
                         .collect()
                 })
                 .collect(),
@@ -906,13 +954,13 @@ mod tests {
     fn working_set_bytes_shrinks_with_pruning() {
         let cfg = ModelConfig::test_tiny();
         let mut ps = ParamSet::init(&cfg, 91);
-        let full = ExpertStore::working_set_bytes(&ps);
+        let full = ExpertStore::working_set_bytes(&ps, QuantScheme::F32);
         // dense random weights: every expert costs its dense footprint
         assert_eq!(full, cfg.n_layers * cfg.n_experts * ps.expert_bytes_dense());
         ps.prune_expert(0, 1);
         ps.prune_expert(1, 2);
         assert_eq!(
-            ExpertStore::working_set_bytes(&ps),
+            ExpertStore::working_set_bytes(&ps, QuantScheme::F32),
             full - 2 * ps.expert_bytes_dense()
         );
         // unstructured sparsity shrinks the byte footprint further (CSR)
@@ -928,9 +976,16 @@ mod tests {
         )
         .unwrap();
         assert!(
-            ExpertStore::working_set_bytes(&ps) < (full - 2 * ps.expert_bytes_dense()) / 2,
+            ExpertStore::working_set_bytes(&ps, QuantScheme::F32)
+                < (full - 2 * ps.expert_bytes_dense()) / 2,
             "80%-sparse experts should cost well under half their dense bytes"
         );
+        // quantized schemes shrink the same working set further still
+        let f32_ws = ExpertStore::working_set_bytes(&ps, QuantScheme::F32);
+        let u16_ws = ExpertStore::working_set_bytes(&ps, QuantScheme::U16);
+        let u8_ws = ExpertStore::working_set_bytes(&ps, QuantScheme::U8);
+        assert!(u16_ws < f32_ws, "{u16_ws} vs {f32_ws}");
+        assert!(u8_ws < u16_ws, "{u8_ws} vs {u16_ws}");
     }
 
     #[test]
@@ -943,9 +998,12 @@ mod tests {
             pruned.prune_expert(l, 0);
             pruned.prune_expert(l, 1);
         }
-        let budget = ExpertStore::working_set_bytes(&pruned);
-        assert!(ExpertStore::working_set_bytes(&dense) > budget);
-        assert_eq!(ExpertStore::working_set_bytes(&dense), 2 * budget);
+        let budget = ExpertStore::working_set_bytes(&pruned, QuantScheme::F32);
+        assert!(ExpertStore::working_set_bytes(&dense, QuantScheme::F32) > budget);
+        assert_eq!(
+            ExpertStore::working_set_bytes(&dense, QuantScheme::F32),
+            2 * budget
+        );
     }
 
     #[test]
@@ -1034,7 +1092,7 @@ mod tests {
         let backend = NativeBackend::new(ModelConfig::test_tiny());
         let params = ParamSet::init(backend.config(), 95);
         let store = ExpertStore::new(
-            ExpertStore::working_set_bytes(&params),
+            ExpertStore::working_set_bytes(&params, QuantScheme::F32),
             Duration::from_micros(50),
         );
         let mut batcher = Batcher::new(&backend, &params, store).unwrap();
@@ -1074,6 +1132,39 @@ mod tests {
             );
         }
         assert_eq!(outputs[0], outputs[1], "greedy decode must not diverge");
+    }
+
+    #[test]
+    fn quantized_batcher_serves_and_budgets_quantized_bytes() {
+        // A u16-compiled batcher must (a) actually run the quantized
+        // executor and (b) fit its whole working set into a store sized
+        // by the u16 accounting — which the f32 model overflows.
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let mut params = ParamSet::init(backend.config(), 98);
+        crate::pruning::unstructured::magnitude_prune(&mut params, 0.7).unwrap();
+        let u16_budget = ExpertStore::working_set_bytes(&params, QuantScheme::U16);
+        assert!(u16_budget < ExpertStore::working_set_bytes(&params, QuantScheme::F32));
+        let scfg = SparseConfig {
+            quant: QuantScheme::U16,
+            ..Default::default()
+        };
+        let store = ExpertStore::new(u16_budget, Duration::from_micros(10));
+        let mut batcher =
+            Batcher::with_config(&backend, &params, store, true, true, &scfg).unwrap();
+        assert!(batcher.exec_name().contains("u16"), "{}", batcher.exec_name());
+        let queue = burst_workload(backend.config(), 4, 4, 31);
+        let (responses, metrics) = batcher.serve(queue).unwrap();
+        assert_eq!(responses.len(), 4);
+        assert!(metrics.generated_tokens >= 4);
+        // every expert fits: once resident, nothing is ever evicted, so
+        // swaps are bounded by the expert population
+        let population = backend.config().n_layers * backend.config().n_experts;
+        assert!(
+            batcher.store.swaps <= population as u64,
+            "{} swaps for {population} experts",
+            batcher.store.swaps
+        );
+        assert!(batcher.store.resident_bytes() <= u16_budget);
     }
 
     #[test]

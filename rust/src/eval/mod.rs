@@ -44,6 +44,7 @@ use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
 use crate::runtime::session::greedy_token;
 use crate::runtime::{Backend, CompiledForward, DecodeState, LossOutput, StepOutput};
+use crate::sparse::SparseConfig;
 use crate::tensor::IntTensor;
 use anyhow::Result;
 
@@ -132,7 +133,20 @@ impl<'b> EvalHarness<'b> {
     /// executor when one exists ([`Backend::compile`]), with the dense
     /// per-call path as the fallback.
     pub fn new(backend: &'b dyn Backend, params: &ParamSet) -> Result<EvalHarness<'b>> {
-        let exec = match backend.compile(params)? {
+        Self::with_config(backend, params, &SparseConfig::default())
+    }
+
+    /// [`EvalHarness::new`] with explicit compile knobs — in particular
+    /// [`SparseConfig::quant`], so the whole evaluation loop (MC,
+    /// generation, perplexity) scores from u16/u8 quantized storage.
+    /// The quantization error contract vs the dense reports is pinned by
+    /// `tests/quant_parity.rs` (u16 report rows within 1e-3).
+    pub fn with_config(
+        backend: &'b dyn Backend,
+        params: &ParamSet,
+        scfg: &SparseConfig,
+    ) -> Result<EvalHarness<'b>> {
+        let exec = match backend.compile_with(params, scfg)? {
             Some(c) => EvalExec::Compiled(c),
             None => EvalExec::Dense(params.clone()),
         };

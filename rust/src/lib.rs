@@ -52,13 +52,34 @@
 //! choice / generation / perplexity through it (dense per-call fallback
 //! when `compile` returns `None`), [`coordinator::ExpertStore`] budgets
 //! residency in *bytes* (CSR bytes once pruning makes CSR cheaper, O(1)
-//! HashMap-indexed LRU), and [`checkpoint`] writes `STZCKPT2` files with
-//! bitmap-sparse tensor sections (~3× smaller at 70% sparsity;
-//! `STZCKPT1` still loads). Dense/sparse `fwd_logits` + `fwd_loss`
+//! HashMap-indexed LRU), and [`checkpoint`] writes `STZCKPT3` files with
+//! bitmap-sparse (and optionally quantized) tensor sections (~3× smaller
+//! at 70% sparsity; `STZCKPT1`/`STZCKPT2` still load). Dense/sparse
+//! `fwd_logits` + `fwd_loss`
 //! equivalence (≤1e-5) is pinned by `tests/sparse_exec.rs`, full
 //! dense-vs-compiled `EvalReport` parity by `tests/eval_parity.rs`; the
 //! dense-vs-CSR decode and eval speed arms live in
 //! `benches/runtime_hotpath.rs` and `benches/serve_throughput.rs`.
+//!
+//! ## Quantized expert storage
+//!
+//! Pruning shrinks the weight *count*; [`quant`] shrinks the *bytes per
+//! surviving weight*. [`sparse::SparseConfig::quant`] selects a
+//! [`quant::QuantScheme`] (`f32 | u16 | u8`) and the compile pass stores
+//! every prunable payload — CSR `values` and dense slabs alike — as a
+//! [`quant::QuantMat`]: per-row absmax-quantized codes with one f32
+//! scale per row (quantized CSR also narrows column indices to u16).
+//! The matvec kernels dequantize on the fly, so the full-sequence
+//! forward, the batched expert-gather, and the incremental decode
+//! session all execute directly from quantized storage. The error
+//! contract is per-row relative error ≤ 1e-3 (u16) / ≤ 2e-2 (u8);
+//! `tests/quant_parity.rs` pins u16 `EvalReport` parity within 1e-3 of
+//! dense, greedy u16 decode streams identical to f32 streams, and a
+//! ≥1.8× [`coordinator::ExpertStore::working_set_bytes`] shrink at u16
+//! on a 70%-sparse model. `stun prune|stun|eval|serve --quant` expose
+//! the knob; checkpoints store quantized sections as `STZCKPT3`
+//! ([`checkpoint`]); bytes are accounted everywhere by the single
+//! authoritative [`quant::tensor_store_bytes`] rule.
 //!
 //! ## Incremental decode sessions
 //!
@@ -100,6 +121,7 @@ pub mod data;
 pub mod eval;
 pub mod model;
 pub mod pruning;
+pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sparse;
@@ -118,6 +140,7 @@ pub mod prelude {
     pub use crate::pruning::expert::{ExpertPruneConfig, ExpertPruner};
     pub use crate::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
     pub use crate::pruning::StunPipeline;
+    pub use crate::quant::{QuantMat, QuantScheme};
     pub use crate::runtime::{Backend, CompiledForward, NativeBackend};
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::{Engine, ModelBundle, PjrtBackend};

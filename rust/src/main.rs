@@ -4,13 +4,16 @@
 //! stun info                                   # backend + config inventory
 //! stun train  --config moe-8x --steps 300    # train on the synthetic corpus
 //! stun prune  --config moe-8x --ratio 0.25   # expert pruning only (stage 1)
+//!             [--quant f32|u16|u8]           # storage width (eval/out/report)
 //!             [--eval]                       # post-prune eval (compiled path)
 //! stun stun   --config moe-8x --sparsity 0.4 # full STUN pipeline
 //!             [--report-out r.json]          # JSON report incl. compression
-//!             [--eval]                       # post-prune eval (compiled path)
+//!             [--quant f32|u16|u8] [--eval]  # quantized eval + checkpoint
 //! stun eval   --config moe-8x [--ckpt f.stz] # task-suite evaluation
+//!             [--quant f32|u16|u8]           # score from quantized storage
 //!             [--dense-eval]                 # force the per-call dense path
 //! stun serve  --config moe-8x --requests 32  # batching server demo
+//!             [--quant f32|u16|u8]           # extra quantized serving arm
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
 //! stun sample --n 5                          # show synthetic-corpus samples
 //! ```
@@ -25,6 +28,12 @@
 //! parameters once per session (`Backend::compile`) and scores through
 //! the sparse executor — pruned models evaluate at compiled-CSR speed.
 //! `--dense-eval` pins the per-call dense path for A/B comparison.
+//!
+//! `--quant u16|u8` selects quantized expert storage (per-row absmax
+//! codes; see the `quant` module): evaluation scores from it, `--out`
+//! checkpoints store `STZCKPT3` quantized sections, and `serve` adds a
+//! quantized arm whose byte accounting shrinks accordingly. Error
+//! contract: per-row relative error ≤ 1e-3 (u16) / ≤ 2e-2 (u8).
 
 use anyhow::{bail, Result};
 use stun::data::{CorpusConfig, CorpusGenerator};
@@ -32,8 +41,10 @@ use stun::model::ParamSet;
 use stun::pruning::expert::{ExpertPruneConfig, ExpertPruner};
 use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
+use stun::quant::QuantScheme;
 use stun::report::{self, Protocol};
 use stun::runtime::Backend;
+use stun::sparse::{CompressionReport, SparseConfig};
 use stun::train::{self, TrainConfig, Trainer};
 use stun::util::args::Args;
 
@@ -86,6 +97,11 @@ fn print_help() {
             .collect::<Vec<_>>()
             .join("\n")
     );
+}
+
+/// Parse the `--quant` storage-width knob (default f32 = lossless).
+fn quant_from(args: &Args) -> Result<QuantScheme> {
+    QuantScheme::parse(&args.str_or("quant", "f32"))
 }
 
 fn proto_from(args: &Args) -> Result<Protocol> {
@@ -208,6 +224,8 @@ fn cmd_prune(args: &Args) -> Result<()> {
         report.compression.bytes_dense,
         report.compression.bytes_effective
     );
+    let quant = quant_from(args)?;
+    print_quant_compression(&params, quant);
     if let Some(path) = args.str_opt("report-out") {
         std::fs::write(path, report.compression.to_json().to_string())?;
         println!("wrote {path}");
@@ -215,13 +233,29 @@ fn cmd_prune(args: &Args) -> Result<()> {
     if let Some(out) = args.str_opt("out") {
         params
             .to_checkpoint(&format!(r#"{{"pruned":"expert","config":"{config}"}}"#))
-            .save(out)?;
-        println!("saved {out}");
+            .save_quant(out, quant)?;
+        println!("saved {out} ({} sections)", quant.name());
     }
     if args.has("eval") {
         run_eval(args, backend.as_ref(), &params, false)?;
     }
     Ok(())
+}
+
+/// With `--quant u16|u8`, show what quantized storage adds on top of the
+/// pruning compression (same authoritative byte rule as `ExpertStore`).
+fn print_quant_compression(params: &ParamSet, quant: QuantScheme) {
+    if !quant.is_quantized() {
+        return;
+    }
+    let qr = CompressionReport::from_params_quant(params, quant);
+    println!(
+        "quantized ({}): {:.2}x ({} dense -> {} effective bytes)",
+        quant.name(),
+        qr.ratio(),
+        qr.bytes_dense,
+        qr.bytes_effective
+    );
 }
 
 fn cmd_stun(args: &Args) -> Result<()> {
@@ -256,6 +290,8 @@ fn cmd_stun(args: &Args) -> Result<()> {
         report.compression.bytes_dense,
         report.compression.bytes_effective
     );
+    let quant = quant_from(args)?;
+    print_quant_compression(&params, quant);
     if let Some(path) = args.str_opt("report-out") {
         std::fs::write(path, report.to_json().to_string())?;
         println!("wrote {path}");
@@ -263,8 +299,8 @@ fn cmd_stun(args: &Args) -> Result<()> {
     if let Some(out) = args.str_opt("out") {
         params
             .to_checkpoint(&format!(r#"{{"pruned":"stun","config":"{config}"}}"#))
-            .save(out)?;
-        println!("saved {out}");
+            .save_quant(out, quant)?;
+        println!("saved {out} ({} sections)", quant.name());
     }
     if args.has("eval") {
         run_eval(args, backend.as_ref(), &params, false)?;
@@ -273,8 +309,8 @@ fn cmd_stun(args: &Args) -> Result<()> {
 }
 
 /// Shared evaluation driver: compiled executor by default (one
-/// `Backend::compile` per session), dense per-call path with
-/// `--dense-eval`.
+/// `Backend::compile` per session) at the `--quant` storage width,
+/// dense per-call path with `--dense-eval`.
 fn run_eval(
     args: &Args,
     backend: &dyn Backend,
@@ -282,10 +318,22 @@ fn run_eval(
     with_ppl: bool,
 ) -> Result<()> {
     let proto = proto_from(args)?;
+    let quant = quant_from(args)?;
     let h = if args.has("dense-eval") {
+        if quant.is_quantized() {
+            bail!(
+                "--dense-eval scores f32 weights on the per-call path; \
+                 drop it or drop --quant {}",
+                quant.name()
+            );
+        }
         stun::eval::EvalHarness::new_dense(backend, params)?
     } else {
-        stun::eval::EvalHarness::new(backend, params)?
+        let scfg = SparseConfig {
+            quant,
+            ..Default::default()
+        };
+        stun::eval::EvalHarness::with_config(backend, params, &scfg)?
     };
     println!("eval executor: {}", h.executor());
     let r = h.full_report(proto.eval_seed, proto.n_gen, proto.n_mc, proto.few_shots)?;
@@ -313,7 +361,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let proto = proto_from(args)?;
     let n = args.usize_or("requests", 32)?;
-    println!("{}", report::serving_report(&proto, n)?);
+    println!("{}", report::serving_report(&proto, n, quant_from(args)?)?);
     Ok(())
 }
 
@@ -324,6 +372,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("all");
     let proto = proto_from(args)?;
+    let quant = quant_from(args)?;
     let run = |name: &str, proto: &Protocol| -> Result<()> {
         let out = match name {
             "fig1" => report::fig1(proto)?,
@@ -333,7 +382,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "table2" => report::table2(proto)?,
             "table3" => report::table3(proto)?,
             "kurtosis" => report::kurtosis_report(proto)?,
-            "serving" => report::serving_report(proto, 32)?,
+            "serving" => report::serving_report(proto, 32, quant)?,
             other => bail!("unknown report '{other}'"),
         };
         println!("\n### {name}\n{out}");

@@ -348,16 +348,28 @@ impl ParamSet {
             + crate::sparse::csr_bytes(self.config.d_ff, n2)
     }
 
-    /// Bytes the serving tier must keep resident for this expert: 0 when
-    /// the expert is structurally dead (row-compressed away), otherwise
-    /// the cheaper of dense and CSR storage — the unit
+    /// Bytes the serving tier must keep resident for this expert under
+    /// storage scheme `scheme`: 0 when the expert is structurally dead
+    /// (row-compressed away), otherwise the per-matrix
+    /// [`crate::quant::tensor_store_bytes`] rule (min of dense and CSR,
+    /// in the scheme's width) summed over the expert's two slabs — the
+    /// exact bytes the compile pass stores and the unit
     /// `coordinator::ExpertStore` budgets in.
-    pub fn expert_resident_bytes(&self, layer: usize, expert: usize) -> usize {
+    pub fn expert_resident_bytes(
+        &self,
+        layer: usize,
+        expert: usize,
+        scheme: crate::quant::QuantScheme,
+    ) -> usize {
         if !self.is_expert_alive(layer, expert) {
             return 0;
         }
-        self.expert_bytes_dense()
-            .min(self.expert_bytes_csr(layer, expert))
+        let (d, f) = (self.config.d_model, self.config.d_ff);
+        let nz = |s: &[f32]| s.iter().filter(|&&x| x != 0.0).count();
+        let n1 = nz(self.w1(layer).subtensor(expert));
+        let n2 = nz(self.w2(layer).subtensor(expert));
+        crate::quant::tensor_store_bytes(d, f, n1, scheme)
+            + crate::quant::tensor_store_bytes(f, d, n2, scheme)
     }
 
     /// All live (non-zero) prunable weights concatenated — input for the
@@ -518,12 +530,16 @@ mod tests {
 
     #[test]
     fn expert_byte_accounting_tracks_pruning() {
+        use crate::quant::QuantScheme;
         let cfg = ModelConfig::test_tiny();
         let mut ps = ParamSet::init(&cfg, 6);
         // random init: essentially no zeros, CSR costs more than dense
         assert_eq!(ps.expert_nnz(0, 0), cfg.params_per_expert());
         assert!(ps.expert_bytes_csr(0, 0) > ps.expert_bytes_dense());
-        assert_eq!(ps.expert_resident_bytes(0, 0), ps.expert_bytes_dense());
+        assert_eq!(
+            ps.expert_resident_bytes(0, 0, QuantScheme::F32),
+            ps.expert_bytes_dense()
+        );
         // zero out 90% of one expert's weights → CSR wins
         let theta: Vec<f32> = ps
             .expert_theta(0, 0)
@@ -533,10 +549,21 @@ mod tests {
             .collect();
         ps.set_expert_theta(0, 0, &theta);
         assert!(ps.expert_bytes_csr(0, 0) < ps.expert_bytes_dense());
-        assert_eq!(ps.expert_resident_bytes(0, 0), ps.expert_bytes_csr(0, 0));
-        // dead experts cost nothing resident
+        assert_eq!(
+            ps.expert_resident_bytes(0, 0, QuantScheme::F32),
+            ps.expert_bytes_csr(0, 0)
+        );
+        // quantized storage shrinks the resident footprint further
+        let f32b = ps.expert_resident_bytes(0, 0, QuantScheme::F32);
+        let u16b = ps.expert_resident_bytes(0, 0, QuantScheme::U16);
+        let u8b = ps.expert_resident_bytes(0, 0, QuantScheme::U8);
+        assert!(u16b < f32b, "{u16b} vs {f32b}");
+        assert!(u8b < u16b, "{u8b} vs {u16b}");
+        // dead experts cost nothing resident under any scheme
         ps.prune_expert(0, 0);
-        assert_eq!(ps.expert_resident_bytes(0, 0), 0);
+        for scheme in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+            assert_eq!(ps.expert_resident_bytes(0, 0, scheme), 0);
+        }
         assert_eq!(ps.expert_nnz(0, 0), 0);
     }
 

@@ -49,7 +49,7 @@ pub struct StunReport {
     pub unstructured_rate: f64,
     pub final_sparsity: f64,
     /// Final per-layer nnz + dense-vs-CSR byte accounting (both stages
-    /// applied) — what the sparse engine and `STZCKPT2` actually buy.
+    /// applied) — what the sparse engine and `STZCKPT3` actually buy.
     pub compression: crate::sparse::CompressionReport,
 }
 

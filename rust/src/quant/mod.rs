@@ -1,0 +1,845 @@
+//! Quantized expert-weight storage — fewer bytes per *surviving* weight.
+//!
+//! STUN's two pruning stages shrink the *number* of stored weights; this
+//! module shrinks the *bytes each surviving weight costs*, the serving
+//! axis the pruning left untouched. [`QuantScheme`] picks the storage
+//! width (f32 passthrough, u16, or u8). Quantization is **per-row absmax
+//! affine**: each row of a weight matrix (or each CSR row's stored
+//! values) is scaled by `absmax(row) / QMAX` and stored as unsigned
+//! codes centred on a fixed zero point, with one f32 scale per row.
+//! Exact zeros map to the zero point and dequantize back to exactly
+//! `+0.0`, so the sparsity structure the pruner produced survives
+//! quantization.
+//!
+//! **Error contract** (pinned by the unit tests here and by
+//! `tests/quant_parity.rs`): the per-row maximum reconstruction error,
+//! relative to that row's absmax, is at most `1/(2·32767) ≈ 1.5e-5` for
+//! u16 and `1/(2·127) ≈ 3.9e-3` for u8 — comfortably inside the
+//! documented bounds of **1e-3 (u16)** and **2e-2 (u8)** that the rest
+//! of the system (eval parity, checkpoint round-trips) is specified
+//! against.
+//!
+//! [`QuantMat`] wraps the dense/CSR split of
+//! [`crate::sparse::WeightMat`]: the compile pass keeps its per-tensor
+//! density decision, but CSR `values` arrays and dense slabs both hold
+//! quantized payloads. Quantized CSR additionally narrows column indices
+//! to u16 whenever the column count fits — that, plus 2-byte values, is
+//! where the serving working set's ≥1.8× shrink at u16 (and ~2.4× at
+//! u8) over f32-CSR comes from. The matvec kernels dequantize on the
+//! fly inside the same i→p→j traversal as the f32 kernels, so the
+//! full-sequence forward, the batched expert-gather, and the
+//! incremental decode session all execute directly from quantized
+//! storage through the one shared `matmul_acc` entry point — there is
+//! no dequantized weight copy anywhere.
+//!
+//! [`tensor_store_bytes`] is THE authoritative bytes-per-tensor rule —
+//! the per-tensor `min(dense, CSR)` under a scheme — shared by the
+//! compile pass, [`crate::sparse::CompressionReport`],
+//! [`crate::model::ParamSet::expert_resident_bytes`], and
+//! [`crate::coordinator::ExpertStore`], so residency budgets, prune
+//! reports, and compiled sizes can never disagree about what a tensor
+//! costs.
+
+use crate::sparse::{csr_bytes, SparseConfig, WeightMat};
+use anyhow::{bail, Result};
+
+/// Storage width of compiled/checkpointed weight payloads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// 4-byte floats, no scales — bit-identical to the pre-quant storage.
+    #[default]
+    F32,
+    /// 2-byte codes, zero point 32768, per-row scale `absmax / 32767`.
+    U16,
+    /// 1-byte codes, zero point 128, per-row scale `absmax / 127`.
+    U8,
+}
+
+impl QuantScheme {
+    /// Parse a CLI-style scheme name (`f32 | u16 | u8`).
+    pub fn parse(s: &str) -> Result<QuantScheme> {
+        Ok(match s {
+            "f32" => QuantScheme::F32,
+            "u16" => QuantScheme::U16,
+            "u8" => QuantScheme::U8,
+            other => bail!("unknown quant scheme '{other}' (expected f32|u16|u8)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantScheme::F32 => "f32",
+            QuantScheme::U16 => "u16",
+            QuantScheme::U8 => "u8",
+        }
+    }
+
+    /// Bytes per stored value.
+    pub fn value_bytes(self) -> usize {
+        match self {
+            QuantScheme::F32 => 4,
+            QuantScheme::U16 => 2,
+            QuantScheme::U8 => 1,
+        }
+    }
+
+    pub fn is_quantized(self) -> bool {
+        self != QuantScheme::F32
+    }
+
+    /// The documented per-row relative reconstruction error bound (0 for
+    /// f32). The actual worst case is ~65× (u16) / ~5× (u8) tighter; the
+    /// documented bound is what downstream contracts may rely on.
+    pub fn error_bound(self) -> f64 {
+        match self {
+            QuantScheme::F32 => 0.0,
+            QuantScheme::U16 => 1e-3,
+            QuantScheme::U8 => 2e-2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte accounting — the one place storage costs are defined.
+// ---------------------------------------------------------------------------
+
+/// Bytes of a `[rows, cols]` slab stored dense under `scheme`: the codes
+/// plus the per-row f32 scale slab (f32 payloads carry no scales).
+pub fn dense_store_bytes(rows: usize, cols: usize, scheme: QuantScheme) -> usize {
+    let vals = rows * cols * scheme.value_bytes();
+    if scheme.is_quantized() {
+        vals + rows * 4
+    } else {
+        vals
+    }
+}
+
+/// Column-index width of CSR storage under `scheme`: quantized payloads
+/// narrow indices to u16 whenever the column count fits (every config in
+/// this repo does); f32 CSR keeps the original u32 layout.
+fn col_index_bytes(cols: usize, scheme: QuantScheme) -> usize {
+    if scheme.is_quantized() && cols <= u16::MAX as usize + 1 {
+        2
+    } else {
+        4
+    }
+}
+
+/// Bytes of a `[rows, cols]` slab with `nnz` stored entries in CSR under
+/// `scheme`: u32 row pointers, per-entry column index + value, and (for
+/// quantized payloads) the per-row f32 scale slab. The f32 arm is exactly
+/// [`crate::sparse::csr_bytes`] — the pre-quant accounting, unchanged.
+pub fn csr_store_bytes(rows: usize, cols: usize, nnz: usize, scheme: QuantScheme) -> usize {
+    if !scheme.is_quantized() {
+        return csr_bytes(rows, nnz);
+    }
+    (rows + 1) * 4 + nnz * (col_index_bytes(cols, scheme) + scheme.value_bytes()) + rows * 4
+}
+
+/// THE authoritative bytes-per-tensor rule: what a `[rows, cols]` slab
+/// with `nnz` non-zeros actually costs to keep resident under `scheme` —
+/// the cheaper of dense and CSR storage, exactly the choice the compile
+/// pass makes at the default density threshold. `CompressionReport`,
+/// `ParamSet::expert_resident_bytes`, and `ExpertStore` all budget with
+/// this one function.
+pub fn tensor_store_bytes(rows: usize, cols: usize, nnz: usize, scheme: QuantScheme) -> usize {
+    dense_store_bytes(rows, cols, scheme).min(csr_store_bytes(rows, cols, nnz, scheme))
+}
+
+// ---------------------------------------------------------------------------
+// Codes: the two quantized storage types behind one trait.
+// ---------------------------------------------------------------------------
+
+/// One quantized storage width. `from_f32`/`centered` are the entire
+/// (de)quantization arithmetic; everything else in this module is layout.
+trait Code: Copy {
+    /// The code every exact zero maps to (midpoint of the unsigned range).
+    const ZP: i32;
+    /// Largest representable magnitude in code units.
+    const QMAX: f32;
+    /// Largest valid code (`2·ZP − 1`).
+    const CODE_MAX: i32;
+    fn from_f32(x: f32, inv_scale: f32) -> Self;
+    /// `(code − ZP) as f32` — multiply by the row scale to dequantize.
+    fn centered(self) -> f32;
+}
+
+impl Code for u16 {
+    const ZP: i32 = 32768;
+    const QMAX: f32 = 32767.0;
+    const CODE_MAX: i32 = 65535;
+    #[inline]
+    fn from_f32(x: f32, inv_scale: f32) -> u16 {
+        ((x * inv_scale).round() as i32 + Self::ZP).clamp(0, Self::CODE_MAX) as u16
+    }
+    #[inline]
+    fn centered(self) -> f32 {
+        (self as i32 - Self::ZP) as f32
+    }
+}
+
+impl Code for u8 {
+    const ZP: i32 = 128;
+    const QMAX: f32 = 127.0;
+    const CODE_MAX: i32 = 255;
+    #[inline]
+    fn from_f32(x: f32, inv_scale: f32) -> u8 {
+        ((x * inv_scale).round() as i32 + Self::ZP).clamp(0, Self::CODE_MAX) as u8
+    }
+    #[inline]
+    fn centered(self) -> f32 {
+        (self as i32 - Self::ZP) as f32
+    }
+}
+
+/// A quantized code array in whichever width the scheme chose.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantCodes {
+    U16(Vec<u16>),
+    U8(Vec<u8>),
+}
+
+impl QuantCodes {
+    pub fn scheme(&self) -> QuantScheme {
+        match self {
+            QuantCodes::U16(_) => QuantScheme::U16,
+            QuantCodes::U8(_) => QuantScheme::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            QuantCodes::U16(v) => v.len(),
+            QuantCodes::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Codes that dequantize to a non-zero value (≠ zero point).
+    pub fn nonzero(&self) -> usize {
+        match self {
+            QuantCodes::U16(v) => v.iter().filter(|&&c| c as i32 != <u16 as Code>::ZP).count(),
+            QuantCodes::U8(v) => v.iter().filter(|&&c| c as i32 != <u8 as Code>::ZP).count(),
+        }
+    }
+}
+
+fn quantize_spans_t<C: Code>(vals: &[f32], span_lens: &[usize]) -> (Vec<f32>, Vec<C>) {
+    let mut scales = Vec::with_capacity(span_lens.len());
+    let mut codes = Vec::with_capacity(vals.len());
+    let mut start = 0usize;
+    for &n in span_lens {
+        let row = &vals[start..start + n];
+        let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = absmax / C::QMAX;
+        let inv = if scale > 0.0 { scale.recip() } else { 0.0 };
+        scales.push(scale);
+        codes.extend(row.iter().map(|&v| C::from_f32(v, inv)));
+        start += n;
+    }
+    (scales, codes)
+}
+
+fn dequantize_spans_t<C: Code>(scales: &[f32], codes: &[C], span_lens: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(codes.len());
+    let mut start = 0usize;
+    for (r, &n) in span_lens.iter().enumerate() {
+        let s = scales[r];
+        out.extend(codes[start..start + n].iter().map(|c| c.centered() * s));
+        start += n;
+    }
+    out
+}
+
+/// Quantize `vals` as consecutive spans: span `r` (of `span_lens[r]`
+/// values) is calibrated on its own absmax and gets `scales[r]`. This is
+/// the one calibration routine — dense slabs pass uniform spans of
+/// `cols`, CSR passes each row's stored-value count, and the checkpoint
+/// writer passes per-row survivor counts of bitmap-sparse sections.
+///
+/// `scheme` must be a quantized width (f32 payloads are not code arrays).
+pub fn quantize_spans(
+    vals: &[f32],
+    span_lens: &[usize],
+    scheme: QuantScheme,
+) -> (Vec<f32>, QuantCodes) {
+    debug_assert_eq!(span_lens.iter().sum::<usize>(), vals.len());
+    match scheme {
+        QuantScheme::U16 => {
+            let (s, c) = quantize_spans_t::<u16>(vals, span_lens);
+            (s, QuantCodes::U16(c))
+        }
+        QuantScheme::U8 => {
+            let (s, c) = quantize_spans_t::<u8>(vals, span_lens);
+            (s, QuantCodes::U8(c))
+        }
+        QuantScheme::F32 => panic!("f32 payloads are stored as plain floats, not codes"),
+    }
+}
+
+/// Inverse of [`quantize_spans`]: reconstruct the f32 values (exact
+/// zeros come back as exactly `+0.0`).
+pub fn dequantize_spans(scales: &[f32], codes: &QuantCodes, span_lens: &[usize]) -> Vec<f32> {
+    debug_assert_eq!(span_lens.len(), scales.len());
+    debug_assert_eq!(span_lens.iter().sum::<usize>(), codes.len());
+    match codes {
+        QuantCodes::U16(c) => dequantize_spans_t(scales, c, span_lens),
+        QuantCodes::U8(c) => dequantize_spans_t(scales, c, span_lens),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dequant-on-the-fly matmul kernels.
+// ---------------------------------------------------------------------------
+
+/// `out += a @ Q`, dense quantized `Q: [rows, cols]`. Same i→p→j
+/// traversal (and zero-activation skip) as the f32 kernels; the per-row
+/// scale is folded into the activation once per row, so the inner loop
+/// is one int→float convert and one fma per element.
+fn dense_q_matmul_acc<C: Code>(
+    codes: &[C],
+    scale: &[f32],
+    rows: usize,
+    cols: usize,
+    a: &[f32],
+    out: &mut [f32],
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), m * rows);
+    debug_assert_eq!(out.len(), m * cols);
+    for i in 0..m {
+        let arow = &a[i * rows..(i + 1) * rows];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let s = av * scale[p];
+            if s == 0.0 {
+                // all-zero row (scale 0) contributes nothing
+                continue;
+            }
+            let qrow = &codes[p * cols..(p + 1) * cols];
+            for (o, &c) in orow.iter_mut().zip(qrow) {
+                *o += s * c.centered();
+            }
+        }
+    }
+}
+
+/// Column-index storage width of quantized CSR.
+trait ColId: Copy {
+    fn at(self) -> usize;
+}
+impl ColId for u16 {
+    #[inline]
+    fn at(self) -> usize {
+        self as usize
+    }
+}
+impl ColId for u32 {
+    #[inline]
+    fn at(self) -> usize {
+        self as usize
+    }
+}
+
+/// `out += a @ Q` with quantized-CSR `Q` — the same p-order axpy loop as
+/// [`crate::sparse::CsrMatrix::matmul_acc`], restricted to stored
+/// entries, dequantizing each on the fly.
+#[allow(clippy::too_many_arguments)]
+fn csr_q_matmul_acc<C: Code, I: ColId>(
+    row_ptr: &[u32],
+    idx: &[I],
+    codes: &[C],
+    scale: &[f32],
+    rows: usize,
+    cols: usize,
+    a: &[f32],
+    out: &mut [f32],
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), m * rows);
+    debug_assert_eq!(out.len(), m * cols);
+    for i in 0..m {
+        let arow = &a[i * rows..(i + 1) * rows];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let s = av * scale[p];
+            if s == 0.0 {
+                continue;
+            }
+            let (lo, hi) = (row_ptr[p] as usize, row_ptr[p + 1] as usize);
+            for (ci, c) in idx[lo..hi].iter().zip(&codes[lo..hi]) {
+                orow[ci.at()] += s * c.centered();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized storage containers.
+// ---------------------------------------------------------------------------
+
+/// A per-row-quantized dense `[rows, cols]` slab.
+#[derive(Clone, Debug)]
+pub struct QuantDense {
+    rows: usize,
+    cols: usize,
+    /// `[rows]` dequantization scales.
+    scale: Vec<f32>,
+    codes: QuantCodes,
+}
+
+impl QuantDense {
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, scheme: QuantScheme) -> QuantDense {
+        debug_assert_eq!(data.len(), rows * cols);
+        let spans = vec![cols; rows];
+        let (scale, codes) = quantize_spans(data, &spans, scheme);
+        QuantDense {
+            rows,
+            cols,
+            scale,
+            codes,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        dense_store_bytes(self.rows, self.cols, self.codes.scheme())
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        dequantize_spans(&self.scale, &self.codes, &vec![self.cols; self.rows])
+    }
+
+    pub fn matmul_acc(&self, a: &[f32], out: &mut [f32], m: usize) {
+        match &self.codes {
+            QuantCodes::U16(c) => {
+                dense_q_matmul_acc(c, &self.scale, self.rows, self.cols, a, out, m)
+            }
+            QuantCodes::U8(c) => {
+                dense_q_matmul_acc(c, &self.scale, self.rows, self.cols, a, out, m)
+            }
+        }
+    }
+}
+
+/// Column indices of a [`QuantCsr`], narrowed to u16 when they fit.
+#[derive(Clone, Debug)]
+enum ColIdx {
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+/// A per-row-quantized CSR matrix: u32 row pointers, narrow column
+/// indices, quantized values, per-row scales.
+#[derive(Clone, Debug)]
+pub struct QuantCsr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<u32>,
+    idx: ColIdx,
+    /// `[rows]` dequantization scales (absmax over the row's stored values).
+    scale: Vec<f32>,
+    codes: QuantCodes,
+}
+
+impl QuantCsr {
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, scheme: QuantScheme) -> QuantCsr {
+        debug_assert_eq!(data.len(), rows * cols);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut cols_v: Vec<u32> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        let mut span_lens = Vec::with_capacity(rows);
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let before = vals.len();
+            for (c, &v) in data[r * cols..(r + 1) * cols].iter().enumerate() {
+                if v != 0.0 {
+                    cols_v.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            span_lens.push(vals.len() - before);
+            row_ptr.push(vals.len() as u32);
+        }
+        let (scale, codes) = quantize_spans(&vals, &span_lens, scheme);
+        let idx = if cols <= u16::MAX as usize + 1 {
+            ColIdx::U16(cols_v.iter().map(|&c| c as u16).collect())
+        } else {
+            ColIdx::U32(cols_v)
+        };
+        QuantCsr {
+            rows,
+            cols,
+            row_ptr,
+            idx,
+            scale,
+            codes,
+        }
+    }
+
+    /// Stored entries (structural non-zeros of the source slab).
+    pub fn stored(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        csr_store_bytes(self.rows, self.cols, self.stored(), self.codes.scheme())
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let spans: Vec<usize> = (0..self.rows)
+            .map(|r| (self.row_ptr[r + 1] - self.row_ptr[r]) as usize)
+            .collect();
+        let vals = dequantize_spans(&self.scale, &self.codes, &spans);
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                let c = match &self.idx {
+                    ColIdx::U16(ix) => ix[i] as usize,
+                    ColIdx::U32(ix) => ix[i] as usize,
+                };
+                out[r * self.cols + c] = vals[i];
+            }
+        }
+        out
+    }
+
+    pub fn matmul_acc(&self, a: &[f32], out: &mut [f32], m: usize) {
+        let (rp, sc, r, c) = (&self.row_ptr, &self.scale, self.rows, self.cols);
+        match (&self.idx, &self.codes) {
+            (ColIdx::U16(ix), QuantCodes::U16(q)) => {
+                csr_q_matmul_acc(rp, ix, q, sc, r, c, a, out, m)
+            }
+            (ColIdx::U16(ix), QuantCodes::U8(q)) => {
+                csr_q_matmul_acc(rp, ix, q, sc, r, c, a, out, m)
+            }
+            (ColIdx::U32(ix), QuantCodes::U16(q)) => {
+                csr_q_matmul_acc(rp, ix, q, sc, r, c, a, out, m)
+            }
+            (ColIdx::U32(ix), QuantCodes::U8(q)) => {
+                csr_q_matmul_acc(rp, ix, q, sc, r, c, a, out, m)
+            }
+        }
+    }
+}
+
+/// One weight matrix in whichever storage *and width* the compile pass
+/// chose: the f32 passthrough keeps the exact pre-quant [`WeightMat`]
+/// (bit-identical kernels), the quantized arms hold per-row-quantized
+/// dense or CSR payloads. Every forward path — full-sequence, batched
+/// expert-gather, incremental session — calls the one
+/// [`QuantMat::matmul_acc`] entry point, so quantized execution needs no
+/// second kernel family anywhere upstream.
+#[derive(Clone, Debug)]
+pub enum QuantMat {
+    /// f32 passthrough: exactly the pre-quant storage + kernels.
+    Plain(WeightMat),
+    Dense(QuantDense),
+    Csr(QuantCsr),
+}
+
+impl QuantMat {
+    /// Pick dense vs CSR for a row-major `[rows, cols]` slab under
+    /// `scfg` (density threshold + in-scheme byte comparison), then
+    /// quantize the payload per `scfg.quant`.
+    pub fn compile(data: &[f32], rows: usize, cols: usize, scfg: &SparseConfig) -> QuantMat {
+        debug_assert_eq!(data.len(), rows * cols);
+        if !scfg.quant.is_quantized() {
+            return QuantMat::Plain(WeightMat::compile(data, rows, cols, scfg));
+        }
+        let nnz = data.iter().filter(|&&x| x != 0.0).count();
+        let density = nnz as f64 / (rows * cols).max(1) as f64;
+        if density <= scfg.density_threshold
+            && csr_store_bytes(rows, cols, nnz, scfg.quant)
+                < dense_store_bytes(rows, cols, scfg.quant)
+        {
+            QuantMat::Csr(QuantCsr::quantize(data, rows, cols, scfg.quant))
+        } else {
+            QuantMat::Dense(QuantDense::quantize(data, rows, cols, scfg.quant))
+        }
+    }
+
+    pub fn scheme(&self) -> QuantScheme {
+        match self {
+            QuantMat::Plain(_) => QuantScheme::F32,
+            QuantMat::Dense(d) => d.codes.scheme(),
+            QuantMat::Csr(c) => c.codes.scheme(),
+        }
+    }
+
+    pub fn is_csr(&self) -> bool {
+        match self {
+            QuantMat::Plain(w) => w.is_csr(),
+            QuantMat::Dense(_) => false,
+            QuantMat::Csr(_) => true,
+        }
+    }
+
+    /// Stored weights that dequantize to a non-zero value.
+    pub fn nnz(&self) -> usize {
+        match self {
+            QuantMat::Plain(w) => w.nnz(),
+            QuantMat::Dense(d) => d.codes.nonzero(),
+            QuantMat::Csr(c) => c.codes.nonzero(),
+        }
+    }
+
+    /// Bytes of the chosen storage (codes + indices + scales).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantMat::Plain(w) => w.bytes(),
+            QuantMat::Dense(d) => d.bytes(),
+            QuantMat::Csr(c) => c.bytes(),
+        }
+    }
+
+    /// Expand to a dense f32 slab (dequantized; tests and round-trips).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            QuantMat::Plain(WeightMat::Dense { data, .. }) => data.clone(),
+            QuantMat::Plain(WeightMat::Csr(c)) => c.to_dense(),
+            QuantMat::Dense(d) => d.to_dense(),
+            QuantMat::Csr(c) => c.to_dense(),
+        }
+    }
+
+    /// `out += a @ self`, `a: [m, rows]`, `out: [m, cols]` — the single
+    /// matmul entry point of every compiled forward path.
+    pub fn matmul_acc(&self, a: &[f32], out: &mut [f32], m: usize) {
+        match self {
+            QuantMat::Plain(w) => w.matmul_acc(a, out, m),
+            QuantMat::Dense(d) => d.matmul_acc(a, out, m),
+            QuantMat::Csr(c) => c.matmul_acc(a, out, m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sparse_slab(rows: usize, cols: usize, keep: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * cols)
+            .map(|_| {
+                if (rng.below(1000) as f64) < keep * 1000.0 {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Max per-row reconstruction error relative to the row's absmax.
+    fn max_rel_row_err(orig: &[f32], deq: &[f32], rows: usize, cols: usize) -> f64 {
+        let mut worst = 0f64;
+        for r in 0..rows {
+            let row = &orig[r * cols..(r + 1) * cols];
+            let drow = &deq[r * cols..(r + 1) * cols];
+            let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            if absmax == 0.0 {
+                assert!(drow.iter().all(|&v| v == 0.0));
+                continue;
+            }
+            for (&a, &b) in row.iter().zip(drow) {
+                worst = worst.max(((a - b).abs() / absmax) as f64);
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn per_row_error_stays_inside_the_documented_contract() {
+        let (rows, cols) = (24, 48);
+        let data = sparse_slab(rows, cols, 1.0, 3);
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let q = QuantDense::quantize(&data, rows, cols, scheme);
+            let err = max_rel_row_err(&data, &q.to_dense(), rows, cols);
+            assert!(
+                err <= scheme.error_bound(),
+                "{}: rel err {err} > {}",
+                scheme.name(),
+                scheme.error_bound()
+            );
+        }
+    }
+
+    #[test]
+    fn exact_zeros_survive_quantization_bit_exactly() {
+        let data = vec![0.0, -1.5, 0.0, 0.25, -0.0, 3.0];
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let q = QuantDense::quantize(&data, 2, 3, scheme);
+            let back = q.to_dense();
+            for (i, (&orig, &deq)) in data.iter().zip(&back).enumerate() {
+                if orig == 0.0 {
+                    assert_eq!(deq.to_bits(), 0f32.to_bits(), "elem {i} under {scheme:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_rows_quantize_and_multiply_cleanly() {
+        let data = vec![0.0; 4 * 5];
+        let q = QuantDense::quantize(&data, 4, 5, QuantScheme::U8);
+        assert!(q.to_dense().iter().all(|&v| v == 0.0));
+        let a = vec![1.0f32; 2 * 4];
+        let mut out = vec![0f32; 2 * 5];
+        q.matmul_acc(&a, &mut out, 2);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quant_matmul_tracks_f32_matmul_within_the_bound() {
+        let (rows, cols, m) = (16, 24, 3);
+        let data = sparse_slab(rows, cols, 0.4, 5);
+        let mut rng = Rng::new(7);
+        let a: Vec<f32> = (0..m * rows).map(|_| rng.normal()).collect();
+        let f32_mat = WeightMat::compile(&data, rows, cols, &SparseConfig::default());
+        let mut want = vec![0f32; m * cols];
+        f32_mat.matmul_acc(&a, &mut want, m);
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            for arm in [
+                QuantMat::Dense(QuantDense::quantize(&data, rows, cols, scheme)),
+                QuantMat::Csr(QuantCsr::quantize(&data, rows, cols, scheme)),
+            ] {
+                // error budget: each output sums `rows` products whose
+                // weight factor is off by ≤ bound · row-absmax
+                let absmax = data.iter().fold(0f32, |mx, &v| mx.max(v.abs()));
+                let amax = a.iter().fold(0f32, |mx, &v| mx.max(v.abs()));
+                let budget =
+                    scheme.error_bound() * (rows as f64) * (absmax as f64) * (amax as f64);
+                let mut got = vec![0f32; m * cols];
+                arm.matmul_acc(&a, &mut got, m);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        ((g - w).abs() as f64) <= budget,
+                        "{}: {g} vs {w} (budget {budget})",
+                        scheme.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csr_and_dense_quant_arms_agree_exactly() {
+        // same codes, same scales, same accumulation order restricted to
+        // stored entries → the two arms must agree to the last ulp on a
+        // slab whose zeros are structural
+        let (rows, cols, m) = (12, 10, 2);
+        let data = sparse_slab(rows, cols, 0.3, 11);
+        let mut rng = Rng::new(13);
+        let a: Vec<f32> = (0..m * rows).map(|_| rng.normal()).collect();
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let dq = QuantDense::quantize(&data, rows, cols, scheme);
+            let cq = QuantCsr::quantize(&data, rows, cols, scheme);
+            let (mut od, mut oc) = (vec![0f32; m * cols], vec![0f32; m * cols]);
+            dq.matmul_acc(&a, &mut od, m);
+            cq.matmul_acc(&a, &mut oc, m);
+            // dense visits zero codes (adding s·0 = ±0.0), CSR skips
+            // them; both leave the accumulator's value unchanged
+            for (x, y) in od.iter().zip(&oc) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", scheme.name());
+            }
+        }
+    }
+
+    #[test]
+    fn compile_picks_quantized_csr_below_the_threshold() {
+        let (rows, cols) = (32, 40);
+        let sparse = sparse_slab(rows, cols, 0.25, 17);
+        let dense = sparse_slab(rows, cols, 1.0, 19);
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let scfg = SparseConfig {
+                quant: scheme,
+                ..Default::default()
+            };
+            let qs = QuantMat::compile(&sparse, rows, cols, &scfg);
+            assert!(qs.is_csr(), "{}", scheme.name());
+            assert_eq!(qs.scheme(), scheme);
+            let qd = QuantMat::compile(&dense, rows, cols, &scfg);
+            assert!(!qd.is_csr());
+            // quantized storage beats the f32 choice at every density
+            let f32s = QuantMat::compile(&sparse, rows, cols, &SparseConfig::default());
+            let f32d = QuantMat::compile(&dense, rows, cols, &SparseConfig::default());
+            assert!(qs.bytes() < f32s.bytes());
+            assert!(qd.bytes() < f32d.bytes());
+        }
+    }
+
+    #[test]
+    fn bytes_match_the_authoritative_rule_and_order_by_width() {
+        let (rows, cols) = (64, 64);
+        let data = sparse_slab(rows, cols, 0.3, 23);
+        let nnz = data.iter().filter(|&&x| x != 0.0).count();
+        let mut per_scheme = Vec::new();
+        for scheme in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+            let scfg = SparseConfig {
+                quant: scheme,
+                ..Default::default()
+            };
+            let q = QuantMat::compile(&data, rows, cols, &scfg);
+            assert_eq!(
+                q.bytes(),
+                tensor_store_bytes(rows, cols, nnz, scheme),
+                "{}",
+                scheme.name()
+            );
+            // nnz counts weights that dequantize non-zero: at most the
+            // structural count (a tiny value may round to the zero
+            // point), and nowhere near empty at 30% density
+            assert!(q.nnz() <= nnz, "{}: {} > {nnz}", scheme.name(), q.nnz());
+            assert!(q.nnz() > nnz / 2, "{}: {}", scheme.name(), q.nnz());
+            per_scheme.push(q.bytes());
+        }
+        assert!(per_scheme[0] > per_scheme[1], "u16 must shrink f32 storage");
+        assert!(per_scheme[1] > per_scheme[2], "u8 must shrink u16 storage");
+        // the headline: ≥1.8× at u16 for a 70%-sparse expert-shaped slab
+        assert!(
+            per_scheme[0] as f64 / per_scheme[1] as f64 >= 1.8,
+            "u16 shrink {} / {}",
+            per_scheme[0],
+            per_scheme[1]
+        );
+    }
+
+    #[test]
+    fn span_roundtrip_handles_variable_and_empty_spans() {
+        let vals = vec![1.0f32, -2.0, 0.5, 4.0, -0.25];
+        let spans = vec![2usize, 0, 1, 2];
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let (scales, codes) = quantize_spans(&vals, &spans, scheme);
+            assert_eq!(scales.len(), spans.len());
+            assert_eq!(codes.len(), vals.len());
+            assert_eq!(codes.scheme(), scheme);
+            let back = dequantize_spans(&scales, &codes, &spans);
+            for (i, (&a, &b)) in vals.iter().zip(&back).enumerate() {
+                let bound = (scheme.error_bound() as f32) * 4.0; // max absmax
+                assert!((a - b).abs() <= bound, "span elem {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_parse_and_names_roundtrip() {
+        for scheme in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+            assert_eq!(QuantScheme::parse(scheme.name()).unwrap(), scheme);
+        }
+        assert!(QuantScheme::parse("fp8").is_err());
+        assert_eq!(QuantScheme::default(), QuantScheme::F32);
+        assert!(!QuantScheme::F32.is_quantized());
+        assert!(QuantScheme::U16.is_quantized());
+    }
+}

@@ -581,7 +581,12 @@ pub fn kurtosis_report(proto: &Protocol) -> Result<String> {
 // Serving comparison (coordinator demo).
 // ===========================================================================
 
-pub fn serving_report(proto: &Protocol, n_requests: usize) -> Result<String> {
+pub fn serving_report(
+    proto: &Protocol,
+    n_requests: usize,
+    quant: crate::quant::QuantScheme,
+) -> Result<String> {
+    use crate::quant::QuantScheme;
     let (backend, base) = ensure_trained("moe-8x", proto)?;
     let backend = backend.as_ref();
     let mut pruned = base.clone();
@@ -598,19 +603,32 @@ pub fn serving_report(proto: &Protocol, n_requests: usize) -> Result<String> {
     .run(backend, &mut pruned, &mut gen)?;
 
     // store sized (in bytes) to fit the PRUNED working set but not the
-    // dense one — pruned experts genuinely pack more residency
-    let capacity = ExpertStore::working_set_bytes(&pruned);
+    // dense one — pruned experts genuinely pack more residency. The
+    // {label, compile scheme, accounting scheme} serving arms; with
+    // --quant a third row shows what quantized payloads add on top.
+    let capacity = ExpertStore::working_set_bytes(&pruned, QuantScheme::F32);
+    let mut arms = vec![
+        ("dense".to_string(), &base, QuantScheme::F32),
+        ("stun-pruned".to_string(), &pruned, QuantScheme::F32),
+    ];
+    if quant.is_quantized() {
+        arms.push((format!("stun+{}", quant.name()), &pruned, quant));
+    }
     let mut rows = Vec::new();
-    for (label, params) in [("dense", &base), ("stun-pruned", &pruned)] {
+    for (label, params, scheme) in arms {
         let store = ExpertStore::new(capacity, std::time::Duration::from_micros(200));
-        let mut batcher = Batcher::new(backend, params, store)?;
+        let scfg = crate::sparse::SparseConfig {
+            quant: scheme,
+            ..Default::default()
+        };
+        let mut batcher = Batcher::with_config(backend, params, store, true, true, &scfg)?;
         let queue = burst_workload(backend.config(), n_requests, 6, 17);
         let (_resp, m) = batcher.serve(queue)?;
         rows.push(vec![
-            label.to_string(),
+            label,
             format!(
                 "{:.0}",
-                ExpertStore::working_set_bytes(params) as f64 / 1024.0
+                ExpertStore::working_set_bytes(params, scheme) as f64 / 1024.0
             ),
             format!("{:.1}", m.tokens_per_sec()),
             format!("{:.1}", m.effective_tokens_per_sec()),

@@ -38,6 +38,7 @@ pub use pjrt::{Engine, ModelBundle, PjrtBackend};
 pub use session::{DecodeState, StepOutput};
 
 use crate::model::{ModelConfig, ParamSet};
+use crate::sparse::SparseConfig;
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -235,12 +236,25 @@ pub trait Backend {
         x: &Tensor,
     ) -> Result<Tensor>;
 
-    /// Compile `params` into a decode-optimised executable form, when the
-    /// backend supports one. The native backend returns a
-    /// [`crate::sparse::CompiledModel`] (per-tensor dense/CSR storage);
-    /// backends without a compiled path return `Ok(None)` and callers fall
-    /// back to the per-call `fwd_logits*` contract.
-    fn compile(&self, _params: &ParamSet) -> Result<Option<Box<dyn CompiledForward>>> {
+    /// Compile `params` into a decode-optimised executable form under the
+    /// default [`SparseConfig`] (f32 payloads, 0.5 density threshold).
+    /// The native backend returns a [`crate::sparse::CompiledModel`]
+    /// (per-tensor dense/CSR storage); backends without a compiled path
+    /// return `Ok(None)` and callers fall back to the per-call
+    /// `fwd_logits*` contract.
+    fn compile(&self, params: &ParamSet) -> Result<Option<Box<dyn CompiledForward>>> {
+        self.compile_with(params, &SparseConfig::default())
+    }
+
+    /// [`Backend::compile`] with explicit compile knobs — in particular
+    /// [`SparseConfig::quant`], which selects the storage width (f32,
+    /// u16, u8) of every compiled weight payload. This is the method
+    /// backends implement; `compile` is sugar over it.
+    fn compile_with(
+        &self,
+        _params: &ParamSet,
+        _scfg: &SparseConfig,
+    ) -> Result<Option<Box<dyn CompiledForward>>> {
         Ok(None)
     }
 

@@ -553,9 +553,10 @@ impl Backend for NativeBackend {
         Tensor::new(x.shape(), moe.y)
     }
 
-    fn compile(
+    fn compile_with(
         &self,
         params: &ParamSet,
+        scfg: &crate::sparse::SparseConfig,
     ) -> Result<Option<Box<dyn super::CompiledForward>>> {
         if params.config != self.config {
             bail!(
@@ -565,8 +566,7 @@ impl Backend for NativeBackend {
             );
         }
         Ok(Some(Box::new(crate::sparse::CompiledModel::compile(
-            params,
-            &crate::sparse::SparseConfig::default(),
+            params, scfg,
         ))))
     }
 

@@ -44,12 +44,21 @@
 //! [`CompressionReport`] is the bookkeeping side of the same story:
 //! per-layer nnz and dense-vs-CSR byte accounting for the JSON prune
 //! reports.
+//!
+//! Storage *width* is orthogonal to the dense/CSR split and lives in
+//! [`crate::quant`]: [`SparseConfig::quant`] selects f32/u16/u8 payloads
+//! and the compile pass stores every prunable matrix as a
+//! [`crate::quant::QuantMat`] (per-row absmax scales, dequant-on-the-fly
+//! kernels). The f32 scheme is the bit-identical passthrough to the
+//! pre-quant [`WeightMat`] storage, so nothing regresses when
+//! quantization is off.
 
 pub mod csr;
 
 pub use csr::{csr_bytes, CsrMatrix};
 
 use crate::model::{ModelConfig, ParamSet};
+use crate::quant::{self, QuantMat, QuantScheme};
 use crate::runtime::native::{
     attention_fwd, attn_ctx_row, embed_fwd, masked_loss, matmul, rmsnorm_fwd, route_token,
 };
@@ -71,12 +80,18 @@ pub struct SparseConfig {
     /// with the min(dense, CSR) accounting that `ExpertStore` budgets
     /// with. Density 1.0 (unpruned) always takes the dense fallback.
     pub density_threshold: f64,
+    /// Storage width of every compiled weight payload (CSR `values` and
+    /// dense slabs alike). [`QuantScheme::F32`] is the lossless
+    /// passthrough; u16/u8 store per-row absmax-quantized codes and pay
+    /// a dequant multiply on the fly (see [`crate::quant`]).
+    pub quant: QuantScheme,
 }
 
 impl Default for SparseConfig {
     fn default() -> Self {
         SparseConfig {
             density_threshold: 0.5,
+            quant: QuantScheme::F32,
         }
     }
 }
@@ -146,17 +161,17 @@ pub enum CompiledExpert {
     Dead,
     Alive {
         /// `[d_model, d_ff]` up-projection.
-        w1: WeightMat,
+        w1: QuantMat,
         /// `[d_ff, d_model]` down-projection.
-        w2: WeightMat,
+        w2: QuantMat,
     },
 }
 
 #[derive(Clone, Debug)]
 struct CompiledLayer {
     ln1: Vec<f32>,
-    wqkv: WeightMat,
-    wo: WeightMat,
+    wqkv: QuantMat,
+    wo: QuantMat,
     ln2: Vec<f32>,
     /// `[E, D]` router rows (dense: tiny and never pruned).
     router: Vec<f32>,
@@ -326,8 +341,11 @@ pub struct CompileStats {
     pub experts_dead: usize,
     /// f32 bytes if every considered matrix (and dead slab) stayed dense.
     pub bytes_dense: usize,
-    /// Actual bytes of the compiled weight storage.
+    /// Actual bytes of the compiled weight storage (codes + indices +
+    /// scales under the chosen quant scheme).
     pub bytes_compiled: usize,
+    /// Storage width every payload was compiled to.
+    pub quant: QuantScheme,
 }
 
 /// A [`ParamSet`] compiled for decode: per-tensor dense/CSR storage plus a
@@ -339,7 +357,7 @@ pub struct CompiledModel {
     pos: Vec<f32>,
     layers: Vec<CompiledLayer>,
     ln_f: Vec<f32>,
-    lm_head: WeightMat,
+    lm_head: QuantMat,
     stats: CompileStats,
 }
 
@@ -350,8 +368,11 @@ impl CompiledModel {
     pub fn compile(params: &ParamSet, scfg: &SparseConfig) -> CompiledModel {
         let cfg = params.config.clone();
         let (d, f, e) = (cfg.d_model, cfg.d_ff, cfg.n_experts);
-        let mut stats = CompileStats::default();
-        let track = |w: WeightMat, stats: &mut CompileStats, dense_elems: usize| {
+        let mut stats = CompileStats {
+            quant: scfg.quant,
+            ..Default::default()
+        };
+        let track = |w: QuantMat, stats: &mut CompileStats, dense_elems: usize| {
             stats.tensors += 1;
             if w.is_csr() {
                 stats.csr_tensors += 1;
@@ -366,12 +387,12 @@ impl CompiledModel {
             let wqkv_t = params.get(&format!("layer{l}.wqkv")).unwrap();
             let wo_t = params.get(&format!("layer{l}.wo")).unwrap();
             let wqkv = track(
-                WeightMat::compile(wqkv_t.data(), d, 3 * d, scfg),
+                QuantMat::compile(wqkv_t.data(), d, 3 * d, scfg),
                 &mut stats,
                 d * 3 * d,
             );
             let wo = track(
-                WeightMat::compile(wo_t.data(), d, d, scfg),
+                QuantMat::compile(wo_t.data(), d, d, scfg),
                 &mut stats,
                 d * d,
             );
@@ -386,12 +407,12 @@ impl CompiledModel {
                     continue;
                 }
                 let w1 = track(
-                    WeightMat::compile(w1_t.subtensor(ei), d, f, scfg),
+                    QuantMat::compile(w1_t.subtensor(ei), d, f, scfg),
                     &mut stats,
                     d * f,
                 );
                 let w2 = track(
-                    WeightMat::compile(w2_t.subtensor(ei), f, d, scfg),
+                    QuantMat::compile(w2_t.subtensor(ei), f, d, scfg),
                     &mut stats,
                     f * d,
                 );
@@ -412,7 +433,7 @@ impl CompiledModel {
         }
         let lm_head_t = params.get("lm_head").unwrap();
         let lm_head = track(
-            WeightMat::compile(lm_head_t.data(), d, cfg.vocab, scfg),
+            QuantMat::compile(lm_head_t.data(), d, cfg.vocab, scfg),
             &mut stats,
             d * cfg.vocab,
         );
@@ -437,7 +458,7 @@ impl CompiledModel {
 
     /// The decode/eval forward. Mirrors `native::run_forward` op-for-op
     /// but keeps no training caches, dispatches every prunable matmul
-    /// through [`WeightMat`], and executes each MoE layer through a
+    /// through [`QuantMat`], and executes each MoE layer through a
     /// *batched expert-gather*: tokens are routed first, grouped by
     /// selected expert, and each expert's weight rows then stream ONCE
     /// over its whole token group (`m = group size`) instead of once per
@@ -507,7 +528,7 @@ impl CompiledModel {
     ///
     /// Every kernel here is the per-row-identical twin of the
     /// full-sequence forward (`embed_fwd` arithmetic, shared
-    /// `attn_ctx_row`, shared `moe_gather`, the same `WeightMat`
+    /// `attn_ctx_row`, shared `moe_gather`, the same `QuantMat`
     /// dispatch), so incremental logits replay the full path's bit for
     /// bit — the greedy-parity contract of the session API. One
     /// [`crate::runtime::EXECUTIONS`] tick per step, like one batched
@@ -632,8 +653,14 @@ impl CompiledModel {
 
 impl CompiledForward for CompiledModel {
     fn name(&self) -> String {
+        // the f32 label is unchanged from the pre-quant engine; quantized
+        // executors append their storage width
+        let quant = match self.stats.quant {
+            QuantScheme::F32 => String::new(),
+            q => format!(", {}", q.name()),
+        };
         format!(
-            "compiled({}/{} csr, {} dead)",
+            "compiled({}/{} csr, {} dead{quant})",
             self.stats.csr_tensors, self.stats.tensors, self.stats.experts_dead
         )
     }
@@ -688,16 +715,23 @@ pub struct LayerCompression {
     pub layer: usize,
     pub nnz: usize,
     pub total: usize,
+    /// f32 all-dense baseline (what an unpruned, unquantized model pays).
     pub bytes_dense: usize,
-    /// Raw all-CSR cost (dead experts row-compressed to 0).
+    /// Raw all-CSR cost under the report's quant scheme (dead experts
+    /// row-compressed to 0).
     pub bytes_csr: usize,
-    /// Per-tensor min(dense, CSR) — what the compile pass / `STZCKPT2`
-    /// actually store, and what [`CompressionReport::ratio`] measures.
+    /// Per-tensor min(dense, CSR) under the report's quant scheme — the
+    /// [`crate::quant::tensor_store_bytes`] rule the compile pass,
+    /// checkpoints, and `ExpertStore` all share, and what
+    /// [`CompressionReport::ratio`] measures.
     pub bytes_effective: usize,
 }
 
-/// What pruning bought in storage terms: dense vs CSR vs effective bytes
-/// per layer, emitted into the JSON prune reports.
+/// What pruning (and quantization) bought in storage terms: the f32
+/// dense baseline vs CSR vs effective bytes per layer, emitted into the
+/// JSON prune reports. Every per-tensor figure comes from the one
+/// authoritative [`crate::quant`] sizing rule — no local min(dense, CSR)
+/// arithmetic lives here anymore.
 #[derive(Clone, Debug)]
 pub struct CompressionReport {
     pub layers: Vec<LayerCompression>,
@@ -706,13 +740,32 @@ pub struct CompressionReport {
     pub bytes_dense: usize,
     pub bytes_csr: usize,
     pub bytes_effective: usize,
+    /// Storage width the effective/CSR figures are computed for.
+    pub quant: QuantScheme,
 }
 
 impl CompressionReport {
+    /// f32-storage accounting (the lossless serving configuration).
     pub fn from_params(params: &ParamSet) -> CompressionReport {
+        Self::from_params_quant(params, QuantScheme::F32)
+    }
+
+    /// Byte accounting under `scheme` — what the model costs to serve
+    /// when compiled with [`SparseConfig::quant`] set to the same scheme.
+    /// The dense baseline stays f32, so [`CompressionReport::ratio`]
+    /// reports the *combined* pruning + quantization win.
+    pub fn from_params_quant(params: &ParamSet, scheme: QuantScheme) -> CompressionReport {
         let cfg = &params.config;
         let (d, f, e) = (cfg.d_model, cfg.d_ff, cfg.n_experts);
         let nnz_of = |s: &[f32]| s.iter().filter(|&&x| x != 0.0).count();
+        // one tensor's contribution, via the shared authoritative rule
+        let account = |lc: &mut LayerCompression, rows: usize, cols: usize, nnz: usize| {
+            lc.nnz += nnz;
+            lc.total += rows * cols;
+            lc.bytes_dense += rows * cols * 4;
+            lc.bytes_csr += quant::csr_store_bytes(rows, cols, nnz, scheme);
+            lc.bytes_effective += quant::tensor_store_bytes(rows, cols, nnz, scheme);
+        };
         let mut layers = Vec::with_capacity(cfg.n_layers + 1);
         for l in 0..cfg.n_layers {
             let mut lc = LayerCompression {
@@ -723,47 +776,41 @@ impl CompressionReport {
                 bytes_csr: 0,
                 bytes_effective: 0,
             };
-            for (name, rows) in [(format!("layer{l}.wqkv"), d), (format!("layer{l}.wo"), d)] {
-                let t = params.get(&name).unwrap();
-                let n = nnz_of(t.data());
-                lc.nnz += n;
-                lc.total += t.len();
-                lc.bytes_dense += t.len() * 4;
-                lc.bytes_csr += csr_bytes(rows, n);
-                lc.bytes_effective += csr_bytes(rows, n).min(t.len() * 4);
-            }
+            let wqkv = params.get(&format!("layer{l}.wqkv")).unwrap();
+            account(&mut lc, d, 3 * d, nnz_of(wqkv.data()));
+            let wo = params.get(&format!("layer{l}.wo")).unwrap();
+            account(&mut lc, d, d, nnz_of(wo.data()));
             for ei in 0..e {
-                lc.total += 2 * d * f;
-                lc.bytes_dense += 2 * d * f * 4;
                 if !params.is_expert_alive(l, ei) {
-                    // dead experts are row-compressed away: zero bytes
+                    // dead experts are row-compressed away: zero bytes,
+                    // but they still count against totals
+                    lc.total += 2 * d * f;
+                    lc.bytes_dense += 2 * d * f * 4;
                     continue;
                 }
-                let n1 = nnz_of(params.w1(l).subtensor(ei));
-                let n2 = nnz_of(params.w2(l).subtensor(ei));
-                lc.nnz += n1 + n2;
-                lc.bytes_csr += csr_bytes(d, n1) + csr_bytes(f, n2);
-                lc.bytes_effective += csr_bytes(d, n1).min(d * f * 4);
-                lc.bytes_effective += csr_bytes(f, n2).min(f * d * 4);
+                account(&mut lc, d, f, nnz_of(params.w1(l).subtensor(ei)));
+                account(&mut lc, f, d, nnz_of(params.w2(l).subtensor(ei)));
             }
             layers.push(lc);
         }
         let head = params.get("lm_head").unwrap();
-        let head_nnz = nnz_of(head.data());
-        layers.push(LayerCompression {
+        let mut lc = LayerCompression {
             layer: cfg.n_layers,
-            nnz: head_nnz,
-            total: head.len(),
-            bytes_dense: head.len() * 4,
-            bytes_csr: csr_bytes(d, head_nnz),
-            bytes_effective: csr_bytes(d, head_nnz).min(head.len() * 4),
-        });
+            nnz: 0,
+            total: 0,
+            bytes_dense: 0,
+            bytes_csr: 0,
+            bytes_effective: 0,
+        };
+        account(&mut lc, d, cfg.vocab, nnz_of(head.data()));
+        layers.push(lc);
         let mut report = CompressionReport {
             nnz: 0,
             total: 0,
             bytes_dense: 0,
             bytes_csr: 0,
             bytes_effective: 0,
+            quant: scheme,
             layers,
         };
         for lc in &report.layers {
@@ -776,9 +823,10 @@ impl CompressionReport {
         report
     }
 
-    /// Effective compression: dense bytes over the bytes actually stored
-    /// (per-tensor min of dense and CSR — never below 1.0, since dense is
-    /// always available as the fallback).
+    /// Effective compression: f32 dense bytes over the bytes actually
+    /// stored (per-tensor min of dense and CSR under the quant scheme —
+    /// never below 1.0 at f32, since dense is always available as the
+    /// fallback; quantized schemes push it further).
     pub fn ratio(&self) -> f64 {
         self.bytes_dense as f64 / self.bytes_effective.max(1) as f64
     }
@@ -800,6 +848,7 @@ impl CompressionReport {
             .collect();
         Json::obj(vec![
             ("layers", Json::Arr(layers)),
+            ("quant", Json::Str(self.quant.name().into())),
             ("nnz", Json::Num(self.nnz as f64)),
             ("total", Json::Num(self.total as f64)),
             ("bytes_dense", Json::Num(self.bytes_dense as f64)),
@@ -844,6 +893,7 @@ mod tests {
         ps.prune_expert(0, 0);
         let scfg = SparseConfig {
             density_threshold: 0.0,
+            ..Default::default()
         };
         let cm = CompiledModel::compile(&ps, &scfg);
         // density can never be <= 0 with any nonzero weight present
@@ -864,6 +914,7 @@ mod tests {
             cols,
             &SparseConfig {
                 density_threshold: 0.0,
+                ..Default::default()
             },
         );
         let sparse = WeightMat::compile(
@@ -872,6 +923,7 @@ mod tests {
             cols,
             &SparseConfig {
                 density_threshold: 1.0,
+                ..Default::default()
             },
         );
         assert!(!dense.is_csr());
@@ -959,9 +1011,67 @@ mod tests {
         let j = CompressionReport::from_params(&ps).to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("compression_ratio").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(parsed.get("quant").unwrap().as_str().unwrap(), "f32");
         assert_eq!(
             parsed.get("layers").unwrap().as_arr().unwrap().len(),
             ps.config.n_layers + 1
         );
+    }
+
+    #[test]
+    fn quantized_compile_shrinks_storage_and_labels_itself() {
+        let mut ps = tiny_params(21);
+        crate::pruning::unstructured::magnitude_prune(&mut ps, 0.7).unwrap();
+        let f32_cm = CompiledModel::compile(&ps, &SparseConfig::default());
+        for (scheme, min_gain) in [(QuantScheme::U16, 1.8), (QuantScheme::U8, 2.2)] {
+            let scfg = SparseConfig {
+                quant: scheme,
+                ..Default::default()
+            };
+            let cm = CompiledModel::compile(&ps, &scfg);
+            assert_eq!(cm.stats().quant, scheme);
+            assert!(
+                cm.name().ends_with(&format!("{})", scheme.name())),
+                "{}",
+                cm.name()
+            );
+            // the quantized engine must store materially fewer bytes than
+            // the f32 engine on the same pruned weights
+            let gain =
+                f32_cm.stats().bytes_compiled as f64 / cm.stats().bytes_compiled as f64;
+            assert!(
+                gain >= min_gain,
+                "{}: {} vs {} bytes ({gain:.2}x)",
+                scheme.name(),
+                f32_cm.stats().bytes_compiled,
+                cm.stats().bytes_compiled
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_compression_report_uses_the_shared_rule() {
+        let mut ps = tiny_params(23);
+        crate::pruning::unstructured::magnitude_prune(&mut ps, 0.7).unwrap();
+        for scheme in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+            let report = CompressionReport::from_params_quant(&ps, scheme);
+            let scfg = SparseConfig {
+                quant: scheme,
+                ..Default::default()
+            };
+            let cm = CompiledModel::compile(&ps, &scfg);
+            // the report's effective bytes are exactly what the compile
+            // pass stores — one sizing rule, no drift
+            assert_eq!(
+                report.bytes_effective,
+                cm.stats().bytes_compiled,
+                "{}",
+                scheme.name()
+            );
+            assert_eq!(report.quant, scheme);
+        }
+        let f32_ratio = CompressionReport::from_params(&ps).ratio();
+        let u16_ratio = CompressionReport::from_params_quant(&ps, QuantScheme::U16).ratio();
+        assert!(u16_ratio > f32_ratio * 1.5, "{f32_ratio} vs {u16_ratio}");
     }
 }

@@ -155,7 +155,7 @@ fn full_pipeline_then_serve_on_native_backend() {
     drop(h);
 
     let store = ExpertStore::new(
-        ExpertStore::working_set_bytes(&params),
+        ExpertStore::working_set_bytes(&params, stun::quant::QuantScheme::F32),
         std::time::Duration::from_micros(50),
     );
     let mut batcher = Batcher::new(&backend, &params, store).unwrap();

@@ -1,0 +1,321 @@
+//! Quantized-storage parity gate — the correctness contract of the
+//! `quant` subsystem, end to end:
+//!
+//! 1. **Weight contract** — per-row absmax quantization reconstructs
+//!    every prunable weight within the documented relative bounds
+//!    (u16 ≤ 1e-3, u8 ≤ 2e-2), measured on the actual compiled model.
+//! 2. **Eval parity** — a u16-quantized compiled `EvalHarness` must
+//!    reproduce the dense per-call `EvalReport` row-for-row within 1e-3
+//!    (and its perplexity within 1e-3 relative) on the same
+//!    unpruned / 70%-CSR / dead-expert trio the f32 parity gate uses;
+//!    u8 tracks dense perplexity within a 5% end-to-end drift budget
+//!    (its *weight*-level bound is the 2e-2 contract of test 1).
+//! 3. **Greedy-stream stability** — u16-compiled decode sessions emit
+//!    token streams *identical* to f32-compiled sessions on the
+//!    `decode_session` fixtures, and every quantized executor's
+//!    incremental path replays its own full-recompute path exactly
+//!    (the session kernels are shared, so there is zero tolerance).
+//! 4. **Bytes** — `ExpertStore::working_set_bytes` shrinks ≥1.8× at u16
+//!    (and further at u8) for the 70%-sparsity model, and the quant-aware
+//!    `CompressionReport` agrees with what the compile pass stores.
+
+use stun::coordinator::ExpertStore;
+use stun::data::{CorpusConfig, CorpusGenerator};
+use stun::eval::EvalHarness;
+use stun::model::{ModelConfig, ParamSet};
+use stun::pruning::unstructured;
+use stun::quant::QuantScheme;
+use stun::runtime::session::greedy_token;
+use stun::runtime::{Backend, CompiledForward, DecodeState, NativeBackend};
+use stun::sparse::{CompressionReport, SparseConfig};
+use stun::tensor::IntTensor;
+
+fn tiny() -> NativeBackend {
+    NativeBackend::new(ModelConfig::test_tiny())
+}
+
+fn scfg(quant: QuantScheme) -> SparseConfig {
+    SparseConfig {
+        quant,
+        ..Default::default()
+    }
+}
+
+/// The same model trio the f32 parity gates use: unpruned dense,
+/// 70%-unstructured (CSR kernels engaged), and expert-pruned.
+fn model_variants(cfg: &ModelConfig) -> Vec<(&'static str, ParamSet)> {
+    let base = ParamSet::init(cfg, 41);
+    let mut sparse = base.clone();
+    unstructured::magnitude_prune(&mut sparse, 0.7).unwrap();
+    let mut dead = base.clone();
+    dead.prune_expert(0, 1);
+    dead.prune_expert(1, 2);
+    vec![("dense", base), ("csr-0.7", sparse), ("expert-pruned", dead)]
+}
+
+/// 70%-magnitude-pruned params — the headline byte-accounting model.
+fn pruned_70(cfg: &ModelConfig) -> ParamSet {
+    let mut ps = ParamSet::init(cfg, 41);
+    unstructured::magnitude_prune(&mut ps, 0.7).unwrap();
+    ps
+}
+
+// ---------------------------------------------------------------------------
+// 1. Weight-level error contract on real model weights.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prunable_weights_requantize_within_documented_bounds() {
+    let backend = tiny();
+    let ps = pruned_70(backend.config());
+    let (d, f) = (backend.config().d_model, backend.config().d_ff);
+    for scheme in [QuantScheme::U16, QuantScheme::U8] {
+        for (label, data, rows, cols) in [
+            ("w1", ps.w1(0).subtensor(0), d, f),
+            ("w2", ps.w2(0).subtensor(0), f, d),
+            ("wqkv", ps.get("layer0.wqkv").unwrap().data(), d, 3 * d),
+        ] {
+            let q = stun::quant::QuantMat::compile(data, rows, cols, &scfg(scheme));
+            let back = q.to_dense();
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let brow = &back[r * cols..(r + 1) * cols];
+                let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                for (x, y) in row.iter().zip(brow) {
+                    if *x == 0.0 {
+                        // pruned zeros must stay exactly zero
+                        assert_eq!(*y, 0.0, "{label} row {r} under {scheme:?}");
+                    } else {
+                        assert!(
+                            ((x - y).abs() as f64) <= scheme.error_bound() * absmax as f64,
+                            "{label} row {r} under {scheme:?}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Eval parity: quantized compiled reports vs the dense per-call path.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn u16_eval_reports_match_dense_within_1e_3() {
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    for (label, params) in model_variants(&cfg) {
+        let dense = EvalHarness::new_dense(&backend, &params).unwrap();
+        let quant = EvalHarness::with_config(&backend, &params, &scfg(QuantScheme::U16)).unwrap();
+        assert!(quant.uses_compiled(), "[{label}]");
+        assert!(
+            quant.executor().contains("u16"),
+            "[{label}] executor '{}' must be the quantized engine",
+            quant.executor()
+        );
+        let rd = dense.full_report(11, 3, 4, 1).unwrap();
+        let rq = quant.full_report(11, 3, 4, 1).unwrap();
+        assert_eq!(rd.rows.len(), rq.rows.len());
+        for ((nd, vd), (nq, vq)) in rd.rows.iter().zip(&rq.rows) {
+            assert_eq!(nd, nq);
+            assert!(
+                (vd - vq).abs() <= 1e-3,
+                "[{label}] {nd}: dense {vd} vs u16 {vq}"
+            );
+        }
+        let mut g1 = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 0x51));
+        let mut g2 = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 0x51));
+        let pd = dense.perplexity(&mut g1, 2).unwrap();
+        let pq = quant.perplexity(&mut g2, 2).unwrap();
+        assert!(
+            (pd - pq).abs() <= 1e-3 * pd.max(1.0),
+            "[{label}] perplexity: dense {pd} vs u16 {pq}"
+        );
+    }
+}
+
+#[test]
+fn u8_eval_tracks_dense_within_the_drift_budget() {
+    // u8's pinned contract is weight-level (2e-2 per row, test 1); end
+    // to end we hold it to a 5% perplexity drift budget — a continuous
+    // metric, so quantization noise cannot hide behind accuracy steps.
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    for (label, params) in model_variants(&cfg) {
+        let dense = EvalHarness::new_dense(&backend, &params).unwrap();
+        let quant = EvalHarness::with_config(&backend, &params, &scfg(QuantScheme::U8)).unwrap();
+        assert!(quant.executor().contains("u8"), "[{label}]");
+        let mut g1 = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 0x53));
+        let mut g2 = CorpusGenerator::new(CorpusConfig::for_vocab(cfg.vocab, cfg.seq, 0x53));
+        let pd = dense.perplexity(&mut g1, 2).unwrap();
+        let pq = quant.perplexity(&mut g2, 2).unwrap();
+        assert!(
+            (pd - pq).abs() <= 0.05 * pd.max(1.0),
+            "[{label}] perplexity: dense {pd} vs u8 {pq}"
+        );
+        // reports stay well-formed and bounded on the u8 engine
+        let rq = quant.full_report(13, 3, 4, 1).unwrap();
+        for (name, v) in &rq.rows {
+            assert!((0.0..=100.0).contains(v), "[{label}] {name}: {v}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Greedy decode-session stability on the session path.
+// ---------------------------------------------------------------------------
+
+/// Greedy stream through a session (`prefill` + one-token `decode`s).
+fn session_stream(exec: &dyn CompiledForward, prompt: &[i32], n_tokens: usize) -> Vec<i32> {
+    let mut state = exec.new_session(1);
+    let out = exec.prefill(&mut state, 0, prompt).unwrap();
+    let mut toks = vec![greedy_token(out.logits.row(0))];
+    for _ in 1..n_tokens {
+        let out = exec.decode(&mut state, &[(0, *toks.last().unwrap())]).unwrap();
+        toks.push(greedy_token(out.logits.row(0)));
+    }
+    toks
+}
+
+/// The full-recompute reference loop on the same executor (the inlined
+/// fixture from `tests/decode_session.rs`).
+fn recompute_stream(exec: &dyn CompiledForward, prompt: &[i32], n_tokens: usize) -> Vec<i32> {
+    let cfg = exec.config().clone();
+    let (s, v) = (cfg.seq, cfg.vocab);
+    let mut seq: Vec<i32> = prompt.to_vec();
+    if seq.is_empty() {
+        seq.push(stun::data::BOS);
+    }
+    let mut out = Vec::new();
+    for _ in 0..n_tokens {
+        let mut win = seq.clone();
+        if win.len() >= s {
+            win.drain(0..win.len() - (s - 1));
+        }
+        let mut tokens = IntTensor::zeros(&[1, s]);
+        tokens.row_mut(0)[..win.len()].copy_from_slice(&win);
+        let (logits, _) = exec.fwd_logits_routed(&tokens).unwrap();
+        let pos = win.len() - 1;
+        let tok = greedy_token(&logits.data()[pos * v..(pos + 1) * v]);
+        out.push(tok);
+        seq.push(tok);
+    }
+    out
+}
+
+#[test]
+fn u16_greedy_session_streams_are_identical_to_f32() {
+    // the decode_session fixtures: in-window, window-slide, long-prompt
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let fixtures = [("in-window", 12usize, 8usize), ("window-slide", cfg.seq - 3, 8)];
+    for (label, params) in model_variants(&cfg) {
+        let f32_exec = backend
+            .compile_with(&params, &scfg(QuantScheme::F32))
+            .unwrap()
+            .expect("native compiles");
+        let u16_exec = backend
+            .compile_with(&params, &scfg(QuantScheme::U16))
+            .unwrap()
+            .expect("native compiles");
+        for (fix, prompt_len, n_tokens) in fixtures {
+            let prompt: Vec<i32> = (0..prompt_len as i32).map(|i| 2 + (i % 37)).collect();
+            let f32_stream = session_stream(f32_exec.as_ref(), &prompt, n_tokens);
+            let u16_stream = session_stream(u16_exec.as_ref(), &prompt, n_tokens);
+            assert_eq!(
+                u16_stream, f32_stream,
+                "[{label}/{fix}] u16 greedy stream diverged from f32"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_incremental_replays_quantized_recompute_exactly() {
+    // within one quantized executor the KV-cached session must replay
+    // the full-recompute loop token for token — the shared-kernel
+    // contract holds at every storage width, zero tolerance
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    for scheme in [QuantScheme::U16, QuantScheme::U8] {
+        for (label, params) in model_variants(&cfg) {
+            let exec = backend
+                .compile_with(&params, &scfg(scheme))
+                .unwrap()
+                .expect("native compiles");
+            for (fix, prompt_len, n_tokens) in
+                [("in-window", 12usize, 8usize), ("window-slide", cfg.seq - 3, 6)]
+            {
+                let prompt: Vec<i32> = (0..prompt_len as i32).map(|i| 2 + (i % 37)).collect();
+                let inc = session_stream(exec.as_ref(), &prompt, n_tokens);
+                let rec = recompute_stream(exec.as_ref(), &prompt, n_tokens);
+                assert_eq!(
+                    inc,
+                    rec,
+                    "[{}/{label}/{fix}] incremental diverged from recompute",
+                    scheme.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_prefill_rejects_mismatched_state_like_f32() {
+    let backend = tiny();
+    let params = ParamSet::init(backend.config(), 41);
+    let exec = backend
+        .compile_with(&params, &scfg(QuantScheme::U8))
+        .unwrap()
+        .unwrap();
+    let mut other = ModelConfig::test_tiny();
+    other.d_model = 32;
+    other.n_heads = 1;
+    let mut st = DecodeState::new(&other, 1);
+    assert!(exec.prefill(&mut st, 0, &[2, 3]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// 4. Byte accounting: the ≥1.8× u16 working-set shrink.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn working_set_shrinks_at_least_1_8x_at_u16_for_the_70pct_model() {
+    let backend = tiny();
+    let ps = pruned_70(backend.config());
+    let ws_f32 = ExpertStore::working_set_bytes(&ps, QuantScheme::F32);
+    let ws_u16 = ExpertStore::working_set_bytes(&ps, QuantScheme::U16);
+    let ws_u8 = ExpertStore::working_set_bytes(&ps, QuantScheme::U8);
+    let shrink = ws_f32 as f64 / ws_u16.max(1) as f64;
+    assert!(
+        shrink >= 1.8,
+        "u16 working set must shrink ≥1.8× (got {shrink:.3}: {ws_f32} -> {ws_u16})"
+    );
+    assert!(ws_u8 < ws_u16, "u8 {ws_u8} must undercut u16 {ws_u16}");
+}
+
+#[test]
+fn compression_report_matches_compiled_bytes_per_scheme() {
+    let backend = tiny();
+    let ps = pruned_70(backend.config());
+    for scheme in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+        let report = CompressionReport::from_params_quant(&ps, scheme);
+        // the report's effective bytes and the compile pass's stored
+        // bytes come from the one shared sizing rule — exact agreement
+        // is what makes ExpertStore budgets honest
+        let cm = stun::sparse::CompiledModel::compile(&ps, &scfg(scheme));
+        assert_eq!(
+            report.bytes_effective,
+            cm.stats().bytes_compiled,
+            "{}",
+            scheme.name()
+        );
+        assert_eq!(report.quant, scheme);
+        assert!(report.ratio() >= 1.0, "{}: {}", scheme.name(), report.ratio());
+    }
+    let f32_ratio = CompressionReport::from_params_quant(&ps, QuantScheme::F32).ratio();
+    let u16_ratio = CompressionReport::from_params_quant(&ps, QuantScheme::U16).ratio();
+    let u8_ratio = CompressionReport::from_params_quant(&ps, QuantScheme::U8).ratio();
+    assert!(u16_ratio > f32_ratio && u8_ratio > u16_ratio);
+}
