@@ -7,17 +7,22 @@
 //! **quant arms** ({f32, u16, u8} compiled-incremental serving with
 //! quant-sized working sets) on the same sparsity grid, a
 //! staggered-arrival workload (queue-depth effects under honored arrival
-//! offsets), and the dense-vs-compiled `EvalHarness` arms on the same
-//! grid.
+//! offsets), a heavy-tail **Poisson-arrival** workload (exponential
+//! inter-arrival gaps, so admission bursts and lulls exercise the
+//! mixed prefill+decode batched rounds), and the dense-vs-compiled
+//! `EvalHarness` arms on the same grid.
 //!
-//! The {executor × sparsity × quant} surface (and the staggered row) is
-//! written to `BENCH_serve.json` (`BENCH_SERVE_OUT` overrides the path)
+//! The {executor × sparsity × quant} surface (and the staggered and
+//! poisson rows) is written to `BENCH_serve.json` (`BENCH_SERVE_OUT`
+//! overrides the path)
 //! so CI can archive the perf trajectory as a machine-readable artifact.
 //! `STUN_SERVE_ARMS_ONLY=1` skips the trained-model headline and the
 //! eval arms — the quick CI profile.
 
 use std::time::Duration;
-use stun::coordinator::{burst_workload, staggered_workload, Batcher, ExpertStore};
+use stun::coordinator::{
+    burst_workload, poisson_workload, staggered_workload, Batcher, ExpertStore,
+};
 use stun::eval::EvalHarness;
 use stun::model::ParamSet;
 use stun::pruning::expert::ExpertPruneConfig;
@@ -247,6 +252,37 @@ fn main() {
         ("mean_queued_us", Json::Num(mean_queued_us)),
     ]);
 
+    // heavy-tail arrivals: exponential inter-arrival gaps cluster
+    // requests into bursts separated by lulls, so the serve loop admits
+    // variable-size batches and the layer-major rounds mix multi-token
+    // prefill with one-token decode in the same sweep
+    let mean_gap = Duration::from_micros(300);
+    let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
+    let mut batcher = Batcher::new(backend, &params, store).expect("batcher");
+    let (responses, m) = batcher
+        .serve(poisson_workload(backend.config(), 16, 6, 13, mean_gap))
+        .expect("poisson serve");
+    let mean_queued_us = responses
+        .iter()
+        .map(|r| r.queued.as_secs_f64() * 1e6)
+        .sum::<f64>()
+        / responses.len().max(1) as f64;
+    println!("\n### poisson arrivals (tiny, 16 req, mean gap {mean_gap:?})");
+    println!(
+        "tok/s {:.1}  p50 {:?}  p95 {:?}  mean-queued {:.0}µs",
+        m.tokens_per_sec(),
+        m.p50_latency,
+        m.p95_latency,
+        mean_queued_us
+    );
+    let poisson = Json::obj(vec![
+        ("mean_gap_us", Json::Num(mean_gap.as_secs_f64() * 1e6)),
+        ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
+        ("p50_latency_us", Json::Num(m.p50_latency.as_secs_f64() * 1e6)),
+        ("p95_latency_us", Json::Num(m.p95_latency.as_secs_f64() * 1e6)),
+        ("mean_queued_us", Json::Num(mean_queued_us)),
+    ]);
+
     if !arms_only {
         println!("\n### eval arms: dense vs compiled EvalHarness (tiny, mean secs)");
         println!(
@@ -271,6 +307,7 @@ fn main() {
         ("config", Json::Str("tiny".into())),
         ("arms", Json::Arr(arm_rows)),
         ("staggered", staggered),
+        ("poisson", poisson),
     ]);
     let path =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());

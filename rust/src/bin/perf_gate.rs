@@ -1,0 +1,101 @@
+//! Perf-trajectory gate: compares a freshly measured `BENCH_serve.json`
+//! (written by the `serve_throughput` bench) against the checked-in
+//! `BENCH_baseline.json` and exits non-zero when serving throughput
+//! regresses past the tolerance.
+//!
+//! The gated arm is the **0.7-sparsity** row — the serving operating
+//! point — on two executors: the f32 `compiled_incremental_tok_s`
+//! column and the u16 quant arm's `incremental_tok_s`. A measured
+//! value more than 15% below its baseline fails the gate (exit 1);
+//! everything else, including improvements, passes and is reported so
+//! the trajectory stays on the record. The baseline numbers are
+//! deliberately conservative (well below what a warm run produces) so
+//! machine-to-machine variance does not trip the gate — it exists to
+//! catch real hot-path regressions (an accidental O(window) step, a
+//! lost batching win), not scheduler jitter.
+//!
+//! Usage: `perf_gate [BENCH_serve.json] [BENCH_baseline.json]`
+//! `STUN_PERF_GATE_TOL` overrides the fractional tolerance (default 0.15).
+
+use anyhow::{bail, Context, Result};
+use stun::util::json::Json;
+
+const GATED_SPARSITY: f64 = 0.7;
+const DEFAULT_TOL: f64 = 0.15;
+
+fn arm_at(doc: &Json, sparsity: f64) -> Result<&Json> {
+    for arm in doc.get("arms")?.as_arr()? {
+        if (arm.get("sparsity")?.as_f64()? - sparsity).abs() < 1e-9 {
+            return Ok(arm);
+        }
+    }
+    bail!("no arm at sparsity {sparsity}")
+}
+
+fn quant_tok_s(arm: &Json, name: &str) -> Result<f64> {
+    for q in arm.get("quant_arms")?.as_arr()? {
+        if q.get("quant")?.as_str()? == name {
+            return q.get("incremental_tok_s")?.as_f64();
+        }
+    }
+    bail!("no '{name}' quant arm")
+}
+
+fn load(path: &str) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).with_context(|| format!("parsing {path}"))
+}
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let current_path = args.next().unwrap_or_else(|| "BENCH_serve.json".into());
+    let baseline_path = args.next().unwrap_or_else(|| "BENCH_baseline.json".into());
+    let tol = std::env::var("STUN_PERF_GATE_TOL")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(DEFAULT_TOL);
+
+    let current = load(&current_path)?;
+    let baseline = load(&baseline_path)?;
+    let cur_arm = arm_at(&current, GATED_SPARSITY)
+        .with_context(|| format!("in {current_path}"))?;
+    let base_arm = arm_at(&baseline, GATED_SPARSITY)
+        .with_context(|| format!("in {baseline_path}"))?;
+
+    // (label, measured tok/s, baseline tok/s)
+    let checks = [
+        (
+            "compiled_incremental f32 s=0.7",
+            cur_arm.get("compiled_incremental_tok_s")?.as_f64()?,
+            base_arm.get("compiled_incremental_tok_s")?.as_f64()?,
+        ),
+        (
+            "compiled_incremental u16 s=0.7",
+            quant_tok_s(cur_arm, "u16").with_context(|| format!("in {current_path}"))?,
+            quant_tok_s(base_arm, "u16")
+                .with_context(|| format!("in {baseline_path}"))?,
+        ),
+    ];
+
+    println!(
+        "perf gate: {current_path} vs {baseline_path} (tolerance -{:.0}%)",
+        tol * 100.0
+    );
+    let mut failed = false;
+    for (label, cur, base) in checks {
+        let floor = base * (1.0 - tol);
+        let ratio = cur / base.max(1e-12);
+        let ok = cur >= floor;
+        println!(
+            "  {} {label}: {cur:.1} tok/s vs baseline {base:.1} ({ratio:.2}x, floor {floor:.1})",
+            if ok { "PASS" } else { "FAIL" },
+        );
+        failed |= !ok;
+    }
+    if failed {
+        bail!("serving throughput regressed past the {:.0}% gate", tol * 100.0);
+    }
+    println!("perf gate: OK");
+    Ok(())
+}

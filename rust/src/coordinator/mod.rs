@@ -15,22 +15,30 @@
 //!   metric the memory reduction buys down.
 //! * [`Batcher`] — continuous batching over incremental decode sessions:
 //!   each of the `eval_batch` [`crate::runtime::DecodeState`] slots holds
-//!   one live sequence with its per-layer K/V cache. A request is
-//!   *prefilled* into a free slot on admission (one forward over the
-//!   prompt, logits at its last position only), each decode round then
-//!   steps every active slot by exactly one token — O(1) forward work per
-//!   token instead of the old O(S) full-window recompute — and retirement
-//!   recycles the slot (the vLLM-style request loop, single-threaded
-//!   because PJRT handles are not `Send`). The compiled sparse executor
+//!   one live sequence with its per-layer K/V cache. The loop is
+//!   **round-based**: every arrived request that fits is admitted in one
+//!   batched prefill round, and each decode round steps every active
+//!   slot by exactly one token. The batcher only queues work — it
+//!   `begin`s prompts on admission and `push`es accepted tokens — then
+//!   hands the whole slot set to `session_round`; the *executor* plans
+//!   each slot (incremental suffix vs slide-invalidated re-prefill),
+//!   sweeps the layer stack once for the whole round (layer-major: one
+//!   weight traversal per tensor, one cross-slot expert-gather per
+//!   layer), and commits the caches. Retirement recycles the slot (the
+//!   vLLM-style request loop, single-threaded because PJRT handles are
+//!   not `Send`). The compiled sparse executor
 //!   ([`crate::runtime::Backend::compile`]) runs the genuinely
 //!   incremental path; the dense per-call fallback speaks the same
-//!   session API by re-prefilling the window every step, and both
+//!   session API by re-prefilling the windows every round, and both
 //!   re-prefill after a window slide (cache invalidation — see
-//!   `runtime::session`). Arrival offsets on [`Request`] are honored, so
-//!   staggered workloads measure real queueing. Expert-store touches come
-//!   from the *real* top-k router decisions when the executor exposes
-//!   them; otherwise a documented uniform-routing fallback approximates
-//!   the traffic.
+//!   `runtime::session`); per-token results are identical across all
+//!   paths and round groupings because the round reduction runs in the
+//!   dense path's order (per-row matmuls, per-slot attention, slot-order
+//!   expert reduction). Arrival offsets on [`Request`] are honored, so
+//!   staggered and Poisson workloads measure real queueing. Expert-store
+//!   touches come from the *real* top-k router decisions when the
+//!   executor exposes them; otherwise a documented uniform-routing
+//!   fallback approximates the traffic.
 //! * [`Server`] — request intake via `std::sync::mpsc` from any number of
 //!   producer threads; the engine thread owns the backend and streams
 //!   responses back over per-request channels.
@@ -476,38 +484,21 @@ impl<'b> Batcher<'b> {
 
     // -------------------------------------------------- session dispatch
 
-    fn sess_prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<StepOutput> {
+    /// Run one decode round over `slots` through whichever session path
+    /// this batcher was built for. Callers queue the round's tokens first
+    /// ([`DecodeState::begin`] on admission, [`DecodeState::push`] on
+    /// accepted tokens); the executor plans, sweeps the layer stack once
+    /// for the whole slot set, and commits.
+    fn sess_round(&mut self, slots: &[usize]) -> Result<StepOutput> {
         match (&self.compiled, self.incremental) {
-            (Some(c), true) => c.prefill(&mut self.state, slot, prompt),
-            (Some(c), false) => {
-                self.state.begin(slot, prompt);
-                recompute_step(self.backend.config(), &self.state, &[slot], |t| {
-                    c.fwd_logits_routed(t)
-                })
-            }
+            (Some(c), true) => c.session_round(&mut self.state, slots),
+            (Some(c), false) => recompute_step(self.backend.config(), &self.state, slots, |t| {
+                c.fwd_logits_routed(t)
+            }),
             (None, _) => {
                 // construction invariant: exactly one of compiled/params
                 let p = self.params.as_ref().expect("dense path retains params");
-                self.backend.prefill(p, &mut self.state, slot, prompt)
-            }
-        }
-    }
-
-    fn sess_decode(&mut self, steps: &[(usize, i32)]) -> Result<StepOutput> {
-        match (&self.compiled, self.incremental) {
-            (Some(c), true) => c.decode(&mut self.state, steps),
-            (Some(c), false) => {
-                for &(slot, tok) in steps {
-                    self.state.push(slot, tok);
-                }
-                let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
-                recompute_step(self.backend.config(), &self.state, &slots, |t| {
-                    c.fwd_logits_routed(t)
-                })
-            }
-            (None, _) => {
-                let p = self.params.as_ref().expect("dense path retains params");
-                self.backend.decode(p, &mut self.state, steps)
+                self.backend.session_round(p, &mut self.state, slots)
             }
         }
     }
@@ -591,37 +582,47 @@ impl<'b> Batcher<'b> {
         }
     }
 
-    /// Admit `req` into a free slot: prefill the prompt (filling the
-    /// slot's K/V cache on the incremental path), touch the expert store
-    /// with the prefill routing, and sample the first token. Returns the
-    /// simulated swap stall.
-    fn admit(
+    /// Admit a batch of requests into free slots as **one** prefill
+    /// round: begin each prompt in its slot, sweep the layer stack once
+    /// over all of them (layer-major on the compiled-incremental path),
+    /// touch the expert store with the round's routing, and sample each
+    /// request's first token. Returns the simulated swap stall.
+    fn admit_round(
         &mut self,
-        req: Request,
-        arrived: Instant,
-        respond: Option<mpsc::Sender<Response>>,
+        jobs: Vec<(Request, Instant, Option<mpsc::Sender<Response>>)>,
         responses: &mut Vec<Response>,
         metrics: &mut ServeMetrics,
     ) -> Result<Duration> {
-        let slot = self.free_slot().expect("admit requires a free slot");
+        if jobs.is_empty() {
+            return Ok(Duration::ZERO);
+        }
         let started = Instant::now();
-        let out = self.sess_prefill(slot, &req.prompt)?;
+        let mut slots = Vec::with_capacity(jobs.len());
+        for (req, arrived, respond) in jobs {
+            let slot = self.free_slot().expect("admit requires a free slot");
+            self.state.begin(slot, &req.prompt);
+            self.slots[slot] = Some(Active {
+                req,
+                arrived,
+                started,
+                generated: Vec::new(),
+                respond,
+            });
+            slots.push(slot);
+        }
+        let out = self.sess_round(&slots)?;
         metrics.decode_steps += 1;
-        let stall = self.touch_experts(&out, 1, metrics);
-        self.slots[slot] = Some(Active {
-            req,
-            arrived,
-            started,
-            generated: Vec::new(),
-            respond,
-        });
-        self.accept_token(slot, out.logits.row(0), responses, metrics);
+        let stall = self.touch_experts(&out, slots.len(), metrics);
+        for (ri, &slot) in slots.iter().enumerate() {
+            self.accept_token(slot, out.logits.row(ri), responses, metrics);
+        }
         Ok(stall)
     }
 
-    /// One decode round: step every active slot by one token through the
-    /// session, touch the expert store with the step routing, sample, and
-    /// retire finished sequences. Returns the simulated swap stall.
+    /// One decode round: queue every active slot's last accepted token,
+    /// step them all through a single session round, touch the expert
+    /// store with the round routing, sample, and retire finished
+    /// sequences. Returns the simulated swap stall.
     fn decode_round(
         &mut self,
         responses: &mut Vec<Response>,
@@ -639,9 +640,13 @@ impl<'b> Batcher<'b> {
         if steps.is_empty() {
             return Ok(Duration::ZERO);
         }
-        let out = self.sess_decode(&steps)?;
+        for &(slot, tok) in &steps {
+            self.state.push(slot, tok);
+        }
+        let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
+        let out = self.sess_round(&slots)?;
         metrics.decode_steps += 1;
-        let stall = self.touch_experts(&out, steps.len(), metrics);
+        let stall = self.touch_experts(&out, slots.len(), metrics);
         for (ri, &(slot, _)) in steps.iter().enumerate() {
             self.accept_token(slot, out.logits.row(ri), responses, metrics);
         }
@@ -659,17 +664,22 @@ impl<'b> Batcher<'b> {
         let mut swap_stall = Duration::ZERO;
 
         loop {
-            // admit every already-arrived request that fits in a free slot
-            while self.free_slot().is_some() {
+            // admit every already-arrived request that fits in a free
+            // slot, all prefilled together in one batched round
+            let mut free = self.slots.iter().filter(|s| s.is_none()).count();
+            let mut admits = Vec::new();
+            while free > 0 {
                 match queue.front() {
                     Some(req) if t0.elapsed() >= req.arrive_offset => {
                         let req = queue.pop_front().expect("front exists");
                         let arrived = t0 + req.arrive_offset;
-                        swap_stall += self.admit(req, arrived, None, &mut responses, &mut metrics)?;
+                        admits.push((req, arrived, None));
+                        free -= 1;
                     }
                     _ => break,
                 }
             }
+            swap_stall += self.admit_round(admits, &mut responses, &mut metrics)?;
             if self.active_count() == 0 {
                 match queue.front() {
                     // idle: wait for the next arrival
@@ -785,23 +795,28 @@ impl<'b> Server<'b> {
                     }
                 }
             }
-            // admission prefills each prompt into a free session slot;
-            // retired responses stream straight to their own channel via
-            // Active::respond
-            while self.batcher.free_slot().is_some() {
+            // admission prefills every queued prompt that fits into free
+            // session slots in one batched round; retired responses
+            // stream straight to their own channel via Active::respond
+            let mut free = self
+                .batcher
+                .slots
+                .iter()
+                .filter(|s| s.is_none())
+                .count();
+            let mut admits = Vec::new();
+            while free > 0 {
                 match pending.pop_front() {
                     Some(job) => {
-                        swap_stall += self.batcher.admit(
-                            job.req,
-                            job.arrived,
-                            Some(job.respond),
-                            &mut responses,
-                            &mut metrics,
-                        )?;
+                        admits.push((job.req, job.arrived, Some(job.respond)));
+                        free -= 1;
                     }
                     None => break,
                 }
             }
+            swap_stall += self
+                .batcher
+                .admit_round(admits, &mut responses, &mut metrics)?;
             if self.batcher.active_count() == 0 {
                 if disconnected {
                     break;
@@ -859,6 +874,34 @@ pub fn staggered_workload(
     let mut q = burst_workload(cfg, n, max_new, seed);
     for (i, r) in q.iter_mut().enumerate() {
         r.arrive_offset = gap * i as u32;
+    }
+    q
+}
+
+/// Build a heavy-tailed workload: the same prompts as [`burst_workload`]
+/// but with exponentially distributed inter-arrival gaps of mean
+/// `mean_gap` (a Poisson arrival process). Exponential gaps are bursty —
+/// most are far below the mean and the occasional one is several times
+/// it — so admission sees ragged batches: several requests landing in
+/// one round, then an idle stretch. That is the arrival pattern under
+/// which layer-major batched rounds have to win, and what the
+/// `serve_throughput` poisson arm measures. Deterministic per seed (the
+/// crate [`crate::util::rng::Rng`]).
+pub fn poisson_workload(
+    cfg: &crate::model::ModelConfig,
+    n: usize,
+    max_new: usize,
+    seed: u64,
+    mean_gap: Duration,
+) -> VecDeque<Request> {
+    let mut q = burst_workload(cfg, n, max_new, seed);
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xA5A5_5A5A);
+    let mut t = 0f64;
+    for r in q.iter_mut() {
+        // inverse-CDF exponential sample; 1 − u avoids ln(0)
+        let u = rng.f64();
+        t += -(1.0 - u).ln() * mean_gap.as_secs_f64();
+        r.arrive_offset = Duration::from_secs_f64(t);
     }
     q
 }
@@ -1085,6 +1128,47 @@ mod tests {
             assert_eq!(r.prompt[0], crate::data::BOS);
             assert_eq!(r.max_new, 6);
         }
+    }
+
+    #[test]
+    fn poisson_workload_has_monotone_bursty_arrivals() {
+        let cfg = ModelConfig::test_tiny();
+        let mean = Duration::from_micros(200);
+        let q = poisson_workload(&cfg, 64, 4, 11, mean);
+        assert_eq!(q.len(), 64);
+        // offsets are cumulative sums of positive gaps: strictly increasing
+        let offs: Vec<Duration> = q.iter().map(|r| r.arrive_offset).collect();
+        assert!(offs.windows(2).all(|w| w[0] < w[1]));
+        // deterministic per seed, different across seeds
+        let q2 = poisson_workload(&cfg, 64, 4, 11, mean);
+        assert!(q2.iter().zip(&q).all(|(a, b)| a.arrive_offset == b.arrive_offset));
+        let q3 = poisson_workload(&cfg, 64, 4, 12, mean);
+        assert!(q3.iter().zip(&q).any(|(a, b)| a.arrive_offset != b.arrive_offset));
+        // heavy tail: some gap well below the mean AND some well above —
+        // the burstiness a fixed-gap staggered workload cannot produce
+        let gaps: Vec<f64> = offs
+            .windows(2)
+            .map(|w| (w[1] - w[0]).as_secs_f64())
+            .collect();
+        let m = mean.as_secs_f64();
+        assert!(gaps.iter().any(|&g| g < m / 2.0));
+        assert!(gaps.iter().any(|&g| g > m * 2.0));
+        // the empirical mean gap is in the right ballpark
+        let avg = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!(avg > m * 0.5 && avg < m * 2.0, "avg gap {avg} vs mean {m}");
+    }
+
+    #[test]
+    fn poisson_arrivals_serve_end_to_end() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 104);
+        let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
+        let mut batcher = Batcher::new(&backend, &params, store).unwrap();
+        let queue = poisson_workload(backend.config(), 6, 3, 17, Duration::from_micros(100));
+        let (responses, metrics) = batcher.serve(queue).unwrap();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(metrics.completed, 6);
+        assert!(metrics.generated_tokens >= 6);
     }
 
     #[test]

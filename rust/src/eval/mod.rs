@@ -194,22 +194,12 @@ impl<'b> EvalHarness<'b> {
         }
     }
 
-    fn sess_prefill(
-        &self,
-        state: &mut DecodeState,
-        slot: usize,
-        prompt: &[i32],
-    ) -> Result<StepOutput> {
+    /// One decode round over `slots` (tokens already queued via
+    /// `begin`/`push`) through whichever executor this harness scores on.
+    fn sess_round(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
         match &self.exec {
-            EvalExec::Compiled(c) => c.prefill(state, slot, prompt),
-            EvalExec::Dense(p) => self.backend.prefill(p, state, slot, prompt),
-        }
-    }
-
-    fn sess_decode(&self, state: &mut DecodeState, steps: &[(usize, i32)]) -> Result<StepOutput> {
-        match &self.exec {
-            EvalExec::Compiled(c) => c.decode(state, steps),
-            EvalExec::Dense(p) => self.backend.decode(p, state, steps),
+            EvalExec::Compiled(c) => c.session_round(state, slots),
+            EvalExec::Dense(p) => self.backend.session_round(p, state, slots),
         }
     }
 
@@ -299,9 +289,10 @@ impl<'b> EvalHarness<'b> {
     /// tokens, keeping ≥ 1 prompt token to condition on).
     ///
     /// Runs on the incremental decode-session API: each chunk sequence
-    /// gets a session slot, its (front-truncated) prompt is prefilled
-    /// once, and every further token costs a one-position decode step —
-    /// KV-cached on the compiled executor, full-recompute on the dense
+    /// gets a session slot, the whole chunk's (front-truncated) prompts
+    /// are prefilled in **one** batched session round, and every decode
+    /// round steps all unfinished slots together — one layer-major sweep
+    /// per round on the compiled executor, full-recompute on the dense
     /// fallback. Prompts are pre-truncated to `seq − max_new`, so the
     /// window never slides mid-generation and the caches stay valid for
     /// the whole continuation. Greedy token streams are identical to the
@@ -333,8 +324,14 @@ impl<'b> EvalHarness<'b> {
                     p.drain(0..p.len() - keep);
                 }
                 // (an empty prompt gets BOS inside the session)
-                let out = self.sess_prefill(&mut state, i, &p)?;
-                let t = greedy_token(out.logits.row(0));
+                state.begin(i, &p);
+            }
+            // One batched round prefills the whole chunk: every slot's
+            // prompt rows go through the same layer-major sweep.
+            let slots: Vec<usize> = (0..chunk_n).collect();
+            let out = self.sess_round(&mut state, &slots)?;
+            for (ri, &i) in slots.iter().enumerate() {
+                let t = greedy_token(out.logits.row(ri));
                 outputs[base + i].push(t);
                 if t == stop || state.hist_len(i) + 1 >= s {
                     done[i] = true;
@@ -343,15 +340,15 @@ impl<'b> EvalHarness<'b> {
                 }
             }
             for _ in 1..max_new {
-                let steps: Vec<(usize, i32)> = (0..chunk_n)
-                    .filter(|&i| !done[i])
-                    .map(|i| (i, last[i]))
-                    .collect();
-                if steps.is_empty() {
+                let slots: Vec<usize> = (0..chunk_n).filter(|&i| !done[i]).collect();
+                if slots.is_empty() {
                     break;
                 }
-                let out = self.sess_decode(&mut state, &steps)?;
-                for (ri, &(i, _)) in steps.iter().enumerate() {
+                for &i in &slots {
+                    state.push(i, last[i]);
+                }
+                let out = self.sess_round(&mut state, &slots)?;
+                for (ri, &i) in slots.iter().enumerate() {
                     let t = greedy_token(out.logits.row(ri));
                     outputs[base + i].push(t);
                     if t == stop || state.hist_len(i) + 1 >= s {

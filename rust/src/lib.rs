@@ -81,26 +81,37 @@
 //! ([`checkpoint`]); bytes are accounted everywhere by the single
 //! authoritative [`quant::tensor_store_bytes`] rule.
 //!
-//! ## Incremental decode sessions
+//! ## Incremental decode sessions — layer-major rounds
 //!
 //! Generation is served through KV-cached sessions rather than
 //! full-window recomputes ([`runtime::session`]): a
 //! [`runtime::DecodeState`] holds per-layer, per-slot K/V caches plus
-//! window bookkeeping; `prefill(slot, prompt)` fills a slot's cache once
-//! and returns last-position logits, and each `decode` step computes one
-//! attention query + one-token expert-gather per active sequence —
-//! O(1) forward positions per generated token instead of O(S).
-//! [`sparse::CompiledModel`] implements the session natively (the same
-//! shared kernels as the full forward, so greedy token streams are
-//! identical — pinned by `tests/decode_session.rs`, including the
-//! window-slide cache-invalidation edge where the session re-prefills);
-//! every other backend inherits a full-recompute fallback that speaks
-//! the same API on right-sized batches. `coordinator::Batcher` admits
-//! each request by prefilling a session slot and steps all active slots
-//! one token at a time (arrival offsets honored, nearest-rank latency
-//! percentiles), and [`eval::EvalHarness`] generates through the same
-//! sessions. `benches/serve_throughput.rs` records the
-//! recompute-vs-incremental grid to `BENCH_serve.json`.
+//! window bookkeeping, and the single session entry point is
+//! `session_round(state, slots)` — one **layer-major sweep** per round
+//! over every stepped slot. The caller queues work (`begin`/`push`),
+//! the executor plans each slot (incremental one-position step, or
+//! re-prefill after a window slide), stacks all pending rows into one
+//! activation matrix, runs **one traversal of each weight tensor per
+//! layer** (dense rows, CSR index walks, and dequant converts amortize
+//! across the batch), attends each slot's query rows against its own
+//! cache, routes all tokens through one cross-slot expert-gather, and
+//! commits the caches — O(1) forward positions per generated token
+//! instead of O(S), and tokens/s that *scales* with the number of
+//! active slots. `prefill`/`decode` are the single-slot sugar over the
+//! same round. [`sparse::CompiledModel`] implements the round natively
+//! with session-owned scratch reused across rounds (the same shared
+//! kernels as the full forward, so greedy token streams are identical —
+//! pinned by `tests/decode_session.rs`, including the window-slide
+//! cache-invalidation edge and mixed prefill+decode rounds); every
+//! other backend inherits a full-recompute fallback that speaks the
+//! same API on right-sized batches. `coordinator::Batcher` admits and
+//! steps whole rounds (arrival offsets honored, nearest-rank latency
+//! percentiles), and [`eval::EvalHarness`] generates whole chunks per
+//! round through the same sessions. `benches/runtime_hotpath.rs` holds
+//! the batch-scaling arm (B ∈ {1,4,8} × {f32,u16,u8});
+//! `benches/serve_throughput.rs` records the recompute-vs-incremental
+//! grid to `BENCH_serve.json`, gated against `BENCH_baseline.json` by
+//! `src/bin/perf_gate.rs` in CI.
 //!
 //! ## Quick tour
 //!

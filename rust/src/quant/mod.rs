@@ -40,8 +40,20 @@
 //! reports, and compiled sizes can never disagree about what a tensor
 //! costs.
 
+use crate::runtime::native::WS_MAX_M;
 use crate::sparse::{csr_bytes, SparseConfig, WeightMat};
 use anyhow::{bail, Result};
+use std::cell::RefCell;
+
+thread_local! {
+    /// Dequant scratch for the weight-stationary (small-m) kernel branches:
+    /// one row of centred code converts, reused across every p. Holding the
+    /// *unscaled* `centered()` values (the exact int→f32 convert) keeps the
+    /// arithmetic `s * centered` bit-identical to the i-outer form — folding
+    /// the scale into the temp row would reassociate the product and break
+    /// the exact dense/CSR agreement the parity tests pin.
+    static DEQ_ROW: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Storage width of compiled/checkpointed weight payloads.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -298,7 +310,10 @@ pub fn dequantize_spans(scales: &[f32], codes: &QuantCodes, span_lens: &[usize])
 /// `out += a @ Q`, dense quantized `Q: [rows, cols]`. Same i→p→j
 /// traversal (and zero-activation skip) as the f32 kernels; the per-row
 /// scale is folded into the activation once per row, so the inner loop
-/// is one int→float convert and one fma per element.
+/// is one int→float convert and one fma per element. Small batches
+/// (1 < m ≤ [`WS_MAX_M`]) flip to p-outer and convert each code row once
+/// into a temp row shared by all m activation rows, amortizing the
+/// dequant traversal m× with bit-identical results.
 fn dense_q_matmul_acc<C: Code>(
     codes: &[C],
     scale: &[f32],
@@ -310,6 +325,37 @@ fn dense_q_matmul_acc<C: Code>(
 ) {
     debug_assert_eq!(a.len(), m * rows);
     debug_assert_eq!(out.len(), m * cols);
+    if m > 1 && m <= WS_MAX_M {
+        DEQ_ROW.with(|t| {
+            let mut temp = t.borrow_mut();
+            temp.resize(cols, 0.0);
+            for p in 0..rows {
+                let sp = scale[p];
+                if sp == 0.0 || (0..m).all(|i| a[i * rows + p] == 0.0) {
+                    continue;
+                }
+                let qrow = &codes[p * cols..(p + 1) * cols];
+                for (t, &c) in temp.iter_mut().zip(qrow) {
+                    *t = c.centered();
+                }
+                for i in 0..m {
+                    let av = a[i * rows + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let s = av * sp;
+                    if s == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out[i * cols..(i + 1) * cols];
+                    for (o, &t) in orow.iter_mut().zip(temp.iter()) {
+                        *o += s * t;
+                    }
+                }
+            }
+        });
+        return;
+    }
     for i in 0..m {
         let arow = &a[i * rows..(i + 1) * rows];
         let orow = &mut out[i * cols..(i + 1) * cols];
@@ -349,7 +395,9 @@ impl ColId for u32 {
 
 /// `out += a @ Q` with quantized-CSR `Q` — the same p-order axpy loop as
 /// [`crate::sparse::CsrMatrix::matmul_acc`], restricted to stored
-/// entries, dequantizing each on the fly.
+/// entries, dequantizing each on the fly. Small batches flip to p-outer
+/// exactly like the dense quant kernel: each stored row's codes are
+/// converted once into a temp row and replayed for all m activation rows.
 #[allow(clippy::too_many_arguments)]
 fn csr_q_matmul_acc<C: Code, I: ColId>(
     row_ptr: &[u32],
@@ -364,6 +412,37 @@ fn csr_q_matmul_acc<C: Code, I: ColId>(
 ) {
     debug_assert_eq!(a.len(), m * rows);
     debug_assert_eq!(out.len(), m * cols);
+    if m > 1 && m <= WS_MAX_M {
+        DEQ_ROW.with(|t| {
+            let mut temp = t.borrow_mut();
+            for p in 0..rows {
+                let sp = scale[p];
+                if sp == 0.0 || (0..m).all(|i| a[i * rows + p] == 0.0) {
+                    continue;
+                }
+                let (lo, hi) = (row_ptr[p] as usize, row_ptr[p + 1] as usize);
+                temp.resize(hi - lo, 0.0);
+                for (t, c) in temp.iter_mut().zip(&codes[lo..hi]) {
+                    *t = c.centered();
+                }
+                for i in 0..m {
+                    let av = a[i * rows + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let s = av * sp;
+                    if s == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out[i * cols..(i + 1) * cols];
+                    for (ci, &t) in idx[lo..hi].iter().zip(temp.iter()) {
+                        orow[ci.at()] += s * t;
+                    }
+                }
+            }
+        });
+        return;
+    }
     for i in 0..m {
         let arow = &a[i * rows..(i + 1) * rows];
         let orow = &mut out[i * cols..(i + 1) * cols];

@@ -22,9 +22,12 @@
 //! and the benches mean the same thing on either backend.
 //!
 //! Generation additionally speaks the incremental decode-session API
-//! ([`session`]): `new_session`/`prefill`/`decode` over a [`DecodeState`]
-//! of per-layer, per-slot K/V caches. [`crate::sparse::CompiledModel`]
-//! implements it natively (O(1) forward positions per token); both traits
+//! ([`session`]): `new_session`/`session_round` over a [`DecodeState`]
+//! of per-layer, per-slot K/V caches, with `prefill`/`decode` as
+//! single-step sugar. One round steps any set of slots — the executor
+//! sweeps the layer stack once for all of them.
+//! [`crate::sparse::CompiledModel`] implements it natively (O(1) forward
+//! positions per token, weights traversed once per round); both traits
 //! ship a full-recompute default so every backend keeps the contract.
 
 pub mod native;
@@ -144,32 +147,43 @@ pub trait CompiledForward {
         DecodeState::new(self.config(), slots)
     }
 
-    /// Begin a sequence in `slot` (recycling it) and return logits +
-    /// routing at the prompt's last position. Implementations that keep
-    /// K/V caches ([`crate::sparse::CompiledModel`]) fill them here; the
-    /// default replays the step through [`CompiledForward::fwd_logits_routed`]
+    /// Run one decode round over `slots` (distinct, each with pending
+    /// tokens queued via [`DecodeState::begin`]/[`DecodeState::push`]) and
+    /// return logits + routing at each slot's last position, one row per
+    /// slot in order. This is THE session entry point: serving and eval
+    /// loops feed whole rounds through it, and `prefill`/`decode` are
+    /// sugar. [`crate::sparse::CompiledModel`] overrides it with one
+    /// layer-major KV-cached sweep across all stepped slots; the default
+    /// replays the round through [`CompiledForward::fwd_logits_routed`]
     /// via [`session::recompute_step`].
     ///
-    /// Greedy parity contract: a prefill-then-[`CompiledForward::decode`]
-    /// loop must emit token streams identical to repeatedly running the
-    /// full-sequence forward over the growing window (incl. the
-    /// keep-tail window slide), with last-position logits within 1e-5 —
-    /// pinned by `tests/decode_session.rs`.
+    /// Greedy parity contract: round-stepped sessions must emit token
+    /// streams identical to repeatedly running the full-sequence forward
+    /// over each growing window (incl. the keep-tail window slide), with
+    /// last-position logits within 1e-5, regardless of how slots are
+    /// grouped into rounds — pinned by `tests/decode_session.rs`.
+    fn session_round(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
+        session::recompute_step(self.config(), state, slots, |t| self.fwd_logits_routed(t))
+    }
+
+    /// Begin a sequence in `slot` (recycling it) and return logits +
+    /// routing at the prompt's last position — the single-slot prefill
+    /// round of [`CompiledForward::session_round`].
     fn prefill(&self, state: &mut DecodeState, slot: usize, prompt: &[i32]) -> Result<StepOutput> {
         state.begin(slot, prompt);
-        session::recompute_step(self.config(), state, &[slot], |t| self.fwd_logits_routed(t))
+        self.session_round(state, &[slot])
     }
 
     /// Accept one token per `(slot, token)` pair and return the next
     /// position's logits + routing, one row per pair in order. Slots must
-    /// be distinct and previously prefilled. The default re-prefills
-    /// every stepped window through the full-sequence forward.
+    /// be distinct and previously prefilled. Sugar over
+    /// [`CompiledForward::session_round`].
     fn decode(&self, state: &mut DecodeState, steps: &[(usize, i32)]) -> Result<StepOutput> {
         for &(slot, tok) in steps {
             state.push(slot, tok);
         }
         let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
-        session::recompute_step(self.config(), state, &slots, |t| self.fwd_logits_routed(t))
+        self.session_round(state, &slots)
     }
 }
 
@@ -273,8 +287,24 @@ pub trait Backend {
         DecodeState::new(self.config(), slots)
     }
 
+    /// Run one decode round over `slots` (full-recompute fallback: each
+    /// stepped window is re-prefilled through `fwd_logits_routed` in one
+    /// `[n, seq]` batch). Row order follows `slots`. Serving and eval
+    /// loops feed whole rounds through this; `prefill`/`decode` are
+    /// sugar.
+    fn session_round(
+        &self,
+        params: &ParamSet,
+        state: &mut DecodeState,
+        slots: &[usize],
+    ) -> Result<StepOutput> {
+        session::recompute_step(self.config(), state, slots, |t| {
+            self.fwd_logits_routed(params, t)
+        })
+    }
+
     /// Begin a sequence in `slot` and return logits + routing at the
-    /// prompt's last position (full-recompute fallback).
+    /// prompt's last position (single-slot [`Backend::session_round`]).
     fn prefill(
         &self,
         params: &ParamSet,
@@ -283,14 +313,12 @@ pub trait Backend {
         prompt: &[i32],
     ) -> Result<StepOutput> {
         state.begin(slot, prompt);
-        session::recompute_step(self.config(), state, &[slot], |t| {
-            self.fwd_logits_routed(params, t)
-        })
+        self.session_round(params, state, &[slot])
     }
 
     /// Accept one token per `(slot, token)` pair and return the next
-    /// position's logits + routing (full-recompute fallback: re-prefills
-    /// every stepped window).
+    /// position's logits + routing. Sugar over
+    /// [`Backend::session_round`].
     fn decode(
         &self,
         params: &ParamSet,
@@ -301,9 +329,7 @@ pub trait Backend {
             state.push(slot, tok);
         }
         let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
-        session::recompute_step(self.config(), state, &slots, |t| {
-            self.fwd_logits_routed(params, t)
-        })
+        self.session_round(params, state, &slots)
     }
 
     /// One AdamW step on `state` in place; returns the step's mean loss.

@@ -37,6 +37,18 @@ use anyhow::{bail, Result};
 pub(crate) const NEG_INF: f32 = -1e9;
 /// Matches `rmsnorm(..., eps=1e-6)`.
 const RMS_EPS: f32 = 1e-6;
+/// Activation-row ceiling below which the matmul kernels switch to their
+/// weight-stationary (p-outer) loop order. Decode rounds have m = stepped
+/// slots (≤ eval_batch), so one traversal of the weight tensor — one CSR
+/// index walk, one dequant per stored code — serves every row. Full-sequence
+/// forward keeps the activation-stationary (i-outer) order: with m in the
+/// hundreds the p-outer form would re-touch the whole output matrix per
+/// weight row and thrash cache. Both orders accumulate each output cell
+/// over p ascending with identical terms, so the switch is bit-exact and
+/// the threshold can never change a result. Shared by all four kernel
+/// families (dense f32, CSR f32, quant dense, quant CSR) so the dense/CSR
+/// parity tests see the same rule everywhere.
+pub(crate) const WS_MAX_M: usize = 16;
 /// Token id 0 is padding (loss positions with target==PAD are masked).
 const PAD: i32 = 0;
 
@@ -702,8 +714,27 @@ impl ParamIdx {
 /// out += a @ b, a: [m,k], b: [k,n] (ikj ordering, skips zero a-entries —
 /// pruned weights make these genuinely sparse). Also the dense fallback
 /// arm of `sparse::WeightMat`, so compiled-dense execution is the exact
-/// same kernel.
+/// same kernel. Small activation batches (1 < m ≤ [`WS_MAX_M`], i.e.
+/// layer-major decode rounds) take a p-outer pass so each weight row is
+/// streamed once for all m rows; per output cell the accumulation order
+/// over p is unchanged, keeping both orders bit-identical.
 pub(crate) fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    if m > 1 && m <= WS_MAX_M {
+        for p in 0..k {
+            let brow = &b[p * n..p * n + n];
+            for i in 0..m {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..i * n + n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        return;
+    }
     for i in 0..m {
         let orow = &mut out[i * n..i * n + n];
         for p in 0..k {
@@ -830,8 +861,15 @@ pub(crate) fn route_token(
 /// Row-wise RMSNorm: y = x · rsqrt(mean(x²)+ε) · g. Shared with the
 /// sparse compiled path.
 pub(crate) fn rmsnorm_fwd(x: &[f32], g: &[f32], d: usize) -> Vec<f32> {
-    let rows = x.len() / d;
     let mut y = vec![0f32; x.len()];
+    rmsnorm_into(x, g, d, &mut y);
+    y
+}
+
+/// Non-allocating RMSNorm into caller scratch (`out.len() >= x.len()`);
+/// the decode hot loop reuses one session-owned buffer across rounds.
+pub(crate) fn rmsnorm_into(x: &[f32], g: &[f32], d: usize, out: &mut [f32]) {
+    let rows = x.len() / d;
     for r in 0..rows {
         let xr = &x[r * d..r * d + d];
         let mut ms = 0f32;
@@ -839,12 +877,11 @@ pub(crate) fn rmsnorm_fwd(x: &[f32], g: &[f32], d: usize) -> Vec<f32> {
             ms += v * v;
         }
         let rinv = 1.0 / (ms / d as f32 + RMS_EPS).sqrt();
-        let yr = &mut y[r * d..r * d + d];
+        let yr = &mut out[r * d..r * d + d];
         for i in 0..d {
             yr[i] = xr[i] * rinv * g[i];
         }
     }
-    y
 }
 
 /// RMSNorm backward. Adds input gradients into `dx_acc` (residual-style

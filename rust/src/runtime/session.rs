@@ -15,15 +15,19 @@
 //!   bookkeeping — the full token history per slot, the live context
 //!   window (the last `seq − 1` tokens once the history overflows, the
 //!   exact rule of the old full-recompute loop), and the
-//!   incremental-vs-invalidate decision ([`DecodeState::pending`]): once
-//!   the window slides, every cached position's token/positional pairing
-//!   changes, so the cache is dropped and the executor re-prefills the
-//!   whole window. Keeping this logic in one kernel-agnostic place is
-//!   what makes the incremental and recompute paths provably see the
-//!   same windows.
-//! * `sparse::CompiledModel` implements [`prefill`/`decode`]
-//!   (`crate::runtime::CompiledForward::prefill`) natively against the
-//!   cache — the per-token O(1)-forward path.
+//!   incremental-vs-invalidate decision ([`DecodeState::plan`] /
+//!   [`DecodeState::pending`]): once the window slides, every cached
+//!   position's token/positional pairing changes, so the cache is
+//!   dropped and the executor re-prefills the whole window. A
+//!   layer-major round plans **every** stepped slot up front (slide
+//!   invalidation before scratch sizing), runs its kernels, then
+//!   [`DecodeState::commit`]s each slot. Keeping this logic in one
+//!   kernel-agnostic place is what makes the incremental and recompute
+//!   paths provably see the same windows.
+//! * `sparse::CompiledModel` implements `session_round`
+//!   (`crate::runtime::CompiledForward::session_round`) natively against
+//!   the cache — one layer-major sweep over all stepped slots, of which
+//!   single-slot `prefill`/`decode` are the B = 1 case.
 //! * [`recompute_step`] (here) is the shared *fallback*: it replays a
 //!   session step through any full-sequence `fwd_logits_routed`, sizing
 //!   the batch to the stepped slots (never `eval_batch` padding rows).
@@ -74,6 +78,12 @@ pub struct DecodeState {
     cached_from: Vec<usize>,
     /// Number of cached window positions per slot.
     cached: Vec<usize>,
+    /// Session-owned kernel scratch (activation rows, expert-gather
+    /// grouping, logits staging), grown on first use and reused across
+    /// rounds so a steady-state decode round does zero allocator traffic.
+    /// Executors borrow it via [`DecodeState::take_scratch`] /
+    /// [`DecodeState::put_scratch`].
+    scratch: crate::sparse::SessionScratch,
 }
 
 impl DecodeState {
@@ -90,7 +100,21 @@ impl DecodeState {
             hist: vec![Vec::new(); slots],
             cached_from: vec![0; slots],
             cached: vec![0; slots],
+            scratch: Default::default(),
         }
+    }
+
+    /// Move the session scratch out for a round (executors hold it while
+    /// they also hold `&mut self` cache borrows) — pair with
+    /// [`DecodeState::put_scratch`] on every exit path so the warm
+    /// buffers survive errors too.
+    pub(crate) fn take_scratch(&mut self) -> crate::sparse::SessionScratch {
+        std::mem::take(&mut self.scratch)
+    }
+
+    /// Return the scratch taken by [`DecodeState::take_scratch`].
+    pub(crate) fn put_scratch(&mut self, scratch: crate::sparse::SessionScratch) {
+        self.scratch = scratch;
     }
 
     pub fn slots(&self) -> usize {
@@ -177,13 +201,33 @@ impl DecodeState {
     /// position to compute, the tokens at those positions)`; the executor
     /// runs its kernels and then calls [`DecodeState::commit`].
     pub fn pending(&mut self, slot: usize) -> (usize, Vec<i32>) {
+        let (pos0, n) = self.plan(slot);
+        let ws = self.window_start(slot);
+        (pos0, self.hist[slot][ws + pos0..ws + pos0 + n].to_vec())
+    }
+
+    /// Non-allocating core of [`DecodeState::pending`]: apply the
+    /// slide-invalidation rule and return `(first window position to
+    /// compute, number of pending positions)`. Layer-major rounds call
+    /// this for every stepped slot **before** sizing scratch, so one
+    /// slot sliding mid-round (re-prefilling its whole window) and
+    /// another staying cached (one pending token) coexist in the same
+    /// activation matrix. Token ids are read via [`DecodeState::pending_tokens`].
+    pub fn plan(&mut self, slot: usize) -> (usize, usize) {
         let ws = self.window_start(slot);
         if self.cached_from[slot] != ws {
             self.cached_from[slot] = ws;
             self.cached[slot] = 0;
         }
         let pos0 = self.cached[slot];
-        (pos0, self.hist[slot][ws + pos0..].to_vec())
+        (pos0, self.hist[slot].len() - ws - pos0)
+    }
+
+    /// The token ids a [`DecodeState::plan`] call promised, as a borrow
+    /// (window positions `pos0..pos0+n`).
+    pub fn pending_tokens(&self, slot: usize, pos0: usize, n: usize) -> &[i32] {
+        let ws = self.window_start(slot);
+        &self.hist[slot][ws + pos0..ws + pos0 + n]
     }
 
     /// Record that `n` more window positions are now cached.

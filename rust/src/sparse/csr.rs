@@ -101,10 +101,25 @@ impl CsrMatrix {
 
     /// `out += a @ self` with dense `a: [m, rows]` and `out: [m, cols]`,
     /// both row-major. Same i→p→j traversal as the dense kernel (zero
-    /// activations skipped), restricted to stored weights.
+    /// activations skipped), restricted to stored weights. Small batches
+    /// (1 < m ≤ `WS_MAX_M`) flip to p-outer so one index walk over each
+    /// stored row serves all m activation rows; accumulation per output
+    /// cell stays in ascending-p order, bit-identical to the i-outer form.
     pub fn matmul_acc(&self, a: &[f32], out: &mut [f32], m: usize) {
         debug_assert_eq!(a.len(), m * self.rows);
         debug_assert_eq!(out.len(), m * self.cols);
+        if m > 1 && m <= crate::runtime::native::WS_MAX_M {
+            for p in 0..self.rows {
+                for i in 0..m {
+                    let av = a[i * self.rows + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    self.axpy_row(p, av, &mut out[i * self.cols..(i + 1) * self.cols]);
+                }
+            }
+            return;
+        }
         for i in 0..m {
             let arow = &a[i * self.rows..(i + 1) * self.rows];
             let orow = &mut out[i * self.cols..(i + 1) * self.cols];

@@ -27,16 +27,27 @@
 //!   perplexity entirely on the compiled path — parity with the dense
 //!   reports is pinned by `tests/eval_parity.rs`;
 //! * decoding runs through **incremental sessions**
-//!   (`crate::runtime::CompiledForward::prefill`/`decode` over a
-//!   [`crate::runtime::DecodeState`]): prompts fill per-layer, per-slot
-//!   K/V caches once, then each generated token costs one attention
-//!   query against the cache plus a one-token expert-gather — O(1)
-//!   positions per token where the full-recompute loop pays the whole
-//!   window. Every kernel is the per-row twin of the full forward
-//!   (shared `attn_ctx_row`, shared expert-gather), so incremental
-//!   greedy streams are *identical* to full recompute — including across
-//!   window slides, where the session invalidates the cache and
-//!   re-prefills (pinned by `tests/decode_session.rs`).
+//!   (`crate::runtime::CompiledForward::session_round` over a
+//!   [`crate::runtime::DecodeState`], with `prefill`/`decode` as
+//!   single-slot sugar): prompts fill per-layer, per-slot K/V caches
+//!   once, then each generated token costs one attention query against
+//!   the cache plus its share of one expert-gather — O(1) positions per
+//!   token where the full-recompute loop pays the whole window;
+//! * decode rounds are **layer-major**: the round's pending rows from
+//!   *all* stepped slots are stacked into one activation matrix and the
+//!   layer stack is swept once — the caller (serving coordinator / eval
+//!   generator) queues tokens and picks the slot set, `DecodeState::plan`
+//!   decides per slot between incremental suffix and slide-invalidated
+//!   re-prefill *before* scratch is sized, the round's kernels run one
+//!   weight traversal per tensor, and the executor `commit`s every slot
+//!   at the end. Per-token arithmetic is untouched by batching: matmul
+//!   rows are independent, attention stays per-slot against each slot's
+//!   own cache, and the cross-slot expert-gather reduces each token's
+//!   slot outputs in slot order — the dense path's exact accumulation
+//!   order. Every kernel is the per-row twin of the full forward (shared
+//!   `attn_ctx_row`, shared expert-gather), so round-stepped greedy
+//!   streams are *identical* to full recompute — including across window
+//!   slides (pinned by `tests/decode_session.rs`).
 //!
 //! [`CompiledModel`] implements [`crate::runtime::CompiledForward`], which
 //! is how `coordinator::Batcher` picks it up for the serving decode loop
@@ -60,7 +71,8 @@ pub use csr::{csr_bytes, CsrMatrix};
 use crate::model::{ModelConfig, ParamSet};
 use crate::quant::{self, QuantMat, QuantScheme};
 use crate::runtime::native::{
-    attention_fwd, attn_ctx_row, embed_fwd, masked_loss, matmul, rmsnorm_fwd, route_token,
+    attention_fwd, attn_ctx_row, embed_fwd, masked_loss, matmul, rmsnorm_fwd, rmsnorm_into,
+    route_token,
 };
 use crate::runtime::{
     check_tokens, count_execution, CompiledForward, DecodeState, LossOutput, StepOutput,
@@ -181,10 +193,11 @@ struct CompiledLayer {
 }
 
 /// Scratch buffers for the batched expert-gather, reused across layers
-/// and (on the incremental session path) across every slot of one step,
-/// so the decode hot loop stays allocation-light. `cap` is the most
+/// and (on the incremental session path) across rounds, so the decode
+/// hot loop stays allocation-free in steady state. `cap` is the most
 /// tokens one gather will see.
-struct MoeScratch {
+#[derive(Clone, Debug, Default)]
+pub(crate) struct MoeScratch {
     /// Per expert: the (token, slot, gate) triples routed to it.
     groups: Vec<Vec<(usize, usize, f32)>>,
     /// Gathered expert inputs, `[cap · D]`.
@@ -209,17 +222,103 @@ struct MoeScratch {
 
 impl MoeScratch {
     fn new(cfg: &ModelConfig, cap: usize) -> MoeScratch {
+        let mut scr = MoeScratch::default();
+        scr.ensure(cfg, cap);
+        scr
+    }
+
+    /// Size (grow-only for the `cap`-scaled buffers) for a gather over up
+    /// to `cap` tokens. The `[E]`-shaped routing scratch is sized exactly
+    /// — `route_token` derives the expert count from `lg.len()`.
+    fn ensure(&mut self, cfg: &ModelConfig, cap: usize) {
         let (d, f, e, k) = (cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k);
-        MoeScratch {
-            groups: vec![Vec::new(); e],
-            xbuf: vec![0f32; cap * d],
-            hidbuf: vec![0f32; cap * f],
-            outbuf: vec![0f32; cap * d],
-            slot_out: vec![0f32; cap * k * d],
-            lg: vec![0f32; e],
-            used: vec![false; e],
-            ytok: vec![0f32; d],
-            sel: vec![-1i32; cap * k],
+        if self.groups.len() != e {
+            self.groups.resize(e, Vec::new());
+        }
+        if self.lg.len() != e {
+            self.lg.resize(e, 0.0);
+        }
+        if self.used.len() != e {
+            self.used.resize(e, false);
+        }
+        if self.ytok.len() < d {
+            self.ytok.resize(d, 0.0);
+        }
+        if self.xbuf.len() < cap * d {
+            self.xbuf.resize(cap * d, 0.0);
+        }
+        if self.hidbuf.len() < cap * f {
+            self.hidbuf.resize(cap * f, 0.0);
+        }
+        if self.outbuf.len() < cap * d {
+            self.outbuf.resize(cap * d, 0.0);
+        }
+        if self.slot_out.len() < cap * k * d {
+            self.slot_out.resize(cap * k * d, 0.0);
+        }
+        if self.sel.len() < cap * k {
+            self.sel.resize(cap * k, -1);
+        }
+    }
+}
+
+/// Session-owned scratch of the layer-major decode round: the expert
+/// -gather buffers plus every per-round activation slab (residual rows,
+/// normed rows, QKV, attention context/output, final-norm rows) and the
+/// round plan itself. Lives inside [`crate::runtime::DecodeState`]
+/// (executors borrow it via `take_scratch`/`put_scratch`), grows to the
+/// largest round it has served, and is reused verbatim afterwards — a
+/// steady-state decode round performs no allocator traffic beyond its
+/// returned logits/routing tensors.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct SessionScratch {
+    moe: MoeScratch,
+    /// Round plan: `(slot, row0, pos0, n)` — slot id, its first row in
+    /// the stacked activation matrix, its first pending window position,
+    /// and its pending-token count.
+    plans: Vec<(usize, usize, usize, usize)>,
+    /// Attention score scratch, `[seq]`.
+    scores: Vec<f32>,
+    /// Stacked residual rows, `[total · D]`.
+    h: Vec<f32>,
+    /// RMSNorm outputs (ln1 and ln2 reuse it), `[total · D]`.
+    a: Vec<f32>,
+    /// Stacked QKV rows, `[total · 3D]`.
+    qkv: Vec<f32>,
+    /// Attention context rows, `[total · D]`.
+    ctx: Vec<f32>,
+    /// Attention output rows, `[total · D]`.
+    attn: Vec<f32>,
+    /// Final-norm rows at each slot's last position, `[n_out · D]`.
+    hf: Vec<f32>,
+}
+
+impl SessionScratch {
+    /// Grow-only sizing for a round of `total` stacked token rows and
+    /// `n_out` stepped slots.
+    fn ensure(&mut self, cfg: &ModelConfig, total: usize, n_out: usize) {
+        let d = cfg.d_model;
+        self.moe.ensure(cfg, total);
+        if self.scores.len() < cfg.seq {
+            self.scores.resize(cfg.seq, 0.0);
+        }
+        if self.h.len() < total * d {
+            self.h.resize(total * d, 0.0);
+        }
+        if self.a.len() < total * d {
+            self.a.resize(total * d, 0.0);
+        }
+        if self.qkv.len() < total * 3 * d {
+            self.qkv.resize(total * 3 * d, 0.0);
+        }
+        if self.ctx.len() < total * d {
+            self.ctx.resize(total * d, 0.0);
+        }
+        if self.attn.len() < total * d {
+            self.attn.resize(total * d, 0.0);
+        }
+        if self.hf.len() < n_out * d {
+            self.hf.resize(n_out * d, 0.0);
         }
     }
 }
@@ -517,23 +616,51 @@ impl CompiledModel {
         Ok((logits, routing))
     }
 
-    /// One incremental session step over `slots` (each distinct and
-    /// previously begun): process every slot's uncached window suffix
-    /// through the KV-cached kernels — attention computes only the new
-    /// query positions against the cached K/V, the expert-gather runs
-    /// only over the new tokens, and logits/routing are produced at the
-    /// last position alone. On a window slide, [`DecodeState::pending`]
-    /// hands back the whole window (cache invalidation + re-prefill),
-    /// which is exactly what the full-recompute path pays every step.
+    /// One **layer-major** incremental round over `slots` (each distinct
+    /// and previously begun): every stepped slot's uncached window suffix
+    /// is stacked into one activation matrix and the layer stack is swept
+    /// **once** for all of them — one `rmsnorm` and one
+    /// [`QuantMat::matmul_acc`] call per weight tensor per layer (the
+    /// dense/CSR/dequant traversal is paid once per round, not once per
+    /// slot), each slot's query rows attending its own K/V cache through
+    /// the shared `attn_ctx_row`, and one cross-slot [`moe_gather`] per
+    /// layer so tokens from different slots that select the same expert
+    /// stream that expert's rows once. A single-slot step is simply the
+    /// B = 1 round — there is no second kernel family.
     ///
-    /// Every kernel here is the per-row-identical twin of the
-    /// full-sequence forward (`embed_fwd` arithmetic, shared
-    /// `attn_ctx_row`, shared `moe_gather`, the same `QuantMat`
-    /// dispatch), so incremental logits replay the full path's bit for
-    /// bit — the greedy-parity contract of the session API. One
-    /// [`crate::runtime::EXECUTIONS`] tick per step, like one batched
-    /// forward.
+    /// Planning happens first ([`DecodeState::plan`] per slot — the
+    /// slide-invalidation decision), so scratch is sized to the round's
+    /// total row count before any kernel runs. On a window slide the plan
+    /// covers the whole window (cache invalidation + re-prefill), which
+    /// is exactly what the full-recompute path pays every step. All
+    /// scratch is session-owned ([`SessionScratch`] inside the
+    /// [`DecodeState`]) and reused across rounds: steady-state decode
+    /// allocates nothing but the returned logits/routing tensors.
+    ///
+    /// Every kernel is the per-row-identical twin of the full-sequence
+    /// forward (`embed_fwd` arithmetic, shared `attn_ctx_row`, shared
+    /// `moe_gather`, the same `QuantMat` dispatch), and the matmul
+    /// kernels' weight-stationary small-batch branch accumulates each
+    /// output cell in the same order as their row-major form — so round
+    /// logits replay the full path bit for bit regardless of how slots
+    /// are grouped into rounds. One [`crate::runtime::EXECUTIONS`] tick
+    /// per round, like one batched forward.
     fn session_step(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
+        // scratch moves out of the state for the round so the kernels can
+        // borrow it alongside the K/V caches; restore on every exit path
+        // to keep the warm buffers across errors too
+        let mut scr = state.take_scratch();
+        let res = self.session_round_with(state, slots, &mut scr);
+        state.put_scratch(scr);
+        res
+    }
+
+    fn session_round_with(
+        &self,
+        state: &mut DecodeState,
+        slots: &[usize],
+        scr: &mut SessionScratch,
+    ) -> Result<StepOutput> {
         let cfg = &self.config;
         ensure!(
             state.compatible(cfg),
@@ -548,63 +675,74 @@ impl CompiledModel {
         let n_out = slots.len();
 
         // plan every slot first (this is where slide-invalidation
-        // happens), so scratch can be sized to the largest suffix
-        let mut plans = Vec::with_capacity(n_out);
+        // happens), so scratch can be sized to the round's total rows
+        scr.plans.clear();
+        let mut total = 0usize;
         for &slot in slots {
             ensure!(slot < state.slots(), "slot {slot} out of range");
-            let (pos0, toks) = state.pending(slot);
+            let (pos0, n) = state.plan(slot);
             ensure!(
-                !toks.is_empty(),
+                n > 0,
                 "slot {slot} has no pending tokens (not begun, or stepped twice)"
             );
-            ensure!(pos0 + toks.len() <= cfg.seq, "slot {slot} overflows the window");
-            plans.push((slot, pos0, toks));
+            ensure!(pos0 + n <= cfg.seq, "slot {slot} overflows the window");
+            scr.plans.push((slot, total, pos0, n));
+            total += n;
         }
-        let cap = plans.iter().map(|(_, _, t)| t.len()).max().unwrap_or(1);
-        // one scratch allocation set per session step, shared by every
-        // slot and layer — a one-token decode must not pay per-token
-        // allocator traffic on the path this module exists to speed up
-        let mut scr = MoeScratch::new(cfg, cap);
-        let mut scores = vec![0f32; cfg.seq];
-        let mut h_buf = vec![0f32; cap * d];
-        let mut qkv_buf = vec![0f32; cap * 3 * d];
-        let mut ctx_buf = vec![0f32; cap * d];
-        let mut attn_buf = vec![0f32; cap * d];
+        scr.ensure(cfg, total, n_out);
+        let SessionScratch {
+            moe,
+            plans,
+            scores,
+            h,
+            a,
+            qkv,
+            ctx,
+            attn,
+            hf,
+        } = scr;
+        let h = &mut h[..total * d];
+        let a = &mut a[..total * d];
+        let qkv = &mut qkv[..total * 3 * d];
+        let ctx = &mut ctx[..total * d];
+        let attn = &mut attn[..total * d];
+        let hf = &mut hf[..n_out * d];
 
-        let mut logits = vec![0f32; n_out * v];
-        let mut sel_out = vec![-1i32; cfg.n_layers * n_out * k];
-        for (oi, (slot, pos0, toks)) in plans.iter().enumerate() {
-            let (slot, pos0, n) = (*slot, *pos0, toks.len());
-            let h = &mut h_buf[..n * d];
-            let qkv = &mut qkv_buf[..n * 3 * d];
-            let ctx = &mut ctx_buf[..n * d];
-            let attn_out = &mut attn_buf[..n * d];
-            // embed the new tokens at their window positions (overwrites
-            // every row, so no pre-zero is needed)
+        // embed every slot's new tokens at their window positions
+        // (overwrites every row, so no pre-zero is needed)
+        for &(slot, row0, pos0, n) in plans.iter() {
+            let toks = state.pending_tokens(slot, pos0, n);
             for (i, &tok) in toks.iter().enumerate() {
                 if tok < 0 || tok as usize >= v {
                     bail!("token id {tok} out of vocab range 0..{v}");
                 }
-                let dst = &mut h[i * d..(i + 1) * d];
+                let dst = &mut h[(row0 + i) * d..(row0 + i + 1) * d];
                 let src = &self.embed[tok as usize * d..][..d];
                 let prow = &self.pos[(pos0 + i) * d..][..d];
                 for z in 0..d {
                     dst[z] = src[z] + prow[z];
                 }
             }
-            for (l, layer) in self.layers.iter().enumerate() {
-                let a_in = rmsnorm_fwd(h, &layer.ln1, d);
-                qkv.fill(0.0);
-                layer.wqkv.matmul_acc(&a_in, qkv, n);
-                // append the new K/V rows to the cache, then attend each
-                // new query over every cached position (incl. the new
-                // ones — a multi-token prefill is causal within itself)
+        }
+
+        let mut logits = vec![0f32; n_out * v];
+        let mut sel_out = vec![-1i32; cfg.n_layers * n_out * k];
+        for (l, layer) in self.layers.iter().enumerate() {
+            rmsnorm_into(h, &layer.ln1, d, a);
+            qkv.fill(0.0);
+            layer.wqkv.matmul_acc(a, qkv, total);
+            // per slot: append its new K/V rows to its own cache, then
+            // attend each of its new queries over every cached position
+            // (incl. the new ones — a multi-token prefill is causal
+            // within itself)
+            for &(slot, row0, pos0, n) in plans.iter() {
                 {
                     let (kc, vc) = state.kv_mut(l, slot);
                     for i in 0..n {
-                        kc[(pos0 + i) * d..][..d].copy_from_slice(&qkv[i * 3 * d + d..][..d]);
+                        kc[(pos0 + i) * d..][..d]
+                            .copy_from_slice(&qkv[(row0 + i) * 3 * d + d..][..d]);
                         vc[(pos0 + i) * d..][..d]
-                            .copy_from_slice(&qkv[i * 3 * d + 2 * d..][..d]);
+                            .copy_from_slice(&qkv[(row0 + i) * 3 * d + 2 * d..][..d]);
                     }
                 }
                 let (kc, vc) = state.kv(l, slot);
@@ -613,7 +751,7 @@ impl CompiledModel {
                 for i in 0..n {
                     for hix in 0..nh {
                         attn_ctx_row(
-                            &qkv[i * 3 * d + hix * hd..][..hd],
+                            &qkv[(row0 + i) * 3 * d + hix * hd..][..hd],
                             kc,
                             d,
                             hix * hd,
@@ -622,26 +760,39 @@ impl CompiledModel {
                             hix * hd,
                             pos0 + i + 1,
                             scale,
-                            &mut scores,
-                            &mut ctx[i * d + hix * hd..][..hd],
+                            scores,
+                            &mut ctx[(row0 + i) * d + hix * hd..][..hd],
                         );
                     }
                 }
-                attn_out.fill(0.0);
-                layer.wo.matmul_acc(ctx, attn_out, n);
-                for (hv, &av) in h.iter_mut().zip(attn_out.iter()) {
-                    *hv += av;
-                }
-                let x = rmsnorm_fwd(h, &layer.ln2, d);
-                moe_gather(layer, cfg, &x, n, h, &mut scr);
-                // routing is reported for the last new position only —
-                // the position the serving loop samples and accounts
-                sel_out[(l * n_out + oi) * k..][..k]
-                    .copy_from_slice(&scr.sel[(n - 1) * k..n * k]);
             }
-            let hf = rmsnorm_fwd(&h[(n - 1) * d..n * d], &self.ln_f, d);
-            self.lm_head
-                .matmul_acc(&hf, &mut logits[oi * v..(oi + 1) * v], 1);
+            attn.fill(0.0);
+            layer.wo.matmul_acc(ctx, attn, total);
+            for (hv, &av) in h.iter_mut().zip(attn.iter()) {
+                *hv += av;
+            }
+            rmsnorm_into(h, &layer.ln2, d, a);
+            // one cross-slot gather: tokens from different slots that
+            // picked the same expert share that expert's weight streaming
+            moe_gather(layer, cfg, a, total, h, moe);
+            // routing is reported for each slot's last new position only —
+            // the position the serving loop samples and accounts
+            for (oi, &(_slot, row0, _pos0, n)) in plans.iter().enumerate() {
+                sel_out[(l * n_out + oi) * k..][..k]
+                    .copy_from_slice(&moe.sel[(row0 + n - 1) * k..(row0 + n) * k]);
+            }
+        }
+        for (oi, &(_slot, row0, _pos0, n)) in plans.iter().enumerate() {
+            rmsnorm_into(
+                &h[(row0 + n - 1) * d..(row0 + n) * d],
+                &self.ln_f,
+                d,
+                &mut hf[oi * d..(oi + 1) * d],
+            );
+        }
+        // one batched head matmul for the whole round
+        self.lm_head.matmul_acc(hf, &mut logits, n_out);
+        for &(slot, _row0, _pos0, n) in plans.iter() {
             state.commit(slot, n);
         }
         Ok(StepOutput {
@@ -685,22 +836,12 @@ impl CompiledForward for CompiledModel {
         Ok(masked_loss(logits.data(), targets, bsz, s, self.config.vocab))
     }
 
-    /// Native incremental prefill: caches the prompt's K/V and returns
-    /// last-position logits without computing a single wasted position.
-    fn prefill(&self, state: &mut DecodeState, slot: usize, prompt: &[i32]) -> Result<StepOutput> {
-        state.begin(slot, prompt);
-        self.session_step(state, &[slot])
-    }
-
-    /// Native incremental decode: one new attention query + one-token
-    /// expert-gather per stepped slot (full window re-prefill only after
-    /// a window slide).
-    fn decode(&self, state: &mut DecodeState, steps: &[(usize, i32)]) -> Result<StepOutput> {
-        for &(slot, tok) in steps {
-            state.push(slot, tok);
-        }
-        let slots: Vec<usize> = steps.iter().map(|&(s, _)| s).collect();
-        self.session_step(state, &slots)
+    /// Native incremental round: one layer-major KV-cached sweep across
+    /// all stepped slots (see [`CompiledModel::session_step`]). The trait
+    /// `prefill`/`decode` sugar lands here, making the single-slot step
+    /// the degenerate B = 1 round of the same code path.
+    fn session_round(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
+        self.session_step(state, slots)
     }
 }
 

@@ -7,9 +7,11 @@
 //! 1. **reference** — the old full-recompute loop, inlined here: rebuild
 //!    the (keep-tail-windowed) sequence every step, run the compiled
 //!    full-sequence forward, read logits at the last live position;
-//! 2. **compiled incremental** — `CompiledModel`'s `prefill`/`decode`
-//!    overrides (per-layer K/V caches, one-position attention, one-token
-//!    expert-gather, window-slide invalidation + re-prefill);
+//! 2. **compiled incremental** — `CompiledModel`'s `session_round`
+//!    override, reached here through the `prefill`/`decode` sugar and
+//!    directly as multi-slot layer-major rounds (per-layer K/V caches,
+//!    one-position attention, cross-slot expert-gather, window-slide
+//!    invalidation + re-prefill);
 //! 3. **dense fallback** — the `Backend` default session methods
 //!    (full recompute through `fwd_logits_routed` on a right-sized
 //!    batch).
@@ -22,8 +24,10 @@
 use stun::data::BOS;
 use stun::model::{ModelConfig, ParamSet};
 use stun::pruning::unstructured;
+use stun::quant::QuantScheme;
 use stun::runtime::session::{greedy_token, recompute_step};
 use stun::runtime::{Backend, CompiledForward, DecodeState, NativeBackend};
+use stun::sparse::SparseConfig;
 use stun::tensor::IntTensor;
 
 fn tiny() -> NativeBackend {
@@ -229,6 +233,203 @@ fn batched_decode_rows_match_single_slot_streams() {
     }
     assert_eq!(got_a, solo_a);
     assert_eq!(got_b, solo_b);
+}
+
+#[test]
+fn batched_rounds_match_sequential_and_recompute_f32_and_u16() {
+    // Three slots stepped in one layer-major round per token must
+    // reproduce (a) the sequential single-slot session streams and
+    // (b) the full-recompute reference through the same executor —
+    // token-identical, last-position logits within 1e-5 — for f32 and
+    // u16 storage alike (the batched dequant temp row must not change
+    // the reduction).
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let mut params = ParamSet::init(&cfg, 59);
+    unstructured::magnitude_prune(&mut params, 0.7).unwrap();
+    let prompts: [Vec<i32>; 3] = [
+        (0..9).map(|i| 2 + (i % 13)).collect(),
+        (0..14).map(|i| 4 + (i % 19)).collect(),
+        (0..5).map(|i| 6 + (i % 5)).collect(),
+    ];
+    let n = 7;
+    for quant in [QuantScheme::F32, QuantScheme::U16] {
+        let scfg = SparseConfig {
+            quant,
+            ..Default::default()
+        };
+        let compiled = backend.compile_with(&params, &scfg).unwrap().unwrap();
+
+        // batched: one round prefills all three, then decode rounds
+        let mut state = compiled.new_session(3);
+        for (i, p) in prompts.iter().enumerate() {
+            state.begin(i, p);
+        }
+        let slots = [0usize, 1, 2];
+        let out = compiled.session_round(&mut state, &slots).unwrap();
+        assert_eq!(out.logits.shape()[0], 3, "one logits row per slot");
+        let mut toks: Vec<i32> =
+            (0..3).map(|i| greedy_token(out.logits.row(i))).collect();
+        let mut got: Vec<Vec<i32>> = toks.iter().map(|&t| vec![t]).collect();
+        let mut last: Vec<Vec<f32>> =
+            (0..3).map(|i| out.logits.row(i).to_vec()).collect();
+        for _ in 1..n {
+            for (i, &t) in toks.iter().enumerate() {
+                state.push(i, t);
+            }
+            let out = compiled.session_round(&mut state, &slots).unwrap();
+            for i in 0..3 {
+                toks[i] = greedy_token(out.logits.row(i));
+                got[i].push(toks[i]);
+                last[i] = out.logits.row(i).to_vec();
+            }
+        }
+
+        for (i, p) in prompts.iter().enumerate() {
+            let q = quant.name();
+            let (solo, solo_logits) = session_stream(
+                compiled.new_session(1),
+                |st: &mut DecodeState, pr: &[i32]| compiled.prefill(st, 0, pr),
+                |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+                p,
+                n,
+            );
+            assert_eq!(got[i], solo, "[{q}/slot {i}] batched != sequential");
+            for (a, b) in last[i].iter().zip(&solo_logits) {
+                assert!(
+                    (a - b).abs() <= 1e-5,
+                    "[{q}/slot {i}] batched logits drifted from sequential: {a} vs {b}"
+                );
+            }
+            let (want, want_logits) = reference_stream(compiled.as_ref(), p, n);
+            assert_eq!(got[i], want, "[{q}/slot {i}] batched != full recompute");
+            for (a, b) in last[i].iter().zip(&want_logits) {
+                assert!(
+                    (a - b).abs() <= 1e-5,
+                    "[{q}/slot {i}] batched logits drifted from recompute: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_round_slide_in_one_slot_keeps_others_cached() {
+    // One slot's history crosses `seq` mid-generation — its window
+    // slides and the plan re-prefills it — while the other slot must
+    // keep stepping incrementally off its warm cache in the same
+    // rounds. Streams stay identical to the solo sessions throughout.
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    let params = ParamSet::init(&cfg, 61);
+    let compiled = backend.compile(&params).unwrap().unwrap();
+    let s = cfg.seq;
+    let pa: Vec<i32> = (0..s as i32 - 2).map(|i| 2 + (i % 23)).collect();
+    let pb: Vec<i32> = (0..8).map(|i| 3 + (i % 5)).collect();
+    let n = 6;
+
+    let (solo_a, _) = session_stream(
+        compiled.new_session(1),
+        |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+        |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+        &pa,
+        n,
+    );
+    let (solo_b, _) = session_stream(
+        compiled.new_session(1),
+        |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+        |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+        &pb,
+        n,
+    );
+
+    let mut state = compiled.new_session(2);
+    state.begin(0, &pa);
+    state.begin(1, &pb);
+    let out = compiled.session_round(&mut state, &[0, 1]).unwrap();
+    let mut ta = greedy_token(out.logits.row(0));
+    let mut tb = greedy_token(out.logits.row(1));
+    let (mut got_a, mut got_b) = (vec![ta], vec![tb]);
+    let mut slid_rounds = 0;
+    for _ in 1..n {
+        let b_cached = state.cached_len(1);
+        state.push(0, ta);
+        state.push(1, tb);
+        let out = compiled.session_round(&mut state, &[0, 1]).unwrap();
+        assert_eq!(
+            state.cached_len(1),
+            b_cached + 1,
+            "slot 1 must stay incremental (one new cached position per round)"
+        );
+        if state.slid(0) {
+            slid_rounds += 1;
+        }
+        ta = greedy_token(out.logits.row(0));
+        tb = greedy_token(out.logits.row(1));
+        got_a.push(ta);
+        got_b.push(tb);
+    }
+    assert!(slid_rounds > 0, "slot 0 never crossed the window boundary");
+    assert!(!state.slid(1), "slot 1 must not have slid");
+    assert_eq!(got_a, solo_a, "sliding slot diverged from its solo stream");
+    assert_eq!(got_b, solo_b, "cached slot diverged from its solo stream");
+}
+
+#[test]
+fn mixed_prefill_and_decode_share_a_round() {
+    // A slot joining late contributes a multi-token prefill to the same
+    // layer-major sweep in which an established slot decodes one token.
+    // Both streams must match their solo sessions exactly.
+    let backend = tiny();
+    let params = ParamSet::init(backend.config(), 67);
+    let compiled = backend.compile(&params).unwrap().unwrap();
+    let pa: Vec<i32> = (0..11).map(|i| 2 + (i % 17)).collect();
+    let pb: Vec<i32> = (0..13).map(|i| 7 + (i % 3)).collect();
+    let n = 5;
+
+    let (solo_a, _) = session_stream(
+        compiled.new_session(1),
+        |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+        |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+        &pa,
+        n,
+    );
+    let (solo_b, _) = session_stream(
+        compiled.new_session(1),
+        |st: &mut DecodeState, p: &[i32]| compiled.prefill(st, 0, p),
+        |st: &mut DecodeState, t: i32| compiled.decode(st, &[(0, t)]),
+        &pb,
+        n,
+    );
+
+    let mut state = compiled.new_session(2);
+    let out = compiled.prefill(&mut state, 0, &pa).unwrap();
+    let mut ta = greedy_token(out.logits.row(0));
+    let mut got_a = vec![ta];
+    // round 2: slot 0's one-token decode + slot 1's 13-token prefill
+    state.push(0, ta);
+    state.begin(1, &pb);
+    let out = compiled.session_round(&mut state, &[0, 1]).unwrap();
+    assert_eq!(out.logits.shape()[0], 2);
+    ta = greedy_token(out.logits.row(0));
+    let mut tb = greedy_token(out.logits.row(1));
+    got_a.push(ta);
+    let mut got_b = vec![tb];
+    for _ in 2..n {
+        state.push(0, ta);
+        state.push(1, tb);
+        let out = compiled.session_round(&mut state, &[0, 1]).unwrap();
+        ta = greedy_token(out.logits.row(0));
+        tb = greedy_token(out.logits.row(1));
+        got_a.push(ta);
+        got_b.push(tb);
+    }
+    assert_eq!(got_a, solo_a, "decoding slot diverged when sharing rounds");
+    assert_eq!(
+        got_b,
+        solo_b[..n - 1],
+        "late-joining slot diverged from its solo stream"
+    );
 }
 
 #[test]

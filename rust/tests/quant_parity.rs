@@ -12,9 +12,11 @@
 //!    (its *weight*-level bound is the 2e-2 contract of test 1).
 //! 3. **Greedy-stream stability** — u16-compiled decode sessions emit
 //!    token streams *identical* to f32-compiled sessions on the
-//!    `decode_session` fixtures, and every quantized executor's
-//!    incremental path replays its own full-recompute path exactly
-//!    (the session kernels are shared, so there is zero tolerance).
+//!    `decode_session` fixtures, every quantized executor's
+//!    incremental path replays its own full-recompute path exactly,
+//!    and multi-slot layer-major `session_round`s replay the
+//!    sequential single-slot sessions exactly (the session kernels are
+//!    shared, so there is zero tolerance).
 //! 4. **Bytes** — `ExpertStore::working_set_bytes` shrinks ≥1.8× at u16
 //!    (and further at u8) for the 70%-sparsity model, and the quant-aware
 //!    `CompressionReport` agrees with what the compile pass stores.
@@ -257,6 +259,50 @@ fn quantized_incremental_replays_quantized_recompute_exactly() {
                     scheme.name()
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn quantized_batched_rounds_match_sequential_sessions_exactly() {
+    // two slots stepped in one layer-major round per token must emit
+    // the same streams as the slots stepped alone — on every quantized
+    // executor the batched dequant temp row regroups the weight
+    // traversal but must not change a single reduction, so the greedy
+    // streams carry zero tolerance
+    let backend = tiny();
+    let cfg = backend.config().clone();
+    for scheme in [QuantScheme::U16, QuantScheme::U8] {
+        for (label, params) in model_variants(&cfg) {
+            let exec = backend
+                .compile_with(&params, &scfg(scheme))
+                .unwrap()
+                .expect("native compiles");
+            let pa: Vec<i32> = (0..10).map(|i| 3 + (i % 11)).collect();
+            let pb: Vec<i32> = (0..17).map(|i| 5 + (i % 7)).collect();
+            let n = 6;
+            let solo_a = session_stream(exec.as_ref(), &pa, n);
+            let solo_b = session_stream(exec.as_ref(), &pb, n);
+
+            let mut state = exec.new_session(2);
+            state.begin(0, &pa);
+            state.begin(1, &pb);
+            let out = exec.session_round(&mut state, &[0, 1]).unwrap();
+            let mut ta = greedy_token(out.logits.row(0));
+            let mut tb = greedy_token(out.logits.row(1));
+            let (mut got_a, mut got_b) = (vec![ta], vec![tb]);
+            for _ in 1..n {
+                state.push(0, ta);
+                state.push(1, tb);
+                let out = exec.session_round(&mut state, &[0, 1]).unwrap();
+                ta = greedy_token(out.logits.row(0));
+                tb = greedy_token(out.logits.row(1));
+                got_a.push(ta);
+                got_b.push(tb);
+            }
+            let q = scheme.name();
+            assert_eq!(got_a, solo_a, "[{q}/{label}] batched slot 0 diverged");
+            assert_eq!(got_b, solo_b, "[{q}/{label}] batched slot 1 diverged");
         }
     }
 }
