@@ -228,7 +228,7 @@ fn main() {
         unstructured::magnitude_prune(&mut ps, 0.7).unwrap();
         let prompt: Vec<i32> = tokens.row(0)[..cfg.seq / 2].to_vec();
         let n_steps = (cfg.seq / 2).saturating_sub(2).max(1);
-        for quant in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+        for quant in QuantScheme::ALL {
             let scfg = SparseConfig {
                 quant,
                 ..Default::default()
@@ -276,6 +276,49 @@ fn main() {
                  8 sequential B=1 rounds",
                 quant.name(),
                 tok_s[2] / tok_s[0].max(1e-12)
+            );
+        }
+
+        // sharded round arm: the same 0.7-sparse model served through
+        // the expert-parallel engine — trunk replicated, expert slabs
+        // split round-robin across N worker threads, logits identical
+        // to single-engine (tests/shard_parity.rs pins the streams).
+        // Only the round wall-clock is on the record here; on one box
+        // the thread fan-out mostly buys concurrency headroom, not
+        // arithmetic savings.
+        let scfg = SparseConfig::default();
+        let bsz = 4usize;
+        let slots: Vec<usize> = (0..bsz).collect();
+        for n_shards in [2usize, 4] {
+            let placement =
+                stun::shard::Placement::round_robin(cfg.n_layers, cfg.n_experts, n_shards);
+            let se = stun::shard::ShardedEngine::new(&ps, &scfg, placement)
+                .expect("sharded engine");
+            let r = bench.run(
+                &format!("{config}/session round sharded x{n_shards} s=0.7 B={bsz}"),
+                || {
+                    let mut st = se.new_session(bsz);
+                    for slot in 0..bsz {
+                        st.begin(slot, &prompt);
+                    }
+                    let out = se.session_round(&mut st, &slots).unwrap();
+                    let mut toks: Vec<i32> = (0..bsz)
+                        .map(|i| greedy_token(out.logits.row(i)))
+                        .collect();
+                    for _ in 0..n_steps {
+                        for (slot, &t) in toks.iter().enumerate() {
+                            st.push(slot, t);
+                        }
+                        let out = se.session_round(&mut st, &slots).unwrap();
+                        for (i, t) in toks.iter_mut().enumerate() {
+                            *t = greedy_token(out.logits.row(i));
+                        }
+                    }
+                },
+            );
+            println!(
+                "    -> sharded x{n_shards}: {:.1} tokens/s aggregate (B={bsz})",
+                (bsz * (n_steps + 1)) as f64 / r.mean_secs()
             );
         }
     }

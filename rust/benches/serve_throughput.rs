@@ -13,11 +13,16 @@
 //! `EvalHarness` arms on the same grid.
 //!
 //! The {executor × sparsity × quant} surface (and the staggered and
-//! poisson rows) is written to `BENCH_serve.json` (`BENCH_SERVE_OUT`
+//! poisson rows, each with its RNG seeds and queue-depth/occupancy
+//! histograms) is written to `BENCH_serve.json` (`BENCH_SERVE_OUT`
 //! overrides the path)
 //! so CI can archive the perf trajectory as a machine-readable artifact.
 //! `STUN_SERVE_ARMS_ONLY=1` skips the trained-model headline and the
-//! eval arms — the quick CI profile.
+//! eval arms — the quick CI profile. `STUN_SERVE_SHARDS=2,4` adds
+//! expert-parallel sharded serving arms (round-robin vs refined
+//! placement, cross-shard routing fraction, per-shard resident bytes);
+//! the shard arms are informational — `perf_gate` keeps gating the
+//! single-engine arms only.
 
 use std::time::Duration;
 use stun::coordinator::{
@@ -226,10 +231,11 @@ fn main() {
     // staggered arrivals: offsets honored by the serve loop, so queueing
     // (and hence Response::queued) is real rather than the all-at-t0 stamp
     let gap = Duration::from_micros(300);
+    let stagger_seed = 9u64;
     let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
     let mut batcher = Batcher::new(backend, &params, store).expect("batcher");
     let (responses, m) = batcher
-        .serve(staggered_workload(backend.config(), 16, 6, 9, gap))
+        .serve(staggered_workload(backend.config(), 16, 6, stagger_seed, gap))
         .expect("staggered serve");
     let mean_queued_us = responses
         .iter()
@@ -246,10 +252,13 @@ fn main() {
     );
     let staggered = Json::obj(vec![
         ("gap_us", Json::Num(gap.as_secs_f64() * 1e6)),
+        ("seed", Json::Num(stagger_seed as f64)),
         ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
         ("p50_latency_us", Json::Num(m.p50_latency.as_secs_f64() * 1e6)),
         ("p95_latency_us", Json::Num(m.p95_latency.as_secs_f64() * 1e6)),
         ("mean_queued_us", Json::Num(mean_queued_us)),
+        ("queue_depth", m.queue_depth.to_json()),
+        ("occupancy", m.occupancy.to_json()),
     ]);
 
     // heavy-tail arrivals: exponential inter-arrival gaps cluster
@@ -257,10 +266,18 @@ fn main() {
     // variable-size batches and the layer-major rounds mix multi-token
     // prefill with one-token decode in the same sweep
     let mean_gap = Duration::from_micros(300);
+    let (poisson_seed, arrival_seed) = (13u64, 113u64);
     let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
     let mut batcher = Batcher::new(backend, &params, store).expect("batcher");
     let (responses, m) = batcher
-        .serve(poisson_workload(backend.config(), 16, 6, 13, mean_gap))
+        .serve(poisson_workload(
+            backend.config(),
+            16,
+            6,
+            poisson_seed,
+            arrival_seed,
+            mean_gap,
+        ))
         .expect("poisson serve");
     let mean_queued_us = responses
         .iter()
@@ -277,11 +294,119 @@ fn main() {
     );
     let poisson = Json::obj(vec![
         ("mean_gap_us", Json::Num(mean_gap.as_secs_f64() * 1e6)),
+        ("seed", Json::Num(poisson_seed as f64)),
+        ("arrival_seed", Json::Num(arrival_seed as f64)),
         ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
         ("p50_latency_us", Json::Num(m.p50_latency.as_secs_f64() * 1e6)),
         ("p95_latency_us", Json::Num(m.p95_latency.as_secs_f64() * 1e6)),
         ("mean_queued_us", Json::Num(mean_queued_us)),
+        ("queue_depth", m.queue_depth.to_json()),
+        ("occupancy", m.occupancy.to_json()),
     ]);
+
+    // expert-parallel sharded serving arms: one 0.7-sparse pruned model,
+    // coactivation-informed placements, cross-shard routing accounting.
+    // Arm list comes from STUN_SERVE_SHARDS (comma-separated shard
+    // counts, default "2,4"); each count serves the same burst under
+    // round-robin and refined placement so the JSON records both the
+    // throughput and the locality win.
+    let shard_counts: Vec<usize> = std::env::var("STUN_SERVE_SHARDS")
+        .unwrap_or_else(|_| "2,4".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&n| n >= 2)
+        .collect();
+    let mut shard_rows: Vec<Json> = Vec::new();
+    if !shard_counts.is_empty() {
+        let mut ps = params.clone();
+        StunPipeline {
+            expert: ExpertPruneConfig {
+                ratio: 0.25,
+                ..Default::default()
+            },
+            unstructured: UnstructuredConfig::default(),
+            total_sparsity: 0.7,
+            calib_batches: 2,
+        }
+        .run(backend, &mut ps, &mut gen)
+        .expect("stun");
+        let coact = stun::coactivation::collect(backend, &ps, &mut gen, 2)
+            .expect("coactivation")
+            .normalized();
+        let bytes = stun::shard::expert_bytes_table(&ps, QuantScheme::F32);
+        let scfg = SparseConfig::default();
+        let workload_seed = 5u64;
+        println!("\n### sharded serving arms (tiny, 0.7-sparse)");
+        println!(
+            "{:>7} {:>12} {:>11} {:>12} {:>12}",
+            "shards", "placement", "tok/s", "cross-shard", "exp-cross"
+        );
+        for &n_shards in &shard_counts {
+            for strategy in [
+                stun::shard::PlacementStrategy::RoundRobin,
+                stun::shard::PlacementStrategy::Refined,
+            ] {
+                let placement = stun::shard::Placement::build(
+                    strategy,
+                    &coact,
+                    &bytes,
+                    n_shards,
+                    Duration::from_millis(20),
+                    17,
+                )
+                .expect("placement");
+                let expected_cross = placement.expected_cross_cost(&coact);
+                let cap = placement
+                    .shard_bytes(&bytes)
+                    .into_iter()
+                    .max()
+                    .unwrap_or(0)
+                    .max(1);
+                let mut batcher = Batcher::with_shards(
+                    backend,
+                    &ps,
+                    &scfg,
+                    placement,
+                    cap,
+                    Duration::from_micros(200),
+                )
+                .expect("sharded batcher");
+                let (_r, m) = batcher
+                    .serve(burst_workload(backend.config(), 8, 6, workload_seed))
+                    .expect("sharded serve");
+                println!(
+                    "{:>7} {:>12} {:>11.1} {:>11.1}% {:>12.3}",
+                    n_shards,
+                    strategy.name(),
+                    m.tokens_per_sec(),
+                    m.cross_shard_fraction() * 100.0,
+                    expected_cross
+                );
+                let lanes: Vec<Json> = m
+                    .per_shard
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("shard", Json::Num(l.shard as f64)),
+                            ("tokens", Json::Num(l.tokens as f64)),
+                            ("expert_hits", Json::Num(l.expert_hits as f64)),
+                            ("resident_bytes", Json::Num(l.resident_bytes as f64)),
+                            ("swaps", Json::Num(l.swaps as f64)),
+                        ])
+                    })
+                    .collect();
+                shard_rows.push(Json::obj(vec![
+                    ("shards", Json::Num(n_shards as f64)),
+                    ("placement", Json::Str(strategy.name().into())),
+                    ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
+                    ("cross_shard_frac", Json::Num(m.cross_shard_fraction())),
+                    ("expected_cross_cost", Json::Num(expected_cross)),
+                    ("workload_seed", Json::Num(workload_seed as f64)),
+                    ("per_shard", Json::Arr(lanes)),
+                ]));
+            }
+        }
+    }
 
     if !arms_only {
         println!("\n### eval arms: dense vs compiled EvalHarness (tiny, mean secs)");
@@ -308,6 +433,7 @@ fn main() {
         ("arms", Json::Arr(arm_rows)),
         ("staggered", staggered),
         ("poisson", poisson),
+        ("shards", Json::Arr(shard_rows)),
     ]);
     let path =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());

@@ -51,7 +51,9 @@ use crate::model::ParamSet;
 use crate::quant::QuantScheme;
 use crate::runtime::session::{greedy_token, recompute_step};
 use crate::runtime::{Backend, CompiledForward, DecodeState, StepOutput};
+use crate::shard::{Placement, ShardedEngine};
 use crate::sparse::SparseConfig;
+use crate::util::json::Json;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -258,6 +260,100 @@ pub struct Response {
     pub queued: Duration,
 }
 
+/// Power-of-two-bucketed count histogram for per-round serving
+/// observability (queue depth, batch occupancy). Bucket 0 holds exactly
+/// the value 0; bucket `i ≥ 1` covers `[2^(i−1), 2^i − 1]` — so small
+/// counts (the interesting regime for queue depth) get fine buckets and
+/// the tail stays bounded without preconfiguring a range.
+#[derive(Clone, Debug, Default)]
+pub struct CountHist {
+    counts: Vec<u64>,
+    samples: u64,
+    max_seen: usize,
+}
+
+impl CountHist {
+    fn bucket(v: usize) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (usize::BITS - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Inclusive `(lo, hi)` value range of bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (usize, usize) {
+        if i == 0 {
+            (0, 0)
+        } else {
+            (1 << (i - 1), (1 << i) - 1)
+        }
+    }
+
+    pub fn record(&mut self, v: usize) {
+        let b = Self::bucket(v);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.samples += 1;
+        self.max_seen = self.max_seen.max(v);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn max_seen(&self) -> usize {
+        self.max_seen
+    }
+
+    /// Raw bucket counts, lowest bucket first (may hold trailing zeros).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// `{samples, max, buckets: [{lo, hi, count}, ...]}` with empty
+    /// buckets omitted — the `BENCH_serve.json` encoding.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let (lo, hi) = Self::bucket_bounds(i);
+                Json::obj(vec![
+                    ("lo", Json::Num(lo as f64)),
+                    ("hi", Json::Num(hi as f64)),
+                    ("count", Json::Num(c as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("samples", Json::Num(self.samples as f64)),
+            ("max", Json::Num(self.max_seen as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Per-shard serving totals under [`Batcher::with_shards`] — one lane
+/// per engine shard in the final [`ServeMetrics`].
+#[derive(Clone, Debug)]
+pub struct ShardLane {
+    pub shard: usize,
+    /// Generated tokens whose layer-0 home shard was this shard.
+    pub tokens: u64,
+    /// (token, expert) touches this shard's engine served.
+    pub expert_hits: u64,
+    /// Swap-ins of this shard's [`ExpertStore`] lane.
+    pub swaps: u64,
+    /// Compiled expert-slab bytes hosted by this shard (each replica
+    /// copy counted once, on its hosting shard).
+    pub resident_bytes: usize,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub completed: usize,
@@ -271,6 +367,18 @@ pub struct ServeMetrics {
     /// Decode steps whose expert touches came from real router decisions
     /// (vs the uniform-routing fallback).
     pub routed_steps: u64,
+    /// Arrived-but-unadmitted requests observed at each admission point.
+    pub queue_depth: CountHist,
+    /// Active slots at each decode round (batch occupancy).
+    pub occupancy: CountHist,
+    /// Routed (token, expert) touches under sharded serving.
+    pub shard_hits: u64,
+    /// Of those, touches whose expert was hosted on no shard local to
+    /// the token's home shard (the cross-shard routing tax).
+    pub cross_shard_hits: u64,
+    /// One lane per shard under [`Batcher::with_shards`]; empty on
+    /// single-engine serving.
+    pub per_shard: Vec<ShardLane>,
 }
 
 impl ServeMetrics {
@@ -284,6 +392,23 @@ impl ServeMetrics {
         self.generated_tokens as f64 / total.as_secs_f64().max(1e-9)
     }
 
+    /// Fraction of routed (token, expert) touches served off every shard
+    /// hosting-local to the token (0.0 when serving single-engine, or
+    /// when replication made all traffic local).
+    pub fn cross_shard_fraction(&self) -> f64 {
+        if self.shard_hits == 0 {
+            0.0
+        } else {
+            self.cross_shard_hits as f64 / self.shard_hits as f64
+        }
+    }
+
+    /// Tokens/s of one shard lane: its share of generated tokens over
+    /// the common serve wall-clock.
+    pub fn shard_tokens_per_sec(&self, lane: &ShardLane) -> f64 {
+        lane.tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
     fn finalise(&mut self, responses: &[Response], t0: Instant, store: &ExpertStore) {
         self.completed = responses.len();
         self.wall = t0.elapsed();
@@ -294,6 +419,25 @@ impl ServeMetrics {
             self.p50_latency = nearest_rank(&lats, 0.50);
             self.p95_latency = nearest_rank(&lats, 0.95);
         }
+    }
+
+    /// Fold the sharded-serving accounting into the final metrics: one
+    /// lane per shard, the cross-shard totals, and the per-shard store
+    /// swaps added onto `expert_swaps` (the global store is idle under
+    /// sharded serving). Called after [`ServeMetrics::finalise`].
+    fn attach_shards(&mut self, sh: &ShardState) {
+        self.shard_hits = sh.total_hits;
+        self.cross_shard_hits = sh.cross_hits;
+        self.per_shard = (0..sh.stores.len())
+            .map(|s| ShardLane {
+                shard: s,
+                tokens: sh.tokens_by_shard[s],
+                expert_hits: sh.hits_by_shard[s],
+                swaps: sh.stores[s].swaps,
+                resident_bytes: sh.resident_slab_bytes[s],
+            })
+            .collect();
+        self.expert_swaps += sh.stores.iter().map(|st| st.swaps).sum::<u64>();
     }
 }
 
@@ -316,6 +460,24 @@ struct Active {
     /// [`Batcher::serve`]). Kept on the sequence itself so responses
     /// cannot be cross-wired even when callers reuse request ids.
     respond: Option<mpsc::Sender<Response>>,
+}
+
+/// Sharded-serving bookkeeping carried by a [`Batcher::with_shards`]
+/// batcher: the placement the engine was split by, one [`ExpertStore`]
+/// residency lane per shard, and the per-round routing-locality tallies
+/// that become [`ShardLane`]s at finalisation.
+struct ShardState {
+    placement: Placement,
+    stores: Vec<ExpertStore>,
+    /// Compiled slab bytes per shard, from
+    /// [`ShardedEngine::shard_resident_bytes`].
+    resident_slab_bytes: Vec<usize>,
+    /// Generated tokens by layer-0 home shard.
+    tokens_by_shard: Vec<u64>,
+    /// Routed (token, expert) touches served by each shard.
+    hits_by_shard: Vec<u64>,
+    cross_hits: u64,
+    total_hits: u64,
 }
 
 /// Continuous batcher over a single model, built on the incremental
@@ -346,6 +508,10 @@ pub struct Batcher<'b> {
     state: DecodeState,
     /// Slot table: `slots[i]` is the sequence living in state slot `i`.
     slots: Vec<Option<Active>>,
+    /// `Some` iff the executor is a [`ShardedEngine`]
+    /// ([`Batcher::with_shards`]): per-shard residency lanes + routing
+    /// locality accounting.
+    shards: Option<ShardState>,
 }
 
 impl<'b> Batcher<'b> {
@@ -453,6 +619,65 @@ impl<'b> Batcher<'b> {
             incremental,
             state,
             slots: (0..b).map(|_| None).collect(),
+            shards: None,
+        })
+    }
+
+    /// Expert-parallel sharded serving: compile the model once, split its
+    /// expert slabs across `placement.n_shards` engine shards
+    /// ([`ShardedEngine`] — one engine thread per shard), and serve
+    /// rounds through the same continuous-batching loop. Each shard gets
+    /// its own [`ExpertStore`] lane of `per_shard_capacity` bytes, and
+    /// every routed (token, expert) touch is accounted against the shard
+    /// that *served* it — with the cross-shard fraction (touches whose
+    /// expert no token-local shard hosted) reported in
+    /// [`ServeMetrics::cross_shard_fraction`]. Logits — and therefore
+    /// greedy token streams — are bit-identical to single-engine serving
+    /// (`tests/shard_parity.rs`).
+    pub fn with_shards(
+        backend: &'b dyn Backend,
+        params: &ParamSet,
+        scfg: &SparseConfig,
+        placement: Placement,
+        per_shard_capacity: usize,
+        swap_penalty: Duration,
+    ) -> Result<Batcher<'b>> {
+        let n_shards = placement.n_shards;
+        let engine = ShardedEngine::new(params, scfg, placement)?;
+        let shard_state = ShardState {
+            placement: engine.placement().clone(),
+            stores: (0..n_shards)
+                .map(|_| ExpertStore::new(per_shard_capacity, swap_penalty))
+                .collect(),
+            resident_slab_bytes: engine.shard_resident_bytes(),
+            tokens_by_shard: vec![0; n_shards],
+            hits_by_shard: vec![0; n_shards],
+            cross_hits: 0,
+            total_hits: 0,
+        };
+        let b = backend.config().eval_batch;
+        let state = engine.new_session(b);
+        Ok(Batcher {
+            backend,
+            params_alive: (0..params.config.n_layers)
+                .map(|l| params.alive_experts(l))
+                .collect(),
+            expert_bytes: (0..params.config.n_layers)
+                .map(|l| {
+                    (0..params.config.n_experts)
+                        .map(|e| params.expert_resident_bytes(l, e, scfg.quant))
+                        .collect()
+                })
+                .collect(),
+            params: None,
+            // the global store is idle under sharded serving — residency
+            // is budgeted per shard lane in `shards`
+            store: ExpertStore::new(0, Duration::ZERO),
+            compiled: Some(Box::new(engine)),
+            incremental: true,
+            state,
+            slots: (0..b).map(|_| None).collect(),
+            shards: Some(shard_state),
         })
     }
 
@@ -521,6 +746,49 @@ impl<'b> Batcher<'b> {
         match &out.routing {
             Some(r) => {
                 metrics.routed_steps += 1;
+                if let Some(sh) = self.shards.as_mut() {
+                    // sharded accounting: every touch lands on the store
+                    // lane of the shard that served it (the expert's
+                    // primary), and counts as cross-shard when no shard
+                    // hosting the expert is the token's home shard (the
+                    // primary of its top-1 expert at that layer)
+                    let n_layers = self.params_alive.len();
+                    for i in 0..n_stepped {
+                        let mut home_l0: Option<usize> = None;
+                        for layer in 0..n_layers {
+                            let row = &r.data()[(layer * n_stepped + i) * k..][..k];
+                            let home = row
+                                .iter()
+                                .find(|&&e| e >= 0)
+                                .map(|&e| sh.placement.primary_shard(layer, e as usize));
+                            let Some(home) = home else { continue };
+                            if layer == 0 {
+                                home_l0 = Some(home);
+                            }
+                            for &e in row {
+                                if e < 0 {
+                                    continue;
+                                }
+                                let e = e as usize;
+                                let serving = sh.placement.primary_shard(layer, e);
+                                sh.hits_by_shard[serving] += 1;
+                                sh.total_hits += 1;
+                                if !sh.placement.is_host(layer, e, home) {
+                                    sh.cross_hits += 1;
+                                }
+                                stall += sh.stores[serving].touch(
+                                    layer,
+                                    e,
+                                    self.expert_bytes[layer][e],
+                                );
+                            }
+                        }
+                        if let Some(home) = home_l0 {
+                            sh.tokens_by_shard[home] += 1;
+                        }
+                    }
+                    return stall;
+                }
                 for layer in 0..self.params_alive.len() {
                     for i in 0..n_stepped {
                         for slot_k in 0..k {
@@ -664,6 +932,13 @@ impl<'b> Batcher<'b> {
         let mut swap_stall = Duration::ZERO;
 
         loop {
+            // queue depth at this admission point: arrived requests
+            // still waiting (admitted or not, they have already queued)
+            let arrived = queue
+                .iter()
+                .take_while(|r| t0.elapsed() >= r.arrive_offset)
+                .count();
+            metrics.queue_depth.record(arrived);
             // admit every already-arrived request that fits in a free
             // slot, all prefilled together in one batched round
             let mut free = self.slots.iter().filter(|s| s.is_none()).count();
@@ -693,11 +968,15 @@ impl<'b> Batcher<'b> {
                     None => break,
                 }
             }
+            metrics.occupancy.record(self.active_count());
             swap_stall += self.decode_round(&mut responses, &mut metrics)?;
         }
 
         metrics.simulated_swap_stall = swap_stall;
         metrics.finalise(&responses, t0, &self.store);
+        if let Some(sh) = &self.shards {
+            metrics.attach_shards(sh);
+        }
         Ok((responses, metrics))
     }
 }
@@ -798,6 +1077,7 @@ impl<'b> Server<'b> {
             // admission prefills every queued prompt that fits into free
             // session slots in one batched round; retired responses
             // stream straight to their own channel via Active::respond
+            metrics.queue_depth.record(pending.len());
             let mut free = self
                 .batcher
                 .slots
@@ -823,11 +1103,15 @@ impl<'b> Server<'b> {
                 }
                 continue;
             }
+            metrics.occupancy.record(self.batcher.active_count());
             swap_stall += self.batcher.decode_round(&mut responses, &mut metrics)?;
         }
 
         metrics.simulated_swap_stall = swap_stall;
         metrics.finalise(&responses, t0, &self.batcher.store);
+        if let Some(sh) = &self.batcher.shards {
+            metrics.attach_shards(sh);
+        }
         Ok(metrics)
     }
 }
@@ -863,7 +1147,10 @@ pub fn burst_workload(
 /// [`Batcher::serve`] honors the offsets (no admission before arrival),
 /// so `Response::queued` measures real queue depth instead of the
 /// degenerate all-arrive-at-t0 stamp, and queueing effects show up in the
-/// serving benches.
+/// serving benches. Fully deterministic given (`seed`, `gap`) — `seed`
+/// drives the prompts, the arrival schedule is fixed — and the serving
+/// benches record both in `BENCH_serve.json` so a run can be reproduced
+/// exactly.
 pub fn staggered_workload(
     cfg: &crate::model::ModelConfig,
     n: usize,
@@ -885,17 +1172,24 @@ pub fn staggered_workload(
 /// it — so admission sees ragged batches: several requests landing in
 /// one round, then an idle stretch. That is the arrival pattern under
 /// which layer-major batched rounds have to win, and what the
-/// `serve_throughput` poisson arm measures. Deterministic per seed (the
-/// crate [`crate::util::rng::Rng`]).
+/// `serve_throughput` poisson arm measures.
+///
+/// Both RNG streams are explicit: `seed` drives the prompts (shared with
+/// [`burst_workload`]) and `arrival_seed` drives the inter-arrival gaps
+/// (the crate [`crate::util::rng::Rng`]) — previously the arrival stream
+/// was a hidden xor of `seed`, so a bench run's arrival schedule could
+/// not be reproduced independently of its prompts. The serving benches
+/// record both seeds in `BENCH_serve.json`.
 pub fn poisson_workload(
     cfg: &crate::model::ModelConfig,
     n: usize,
     max_new: usize,
     seed: u64,
+    arrival_seed: u64,
     mean_gap: Duration,
 ) -> VecDeque<Request> {
     let mut q = burst_workload(cfg, n, max_new, seed);
-    let mut rng = crate::util::rng::Rng::new(seed ^ 0xA5A5_5A5A);
+    let mut rng = crate::util::rng::Rng::new(arrival_seed);
     let mut t = 0f64;
     for r in q.iter_mut() {
         // inverse-CDF exponential sample; 1 − u avoids ln(0)
@@ -1134,16 +1428,20 @@ mod tests {
     fn poisson_workload_has_monotone_bursty_arrivals() {
         let cfg = ModelConfig::test_tiny();
         let mean = Duration::from_micros(200);
-        let q = poisson_workload(&cfg, 64, 4, 11, mean);
+        let q = poisson_workload(&cfg, 64, 4, 11, 111, mean);
         assert_eq!(q.len(), 64);
         // offsets are cumulative sums of positive gaps: strictly increasing
         let offs: Vec<Duration> = q.iter().map(|r| r.arrive_offset).collect();
         assert!(offs.windows(2).all(|w| w[0] < w[1]));
         // deterministic per seed, different across seeds
-        let q2 = poisson_workload(&cfg, 64, 4, 11, mean);
+        let q2 = poisson_workload(&cfg, 64, 4, 11, 111, mean);
         assert!(q2.iter().zip(&q).all(|(a, b)| a.arrive_offset == b.arrive_offset));
-        let q3 = poisson_workload(&cfg, 64, 4, 12, mean);
+        let q3 = poisson_workload(&cfg, 64, 4, 12, 112, mean);
         assert!(q3.iter().zip(&q).any(|(a, b)| a.arrive_offset != b.arrive_offset));
+        // the arrival stream is independent of the prompt seed: same
+        // arrival_seed + different prompt seed → identical schedule
+        let q4 = poisson_workload(&cfg, 64, 4, 12, 111, mean);
+        assert!(q4.iter().zip(&q).all(|(a, b)| a.arrive_offset == b.arrive_offset));
         // heavy tail: some gap well below the mean AND some well above —
         // the burstiness a fixed-gap staggered workload cannot produce
         let gaps: Vec<f64> = offs
@@ -1164,7 +1462,7 @@ mod tests {
         let params = ParamSet::init(backend.config(), 104);
         let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
         let mut batcher = Batcher::new(&backend, &params, store).unwrap();
-        let queue = poisson_workload(backend.config(), 6, 3, 17, Duration::from_micros(100));
+        let queue = poisson_workload(backend.config(), 6, 3, 17, 117, Duration::from_micros(100));
         let (responses, metrics) = batcher.serve(queue).unwrap();
         assert_eq!(responses.len(), 6);
         assert_eq!(metrics.completed, 6);
@@ -1314,5 +1612,148 @@ mod tests {
         assert_eq!(total, 6);
         assert_eq!(metrics.completed, 6);
         assert!(metrics.decode_steps > 0);
+        // the server loop feeds the same observability histograms
+        assert!(metrics.queue_depth.samples() > 0);
+        assert!(metrics.occupancy.samples() > 0);
+    }
+
+    #[test]
+    fn count_hist_buckets_powers_of_two() {
+        let mut h = CountHist::default();
+        // value → bucket: 0→0, 1→1, 2,3→2, 4..7→3, 8→4
+        for v in [0usize, 1, 2, 3, 4, 7, 8] {
+            h.record(v);
+        }
+        assert_eq!(h.samples(), 7);
+        assert_eq!(h.max_seen(), 8);
+        assert_eq!(h.bucket_counts(), &[1, 1, 2, 2, 1]);
+        assert_eq!(CountHist::bucket_bounds(0), (0, 0));
+        assert_eq!(CountHist::bucket_bounds(1), (1, 1));
+        assert_eq!(CountHist::bucket_bounds(3), (4, 7));
+        // the JSON encoding carries every non-empty bucket
+        let txt = h.to_json().to_string();
+        assert!(txt.contains("\"samples\":7"), "{txt}");
+        assert!(txt.contains("\"buckets\""), "{txt}");
+        // sparse values leave intermediate buckets empty (and omitted
+        // from JSON) without disturbing the counts
+        let mut s = CountHist::default();
+        s.record(100); // bucket 7: [64, 127]
+        assert_eq!(s.bucket_counts().len(), 8);
+        assert_eq!(s.bucket_counts()[7], 1);
+        assert_eq!(CountHist::bucket_bounds(7), (64, 127));
+    }
+
+    #[test]
+    fn serve_records_queue_and_occupancy_histograms() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 105);
+        let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
+        let mut batcher = Batcher::new(&backend, &params, store).unwrap();
+        let queue = burst_workload(backend.config(), 6, 4, 41);
+        let (_responses, metrics) = batcher.serve(queue).unwrap();
+        // every decode round recorded its batch occupancy, and every
+        // admission point its queue depth
+        assert_eq!(metrics.occupancy.samples(), metrics.decode_steps - 1);
+        assert!(metrics.queue_depth.samples() > 0);
+        assert!(metrics.occupancy.max_seen() <= backend.config().eval_batch);
+        assert!(metrics.occupancy.max_seen() >= 1);
+        // a burst of 6 requests is all visible at the first admission
+        assert_eq!(metrics.queue_depth.max_seen(), 6);
+        // single-engine serving carries no shard lanes
+        assert!(metrics.per_shard.is_empty());
+        assert_eq!(metrics.cross_shard_fraction(), 0.0);
+    }
+
+    #[test]
+    fn sharded_batcher_accounts_cross_shard_traffic() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 106);
+        let cfg = backend.config();
+        let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let mut batcher = Batcher::with_shards(
+            &backend,
+            &params,
+            &SparseConfig::default(),
+            placement,
+            usize::MAX / 2,
+            Duration::ZERO,
+        )
+        .unwrap();
+        assert!(batcher.exec_name().starts_with("sharded(2×"), "{}", batcher.exec_name());
+        let queue = burst_workload(cfg, 5, 4, 43);
+        let (responses, metrics) = batcher.serve(queue).unwrap();
+        assert_eq!(responses.len(), 5);
+        // every routed touch was tallied on exactly one shard lane
+        assert!(metrics.shard_hits > 0);
+        assert_eq!(metrics.per_shard.len(), 2);
+        let lane_hits: u64 = metrics.per_shard.iter().map(|l| l.expert_hits).sum();
+        assert_eq!(lane_hits, metrics.shard_hits);
+        let lane_tokens: u64 = metrics.per_shard.iter().map(|l| l.tokens).sum();
+        assert_eq!(lane_tokens, metrics.generated_tokens);
+        let frac = metrics.cross_shard_fraction();
+        assert!((0.0..=1.0).contains(&frac), "{frac}");
+        // with top-k = 2 over round-robin shards some traffic must cross
+        assert!(metrics.cross_shard_hits > 0);
+        // per-shard store lanes saw the touches the global store didn't
+        assert_eq!(
+            metrics.expert_swaps,
+            metrics.per_shard.iter().map(|l| l.swaps).sum::<u64>()
+        );
+        assert!(batcher.store.swaps == 0);
+        // resident slab bytes cover both shards and sum to the model
+        assert!(metrics.per_shard.iter().all(|l| l.resident_bytes > 0));
+    }
+
+    #[test]
+    fn single_shard_batcher_has_no_cross_traffic() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 107);
+        let cfg = backend.config();
+        let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 1);
+        let mut batcher = Batcher::with_shards(
+            &backend,
+            &params,
+            &SparseConfig::default(),
+            placement,
+            usize::MAX / 2,
+            Duration::ZERO,
+        )
+        .unwrap();
+        let queue = burst_workload(cfg, 3, 3, 47);
+        let (responses, metrics) = batcher.serve(queue).unwrap();
+        assert_eq!(responses.len(), 3);
+        assert!(metrics.shard_hits > 0);
+        assert_eq!(metrics.cross_shard_hits, 0);
+        assert_eq!(metrics.cross_shard_fraction(), 0.0);
+    }
+
+    #[test]
+    fn sharded_and_single_engine_streams_match() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 108);
+        let cfg = backend.config();
+        let mut outputs = Vec::new();
+        for shards in [0usize, 2] {
+            let mut batcher = if shards == 0 {
+                let store = ExpertStore::new(usize::MAX / 2, Duration::ZERO);
+                Batcher::new(&backend, &params, store).unwrap()
+            } else {
+                let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, shards);
+                Batcher::with_shards(
+                    &backend,
+                    &params,
+                    &SparseConfig::default(),
+                    placement,
+                    usize::MAX / 2,
+                    Duration::ZERO,
+                )
+                .unwrap()
+            };
+            let queue = burst_workload(cfg, 4, 5, 53);
+            let (mut responses, _m) = batcher.serve(queue).unwrap();
+            responses.sort_by_key(|r| r.id);
+            outputs.push(responses.into_iter().map(|r| r.tokens).collect::<Vec<_>>());
+        }
+        assert_eq!(outputs[0], outputs[1], "sharded greedy decode must not diverge");
     }
 }

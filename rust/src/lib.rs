@@ -113,6 +113,28 @@
 //! grid to `BENCH_serve.json`, gated against `BENCH_baseline.json` by
 //! `src/bin/perf_gate.rs` in CI.
 //!
+//! ## Expert-parallel sharded serving
+//!
+//! One engine tops out at one machine; [`shard`] partitions the experts
+//! of a compiled model across N engines. A [`shard::Placement`] maps
+//! every (layer, expert) to a primary shard (plus optional replicas for
+//! hot experts), built round-robin, by a greedy coactivation-clustered
+//! partitioner (co-activated experts colocate, byte-balanced by the
+//! same [`quant::tensor_store_bytes`] rule `ExpertStore` budgets with),
+//! or by an anytime local-search refinement (swap/relocate moves scored
+//! by expected cross-shard routing cost, wall-clock budgeted).
+//! [`shard::ShardedEngine`] replicates the trunk (attention + router),
+//! moves each expert slab to its hosting shards, and serves each MoE
+//! layer's routed groups from their primary shard — one engine thread
+//! per shard — merging into the same fixed slot-order reduction as
+//! single-engine, so logits are bit-identical regardless of shard count
+//! (pinned by `tests/shard_parity.rs`). `stun serve --shards N
+//! --placement {round-robin,greedy,refined}` drives it through the
+//! coordinator, which reports per-shard tokens/s, resident bytes, and
+//! the cross-shard routing fraction; `benches/serve_throughput.rs`
+//! records shard arms into `BENCH_serve.json` (informational — the perf
+//! gate keeps gating single-engine arms only).
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -135,6 +157,7 @@ pub mod pruning;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod sparse;
 pub mod tensor;
 pub mod train;
@@ -155,6 +178,7 @@ pub mod prelude {
     pub use crate::runtime::{Backend, CompiledForward, NativeBackend};
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::{Engine, ModelBundle, PjrtBackend};
+    pub use crate::shard::{Placement, PlacementStrategy, ShardedEngine};
     pub use crate::sparse::{CompiledModel, CompressionReport, SparseConfig};
     pub use crate::tensor::Tensor;
     pub use crate::train::{TrainConfig, Trainer};

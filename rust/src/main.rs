@@ -14,6 +14,8 @@
 //!             [--dense-eval]                 # force the per-call dense path
 //! stun serve  --config moe-8x --requests 32  # batching server demo
 //!             [--quant f32|u16|u8]           # extra quantized serving arm
+//!             [--shards N]                   # expert-parallel sharded serving
+//!             [--placement round-robin|greedy|refined]   # shard placement
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
 //! stun sample --n 5                          # show synthetic-corpus samples
 //! ```
@@ -361,7 +363,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let proto = proto_from(args)?;
     let n = args.usize_or("requests", 32)?;
-    println!("{}", report::serving_report(&proto, n, quant_from(args)?)?);
+    let quant = quant_from(args)?;
+    let shards = args.usize_or("shards", 1)?;
+    if shards > 1 {
+        let strategy = stun::shard::PlacementStrategy::parse(&args.str_or("placement", "refined"))?;
+        println!(
+            "{}",
+            report::sharded_serving_report(&proto, n, quant, shards, strategy)?
+        );
+    } else {
+        println!("{}", report::serving_report(&proto, n, quant)?);
+    }
     Ok(())
 }
 

@@ -68,6 +68,10 @@ pub enum QuantScheme {
 }
 
 impl QuantScheme {
+    /// Every scheme, widest first — the iteration order of bench grids
+    /// and parity sweeps.
+    pub const ALL: [QuantScheme; 3] = [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8];
+
     /// Parse a CLI-style scheme name (`f32 | u16 | u8`).
     pub fn parse(s: &str) -> Result<QuantScheme> {
         Ok(match s {

@@ -635,6 +635,11 @@ pub fn serving_report(
             format!("{}", m.expert_swaps),
             format!("{:.1?}", m.p50_latency),
             format!("{:.1?}", m.p95_latency),
+            // round-level observability: peak batch occupancy and peak
+            // arrived-queue depth over the serve (full histograms land
+            // in BENCH_serve.json)
+            format!("{}/{}", m.occupancy.max_seen(), backend.config().eval_batch),
+            format!("{}", m.queue_depth.max_seen()),
         ]);
     }
     Ok(render_table(
@@ -646,8 +651,110 @@ pub fn serving_report(
             "swaps",
             "p50",
             "p95",
+            "occ(max)",
+            "queue(max)",
         ],
         &rows,
+    ))
+}
+
+/// Expert-parallel serving demo: prune with the paper pipeline, place
+/// the surviving experts across `n_shards` engines by `strategy` (the
+/// coactivation statistics collected on calibration traffic drive the
+/// greedy/refined partitioners), serve a burst through
+/// [`Batcher::with_shards`], and report one lane per shard plus the
+/// cross-shard routing fraction — the serving-side number placement
+/// quality buys down.
+pub fn sharded_serving_report(
+    proto: &Protocol,
+    n_requests: usize,
+    quant: crate::quant::QuantScheme,
+    n_shards: usize,
+    strategy: crate::shard::PlacementStrategy,
+) -> Result<String> {
+    let (backend, base) = ensure_trained("moe-8x", proto)?;
+    let backend = backend.as_ref();
+    let mut pruned = base.clone();
+    let mut gen = calib_gen(backend.config());
+    StunPipeline {
+        expert: ExpertPruneConfig {
+            ratio: 0.25,
+            ..Default::default()
+        },
+        unstructured: UnstructuredConfig::default(),
+        total_sparsity: 0.4,
+        calib_batches: proto.calib_batches,
+    }
+    .run(backend, &mut pruned, &mut gen)?;
+
+    // placement inputs: the same coactivation statistic STUN prunes by
+    // (collected on held-out calibration traffic) + the authoritative
+    // byte table under the serving quant scheme
+    let mut gen = calib_gen(backend.config());
+    let coact = crate::coactivation::collect(backend, &pruned, &mut gen, proto.calib_batches)?
+        .normalized();
+    let bytes = crate::shard::expert_bytes_table(&pruned, quant);
+    let placement = crate::shard::Placement::build(
+        strategy,
+        &coact,
+        &bytes,
+        n_shards,
+        std::time::Duration::from_millis(50),
+        17,
+    )?;
+    let expected_cross = placement.expected_cross_cost(&coact);
+    // each shard lane is sized to its placed slab: everything fits, so
+    // swaps measure placement churn rather than an artificial budget
+    let per_shard_cap = placement
+        .shard_bytes(&bytes)
+        .into_iter()
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    let scfg = crate::sparse::SparseConfig {
+        quant,
+        ..Default::default()
+    };
+    let mut batcher = Batcher::with_shards(
+        backend,
+        &pruned,
+        &scfg,
+        placement,
+        per_shard_cap,
+        std::time::Duration::from_micros(200),
+    )?;
+    let engine = batcher.exec_name();
+    let queue = burst_workload(backend.config(), n_requests, 6, 17);
+    let (_resp, m) = batcher.serve(queue)?;
+
+    let rows: Vec<Vec<String>> = m
+        .per_shard
+        .iter()
+        .map(|lane| {
+            vec![
+                format!("shard{}", lane.shard),
+                format!("{:.0}", lane.resident_bytes as f64 / 1024.0),
+                format!("{:.1}", m.shard_tokens_per_sec(lane)),
+                format!("{}", lane.tokens),
+                format!("{}", lane.expert_hits),
+                format!("{}", lane.swaps),
+            ]
+        })
+        .collect();
+    let table = render_table(
+        &["shard", "mem(KB)", "tok/s", "tokens", "hits", "swaps"],
+        &rows,
+    );
+    Ok(format!(
+        "{engine}\n{:.1} tok/s total | cross-shard {:.1}% of {} routed hits | \
+         expected cross-cost {:.4} | occupancy max {}/{} | queue max {}\n{table}",
+        m.tokens_per_sec(),
+        m.cross_shard_fraction() * 100.0,
+        m.shard_hits,
+        expected_cross,
+        m.occupancy.max_seen(),
+        backend.config().eval_batch,
+        m.queue_depth.max_seen(),
     ))
 }
 

@@ -1,0 +1,454 @@
+//! Multi-engine execution of one compiled model: the trunk (embed,
+//! attention, router, final norm, lm_head) is replicated, the expert
+//! slabs are partitioned by a [`Placement`], and each MoE layer's
+//! routed groups are served by the shard hosting each expert.
+//!
+//! Bit-exactness argument, in full: [`crate::sparse::moe_route`] zeroes
+//! `slot_out[..n·K·D]` and assigns every routed (token, slot) pair to
+//! exactly one expert; the placement maps that expert to exactly one
+//! *primary* shard; every shard runs the shared
+//! [`crate::sparse::expert_group_forward`] kernel (one weight traversal
+//! per group — the group's composition is identical to single-engine,
+//! because whole experts move between shards, never parts of a group)
+//! and scales by the gate exactly as the local gather does; each shard's
+//! results land in disjoint `slot_out` cells; and
+//! [`crate::sparse::moe_reduce`] merges in ascending slot order — the
+//! single fixed reduction the single-engine path also uses. No step
+//! depends on which shard ran a group or in what order results arrived,
+//! so sharded logits are bit-identical to single-engine (parity is
+//! pinned token-for-token and at 1e-5 by `tests/shard_parity.rs`).
+//!
+//! Replicas never change execution: groups always run on the primary
+//! shard. They exist for the *coordinator's* locality accounting (a hit
+//! is local when the token's home shard hosts the expert) and cost their
+//! bytes once per hosting shard in [`ShardedEngine::shard_resident_bytes`].
+
+use super::Placement;
+use crate::model::{ModelConfig, ParamSet};
+use crate::quant::QuantMat;
+use crate::runtime::native::masked_loss;
+use crate::runtime::{CompiledForward, DecodeState, LossOutput, StepOutput};
+use crate::sparse::{
+    expert_group_forward, moe_reduce, moe_route, CompiledExpert, CompiledLayer, CompiledModel,
+    MoeScratch, SparseConfig,
+};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{ensure, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One shard's expert payload: `experts[layer][expert]` is `Some` iff
+/// this shard hosts a copy (primary or replica). `bytes` is the slab's
+/// compiled weight footprint — each hosted copy counted once.
+struct ShardSlab {
+    experts: Vec<Vec<Option<(QuantMat, QuantMat)>>>,
+    bytes: usize,
+}
+
+/// Work order for one shard in one MoE layer: the stacked post-ln2 rows
+/// (shared read-only across shards) plus this shard's routed groups,
+/// each `(expert, [(token, slot, gate)])`.
+struct ShardJob {
+    layer: usize,
+    n: usize,
+    x: Arc<Vec<f32>>,
+    groups: Vec<(usize, Vec<(usize, usize, f32)>)>,
+}
+
+/// One shard's finished layer: gate-scaled output rows keyed by their
+/// `(token·K + slot)` cell in the reduction buffer. Cells are disjoint
+/// across shards by construction.
+struct ShardOut {
+    cells: Vec<(usize, Vec<f32>)>,
+}
+
+struct Workers {
+    txs: Vec<Sender<ShardJob>>,
+    rxs: Vec<Receiver<ShardOut>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Shard engine thread: serve expert groups from this shard's slab until
+/// the job channel closes. Identical arithmetic to the in-place gather —
+/// gather rows, one `w1`/`w2` traversal per group, ReLU between, gate
+/// scale on scatter.
+fn worker_loop(
+    slab: Arc<ShardSlab>,
+    d: usize,
+    f: usize,
+    k: usize,
+    rx: Receiver<ShardJob>,
+    tx: Sender<ShardOut>,
+) {
+    let (mut xbuf, mut hidbuf, mut outbuf) = (Vec::new(), Vec::new(), Vec::new());
+    while let Ok(job) = rx.recv() {
+        let mut cells = Vec::new();
+        for (ei, group) in &job.groups {
+            // a Dead expert's group (possible only under a fully masked
+            // layer) contributes nothing, exactly as in the local gather
+            let Some((w1, w2)) = &slab.experts[job.layer][*ei] else {
+                continue;
+            };
+            let gn = group.len();
+            if xbuf.len() < gn * d {
+                xbuf.resize(gn * d, 0.0);
+            }
+            if hidbuf.len() < gn * f {
+                hidbuf.resize(gn * f, 0.0);
+            }
+            if outbuf.len() < gn * d {
+                outbuf.resize(gn * d, 0.0);
+            }
+            expert_group_forward(
+                w1,
+                w2,
+                &job.x[..job.n * d],
+                d,
+                f,
+                group,
+                &mut xbuf,
+                &mut hidbuf,
+                &mut outbuf,
+            );
+            for (r, &(t, slot, g)) in group.iter().enumerate() {
+                let row: Vec<f32> = outbuf[r * d..r * d + d].iter().map(|&ov| g * ov).collect();
+                cells.push((t * k + slot, row));
+            }
+        }
+        if tx.send(ShardOut { cells }).is_err() {
+            return;
+        }
+    }
+}
+
+/// An expert-parallel serving engine: one trunk, N expert shards. Built
+/// from the same compile pass as [`CompiledModel`] — the expert slabs
+/// are *moved* out of the compiled layers (the trunk keeps `Dead`
+/// placeholders) and into per-shard [`ShardSlab`]s, so total resident
+/// bytes at replicas = 0 equal the single-engine model exactly.
+///
+/// Implements [`CompiledForward`], so everything downstream — the
+/// coordinator's round loop, the eval harness, the benches — drives it
+/// exactly like the single-engine executor.
+pub struct ShardedEngine {
+    trunk: CompiledModel,
+    placement: Placement,
+    slabs: Vec<Arc<ShardSlab>>,
+    workers: Option<Workers>,
+    label: String,
+}
+
+impl ShardedEngine {
+    /// Compile `params` and split the expert slabs per `placement`.
+    /// Engine threads (one per shard) are spawned whenever the placement
+    /// has more than one shard.
+    pub fn new(
+        params: &ParamSet,
+        scfg: &SparseConfig,
+        placement: Placement,
+    ) -> Result<ShardedEngine> {
+        ShardedEngine::from_compiled(CompiledModel::compile(params, scfg), placement, true)
+    }
+
+    /// Split an already-compiled model. `parallel = false` keeps every
+    /// shard slab in-process and serves them serially on the caller's
+    /// thread — same partition, same arithmetic, no threads (the parity
+    /// tests use it to pin threaded == serial == single-engine).
+    pub fn from_compiled(
+        mut model: CompiledModel,
+        placement: Placement,
+        parallel: bool,
+    ) -> Result<ShardedEngine> {
+        let cfg = model.config().clone();
+        ensure!(
+            placement.n_layers == cfg.n_layers && placement.n_experts == cfg.n_experts,
+            "placement shape [{} layers × {} experts] does not match model '{}' [{} × {}]",
+            placement.n_layers,
+            placement.n_experts,
+            cfg.name,
+            cfg.n_layers,
+            cfg.n_experts
+        );
+        ensure!(placement.n_shards >= 1, "placement has no shards");
+        let label = format!(
+            "sharded({}× {}, {})",
+            placement.n_shards,
+            placement.strategy().name(),
+            CompiledForward::name(&model)
+        );
+
+        let n_shards = placement.n_shards;
+        let mut slabs: Vec<ShardSlab> = (0..n_shards)
+            .map(|_| ShardSlab {
+                experts: vec![vec![None; cfg.n_experts]; cfg.n_layers],
+                bytes: 0,
+            })
+            .collect();
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let slot = &mut model.layers[l].experts[e];
+                let taken = std::mem::replace(slot, CompiledExpert::Dead);
+                if let CompiledExpert::Alive { w1, w2 } = taken {
+                    let b = w1.bytes() + w2.bytes();
+                    for &s in placement.replica_shards(l, e) {
+                        slabs[s].experts[l][e] = Some((w1.clone(), w2.clone()));
+                        slabs[s].bytes += b;
+                    }
+                    let p = placement.primary_shard(l, e);
+                    slabs[p].experts[l][e] = Some((w1, w2));
+                    slabs[p].bytes += b;
+                }
+            }
+        }
+        let slabs: Vec<Arc<ShardSlab>> = slabs.into_iter().map(Arc::new).collect();
+
+        let workers = if parallel && n_shards > 1 {
+            let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
+            let mut txs = Vec::with_capacity(n_shards);
+            let mut rxs = Vec::with_capacity(n_shards);
+            let mut handles = Vec::with_capacity(n_shards);
+            for slab in &slabs {
+                let (tx_job, rx_job) = channel::<ShardJob>();
+                let (tx_out, rx_out) = channel::<ShardOut>();
+                let slab = Arc::clone(slab);
+                handles.push(std::thread::spawn(move || {
+                    worker_loop(slab, d, f, k, rx_job, tx_out)
+                }));
+                txs.push(tx_job);
+                rxs.push(rx_out);
+            }
+            Some(Workers { txs, rxs, handles })
+        } else {
+            None
+        };
+
+        Ok(ShardedEngine {
+            trunk: model,
+            placement,
+            slabs,
+            workers,
+            label,
+        })
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.placement.n_shards
+    }
+
+    /// Compiled weight bytes resident per shard (each hosted expert copy
+    /// once) — the per-shard figures the coordinator budgets and reports.
+    pub fn shard_resident_bytes(&self) -> Vec<usize> {
+        self.slabs.iter().map(|s| s.bytes).collect()
+    }
+
+    /// The partitioned phase 2 plugged into the shared sweeps: route on
+    /// the (replicated) trunk, fan each non-empty expert group out to its
+    /// primary shard, collect every shard's gate-scaled rows into their
+    /// disjoint `slot_out` cells, and reduce in fixed slot order.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_gather(
+        &self,
+        l: usize,
+        layer: &CompiledLayer,
+        cfg: &ModelConfig,
+        x: &[f32],
+        n: usize,
+        h: &mut [f32],
+        scr: &mut MoeScratch,
+    ) {
+        let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
+        moe_route(layer, cfg, x, n, scr);
+
+        let mut work: Vec<Vec<(usize, Vec<(usize, usize, f32)>)>> =
+            (0..self.placement.n_shards).map(|_| Vec::new()).collect();
+        for (ei, group) in scr.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            work[self.placement.primary_shard(l, ei)].push((ei, group.clone()));
+        }
+
+        match &self.workers {
+            Some(w) => {
+                let xs = Arc::new(x[..n * d].to_vec());
+                let mut sent = vec![false; self.placement.n_shards];
+                for (s, groups) in work.into_iter().enumerate() {
+                    if groups.is_empty() {
+                        continue;
+                    }
+                    w.txs[s]
+                        .send(ShardJob {
+                            layer: l,
+                            n,
+                            x: Arc::clone(&xs),
+                            groups,
+                        })
+                        .expect("shard engine thread disconnected");
+                    sent[s] = true;
+                }
+                for (s, &was_sent) in sent.iter().enumerate() {
+                    if !was_sent {
+                        continue;
+                    }
+                    let out = w.rxs[s].recv().expect("shard engine thread disconnected");
+                    for (cell, row) in out.cells {
+                        scr.slot_out[cell * d..cell * d + d].copy_from_slice(&row);
+                    }
+                }
+            }
+            None => {
+                let MoeScratch {
+                    groups: _,
+                    xbuf,
+                    hidbuf,
+                    outbuf,
+                    slot_out,
+                    ..
+                } = scr;
+                for (s, groups) in work.iter().enumerate() {
+                    for (ei, group) in groups {
+                        let Some((w1, w2)) = &self.slabs[s].experts[l][*ei] else {
+                            continue;
+                        };
+                        expert_group_forward(w1, w2, x, d, f, group, xbuf, hidbuf, outbuf);
+                        for (r, &(t, slot, g)) in group.iter().enumerate() {
+                            let orow = &outbuf[r * d..r * d + d];
+                            let dst = &mut slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
+                            for (dv, &ov) in dst.iter_mut().zip(orow) {
+                                *dv = g * ov;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        moe_reduce(cfg, n, h, scr);
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        if let Some(w) = self.workers.take() {
+            drop(w.txs); // disconnect the job channels
+            for h in w.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl CompiledForward for ShardedEngine {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn config(&self) -> &crate::model::ModelConfig {
+        self.trunk.config()
+    }
+
+    fn fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor> {
+        Ok(self
+            .trunk
+            .forward_with(tokens, false, &mut |l, layer, cfg, x, n, h, scr| {
+                self.dispatch_gather(l, layer, cfg, x, n, h, scr)
+            })?
+            .0)
+    }
+
+    fn fwd_logits_routed(&self, tokens: &IntTensor) -> Result<(Tensor, Option<IntTensor>)> {
+        self.trunk
+            .forward_with(tokens, true, &mut |l, layer, cfg, x, n, h, scr| {
+                self.dispatch_gather(l, layer, cfg, x, n, h, scr)
+            })
+    }
+
+    fn fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput> {
+        let logits = self.fwd_logits(tokens)?;
+        let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
+        Ok(masked_loss(
+            logits.data(),
+            targets,
+            bsz,
+            s,
+            self.trunk.config().vocab,
+        ))
+    }
+
+    /// The layer-major KV-cached round with the partitioned gather —
+    /// same trunk sweep as [`CompiledModel`]'s override, so sharded
+    /// decode streams replay the single-engine streams bit for bit.
+    fn session_round(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
+        let mut scr = state.take_scratch();
+        let res = self
+            .trunk
+            .session_round_with(state, slots, &mut scr, &mut |l, layer, cfg, x, n, h, moe| {
+                self.dispatch_gather(l, layer, cfg, x, n, h, moe)
+            });
+        state.put_scratch(scr);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::Placement;
+
+    fn tiny_pruned() -> (ParamSet, SparseConfig) {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 11);
+        ps.prune_expert(0, 2);
+        (ps, SparseConfig::default())
+    }
+
+    fn alive_expert_bytes(model: &CompiledModel) -> usize {
+        model
+            .layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(|e| match e {
+                CompiledExpert::Alive { w1, w2 } => w1.bytes() + w2.bytes(),
+                CompiledExpert::Dead => 0,
+            })
+            .sum()
+    }
+
+    #[test]
+    fn slabs_conserve_expert_bytes() {
+        let (ps, scfg) = tiny_pruned();
+        let model = CompiledModel::compile(&ps, &scfg);
+        let total = alive_expert_bytes(&model);
+        let cfg = model.config().clone();
+        let p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let eng = ShardedEngine::from_compiled(model, p, false).unwrap();
+        let per_shard = eng.shard_resident_bytes();
+        assert_eq!(per_shard.len(), 2);
+        assert_eq!(per_shard.iter().sum::<usize>(), total);
+        // the trunk kept nothing: every expert byte moved to a slab
+        assert_eq!(alive_expert_bytes(&eng.trunk), 0);
+    }
+
+    #[test]
+    fn serial_sharded_forward_is_bit_identical() {
+        let (ps, scfg) = tiny_pruned();
+        let single = CompiledModel::compile(&ps, &scfg);
+        let cfg = single.config().clone();
+        let p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let eng =
+            ShardedEngine::from_compiled(CompiledModel::compile(&ps, &scfg), p, false).unwrap();
+        let toks: Vec<i32> = (0..8).map(|i| (i * 7 % cfg.vocab as i32).max(1)).collect();
+        let t = IntTensor::new(&[1, 8], toks).unwrap();
+        let a = single.fwd_logits(&t).unwrap();
+        let b = eng.fwd_logits(&t).unwrap();
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

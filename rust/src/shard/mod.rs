@@ -1,0 +1,567 @@
+//! Expert-parallel sharding — N engines, one model.
+//!
+//! A single serving engine tops out at one machine's memory bandwidth;
+//! production traffic needs the experts *partitioned* across N engines
+//! (expert-parallel), with the attention/router trunk replicated. This
+//! module holds both halves of that story:
+//!
+//! * [`Placement`] maps every (layer, expert) to a **primary shard**
+//!   (plus optional replica shards for hot experts). Three construction
+//!   strategies, all balanced by the authoritative
+//!   [`crate::quant::tensor_store_bytes`] byte model (via
+//!   [`crate::model::ParamSet::expert_resident_bytes`] —
+//!   [`expert_bytes_table`] builds the table):
+//!   - [`Placement::round_robin`] — the baseline every smarter placement
+//!     must beat;
+//!   - [`Placement::greedy`] — a coactivation-clustered partitioner:
+//!     experts are placed hot-first, each onto the byte-feasible shard
+//!     with the highest coactivation affinity to the experts already
+//!     there. This reuses the exact structure STUN's pruning exploits
+//!     (the paper's Eq. 10 coactivation statistic, exposed per layer by
+//!     [`crate::coactivation::CoactivationStats::normalized`]): experts
+//!     that fire together should live together, so a token's top-k
+//!     routing rarely crosses shards;
+//!   - [`Placement::refined`] — an **anytime local search** over
+//!     swap/relocate moves scored by
+//!     [`Placement::expected_cross_cost`] + a byte-imbalance penalty,
+//!     wall-clock budgeted, multi-started from both the greedy and
+//!     round-robin placements (so its cost is never worse than either
+//!     start — the refinement only ever accepts improving moves).
+//! * [`ShardedEngine`] (in [`engine`]) splits a compiled model into
+//!   per-shard expert slabs and serves rounds through one engine thread
+//!   per shard, with logits bit-identical to the single-engine path.
+//!
+//! Replication ([`Placement::replicate_hottest`]) mirrors the hottest
+//! experts per layer onto every shard: a (token, expert) hit counts as
+//! *local* whenever the token's primary shard hosts the expert, so
+//! replicas directly buy down the cross-shard routing fraction the
+//! coordinator reports. Bytes are accounted once per hosting shard.
+
+pub mod engine;
+
+pub use engine::ShardedEngine;
+
+use crate::cluster::DistMatrix;
+use crate::model::ParamSet;
+use crate::quant::QuantScheme;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+use std::time::{Duration, Instant};
+
+/// How a [`Placement`] was produced. Parsed from the CLI
+/// (`--placement {round-robin,greedy,refined}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    RoundRobin,
+    Greedy,
+    Refined,
+}
+
+impl PlacementStrategy {
+    pub fn parse(s: &str) -> Result<PlacementStrategy> {
+        Ok(match s {
+            "round-robin" | "round_robin" | "rr" => PlacementStrategy::RoundRobin,
+            "greedy" => PlacementStrategy::Greedy,
+            "refined" => PlacementStrategy::Refined,
+            other => bail!("unknown placement strategy '{other}' (round-robin | greedy | refined)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementStrategy::RoundRobin => "round-robin",
+            PlacementStrategy::Greedy => "greedy",
+            PlacementStrategy::Refined => "refined",
+        }
+    }
+}
+
+/// Weight of the byte-imbalance penalty in the local-search objective.
+/// Cross-cost is normalized coactivation mass (O(1) per layer), and the
+/// imbalance term is `max_shard_bytes / ideal − 1` (0 when perfectly
+/// balanced), so equal weighting keeps both on comparable scales.
+const BALANCE_WEIGHT: f64 = 1.0;
+
+/// Iteration ceiling of the anytime loop — a backstop so a huge
+/// wall-clock budget on a tiny instance terminates promptly once the
+/// neighbourhood is exhausted.
+const MAX_SEARCH_ITERS: u64 = 200_000;
+
+/// An expert-to-shard assignment: one primary serving shard per
+/// (layer, expert), plus optional replica shards. The primary shard
+/// *executes* an expert's routed groups (bit-identical wherever they
+/// run); replicas extend the set of shards on which a hit counts as
+/// local, and each hosting shard pays the expert's bytes once.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub n_shards: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// `[L · E]` primary serving shard, row-major by layer.
+    primary: Vec<usize>,
+    /// `[L · E]` replica shards beyond the primary (usually empty).
+    replicas: Vec<Vec<usize>>,
+    strategy: PlacementStrategy,
+}
+
+impl Placement {
+    fn idx(&self, layer: usize, expert: usize) -> usize {
+        debug_assert!(layer < self.n_layers && expert < self.n_experts);
+        layer * self.n_experts + expert
+    }
+
+    pub fn strategy(&self) -> PlacementStrategy {
+        self.strategy
+    }
+
+    /// Shard that executes (and always hosts) this expert.
+    pub fn primary_shard(&self, layer: usize, expert: usize) -> usize {
+        self.primary[self.idx(layer, expert)]
+    }
+
+    /// Replica shards hosting this expert beyond the primary.
+    pub fn replica_shards(&self, layer: usize, expert: usize) -> &[usize] {
+        &self.replicas[self.idx(layer, expert)]
+    }
+
+    /// Does `shard` hold a copy of this expert (primary or replica)?
+    pub fn is_host(&self, layer: usize, expert: usize, shard: usize) -> bool {
+        let ix = self.idx(layer, expert);
+        self.primary[ix] == shard || self.replicas[ix].contains(&shard)
+    }
+
+    /// The baseline: expert `e` lives on shard `e mod n_shards` in every
+    /// layer. Byte-balanced only when experts are uniform; blind to
+    /// coactivation.
+    pub fn round_robin(n_layers: usize, n_experts: usize, n_shards: usize) -> Placement {
+        assert!(n_shards >= 1, "placement needs at least one shard");
+        let primary = (0..n_layers * n_experts)
+            .map(|ix| (ix % n_experts.max(1)) % n_shards)
+            .collect();
+        Placement {
+            n_shards,
+            n_layers,
+            n_experts,
+            primary,
+            replicas: vec![Vec::new(); n_layers * n_experts],
+            strategy: PlacementStrategy::RoundRobin,
+        }
+    }
+
+    /// Greedy coactivation-clustered partitioner. Per layer, experts are
+    /// placed hottest-first (by total coactivation mass); each goes to
+    /// the byte-feasible shard with the highest affinity (summed
+    /// coactivation with the experts already placed there), tie-broken
+    /// toward the least-loaded shard. Byte loads accumulate globally
+    /// across layers through the `bytes[layer][expert]` table (see
+    /// [`expert_bytes_table`]), with feasibility capped at
+    /// `ideal · 1.05 + max_expert_bytes` — by pigeonhole some shard is
+    /// always feasible, so the loop cannot wedge.
+    pub fn greedy(coact: &[DistMatrix], bytes: &[Vec<usize>], n_shards: usize) -> Placement {
+        let n_layers = coact.len();
+        let n_experts = coact.first().map(|m| m.n).unwrap_or(0);
+        let mut p = Placement::round_robin(n_layers, n_experts, n_shards);
+        p.strategy = PlacementStrategy::Greedy;
+        if n_shards < 2 || n_experts == 0 {
+            return p;
+        }
+        let total: usize = bytes.iter().flatten().sum();
+        let max_expert = bytes.iter().flatten().copied().max().unwrap_or(0);
+        let ideal = total as f64 / n_shards as f64;
+        let cap = ideal * 1.05 + max_expert as f64;
+        let mut load = vec![0usize; n_shards];
+        for (l, m) in coact.iter().enumerate() {
+            let mass: Vec<f64> = (0..n_experts)
+                .map(|e| (0..n_experts).filter(|&j| j != e).map(|j| m.get(e, j)).sum())
+                .collect();
+            let mut order: Vec<usize> = (0..n_experts).collect();
+            order.sort_by(|&a, &b| {
+                mass[b]
+                    .partial_cmp(&mass[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut placed: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+            for &e in &order {
+                let b = bytes[l][e];
+                let mut best: Option<(usize, f64)> = None;
+                for s in 0..n_shards {
+                    if (load[s] + b) as f64 > cap {
+                        continue;
+                    }
+                    let affinity: f64 = placed[s].iter().map(|&j| m.get(e, j)).sum();
+                    let better = match best {
+                        None => true,
+                        Some((bs, ba)) => {
+                            affinity > ba
+                                || (affinity == ba && load[s] < load[bs])
+                        }
+                    };
+                    if better {
+                        best = Some((s, affinity));
+                    }
+                }
+                let s = match best {
+                    Some((s, _)) => s,
+                    // unreachable with the pigeonhole cap, but stay total
+                    None => (0..n_shards).min_by_key(|&s| load[s]).unwrap_or(0),
+                };
+                let ix = l * n_experts + e;
+                p.primary[ix] = s;
+                placed[s].push(e);
+                load[s] += b;
+            }
+        }
+        p
+    }
+
+    /// Anytime local-search placement: start from both [`Placement::greedy`]
+    /// and [`Placement::round_robin`], refine each for half the wall-clock
+    /// budget with swap/relocate moves (accepting only objective
+    /// improvements), and keep the better result. Because refinement
+    /// never accepts a worsening move, the refined placement's objective
+    /// — and, with a uniform byte table, its expected cross-shard cost —
+    /// is never higher than round-robin's.
+    pub fn refined(
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        n_shards: usize,
+        budget: Duration,
+        seed: u64,
+    ) -> Placement {
+        let n_layers = coact.len();
+        let n_experts = coact.first().map(|m| m.n).unwrap_or(0);
+        let mut a = Placement::greedy(coact, bytes, n_shards);
+        a.strategy = PlacementStrategy::Refined;
+        let mut b = Placement::round_robin(n_layers, n_experts, n_shards);
+        b.strategy = PlacementStrategy::Refined;
+        let half = budget / 2;
+        a.refine_in_place(coact, bytes, half, seed);
+        b.refine_in_place(coact, bytes, half, seed ^ 0x9E37_79B9);
+        if b.search_cost(coact, bytes) < a.search_cost(coact, bytes) {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Build a placement by strategy name — the CLI/bench entry point.
+    /// `budget` and `seed` only matter for [`PlacementStrategy::Refined`].
+    pub fn build(
+        strategy: PlacementStrategy,
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        n_shards: usize,
+        budget: Duration,
+        seed: u64,
+    ) -> Result<Placement> {
+        ensure!(n_shards >= 1, "--shards must be at least 1");
+        let n_layers = coact.len();
+        let n_experts = coact.first().map(|m| m.n).unwrap_or(0);
+        ensure!(
+            bytes.len() == n_layers && bytes.iter().all(|row| row.len() == n_experts),
+            "byte table shape does not match the coactivation matrices"
+        );
+        Ok(match strategy {
+            PlacementStrategy::RoundRobin => Placement::round_robin(n_layers, n_experts, n_shards),
+            PlacementStrategy::Greedy => Placement::greedy(coact, bytes, n_shards),
+            PlacementStrategy::Refined => Placement::refined(coact, bytes, n_shards, budget, seed),
+        })
+    }
+
+    /// The anytime loop: random swap (two experts in one layer trade
+    /// primaries) and relocate (one expert moves to another shard) moves,
+    /// accepted only when they lower [`Placement::search_cost`], until
+    /// the wall-clock budget runs out. Returns the number of accepted
+    /// moves. The full objective is re-evaluated per proposal — expert
+    /// counts are small (≤ dozens), so a proposal costs microseconds and
+    /// the budget is genuinely anytime.
+    pub fn refine_in_place(
+        &mut self,
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        budget: Duration,
+        seed: u64,
+    ) -> u64 {
+        if self.n_shards < 2 || self.n_layers == 0 || self.n_experts < 2 {
+            return 0;
+        }
+        let mut rng = Rng::new(seed);
+        let start = Instant::now();
+        let mut cost = self.search_cost(coact, bytes);
+        let mut accepted = 0u64;
+        let mut iters = 0u64;
+        while start.elapsed() < budget && iters < MAX_SEARCH_ITERS {
+            iters += 1;
+            let l = rng.below(self.n_layers);
+            let e = rng.below(self.n_experts);
+            let ix = l * self.n_experts + e;
+            let old = self.primary[ix];
+            if rng.below(2) == 0 {
+                // relocate: move e to a random other shard
+                let s = rng.below(self.n_shards);
+                if s == old {
+                    continue;
+                }
+                self.primary[ix] = s;
+                let c = self.search_cost(coact, bytes);
+                if c < cost {
+                    cost = c;
+                    accepted += 1;
+                } else {
+                    self.primary[ix] = old;
+                }
+            } else {
+                // swap: trade primaries with another expert in this layer
+                let e2 = rng.below(self.n_experts);
+                let ix2 = l * self.n_experts + e2;
+                let old2 = self.primary[ix2];
+                if e2 == e || old2 == old {
+                    continue;
+                }
+                self.primary[ix] = old2;
+                self.primary[ix2] = old;
+                let c = self.search_cost(coact, bytes);
+                if c < cost {
+                    cost = c;
+                    accepted += 1;
+                } else {
+                    self.primary[ix] = old;
+                    self.primary[ix2] = old2;
+                }
+            }
+        }
+        accepted
+    }
+
+    /// Expected cross-shard routing cost: the coactivation mass of every
+    /// expert pair that no single shard hosts together, summed over
+    /// layers. This is the graph-partitioning edge-cut under the paper's
+    /// coactivation statistic — the probability mass of a token's top-k
+    /// selections landing on different shards, which is exactly the
+    /// activation traffic a multi-engine round pays.
+    pub fn expected_cross_cost(&self, coact: &[DistMatrix]) -> f64 {
+        let mut cost = 0.0;
+        for (l, m) in coact.iter().enumerate().take(self.n_layers) {
+            let n = m.n.min(self.n_experts);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let a = m.get(i, j);
+                    if a > 0.0 && !self.colocated(l, i, j) {
+                        cost += a;
+                    }
+                }
+            }
+        }
+        cost
+    }
+
+    /// Do experts `i` and `j` of `layer` share at least one hosting shard?
+    fn colocated(&self, layer: usize, i: usize, j: usize) -> bool {
+        let ix = self.idx(layer, i);
+        if self.is_host(layer, j, self.primary[ix]) {
+            return true;
+        }
+        self.replicas[ix]
+            .iter()
+            .any(|&s| self.is_host(layer, j, s))
+    }
+
+    /// Bytes resident per shard under this placement: every hosted copy
+    /// (primary + replicas) counts once per hosting shard, priced by the
+    /// `bytes[layer][expert]` table (dead experts cost 0 there).
+    pub fn shard_bytes(&self, bytes: &[Vec<usize>]) -> Vec<usize> {
+        let mut out = vec![0usize; self.n_shards];
+        for l in 0..self.n_layers.min(bytes.len()) {
+            for e in 0..self.n_experts.min(bytes[l].len()) {
+                let b = bytes[l][e];
+                let ix = self.idx(l, e);
+                out[self.primary[ix]] += b;
+                for &s in &self.replicas[ix] {
+                    out[s] += b;
+                }
+            }
+        }
+        out
+    }
+
+    /// The local-search objective: expected cross-shard cost plus a
+    /// byte-imbalance penalty (`max_shard_bytes / ideal − 1`, zero when
+    /// perfectly balanced), so the search cannot trade all balance away
+    /// for cut quality.
+    pub fn search_cost(&self, coact: &[DistMatrix], bytes: &[Vec<usize>]) -> f64 {
+        let loads = self.shard_bytes(bytes);
+        let total: usize = loads.iter().sum();
+        let imbalance = if total > 0 {
+            let ideal = total as f64 / self.n_shards as f64;
+            let max = loads.iter().copied().max().unwrap_or(0) as f64;
+            (max / ideal - 1.0).max(0.0)
+        } else {
+            0.0
+        };
+        self.expected_cross_cost(coact) + BALANCE_WEIGHT * imbalance
+    }
+
+    /// Replicate the `per_layer` hottest experts of each layer (by load
+    /// share, e.g. [`crate::coactivation::CoactivationStats::load_share`])
+    /// onto every other shard. Replicas make those experts' hits local on
+    /// every shard at the price of one extra copy per shard —
+    /// [`Placement::shard_bytes`] and the engine slabs both account each
+    /// hosted copy once.
+    pub fn replicate_hottest(&mut self, load: &[Vec<f64>], per_layer: usize) {
+        for l in 0..self.n_layers.min(load.len()) {
+            let row = &load[l];
+            let mut order: Vec<usize> = (0..self.n_experts.min(row.len())).collect();
+            order.sort_by(|&a, &b| {
+                row[b]
+                    .partial_cmp(&row[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            for &e in order.iter().take(per_layer) {
+                if row[e] <= 0.0 {
+                    continue;
+                }
+                let ix = self.idx(l, e);
+                let prim = self.primary[ix];
+                self.replicas[ix] = (0..self.n_shards).filter(|&s| s != prim).collect();
+            }
+        }
+    }
+}
+
+/// The `bytes[layer][expert]` table every placement is balanced by: the
+/// authoritative [`crate::quant::tensor_store_bytes`] byte model applied
+/// per expert via [`ParamSet::expert_resident_bytes`] (0 for dead
+/// experts) — the same figures `coordinator::ExpertStore` budgets with,
+/// so placement balance and residency accounting can never disagree.
+pub fn expert_bytes_table(params: &ParamSet, scheme: QuantScheme) -> Vec<Vec<usize>> {
+    let cfg = &params.config;
+    (0..cfg.n_layers)
+        .map(|l| {
+            (0..cfg.n_experts)
+                .map(|e| params.expert_resident_bytes(l, e, scheme))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    /// Two-block coactivation fixture: experts {0..n/2} and {n/2..n}
+    /// coactivate strongly within blocks, never across.
+    fn block_coact(n_layers: usize, n_experts: usize) -> Vec<DistMatrix> {
+        (0..n_layers)
+            .map(|l| {
+                let mut m = DistMatrix::new(n_experts);
+                for i in 0..n_experts {
+                    for j in (i + 1)..n_experts {
+                        if (i < n_experts / 2) == (j < n_experts / 2) {
+                            m.set(i, j, 0.1 + 0.01 * (l + i + j) as f64);
+                        }
+                    }
+                }
+                m
+            })
+            .collect()
+    }
+
+    fn uniform_bytes(n_layers: usize, n_experts: usize, b: usize) -> Vec<Vec<usize>> {
+        vec![vec![b; n_experts]; n_layers]
+    }
+
+    #[test]
+    fn round_robin_covers_all_shards() {
+        let p = Placement::round_robin(2, 8, 4);
+        for l in 0..2 {
+            for e in 0..8 {
+                assert_eq!(p.primary_shard(l, e), e % 4);
+                assert!(p.is_host(l, e, e % 4));
+                assert!(p.replica_shards(l, e).is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_colocates_coactivation_blocks() {
+        let coact = block_coact(2, 8);
+        let bytes = uniform_bytes(2, 8, 1000);
+        let p = Placement::greedy(&coact, &bytes, 2);
+        // the two coactivation blocks are exactly the two shards, so the
+        // cut is empty while round-robin slices straight through it
+        assert_eq!(p.expected_cross_cost(&coact), 0.0);
+        let rr = Placement::round_robin(2, 8, 2);
+        assert!(rr.expected_cross_cost(&coact) > 0.0);
+        // and the byte loads stay balanced
+        let loads = p.shard_bytes(&bytes);
+        assert_eq!(loads.iter().sum::<usize>(), 16 * 1000);
+        assert_eq!(loads[0], loads[1]);
+    }
+
+    #[test]
+    fn refined_never_costs_more_than_round_robin() {
+        let coact = block_coact(2, 8);
+        let bytes = uniform_bytes(2, 8, 512);
+        let rr = Placement::round_robin(2, 8, 2);
+        let p = Placement::refined(&coact, &bytes, 2, Duration::from_millis(20), 7);
+        assert_eq!(p.strategy(), PlacementStrategy::Refined);
+        assert!(p.expected_cross_cost(&coact) <= rr.expected_cross_cost(&coact));
+    }
+
+    #[test]
+    fn refine_improves_a_deliberately_bad_start() {
+        let coact = block_coact(1, 8);
+        let bytes = uniform_bytes(1, 8, 64);
+        let mut p = Placement::round_robin(1, 8, 2);
+        let before = p.search_cost(&coact, &bytes);
+        let accepted = p.refine_in_place(&coact, &bytes, Duration::from_millis(30), 3);
+        let after = p.search_cost(&coact, &bytes);
+        assert!(after <= before);
+        // the two-block instance has an improving move from round-robin,
+        // and the budget is ample for this 8-expert neighbourhood
+        assert!(accepted > 0, "local search accepted no moves");
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn replicas_count_once_per_hosting_shard() {
+        let mut p = Placement::round_robin(2, 4, 2);
+        let bytes = uniform_bytes(2, 4, 100);
+        let base: usize = p.shard_bytes(&bytes).iter().sum();
+        assert_eq!(base, 8 * 100);
+        // replicate the hottest expert of each layer onto the other shard
+        let load = vec![vec![0.7, 0.1, 0.1, 0.1]; 2];
+        p.replicate_hottest(&load, 1);
+        assert_eq!(p.replica_shards(0, 0), &[1]);
+        let with: usize = p.shard_bytes(&bytes).iter().sum();
+        assert_eq!(with, base + 2 * 100);
+        // a replicated pair is colocated wherever either copy lives
+        assert!(p.is_host(0, 0, 0) && p.is_host(0, 0, 1));
+    }
+
+    #[test]
+    fn byte_table_matches_expert_resident_bytes() {
+        let cfg = ModelConfig::test_tiny();
+        let mut ps = ParamSet::init(&cfg, 5);
+        ps.prune_expert(0, 1);
+        let table = expert_bytes_table(&ps, QuantScheme::F32);
+        assert_eq!(table.len(), cfg.n_layers);
+        assert_eq!(table[0].len(), cfg.n_experts);
+        assert_eq!(table[0][1], 0, "dead expert must cost nothing");
+        assert_eq!(
+            table[1][2],
+            ps.expert_resident_bytes(1, 2, QuantScheme::F32)
+        );
+    }
+
+    #[test]
+    fn strategy_parse_round_trips() {
+        for s in ["round-robin", "greedy", "refined"] {
+            assert_eq!(PlacementStrategy::parse(s).unwrap().name(), s);
+        }
+        assert!(PlacementStrategy::parse("nope").is_err());
+    }
+}

@@ -179,17 +179,21 @@ pub enum CompiledExpert {
     },
 }
 
+/// One compiled transformer layer. `pub(crate)` so the expert-parallel
+/// sharding engine (`crate::shard`) can strip the expert slabs out of a
+/// compiled model and redistribute them across shards while reusing the
+/// trunk (attention + router) weights verbatim.
 #[derive(Clone, Debug)]
-struct CompiledLayer {
-    ln1: Vec<f32>,
-    wqkv: QuantMat,
-    wo: QuantMat,
-    ln2: Vec<f32>,
+pub(crate) struct CompiledLayer {
+    pub(crate) ln1: Vec<f32>,
+    pub(crate) wqkv: QuantMat,
+    pub(crate) wo: QuantMat,
+    pub(crate) ln2: Vec<f32>,
     /// `[E, D]` router rows (dense: tiny and never pruned).
-    router: Vec<f32>,
-    experts: Vec<CompiledExpert>,
+    pub(crate) router: Vec<f32>,
+    pub(crate) experts: Vec<CompiledExpert>,
     /// `[E]` 1.0 = alive — the −1e9 router offset mask.
-    expert_mask: Vec<f32>,
+    pub(crate) expert_mask: Vec<f32>,
 }
 
 /// Scratch buffers for the batched expert-gather, reused across layers
@@ -199,16 +203,16 @@ struct CompiledLayer {
 #[derive(Clone, Debug, Default)]
 pub(crate) struct MoeScratch {
     /// Per expert: the (token, slot, gate) triples routed to it.
-    groups: Vec<Vec<(usize, usize, f32)>>,
+    pub(crate) groups: Vec<Vec<(usize, usize, f32)>>,
     /// Gathered expert inputs, `[cap · D]`.
-    xbuf: Vec<f32>,
+    pub(crate) xbuf: Vec<f32>,
     /// Gathered hidden activations, `[cap · F]`.
-    hidbuf: Vec<f32>,
+    pub(crate) hidbuf: Vec<f32>,
     /// Gathered expert outputs, `[cap · D]`.
-    outbuf: Vec<f32>,
+    pub(crate) outbuf: Vec<f32>,
     /// Per-(token, slot) weighted outputs, `[cap · K · D]`, reduced in
     /// slot order afterwards.
-    slot_out: Vec<f32>,
+    pub(crate) slot_out: Vec<f32>,
     /// Router logits/probabilities scratch, `[E]`.
     lg: Vec<f32>,
     /// Top-k selection scratch, `[E]`.
@@ -217,7 +221,7 @@ pub(crate) struct MoeScratch {
     ytok: Vec<f32>,
     /// Expert id per (token, slot) of the latest gather, `[cap · K]`
     /// (−1 = masked leftover slot).
-    sel: Vec<i32>,
+    pub(crate) sel: Vec<i32>,
 }
 
 impl MoeScratch {
@@ -323,38 +327,26 @@ impl SessionScratch {
     }
 }
 
-/// One MoE layer over `x` (`[n, D]` post-ln2 rows) through the batched
-/// expert-gather, adding the block output into the residual rows `h`.
-/// Fills `scr.sel[..n·K]` with the per-(token, slot) expert selections.
-///
-/// Three phases, shared verbatim by the full-sequence forward and the
-/// incremental decode session: (1) route every token, grouping positions
-/// by selected expert; (2) stream each expert's (CSR or dense) weight
-/// rows once per *group* rather than once per token; (3) reduce the
-/// per-(token, slot) outputs in slot order — the dense path's exact
-/// floating-point accumulation order, so the logits cannot drift between
-/// paths or batch compositions.
-fn moe_gather(
+/// Phase 1 of the expert-gather: route every token of `x` (`[n, D]`),
+/// grouping positions by selected expert into `scr.groups`, filling
+/// `scr.sel[..n·K]`, and zeroing `scr.slot_out[..n·K·D]` so phase-2
+/// writers (local or per-shard) only ever fill routed cells.
+pub(crate) fn moe_route(
     layer: &CompiledLayer,
     cfg: &ModelConfig,
     x: &[f32],
     n: usize,
-    h: &mut [f32],
     scr: &mut MoeScratch,
 ) {
-    let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
+    let (d, k) = (cfg.d_model, cfg.top_k);
     let MoeScratch {
         groups,
-        xbuf,
-        hidbuf,
-        outbuf,
         slot_out,
         lg,
         used,
-        ytok,
         sel,
+        ..
     } = scr;
-    // phase 1: route every token, grouping positions by expert
     for g in groups.iter_mut() {
         g.clear();
     }
@@ -378,40 +370,54 @@ fn moe_gather(
             },
         );
     }
-    // phase 2: stream each expert's rows once per token *group*
     slot_out[..n * k * d].fill(0.0);
-    for (ei, group) in groups.iter().enumerate() {
-        if group.is_empty() {
-            continue;
-        }
-        // a Dead expert can only be selected when a layer is fully
-        // masked; its (zeroed) weights contribute nothing either way,
-        // so skipping preserves equivalence
-        if let CompiledExpert::Alive { w1, w2 } = &layer.experts[ei] {
-            let gn = group.len();
-            for (r, &(t, _slot, _g)) in group.iter().enumerate() {
-                xbuf[r * d..r * d + d].copy_from_slice(&x[t * d..t * d + d]);
-            }
-            hidbuf[..gn * f].fill(0.0);
-            w1.matmul_acc(&xbuf[..gn * d], &mut hidbuf[..gn * f], gn);
-            for hv in hidbuf[..gn * f].iter_mut() {
-                if *hv < 0.0 {
-                    *hv = 0.0;
-                }
-            }
-            outbuf[..gn * d].fill(0.0);
-            w2.matmul_acc(&hidbuf[..gn * f], &mut outbuf[..gn * d], gn);
-            for (r, &(t, slot, g)) in group.iter().enumerate() {
-                let orow = &outbuf[r * d..r * d + d];
-                let dst = &mut slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
-                for (dv, &ov) in dst.iter_mut().zip(orow) {
-                    *dv = g * ov;
-                }
-            }
+}
+
+/// The per-group expert FFN shared by every phase-2 executor (the local
+/// gather below and each shard engine thread in `crate::shard`): gather
+/// the group's rows of `x` into `xbuf`, stream `w1` once over the group,
+/// ReLU, stream `w2` once, leaving the unscaled outputs in
+/// `outbuf[..group.len()·D]`. Callers apply the gate weight when they
+/// scatter — keeping the arithmetic identical no matter which engine
+/// runs the group.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn expert_group_forward(
+    w1: &QuantMat,
+    w2: &QuantMat,
+    x: &[f32],
+    d: usize,
+    f: usize,
+    group: &[(usize, usize, f32)],
+    xbuf: &mut [f32],
+    hidbuf: &mut [f32],
+    outbuf: &mut [f32],
+) {
+    let gn = group.len();
+    for (r, &(t, _slot, _g)) in group.iter().enumerate() {
+        xbuf[r * d..r * d + d].copy_from_slice(&x[t * d..t * d + d]);
+    }
+    hidbuf[..gn * f].fill(0.0);
+    w1.matmul_acc(&xbuf[..gn * d], &mut hidbuf[..gn * f], gn);
+    for hv in hidbuf[..gn * f].iter_mut() {
+        if *hv < 0.0 {
+            *hv = 0.0;
         }
     }
-    // phase 3: reduce per-slot outputs in slot order (the dense path's
-    // exact accumulation order) into the residual stream
+    outbuf[..gn * d].fill(0.0);
+    w2.matmul_acc(&hidbuf[..gn * f], &mut outbuf[..gn * d], gn);
+}
+
+/// Phase 3 of the expert-gather: reduce the per-(token, slot) outputs in
+/// ascending slot order (the dense path's exact floating-point
+/// accumulation order) into the residual rows `h`. Because every routed
+/// (token, slot) cell is written by exactly one expert — and hence, under
+/// sharding, by exactly one shard — this reduction is the fixed merge
+/// point that keeps sharded logits bit-identical to single-engine.
+pub(crate) fn moe_reduce(cfg: &ModelConfig, n: usize, h: &mut [f32], scr: &mut MoeScratch) {
+    let (d, k) = (cfg.d_model, cfg.top_k);
+    let MoeScratch {
+        slot_out, ytok, ..
+    } = scr;
     for t in 0..n {
         for y in ytok.iter_mut() {
             *y = 0.0;
@@ -427,6 +433,60 @@ fn moe_gather(
             *hv += yv;
         }
     }
+}
+
+/// One MoE layer over `x` (`[n, D]` post-ln2 rows) through the batched
+/// expert-gather, adding the block output into the residual rows `h`.
+/// Fills `scr.sel[..n·K]` with the per-(token, slot) expert selections.
+///
+/// Three phases, shared verbatim by the full-sequence forward and the
+/// incremental decode session: (1) route every token, grouping positions
+/// by selected expert ([`moe_route`]); (2) stream each expert's (CSR or
+/// dense) weight rows once per *group* rather than once per token
+/// ([`expert_group_forward`]); (3) reduce the per-(token, slot) outputs
+/// in slot order ([`moe_reduce`]) — the dense path's exact
+/// floating-point accumulation order, so the logits cannot drift between
+/// paths or batch compositions.
+pub(crate) fn moe_gather(
+    layer: &CompiledLayer,
+    cfg: &ModelConfig,
+    x: &[f32],
+    n: usize,
+    h: &mut [f32],
+    scr: &mut MoeScratch,
+) {
+    let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
+    moe_route(layer, cfg, x, n, scr);
+    // phase 2: stream each expert's rows once per token *group*
+    {
+        let MoeScratch {
+            groups,
+            xbuf,
+            hidbuf,
+            outbuf,
+            slot_out,
+            ..
+        } = scr;
+        for (ei, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            // a Dead expert can only be selected when a layer is fully
+            // masked; its (zeroed) weights contribute nothing either way,
+            // so skipping preserves equivalence
+            if let CompiledExpert::Alive { w1, w2 } = &layer.experts[ei] {
+                expert_group_forward(w1, w2, x, d, f, group, xbuf, hidbuf, outbuf);
+                for (r, &(t, slot, g)) in group.iter().enumerate() {
+                    let orow = &outbuf[r * d..r * d + d];
+                    let dst = &mut slot_out[(t * k + slot) * d..(t * k + slot) * d + d];
+                    for (dv, &ov) in dst.iter_mut().zip(orow) {
+                        *dv = g * ov;
+                    }
+                }
+            }
+        }
+    }
+    moe_reduce(cfg, n, h, scr);
 }
 
 /// What the compile pass decided, for reports and benches.
@@ -447,17 +507,35 @@ pub struct CompileStats {
     pub quant: QuantScheme,
 }
 
+/// Per-layer MoE dispatch hook of the shared forward/session sweeps:
+/// `(layer_index, layer, cfg, x, n, h, scr)`. The default executes
+/// [`moe_gather`] on the layer's own expert slabs;
+/// `crate::shard::ShardedEngine` substitutes a partitioned gather that
+/// serves each routed expert group from its hosting shard.
+pub(crate) type MoeDispatch<'a> = &'a mut dyn FnMut(
+    usize,
+    &CompiledLayer,
+    &ModelConfig,
+    &[f32],
+    usize,
+    &mut [f32],
+    &mut MoeScratch,
+);
+
 /// A [`ParamSet`] compiled for decode: per-tensor dense/CSR storage plus a
-/// forward pass that matches the dense path within 1e-5.
+/// forward pass that matches the dense path within 1e-5. Fields are
+/// `pub(crate)` so `crate::shard` can strip the expert slabs out of a
+/// compiled model (leaving the replicated trunk) when building an
+/// expert-parallel [`crate::shard::ShardedEngine`].
 #[derive(Clone, Debug)]
 pub struct CompiledModel {
-    config: ModelConfig,
-    embed: Vec<f32>,
-    pos: Vec<f32>,
-    layers: Vec<CompiledLayer>,
-    ln_f: Vec<f32>,
-    lm_head: QuantMat,
-    stats: CompileStats,
+    pub(crate) config: ModelConfig,
+    pub(crate) embed: Vec<f32>,
+    pub(crate) pos: Vec<f32>,
+    pub(crate) layers: Vec<CompiledLayer>,
+    pub(crate) ln_f: Vec<f32>,
+    pub(crate) lm_head: QuantMat,
+    pub(crate) stats: CompileStats,
 }
 
 impl CompiledModel {
@@ -569,6 +647,22 @@ impl CompiledModel {
         tokens: &IntTensor,
         want_routing: bool,
     ) -> Result<(Tensor, Option<IntTensor>)> {
+        self.forward_with(tokens, want_routing, &mut |_l, layer, cfg, x, n, h, scr| {
+            moe_gather(layer, cfg, x, n, h, scr)
+        })
+    }
+
+    /// [`CompiledModel::forward`] with an explicit per-layer MoE dispatch
+    /// — the seam the expert-parallel sharding engine plugs into. The
+    /// trunk (embed, attention, router inputs, final norm, lm_head) is
+    /// identical on every path; only who executes each routed expert
+    /// group differs.
+    pub(crate) fn forward_with(
+        &self,
+        tokens: &IntTensor,
+        want_routing: bool,
+        gather: MoeDispatch<'_>,
+    ) -> Result<(Tensor, Option<IntTensor>)> {
         count_execution();
         check_tokens(&self.config, tokens)?;
         let cfg = &self.config;
@@ -597,7 +691,7 @@ impl CompiledModel {
             }
 
             let x = rmsnorm_fwd(&h, &layer.ln2, d);
-            moe_gather(layer, cfg, &x, t_total, &mut h, &mut scr);
+            gather(l, layer, cfg, &x, t_total, &mut h, &mut scr);
             if want_routing {
                 routing[l * t_total * k..(l + 1) * t_total * k]
                     .copy_from_slice(&scr.sel[..t_total * k]);
@@ -650,16 +744,26 @@ impl CompiledModel {
         // borrow it alongside the K/V caches; restore on every exit path
         // to keep the warm buffers across errors too
         let mut scr = state.take_scratch();
-        let res = self.session_round_with(state, slots, &mut scr);
+        let res = self.session_round_with(
+            state,
+            slots,
+            &mut scr,
+            &mut |_l, layer, cfg, x, n, h, moe| moe_gather(layer, cfg, x, n, h, moe),
+        );
         state.put_scratch(scr);
         res
     }
 
-    fn session_round_with(
+    /// The layer-major round with an explicit per-layer MoE dispatch —
+    /// same seam as [`CompiledModel::forward_with`], used by
+    /// `crate::shard::ShardedEngine` to serve each routed expert group
+    /// from its hosting shard while the trunk sweep stays shared.
+    pub(crate) fn session_round_with(
         &self,
         state: &mut DecodeState,
         slots: &[usize],
         scr: &mut SessionScratch,
+        gather: MoeDispatch<'_>,
     ) -> Result<StepOutput> {
         let cfg = &self.config;
         ensure!(
@@ -774,7 +878,7 @@ impl CompiledModel {
             rmsnorm_into(h, &layer.ln2, d, a);
             // one cross-slot gather: tokens from different slots that
             // picked the same expert share that expert's weight streaming
-            moe_gather(layer, cfg, a, total, h, moe);
+            gather(l, layer, cfg, a, total, h, moe);
             // routing is reported for each slot's last new position only —
             // the position the serving loop samples and accounts
             for (oi, &(_slot, row0, _pos0, n)) in plans.iter().enumerate() {

@@ -1,0 +1,242 @@
+//! Sharded-serving parity gate: splitting a compiled model's experts
+//! across N engines must not change a single token.
+//!
+//! The sharded engine replicates the trunk (attention + router) and
+//! partitions the expert slabs by a [`Placement`]; every MoE layer's
+//! routed groups execute on their primary shard and merge through the
+//! same fixed slot-order reduction as the single-engine path. Greedy
+//! decode streams must therefore be **token-for-token identical** to
+//! the single-engine executor across shards ∈ {1, 2, 4} × quant ∈
+//! {f32, u16} — including generations that slide the decode window
+//! mid-stream — with last-position logits pinned at 1e-5. On top of
+//! the numerics, placement quality (refined never costs more than
+//! round-robin on coactivation fixtures) and byte accounting (per-shard
+//! residency sums to the single-engine total; replicas pay once per
+//! hosting shard) are pinned here too.
+
+use std::time::Duration;
+use stun::cluster::DistMatrix;
+use stun::model::{ModelConfig, ParamSet};
+use stun::pruning::unstructured;
+use stun::quant::QuantScheme;
+use stun::runtime::session::greedy_token;
+use stun::runtime::{CompiledForward, DecodeState};
+use stun::shard::{expert_bytes_table, Placement, PlacementStrategy, ShardedEngine};
+use stun::sparse::{CompiledModel, SparseConfig};
+use stun::tensor::IntTensor;
+
+/// The serving model every parity arm runs: tiny config, 70%
+/// unstructured sparsity (CSR kernels engaged), one structurally-dead
+/// expert (row-compressed away — its placement slot must cost nothing).
+fn serving_model() -> ParamSet {
+    let cfg = ModelConfig::test_tiny();
+    let mut ps = ParamSet::init(&cfg, 71);
+    unstructured::magnitude_prune(&mut ps, 0.7).unwrap();
+    ps.prune_expert(0, 2);
+    ps
+}
+
+fn scfg(quant: QuantScheme) -> SparseConfig {
+    SparseConfig {
+        quant,
+        ..Default::default()
+    }
+}
+
+/// Greedy session stream through any executor: prefill, then one-token
+/// decodes. Returns the tokens and the final step's logits row.
+fn stream(exec: &dyn CompiledForward, prompt: &[i32], n_tokens: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut state: DecodeState = exec.new_session(1);
+    let out = exec.prefill(&mut state, 0, prompt).unwrap();
+    let mut toks = vec![greedy_token(out.logits.row(0))];
+    let mut last = out.logits.row(0).to_vec();
+    for _ in 1..n_tokens {
+        let out = exec.decode(&mut state, &[(0, *toks.last().unwrap())]).unwrap();
+        last = out.logits.row(0).to_vec();
+        toks.push(greedy_token(out.logits.row(0)));
+    }
+    (toks, last)
+}
+
+fn assert_logits_close(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "[{ctx}] logits width");
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() <= 1e-5, "[{ctx}] logits drifted: {x} vs {y}");
+    }
+}
+
+#[test]
+fn sharded_streams_match_single_engine_across_shards_and_quant() {
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    // in-window generation, and a prompt of seq−3 whose 8-token
+    // generation crosses `seq` — the window slides mid-stream and the
+    // sharded session must re-prefill exactly like the single engine
+    let in_window: Vec<i32> = (0..12).map(|i| 2 + (i % 37)).collect();
+    let sliding: Vec<i32> = (0..cfg.seq as i32 - 3).map(|i| 2 + (i % 29)).collect();
+    for quant in [QuantScheme::F32, QuantScheme::U16] {
+        let single = CompiledModel::compile(&ps, &scfg(quant));
+        for n_shards in [1usize, 2, 4] {
+            let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, n_shards);
+            let sharded = ShardedEngine::new(&ps, &scfg(quant), placement).unwrap();
+            for (label, prompt) in [("in-window", &in_window), ("window-slide", &sliding)] {
+                let ctx = format!("{}x{n_shards}/{label}", quant.name());
+                let (want, want_logits) = stream(&single, prompt, 8);
+                let (got, got_logits) = stream(&sharded, prompt, 8);
+                assert_eq!(got, want, "[{ctx}] sharded stream diverged");
+                assert_logits_close(&got_logits, &want_logits, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn serial_and_parallel_sharding_agree_on_full_forwards() {
+    // the worker-thread fan-out and the in-process serial path run the
+    // same slabs — full-sequence logits must agree bit-for-bit, and
+    // both must match the unsharded executor at 1e-5 (they share its
+    // arithmetic exactly, so this is equality in practice)
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    let mut tokens = IntTensor::zeros(&[2, cfg.seq]);
+    for (i, t) in tokens.row_mut(0).iter_mut().enumerate() {
+        *t = 2 + (i as i32 % 41);
+    }
+    for (i, t) in tokens.row_mut(1).iter_mut().enumerate() {
+        *t = 3 + (i as i32 % 17);
+    }
+    let single = CompiledModel::compile(&ps, &SparseConfig::default());
+    let want = single.fwd_logits(&tokens).unwrap();
+    for n_shards in [2usize, 4] {
+        let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, n_shards);
+        let parallel =
+            ShardedEngine::new(&ps, &SparseConfig::default(), placement.clone()).unwrap();
+        let serial = ShardedEngine::from_compiled(
+            CompiledModel::compile(&ps, &SparseConfig::default()),
+            placement,
+            false,
+        )
+        .unwrap();
+        let a = parallel.fwd_logits(&tokens).unwrap();
+        let b = serial.fwd_logits(&tokens).unwrap();
+        let bits = |t: &stun::tensor::Tensor| -> Vec<u32> {
+            t.data().iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(
+            bits(&a),
+            bits(&b),
+            "x{n_shards}: worker threads changed the arithmetic"
+        );
+        assert_logits_close(a.data(), want.data(), &format!("x{n_shards} vs single"));
+    }
+}
+
+/// Two-block coactivation fixture: experts {0..n/2} and {n/2..n}
+/// coactivate within blocks, never across — the ideal 2-shard cut.
+fn block_coact(n_layers: usize, n_experts: usize) -> Vec<DistMatrix> {
+    (0..n_layers)
+        .map(|l| {
+            let mut m = DistMatrix::new(n_experts);
+            for i in 0..n_experts {
+                for j in (i + 1)..n_experts {
+                    if (i < n_experts / 2) == (j < n_experts / 2) {
+                        m.set(i, j, 0.1 + 0.01 * (l + i + j) as f64);
+                    }
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+#[test]
+fn refined_placement_never_costs_more_than_round_robin() {
+    let coact = block_coact(2, 8);
+    let bytes = vec![vec![1000usize; 8]; 2];
+    for n_shards in [2usize, 4] {
+        let rr = Placement::round_robin(2, 8, n_shards);
+        let refined = Placement::build(
+            PlacementStrategy::Refined,
+            &coact,
+            &bytes,
+            n_shards,
+            Duration::from_millis(30),
+            17,
+        )
+        .unwrap();
+        assert!(
+            refined.expected_cross_cost(&coact) <= rr.expected_cross_cost(&coact),
+            "x{n_shards}: refined placement worse than round-robin"
+        );
+    }
+    // on the 2-shard instance the two blocks are separable outright
+    let two = Placement::build(
+        PlacementStrategy::Refined,
+        &coact,
+        &bytes,
+        2,
+        Duration::from_millis(30),
+        17,
+    )
+    .unwrap();
+    assert_eq!(two.expected_cross_cost(&coact), 0.0);
+}
+
+#[test]
+fn shard_bytes_sum_to_single_engine_total() {
+    // satellite byte-accounting contract: with no replicas, the
+    // per-shard resident bytes of both the placement table and the
+    // engine slabs partition the single-engine total exactly; the dead
+    // expert costs nothing anywhere
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    for quant in [QuantScheme::F32, QuantScheme::U16] {
+        let bytes = expert_bytes_table(&ps, quant);
+        let total: usize = bytes.iter().flatten().sum();
+        assert!(total > 0);
+        assert_eq!(bytes[0][2], 0, "dead expert must cost nothing");
+        for n_shards in [2usize, 4] {
+            let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, n_shards);
+            let table_loads = placement.shard_bytes(&bytes);
+            assert_eq!(table_loads.iter().sum::<usize>(), total);
+            let engine = ShardedEngine::new(&ps, &scfg(quant), placement).unwrap();
+            let slab_loads = engine.shard_resident_bytes();
+            assert_eq!(
+                slab_loads,
+                table_loads,
+                "{} x{n_shards}: engine slabs disagree with the placement table",
+                quant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn replicated_experts_pay_once_per_hosting_shard() {
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    let bytes = expert_bytes_table(&ps, QuantScheme::F32);
+    let total: usize = bytes.iter().flatten().sum();
+    let n_shards = 2usize;
+    let mut placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, n_shards);
+    // replicate expert 0 of every layer onto the other shard
+    let mut load = vec![vec![0.0f64; cfg.n_experts]; cfg.n_layers];
+    for row in &mut load {
+        row[0] = 1.0;
+    }
+    placement.replicate_hottest(&load, 1);
+    let extra: usize = (0..cfg.n_layers).map(|l| bytes[l][0] * (n_shards - 1)).sum();
+    assert!(extra > 0);
+    let table_loads = placement.shard_bytes(&bytes);
+    assert_eq!(table_loads.iter().sum::<usize>(), total + extra);
+    let engine = ShardedEngine::new(&ps, &SparseConfig::default(), placement).unwrap();
+    assert_eq!(engine.shard_resident_bytes(), table_loads);
+    // and replication must not perturb the stream: groups still execute
+    // on their primary shard
+    let single = CompiledModel::compile(&ps, &SparseConfig::default());
+    let prompt: Vec<i32> = (0..10).map(|i| 2 + (i % 31)).collect();
+    let (want, want_logits) = stream(&single, &prompt, 6);
+    let (got, got_logits) = stream(&engine, &prompt, 6);
+    assert_eq!(got, want, "replication changed the decode stream");
+    assert_logits_close(&got_logits, &want_logits, "replicated");
+}
