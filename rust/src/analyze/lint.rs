@@ -1,0 +1,496 @@
+//! `stun-lint` — a zero-dependency, line-level rule engine over the
+//! crate's own sources, enforcing the architectural invariants the type
+//! system cannot (see the "Invariant catalog" section of the crate docs).
+//!
+//! Versioned rule catalog (`STUN-L001`..`STUN-L005`):
+//!
+//! * **L001** — concurrency primitives (thread spawning, locks, raw
+//!   channels) are confined to `shard/`. The one vetted exception, the
+//!   coordinator's request-intake channel, is carried by the checked-in
+//!   allowlist with its justification.
+//! * **L002** — no ad-hoc multiply-accumulate matmul loops outside
+//!   `sparse/`, `quant/`, and `runtime/native.rs`: all weight arithmetic
+//!   goes through the `QuantMat::matmul_acc` / `WeightMat` seams, so the
+//!   dense/CSR/quant equivalence tests cover every path that touches
+//!   weights.
+//! * **L003** — no panicking `Option`/`Result` accessors in hot-path
+//!   modules (`sparse/`, `quant/`, `shard/`, `runtime/session.rs`)
+//!   outside `#[cfg(test)]`: a poisoned artifact must surface as an
+//!   error on the request, never abort the serving process.
+//! * **L004** — no hash-map iteration feeding a numeric reduction:
+//!   iteration order is unspecified, so float sums over it are
+//!   non-deterministic across runs (sort keys or use an indexed Vec).
+//! * **L005** — no wall-clock reads inside kernels (`sparse/`, `quant/`,
+//!   `runtime/native.rs`): timing belongs to the callers (bench harness,
+//!   coordinator metrics), not the arithmetic.
+//!
+//! The scanner is deliberately line-local and token-level: it skips
+//! comment-only lines and `#[cfg(test)]` item regions (tracked by brace
+//! depth), and every needle below is assembled with `concat!` so the
+//! engine never flags its own rule table. Known limits: a string literal
+//! with unbalanced braces inside a test region can extend that region
+//! (a false *negative*), and multi-line chains are only seen one line at
+//! a time — cheap, deterministic, and good enough to gate CI.
+//!
+//! Findings are machine-readable ([`report_json`]); vetted exceptions
+//! live in `rust/lint-allowlist.json`, where every entry must carry a
+//! non-empty justification and is matched by (rule, file-suffix,
+//! line-substring).
+
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Bumped whenever a rule is added, removed, or materially re-scoped, so
+/// report consumers can detect catalog drift.
+pub const CATALOG_VERSION: u64 = 1;
+
+/// One lint hit: where, which rule, and the offending line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule ID (`STUN-L001`..`STUN-L005`).
+    pub rule: &'static str,
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The trimmed source line that matched.
+    pub snippet: String,
+    /// What the rule protects.
+    pub message: &'static str,
+}
+
+/// One vetted exception from `lint-allowlist.json`.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    /// Suffix-matched against [`Finding::file`].
+    pub file: String,
+    /// Substring-matched against [`Finding::snippet`].
+    pub contains: String,
+    /// Mandatory non-empty justification.
+    pub reason: String,
+}
+
+/// The parsed allowlist. [`Allowlist::permits`] decides per finding.
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let j = Json::parse(text).context("allowlist is not valid JSON")?;
+        let mut entries = Vec::new();
+        for e in j.get("allow")?.as_arr()? {
+            let entry = AllowEntry {
+                rule: e.get("rule")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                contains: e.get("contains")?.as_str()?.to_string(),
+                reason: e.get("reason")?.as_str()?.to_string(),
+            };
+            ensure!(
+                !entry.reason.trim().is_empty(),
+                "allowlist entry for {} in {} carries no justification",
+                entry.rule,
+                entry.file
+            );
+            ensure!(
+                !entry.contains.trim().is_empty(),
+                "allowlist entry for {} in {} matches every line (empty 'contains')",
+                entry.rule,
+                entry.file
+            );
+            entries.push(entry);
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Allowlist> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading allowlist {}", path.display()))?;
+        Allowlist::parse(&text)
+    }
+
+    /// Does some entry vouch for this finding?
+    pub fn permits(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|e| {
+            e.rule == f.rule && f.file.ends_with(&e.file) && f.snippet.contains(&e.contains)
+        })
+    }
+
+    /// Entries that vouch for no current finding — stale exceptions that
+    /// should be deleted so the allowlist never outgrows the tree.
+    pub fn stale(&self, findings: &[Finding]) -> Vec<&AllowEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                !findings.iter().any(|f| {
+                    e.rule == f.rule && f.file.ends_with(&e.file) && f.snippet.contains(&e.contains)
+                })
+            })
+            .collect()
+    }
+}
+
+fn in_dir(file: &str, dir: &str) -> bool {
+    file.starts_with(dir)
+}
+
+/// L001 scope: everything except `shard/`.
+fn l001_applies(file: &str) -> bool {
+    !in_dir(file, "shard/")
+}
+
+/// L002 scope: everywhere weight arithmetic is *not* supposed to live.
+fn l002_applies(file: &str) -> bool {
+    !in_dir(file, "sparse/") && !in_dir(file, "quant/") && file != "runtime/native.rs"
+}
+
+/// L003 scope: the decode hot path.
+fn l003_applies(file: &str) -> bool {
+    in_dir(file, "sparse/")
+        || in_dir(file, "quant/")
+        || in_dir(file, "shard/")
+        || file == "runtime/session.rs"
+}
+
+/// L005 scope: kernel modules.
+fn l005_applies(file: &str) -> bool {
+    in_dir(file, "sparse/") || in_dir(file, "quant/") || file == "runtime/native.rs"
+}
+
+/// Strip every `[...]` index expression (depth-tracked) so a `*` inside
+/// an index computation (`a[i * d + k]`) doesn't read as a multiply of
+/// the accumulation itself.
+fn strip_index_exprs(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut depth = 0usize;
+    for ch in s.chars() {
+        match ch {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(ch),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Apply every in-scope rule to one code line.
+fn check_line(file: &str, line_no: usize, raw: &str, out: &mut Vec<Finding>) {
+    let push = |out: &mut Vec<Finding>, rule: &'static str, message: &'static str| {
+        out.push(Finding {
+            rule,
+            file: file.to_string(),
+            line: line_no,
+            snippet: raw.trim().to_string(),
+            message,
+        });
+    };
+
+    if l001_applies(file) {
+        let needles = [
+            concat!("thread", "::spawn"),
+            concat!("Mu", "tex"),
+            concat!("mp", "sc"),
+        ];
+        if needles.iter().any(|n| raw.contains(n)) {
+            push(
+                out,
+                "STUN-L001",
+                "concurrency primitives (thread spawning, locks, raw channels) are confined to shard/",
+            );
+        }
+    }
+
+    if l002_applies(file) {
+        if let Some(pos) = raw.find("+=") {
+            let lhs = raw[..pos].trim_end();
+            let rhs = &raw[pos + 2..];
+            if lhs.ends_with(']') && strip_index_exprs(rhs).contains('*') {
+                push(
+                    out,
+                    "STUN-L002",
+                    "ad-hoc multiply-accumulate over indexed storage: weight arithmetic goes through the QuantMat/WeightMat matmul seams",
+                );
+            }
+        }
+    }
+
+    if l003_applies(file) {
+        let needles = [concat!(".unwr", "ap()"), concat!(".exp", "ect(")];
+        if needles.iter().any(|n| raw.contains(n)) {
+            push(
+                out,
+                "STUN-L003",
+                "panicking Option/Result accessors are banned on the decode hot path: surface an error on the request instead",
+            );
+        }
+    }
+
+    {
+        let iters = [concat!(".val", "ues()"), concat!(".ke", "ys()")];
+        let reductions = [
+            concat!(".su", "m()"),
+            concat!(".su", "m::"),
+            concat!(".fo", "ld("),
+            concat!(".pro", "duct"),
+        ];
+        if iters.iter().any(|n| raw.contains(n)) && reductions.iter().any(|n| raw.contains(n)) {
+            push(
+                out,
+                "STUN-L004",
+                "hash-map iteration feeding a numeric reduction is order-nondeterministic: sort keys or reduce over an indexed Vec",
+            );
+        }
+    }
+
+    if l005_applies(file) && raw.contains(concat!("Instant", "::now")) {
+        push(
+            out,
+            "STUN-L005",
+            "wall-clock reads inside kernels skew parity and bench numbers: timing belongs to the callers",
+        );
+    }
+}
+
+/// Scan one file's source. `file` is the root-relative, `/`-separated
+/// label rules are scoped by (e.g. `sparse/csr.rs`).
+pub fn scan_source(file: &str, text: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // region-skip state for `#[cfg(test)]` items
+    let mut pending = false; // saw the attribute, waiting for the opening brace
+    let mut in_test = false;
+    let mut depth = 0usize;
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let trimmed = raw.trim_start();
+        if in_test {
+            for ch in raw.chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            if depth == 0 {
+                in_test = false;
+            }
+            continue;
+        }
+        if pending {
+            if raw.contains('{') {
+                pending = false;
+                for ch in raw.chars() {
+                    match ch {
+                        '{' => depth += 1,
+                        '}' => depth = depth.saturating_sub(1),
+                        _ => {}
+                    }
+                }
+                in_test = depth > 0;
+                continue;
+            }
+            if trimmed.starts_with("#[") || trimmed.is_empty() {
+                continue; // stacked attributes / blank line before the item
+            }
+            pending = false; // brace-less gated item (e.g. a `use`)
+            continue;
+        }
+        if trimmed.starts_with("//") {
+            continue;
+        }
+        if trimmed.starts_with("#[cfg(test)]") || trimmed.starts_with("#[cfg(all(test") {
+            pending = true;
+            continue;
+        }
+        check_line(file, line_no, raw, &mut out);
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` (deterministic file order).
+pub fn scan_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(path.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(scan_source(&label, &text));
+    }
+    Ok(out)
+}
+
+/// Machine-readable report: catalog version, per-finding records with
+/// their allowlist disposition, and summary counts.
+pub fn report_json(findings: &[Finding], allow: &Allowlist) -> Json {
+    let records: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::Str(f.rule.to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("snippet", Json::Str(f.snippet.clone())),
+                ("message", Json::Str(f.message.to_string())),
+                ("allowlisted", Json::Bool(allow.permits(f))),
+            ])
+        })
+        .collect();
+    let allowed = findings.iter().filter(|f| allow.permits(f)).count();
+    Json::obj(vec![
+        ("catalog_version", Json::Num(CATALOG_VERSION as f64)),
+        ("total", Json::Num(findings.len() as f64)),
+        ("allowlisted", Json::Num(allowed as f64)),
+        (
+            "violations",
+            Json::Num((findings.len() - allowed) as f64),
+        ),
+        ("findings", Json::Arr(records)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // needles assembled with concat! here too, so these snippets stay
+    // invisible even if the region skipper ever regressed
+    fn spawn_call() -> String {
+        format!("    std::{}(|| work());", concat!("thread", "::spawn"))
+    }
+
+    #[test]
+    fn l001_confines_concurrency_to_shard() {
+        let src = format!("fn f() {{\n{}\n}}\n", spawn_call());
+        let hits = scan_source("coordinator/mod.rs", &src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "STUN-L001");
+        assert_eq!(hits[0].line, 2);
+        assert!(scan_source("shard/engine.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn comment_lines_and_test_regions_are_skipped() {
+        let src = format!(
+            "// {}\nfn f() {{}}\n#[cfg(test)]\nmod tests {{\n{}\n}}\n",
+            spawn_call(),
+            spawn_call()
+        );
+        assert!(scan_source("coordinator/mod.rs", &src).is_empty());
+        // ...but the same call before the gated region is still caught
+        let src = format!("{}\n#[cfg(test)]\nmod tests {{\n}}\n", spawn_call());
+        assert_eq!(scan_source("coordinator/mod.rs", &src).len(), 1);
+    }
+
+    #[test]
+    fn l002_flags_mul_acc_but_not_index_arithmetic() {
+        let matmul = "        out[i * n + j] += av * brow[j];\n";
+        let hits = scan_source("coordinator/mod.rs", matmul);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "STUN-L002");
+        // the kernel seams keep their loops
+        assert!(scan_source("runtime/native.rs", matmul).is_empty());
+        assert!(scan_source("sparse/csr.rs", matmul).is_empty());
+        // a * that only computes the index is not an accumulation
+        let stats = "        acc[k] += data[i * d + k];\n";
+        assert!(scan_source("pruning/unstructured.rs", stats).is_empty());
+    }
+
+    #[test]
+    fn l003_bans_panicking_accessors_on_the_hot_path_only() {
+        let src = format!("    let x = opt{};\n", concat!(".unwr", "ap()"));
+        let hits = scan_source("sparse/mod.rs", &src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "STUN-L003");
+        assert!(scan_source("report/mod.rs", &src).is_empty());
+        // fallible-with-default accessors are fine
+        let ok = format!("    let x = opt{}(0);\n", concat!(".unwr", "ap_or"));
+        assert!(scan_source("sparse/mod.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn l004_and_l005_fire_in_scope() {
+        let red = format!(
+            "    let t: f32 = m{}{};\n",
+            concat!(".val", "ues()"),
+            concat!(".su", "m()")
+        );
+        assert_eq!(scan_source("report/mod.rs", &red)[0].rule, "STUN-L004");
+        let clock = format!("    let t0 = {};\n", concat!("Instant", "::now()"));
+        assert_eq!(scan_source("quant/mod.rs", &clock)[0].rule, "STUN-L005");
+        assert!(scan_source("coordinator/mod.rs", &clock).is_empty());
+    }
+
+    #[test]
+    fn allowlist_matches_by_rule_file_suffix_and_substring() {
+        let allow = Allowlist::parse(
+            r#"{"version": 1, "allow": [
+                {"rule": "STUN-L001", "file": "coordinator/mod.rs",
+                 "contains": "spawn", "reason": "vetted"}
+            ]}"#,
+        )
+        .unwrap();
+        let hit = &scan_source("coordinator/mod.rs", &format!("{}\n", spawn_call()))[0];
+        assert!(allow.permits(hit));
+        let elsewhere = &scan_source("runtime/mod.rs", &format!("{}\n", spawn_call()))[0];
+        assert!(!allow.permits(elsewhere));
+        assert!(allow.stale(&[]).len() == 1);
+    }
+
+    #[test]
+    fn allowlist_rejects_unjustified_entries() {
+        let err = Allowlist::parse(
+            r#"{"version": 1, "allow": [
+                {"rule": "STUN-L001", "file": "a.rs", "contains": "x", "reason": "  "}
+            ]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("justification"), "{err}");
+    }
+
+    /// The acceptance gate: the linter over the crate's own `src/`, with
+    /// the checked-in allowlist, reports zero non-allowlisted findings —
+    /// and every allowlist entry still vouches for a live finding.
+    #[test]
+    fn current_tree_is_clean_under_the_checked_in_allowlist() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = scan_tree(&manifest.join("src")).unwrap();
+        let allow = Allowlist::load(&manifest.join("lint-allowlist.json")).unwrap();
+        let violations: Vec<&Finding> =
+            findings.iter().filter(|f| !allow.permits(f)).collect();
+        assert!(
+            violations.is_empty(),
+            "non-allowlisted lint findings:\n{violations:#?}"
+        );
+        let stale = allow.stale(&findings);
+        assert!(stale.is_empty(), "stale allowlist entries:\n{stale:#?}");
+    }
+}

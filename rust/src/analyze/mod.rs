@@ -1,0 +1,14 @@
+//! Invariant analysis: the `stun-lint` source pass ([`lint`]) and the
+//! `stun check` artifact validator ([`validate`]).
+//!
+//! The two halves cover the two places an invariant can rot: [`lint`]
+//! walks the *sources* and rejects code that bypasses an architectural
+//! seam (concurrency confinement, the matmul seams, hot-path panic
+//! hygiene); [`validate`] walks the *artifacts* (compiled models, shard
+//! placements, checkpoints) and rejects structures the kernels would
+//! otherwise trust blindly. Both are wired into CI as gates, and the
+//! artifact validators also run at construction boundaries under
+//! `debug_assertions`.
+
+pub mod lint;
+pub mod validate;

@@ -1,0 +1,307 @@
+//! Semantic validation of runtime artifacts: compiled models, shard
+//! placements, and checkpoints.
+//!
+//! Construction code (`CompiledModel::compile`, `Placement::build`,
+//! `Checkpoint::load`) upholds these invariants by design; this module
+//! re-derives them from the artifact alone so a corrupted file, a buggy
+//! refactor, or a hand-built structure is rejected with a diagnostic
+//! instead of indexing wild in a kernel. Three layers:
+//!
+//! * [`validate_compiled`] — walks every stored tensor of a
+//!   [`CompiledModel`] (CSR well-formedness, finite non-negative quant
+//!   scales, shape agreement) and cross-checks the model's
+//!   [`CompileStats`](crate::sparse::CompileStats) against a recount, so
+//!   dead experts provably contribute zero compiled bytes. With
+//!   `strict_bytes` it additionally asserts every tensor costs exactly
+//!   what [`crate::quant::tensor_store_bytes`] prices — sound only for
+//!   models compiled at the default density threshold, which is why the
+//!   `debug_assertions` hook at the compile boundary passes `false`.
+//! * [`validate_placement`] — delegates to [`Placement::validate`]:
+//!   primaries in range (no orphaned experts), replica sets in range,
+//!   duplicate-free and disjoint from the primary, dead experts carrying
+//!   no replicas.
+//! * [`check_params`] — the engine behind the `stun check` CLI: binds a
+//!   loaded [`Checkpoint`] to a [`ModelConfig`], compiles it under the
+//!   given [`SparseConfig`], and runs the strict tensor sweep.
+//!
+//! Format-level checkpoint hardening (section bounds validated *before*
+//! allocation, quant scales checked at read time) lives in
+//! [`Checkpoint::load`] itself so every load path is covered, not just
+//! `stun check`.
+
+use crate::checkpoint::Checkpoint;
+use crate::model::{ModelConfig, ParamSet};
+use crate::quant::QuantMat;
+use crate::shard::Placement;
+use crate::sparse::{CompiledExpert, CompiledModel, SparseConfig};
+use anyhow::{ensure, Context, Result};
+
+/// What `stun check` prints after a checkpoint passes.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    /// Tensor sections in the checkpoint file.
+    pub tensors: usize,
+    /// Weight matrices the compile pass stored (trunk + alive experts).
+    pub compiled_tensors: usize,
+    /// Of those, stored CSR.
+    pub csr_tensors: usize,
+    /// Experts row-compressed away entirely.
+    pub experts_dead: usize,
+    /// f32 bytes if everything stayed dense.
+    pub bytes_dense: usize,
+    /// Actual bytes of the compiled weight storage.
+    pub bytes_compiled: usize,
+}
+
+/// One stored tensor: structural validity, plus (strict mode) exact
+/// agreement with the authoritative byte rule.
+fn check_tensor(
+    w: &QuantMat,
+    what: &str,
+    strict_bytes: bool,
+    tensors: &mut usize,
+    csr_tensors: &mut usize,
+    bytes_compiled: &mut usize,
+) -> Result<()> {
+    w.validate().with_context(|| format!("{what}: storage invariant"))?;
+    if strict_bytes {
+        w.validate_store_bytes()
+            .with_context(|| format!("{what}: byte rule"))?;
+    }
+    *tensors += 1;
+    if w.is_csr() {
+        *csr_tensors += 1;
+    }
+    *bytes_compiled += w.bytes();
+    Ok(())
+}
+
+/// Validate a compiled model end to end. See the module docs for what
+/// `strict_bytes` adds and when it is sound.
+pub fn validate_compiled(model: &CompiledModel, strict_bytes: bool) -> Result<()> {
+    let cfg = model.config();
+    let (d, e) = (cfg.d_model, cfg.n_experts);
+    ensure!(
+        model.layers.len() == cfg.n_layers,
+        "model holds {} compiled layers but the config declares {}",
+        model.layers.len(),
+        cfg.n_layers
+    );
+    ensure!(
+        model.embed.len() == cfg.vocab * d,
+        "embed slab holds {} values for [{}, {d}]",
+        model.embed.len(),
+        cfg.vocab
+    );
+    ensure!(
+        model.pos.len() == cfg.seq * d,
+        "pos_embed slab holds {} values for [{}, {d}]",
+        model.pos.len(),
+        cfg.seq
+    );
+    ensure!(
+        model.ln_f.len() == d,
+        "ln_f gain holds {} values for d_model {d}",
+        model.ln_f.len()
+    );
+
+    let (mut tensors, mut csr_tensors, mut bytes_compiled) = (0usize, 0usize, 0usize);
+    let mut experts_dead = 0usize;
+    for (l, layer) in model.layers.iter().enumerate() {
+        ensure!(
+            layer.ln1.len() == d && layer.ln2.len() == d,
+            "layer {l} layernorm gains hold {}/{} values for d_model {d}",
+            layer.ln1.len(),
+            layer.ln2.len()
+        );
+        ensure!(
+            layer.router.len() == e * d,
+            "layer {l} router holds {} values for [{e}, {d}]",
+            layer.router.len()
+        );
+        ensure!(
+            layer.expert_mask.len() == e && layer.experts.len() == e,
+            "layer {l} holds {} experts / {} mask entries for n_experts {e}",
+            layer.experts.len(),
+            layer.expert_mask.len()
+        );
+        check_tensor(
+            &layer.wqkv,
+            &format!("layer {l} wqkv"),
+            strict_bytes,
+            &mut tensors,
+            &mut csr_tensors,
+            &mut bytes_compiled,
+        )?;
+        check_tensor(
+            &layer.wo,
+            &format!("layer {l} wo"),
+            strict_bytes,
+            &mut tensors,
+            &mut csr_tensors,
+            &mut bytes_compiled,
+        )?;
+        for (ei, ex) in layer.experts.iter().enumerate() {
+            let routable = layer.expert_mask[ei] != 0.0;
+            match ex {
+                CompiledExpert::Dead => {
+                    // a Dead expert stores nothing at all, so the only
+                    // way it can leak bytes is by disagreeing with the
+                    // router mask (the router would still dispatch to it)
+                    ensure!(
+                        !routable,
+                        "layer {l} expert {ei} is router-masked alive but compiled Dead"
+                    );
+                    experts_dead += 1;
+                }
+                CompiledExpert::Alive { w1, w2 } => {
+                    ensure!(
+                        routable,
+                        "layer {l} expert {ei} is router-masked dead but keeps {} compiled bytes",
+                        w1.bytes() + w2.bytes()
+                    );
+                    check_tensor(
+                        w1,
+                        &format!("layer {l} expert {ei} w1"),
+                        strict_bytes,
+                        &mut tensors,
+                        &mut csr_tensors,
+                        &mut bytes_compiled,
+                    )?;
+                    check_tensor(
+                        w2,
+                        &format!("layer {l} expert {ei} w2"),
+                        strict_bytes,
+                        &mut tensors,
+                        &mut csr_tensors,
+                        &mut bytes_compiled,
+                    )?;
+                }
+            }
+        }
+    }
+    check_tensor(
+        &model.lm_head,
+        "lm_head",
+        strict_bytes,
+        &mut tensors,
+        &mut csr_tensors,
+        &mut bytes_compiled,
+    )?;
+
+    // stats cross-check: the recount above only visited Alive storage,
+    // so equality here is the "dead experts truly zero bytes" proof —
+    // any phantom storage would surface as a byte-count mismatch
+    let st = model.stats();
+    ensure!(
+        st.tensors == tensors && st.csr_tensors == csr_tensors,
+        "compile stats claim {}/{} tensors (total/CSR) but the model stores {tensors}/{csr_tensors}",
+        st.tensors,
+        st.csr_tensors
+    );
+    ensure!(
+        st.experts_dead == experts_dead,
+        "compile stats claim {} dead experts but the model holds {experts_dead}",
+        st.experts_dead
+    );
+    ensure!(
+        st.bytes_compiled == bytes_compiled,
+        "compile stats claim {} compiled bytes but the stored tensors sum to {bytes_compiled}",
+        st.bytes_compiled
+    );
+    Ok(())
+}
+
+/// Validate a shard placement; `bytes` (per-layer, per-expert resident
+/// bytes) additionally enables the dead-expert replica check. Thin alias
+/// of [`Placement::validate`] so artifact validation has one front door.
+pub fn validate_placement(p: &Placement, bytes: Option<&[Vec<usize>]>) -> Result<()> {
+    p.validate(bytes)
+}
+
+/// The engine behind `stun check`: bind `ckpt` to `config`, compile it
+/// under `scfg`, and run the strict tensor sweep. The caller picks the
+/// config (CLI `--config`, or the name recorded in the checkpoint meta)
+/// and the storage width; the density threshold must stay at its default
+/// for the strict byte rule to be meaningful.
+pub fn check_params(
+    config: &ModelConfig,
+    ckpt: &Checkpoint,
+    scfg: &SparseConfig,
+) -> Result<CheckReport> {
+    let params = ParamSet::from_checkpoint(config, ckpt)
+        .context("checkpoint does not bind to this config as a complete parameter set")?;
+    let model = CompiledModel::compile(&params, scfg);
+    validate_compiled(&model, true)?;
+    let st = model.stats();
+    Ok(CheckReport {
+        tensors: ckpt.len(),
+        compiled_tensors: st.tensors,
+        csr_tensors: st.csr_tensors,
+        experts_dead: st.experts_dead,
+        bytes_dense: st.bytes_dense,
+        bytes_compiled: st.bytes_compiled,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> (ModelConfig, ParamSet) {
+        let cfg = ModelConfig::test_tiny();
+        let ps = ParamSet::init(&cfg, 7);
+        (cfg, ps)
+    }
+
+    #[test]
+    fn freshly_compiled_model_passes_strict_validation() {
+        let (_, mut ps) = tiny_params();
+        crate::pruning::unstructured::magnitude_prune(&mut ps, 0.6).unwrap();
+        let model = CompiledModel::compile(&ps, &SparseConfig::default());
+        validate_compiled(&model, true).unwrap();
+    }
+
+    #[test]
+    fn mask_expert_disagreement_is_rejected() {
+        let (_, ps) = tiny_params();
+        let mut model = CompiledModel::compile(&ps, &SparseConfig::default());
+        // flip one alive expert's router mask to dead: storage now leaks
+        model.layers[0].expert_mask[0] = 0.0;
+        let err = validate_compiled(&model, false).unwrap_err().to_string();
+        assert!(err.contains("router-masked dead"), "{err}");
+    }
+
+    #[test]
+    fn stats_byte_tampering_is_rejected() {
+        let (_, ps) = tiny_params();
+        let mut model = CompiledModel::compile(&ps, &SparseConfig::default());
+        model.stats.bytes_compiled += 1;
+        let err = validate_compiled(&model, false).unwrap_err().to_string();
+        assert!(err.contains("compiled bytes"), "{err}");
+    }
+
+    #[test]
+    fn check_params_accepts_a_roundtripped_pruned_checkpoint() {
+        let (cfg, mut ps) = tiny_params();
+        // kill one expert so the dead-expert accounting path is exercised
+        ps.prune_expert(0, 1);
+        crate::pruning::unstructured::magnitude_prune(&mut ps, 0.6).unwrap();
+        let ckpt = ps.to_checkpoint(r#"{"pruned":"stun","config":"tiny"}"#);
+        let report = check_params(&cfg, &ckpt, &SparseConfig::default()).unwrap();
+        assert_eq!(report.experts_dead, 1);
+        assert!(report.csr_tensors > 0, "0.6 sparsity should compile CSR");
+        assert!(report.bytes_compiled < report.bytes_dense);
+    }
+
+    #[test]
+    fn check_params_rejects_an_incomplete_checkpoint() {
+        let (cfg, ps) = tiny_params();
+        let mut ckpt = Checkpoint::new("{}");
+        ckpt.push("embed", ps.get("embed").unwrap().clone()).unwrap();
+        let err = check_params(&cfg, &ckpt, &SparseConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("complete parameter set"), "{err}");
+    }
+}

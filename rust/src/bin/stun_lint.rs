@@ -1,0 +1,78 @@
+//! `stun_lint` — the source-invariant linter over `rust/src`.
+//!
+//! ```text
+//! stun_lint [--src DIR] [--allowlist FILE] [--out REPORT.json]
+//! ```
+//!
+//! Scans every `.rs` file under `--src` (default: this crate's `src/`)
+//! against the versioned rule catalog (`STUN-L001`..`STUN-L005`; see
+//! `stun::analyze::lint`), applies the checked-in allowlist (default:
+//! `lint-allowlist.json` next to `Cargo.toml`), and emits a
+//! machine-readable JSON report to `--out` or stdout.
+//!
+//! Exit status: 0 when every finding is allowlisted and no allowlist
+//! entry is stale, 1 on violations (CI gates on this), 2 on I/O or
+//! parse errors.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use stun::analyze::lint::{report_json, scan_tree, Allowlist};
+use stun::util::args::Args;
+
+fn main() {
+    match run() {
+        Ok(0) => {}
+        Ok(n) => {
+            eprintln!("stun-lint: {n} violation(s)");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("stun-lint error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> Result<usize> {
+    let args = Args::parse(std::env::args().skip(1));
+    let src = PathBuf::from(args.str_or("src", concat!(env!("CARGO_MANIFEST_DIR"), "/src")));
+    let allow_path = args.str_or(
+        "allowlist",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/lint-allowlist.json"),
+    );
+    let allow = if Path::new(&allow_path).exists() {
+        Allowlist::load(Path::new(&allow_path))?
+    } else {
+        Allowlist::empty()
+    };
+
+    let findings = scan_tree(&src)?;
+    let violations = findings.iter().filter(|f| !allow.permits(f)).count();
+    let stale = allow.stale(&findings);
+
+    let report = report_json(&findings, &allow).to_string();
+    match args.str_opt("out") {
+        Some(path) => {
+            std::fs::write(&path, &report).with_context(|| format!("writing {path}"))?;
+            eprintln!("stun-lint: wrote {path}");
+        }
+        None => println!("{report}"),
+    }
+    eprintln!(
+        "stun-lint: {} finding(s), {} allowlisted, {violations} violation(s)",
+        findings.len(),
+        findings.len() - violations
+    );
+    for f in findings.iter().filter(|f| !allow.permits(f)) {
+        eprintln!("  {} {}:{} {}", f.rule, f.file, f.line, f.snippet);
+    }
+    // a stale entry is a violation too: the allowlist must shrink with
+    // the tree, never accumulate dead exceptions
+    for e in &stale {
+        eprintln!(
+            "  stale allowlist entry: {} in {} (contains {:?})",
+            e.rule, e.file, e.contains
+        );
+    }
+    Ok(violations + stale.len())
+}

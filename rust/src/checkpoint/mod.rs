@@ -212,12 +212,17 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Load any supported version. Every section size the header claims
+    /// is charged against the file's actual length ([`ByteBudget`])
+    /// *before* the buffer for it is allocated, and tensor dim products
+    /// use checked arithmetic — a corrupted or adversarial header is
+    /// rejected with a diagnostic, never a panic or a huge allocation.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let path = path.as_ref();
-        let mut r = BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("opening {}", path.display()))?,
-        );
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut r = BufReader::new(file);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         let version: u8 = if &magic == MAGIC_V1 {
@@ -229,42 +234,91 @@ impl Checkpoint {
         } else {
             bail!("{}: not an .stz checkpoint", path.display());
         };
+        let mut budget = ByteBudget(file_len.saturating_sub(8));
+        budget.claim(4, 1, "meta length")?;
         let meta_len = read_u32(&mut r)? as usize;
+        budget.claim(meta_len, 1, "metadata")?;
         let mut meta = vec![0u8; meta_len];
         r.read_exact(&mut meta)?;
+        budget.claim(4, 1, "tensor count")?;
         let count = read_u32(&mut r)? as usize;
+        // each tensor directory entry costs ≥ 3 bytes even in v1
+        if (count as u64).checked_mul(3).unwrap_or(u64::MAX) > budget.0 {
+            bail!(
+                "checkpoint claims {count} tensors but only {} bytes remain in the file",
+                budget.0
+            );
+        }
         let mut ckpt = Checkpoint::new(String::from_utf8(meta)?);
         for _ in 0..count {
+            budget.claim(2, 1, "tensor name length")?;
             let name_len = read_u16(&mut r)? as usize;
+            budget.claim(name_len, 1, "tensor name")?;
             let mut name = vec![0u8; name_len];
             r.read_exact(&mut name)?;
+            budget.claim(1, 1, "tensor ndim")?;
             let ndim = read_u8(&mut r)? as usize;
+            budget.claim(ndim, 4, "tensor dims")?;
             let mut dims = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 dims.push(read_u32(&mut r)? as usize);
             }
-            let n: usize = dims.iter().product();
-            let enc = if version == 1 { ENC_DENSE } else { read_u8(&mut r)? };
+            let n = dims
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .ok_or_else(|| anyhow::anyhow!("tensor dims {dims:?} overflow usize"))?;
+            let enc = if version == 1 {
+                ENC_DENSE
+            } else {
+                budget.claim(1, 1, "tensor encoding")?;
+                read_u8(&mut r)?
+            };
             let data = match enc {
-                ENC_DENSE => read_f32s(&mut r, n)?,
+                ENC_DENSE => {
+                    budget.claim(n, 4, "dense f32 payload")?;
+                    read_f32s(&mut r, n)?
+                }
                 ENC_SPARSE => {
+                    budget.claim(8, 1, "sparse nnz")?;
                     let nnz = read_u64(&mut r)? as usize;
                     if nnz > n {
                         bail!("sparse tensor claims {nnz} non-zeros in {n} elements");
                     }
+                    budget.claim(n.div_ceil(8), 1, "sparse bitmap")?;
                     let mut bitmap = vec![0u8; n.div_ceil(8)];
                     r.read_exact(&mut bitmap)?;
+                    budget.claim(nnz, 4, "sparse values")?;
                     let vals = read_f32s(&mut r, nnz)?;
                     scatter_by_bitmap(&bitmap, &vals, n)?
                 }
                 ENC_QUANT_DENSE | ENC_QUANT_SPARSE if version >= 3 => {
-                    read_quant_section(&mut r, enc, &dims, n)?
+                    read_quant_section(&mut r, enc, &dims, n, &mut budget)?
                 }
                 other => bail!("unknown tensor encoding {other} (version {version})"),
             };
             ckpt.push(String::from_utf8(name)?, Tensor::new(&dims, data)?)?;
         }
         Ok(ckpt)
+    }
+}
+
+/// Remaining-bytes budget of a checkpoint being loaded: header-claimed
+/// section sizes are charged against the file's actual length *before*
+/// any buffer is allocated, so a corrupted header claiming gigabytes in
+/// a kilobyte file fails the claim, not the allocator.
+struct ByteBudget(u64);
+
+impl ByteBudget {
+    fn claim(&mut self, count: usize, unit: u64, what: &str) -> Result<()> {
+        let need = (count as u64).checked_mul(unit).unwrap_or(u64::MAX);
+        if need > self.0 {
+            bail!(
+                "checkpoint section '{what}' claims {need} bytes but only {} remain in the file",
+                self.0
+            );
+        }
+        self.0 -= need;
+        Ok(())
     }
 }
 
@@ -311,7 +365,9 @@ fn scatter_by_bitmap(bitmap: &[u8], vals: &[f32], n: usize) -> Result<Vec<f32>> 
 /// matrix-shaped tensor: per-row absmax codes + one f32 scale per row.
 fn write_quant_section(w: &mut impl Write, t: &Tensor, scheme: QuantScheme) -> Result<()> {
     let n = t.data().len();
-    let cols = *t.shape().last().expect("ndim >= 2");
+    let Some(&cols) = t.shape().last() else {
+        bail!("quantized sections need a matrix-shaped tensor");
+    };
     let rows = n / cols;
     let cb = scheme.value_bytes();
     // one zero-ness scan (the shared gather) feeds the size decision,
@@ -356,32 +412,45 @@ fn read_quant_section(
     enc: u8,
     dims: &[usize],
     n: usize,
+    budget: &mut ByteBudget,
 ) -> Result<Vec<f32>> {
     if dims.len() < 2 {
         bail!("quantized section on a {}-d tensor", dims.len());
     }
-    let cols = *dims.last().expect("ndim >= 2");
+    let Some(&cols) = dims.last() else {
+        bail!("quantized section on a 0-d tensor");
+    };
     if cols == 0 || n == 0 {
         bail!("quantized section on an empty tensor");
     }
     let rows = n / cols;
+    budget.claim(1, 1, "quant scheme")?;
     let scheme = match read_u8(r)? {
         SCHEME_U16 => QuantScheme::U16,
         SCHEME_U8 => QuantScheme::U8,
         other => bail!("unknown quant scheme byte {other}"),
     };
+    let cb = scheme.value_bytes() as u64;
     if enc == ENC_QUANT_DENSE {
+        budget.claim(rows, 4, "quant scales")?;
         let scales = read_f32s(r, rows)?;
+        check_scales(&scales)?;
+        budget.claim(n, cb, "quant codes")?;
         let codes = read_codes(r, n, scheme)?;
         return Ok(quant::dequantize_spans(&scales, &codes, &vec![cols; rows]));
     }
+    budget.claim(8, 1, "quant-sparse nnz")?;
     let nnz = read_u64(r)? as usize;
     if nnz > n {
         bail!("quant-sparse tensor claims {nnz} non-zeros in {n} elements");
     }
+    budget.claim(n.div_ceil(8), 1, "quant-sparse bitmap")?;
     let mut bitmap = vec![0u8; n.div_ceil(8)];
     r.read_exact(&mut bitmap)?;
+    budget.claim(rows, 4, "quant scales")?;
     let scales = read_f32s(r, rows)?;
+    check_scales(&scales)?;
+    budget.claim(nnz, cb, "quant codes")?;
     let codes = read_codes(r, nnz, scheme)?;
     let mut spans = vec![0usize; rows];
     let mut popcount = 0usize;
@@ -396,6 +465,20 @@ fn read_quant_section(
     }
     let vals = quant::dequantize_spans(&scales, &codes, &spans);
     scatter_by_bitmap(&bitmap, &vals, n)
+}
+
+/// Quantized scales are per-row `absmax / QMAX` — always finite and
+/// non-negative by construction. Anything else in a file is corruption
+/// (a flipped bit turns a scale into NaN/∞ and would poison every value
+/// of the row), rejected here at the load boundary before the data can
+/// reach a kernel.
+fn check_scales(scales: &[f32]) -> Result<()> {
+    for (i, &s) in scales.iter().enumerate() {
+        if !s.is_finite() || s < 0.0 {
+            bail!("quant scale {i} is {s} (must be finite and non-negative)");
+        }
+    }
+    Ok(())
 }
 
 /// Bulk-write an f32 slice as little-endian bytes.
@@ -694,6 +777,67 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_quant_section_rejected() {
+        let mut c = Checkpoint::new("meta");
+        c.push("w", Tensor::ones(&[32, 32])).unwrap();
+        let p = tmp("trunc-quant");
+        c.save_quant(&p, QuantScheme::U16).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // drop the tail of the code array: the byte budget rejects the
+        // section before the read — never a panic
+        std::fs::write(&p, &bytes[..bytes.len() - 64]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn nan_quant_scale_rejected_at_load() {
+        let mut c = Checkpoint::new("");
+        c.push("w", Tensor::ones(&[8, 8])).unwrap();
+        let p = tmp("nanscale");
+        c.save_quant(&p, QuantScheme::U8).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // per-row scales start right after the scheme byte (offset 30;
+        // see quant_scheme_byte_is_validated for the header arithmetic)
+        bytes[30..34].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("finite"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn huge_header_claims_rejected_before_allocation() {
+        // hand-craft a v3 file whose only tensor claims 2^30 × 2^30
+        // elements in a ~30-byte file: the byte budget must reject it
+        // without ever attempting the 4-exbibyte allocation
+        let p = tmp("hugedims");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"STZCKPT3");
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // meta len
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        bytes.extend_from_slice(&1u16.to_le_bytes()); // name len
+        bytes.push(b'w');
+        bytes.push(2); // ndim
+        bytes.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        bytes.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        bytes.push(super::ENC_DENSE);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("remain in the file"), "{err}");
+        std::fs::remove_file(p).ok();
+
+        // a metadata length beyond the file is equally rejected
+        let p2 = tmp("hugemeta");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"STZCKPT3");
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p2, &bytes).unwrap();
+        assert!(Checkpoint::load(&p2).is_err());
+        std::fs::remove_file(p2).ok();
     }
 
     #[test]

@@ -54,7 +54,7 @@ use crate::runtime::{Backend, CompiledForward, DecodeState, StepOutput};
 use crate::shard::{Placement, ShardedEngine};
 use crate::sparse::SparseConfig;
 use crate::util::json::Json;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -722,7 +722,9 @@ impl<'b> Batcher<'b> {
             }),
             (None, _) => {
                 // construction invariant: exactly one of compiled/params
-                let p = self.params.as_ref().expect("dense path retains params");
+                let Some(p) = self.params.as_ref() else {
+                    bail!("batcher holds neither a compiled engine nor dense params");
+                };
                 self.backend.session_round(p, &mut self.state, slots)
             }
         }
@@ -820,21 +822,27 @@ impl<'b> Batcher<'b> {
 
     /// Accept one sampled token for `slot`: append it, and retire the
     /// sequence (recycling the slot and its cache) when it finished.
+    /// Errors (rather than aborting the serve loop's process) if the
+    /// slot bookkeeping ever hands it an empty slot.
     fn accept_token(
         &mut self,
         slot: usize,
         row: &[f32],
         responses: &mut Vec<Response>,
         metrics: &mut ServeMetrics,
-    ) {
+    ) -> Result<()> {
         let tok = greedy_token(row);
         debug_assert_ne!(tok, PAD);
-        let a = self.slots[slot].as_mut().expect("token for an empty slot");
+        let Some(a) = self.slots[slot].as_mut() else {
+            bail!("sampled a token for empty slot {slot}");
+        };
         a.generated.push(tok);
         metrics.generated_tokens += 1;
         let finished = tok == SEMI || a.generated.len() >= a.req.max_new;
         if finished {
-            let a = self.slots[slot].take().expect("slot emptied twice");
+            let Some(a) = self.slots[slot].take() else {
+                bail!("slot {slot} emptied twice");
+            };
             self.state.reset(slot);
             let resp = Response {
                 id: a.req.id,
@@ -848,6 +856,7 @@ impl<'b> Batcher<'b> {
             }
             responses.push(resp);
         }
+        Ok(())
     }
 
     /// Admit a batch of requests into free slots as **one** prefill
@@ -867,7 +876,9 @@ impl<'b> Batcher<'b> {
         let started = Instant::now();
         let mut slots = Vec::with_capacity(jobs.len());
         for (req, arrived, respond) in jobs {
-            let slot = self.free_slot().expect("admit requires a free slot");
+            let Some(slot) = self.free_slot() else {
+                bail!("admit_round was handed more jobs than free slots");
+            };
             self.state.begin(slot, &req.prompt);
             self.slots[slot] = Some(Active {
                 req,
@@ -882,7 +893,7 @@ impl<'b> Batcher<'b> {
         metrics.decode_steps += 1;
         let stall = self.touch_experts(&out, slots.len(), metrics);
         for (ri, &slot) in slots.iter().enumerate() {
-            self.accept_token(slot, out.logits.row(ri), responses, metrics);
+            self.accept_token(slot, out.logits.row(ri), responses, metrics)?;
         }
         Ok(stall)
     }
@@ -901,8 +912,10 @@ impl<'b> Batcher<'b> {
             .iter()
             .enumerate()
             .filter_map(|(i, s)| {
+                // slots become active via accept_token, which pushes the
+                // first token — an empty `generated` never steps
                 s.as_ref()
-                    .map(|a| (i, *a.generated.last().expect("active slots hold ≥1 token")))
+                    .and_then(|a| a.generated.last().map(|&t| (i, t)))
             })
             .collect();
         if steps.is_empty() {
@@ -916,7 +929,7 @@ impl<'b> Batcher<'b> {
         metrics.decode_steps += 1;
         let stall = self.touch_experts(&out, slots.len(), metrics);
         for (ri, &(slot, _)) in steps.iter().enumerate() {
-            self.accept_token(slot, out.logits.row(ri), responses, metrics);
+            self.accept_token(slot, out.logits.row(ri), responses, metrics)?;
         }
         Ok(stall)
     }
@@ -944,14 +957,16 @@ impl<'b> Batcher<'b> {
             let mut free = self.slots.iter().filter(|s| s.is_none()).count();
             let mut admits = Vec::new();
             while free > 0 {
-                match queue.front() {
-                    Some(req) if t0.elapsed() >= req.arrive_offset => {
-                        let req = queue.pop_front().expect("front exists");
-                        let arrived = t0 + req.arrive_offset;
-                        admits.push((req, arrived, None));
-                        free -= 1;
-                    }
-                    _ => break,
+                let due = queue
+                    .front()
+                    .is_some_and(|req| t0.elapsed() >= req.arrive_offset);
+                if !due {
+                    break;
+                }
+                if let Some(req) = queue.pop_front() {
+                    let arrived = t0 + req.arrive_offset;
+                    admits.push((req, arrived, None));
+                    free -= 1;
                 }
             }
             swap_stall += self.admit_round(admits, &mut responses, &mut metrics)?;
@@ -1023,32 +1038,34 @@ impl ServerHandle {
 pub struct Server<'b> {
     batcher: Batcher<'b>,
     rx: mpsc::Receiver<Job>,
-    tx: Option<mpsc::Sender<Job>>,
+    tx: mpsc::Sender<Job>,
 }
 
 impl<'b> Server<'b> {
     pub fn new(batcher: Batcher<'b>) -> Server<'b> {
         let (tx, rx) = mpsc::channel();
-        Server {
-            batcher,
-            rx,
-            tx: Some(tx),
-        }
+        Server { batcher, rx, tx }
     }
 
     /// A new submission handle (clone freely across producer threads).
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
-            tx: self.tx.as_ref().expect("server not yet run").clone(),
+            tx: self.tx.clone(),
         }
     }
 
     /// Engine loop: continuous batching over everything the producers
     /// send, until every [`ServerHandle`] is dropped and the queue drains.
     /// Consumes the server; returns aggregate metrics.
-    pub fn run(mut self) -> Result<ServeMetrics> {
-        // Drop our own sender so rx disconnects once all handles are gone.
-        drop(self.tx.take());
+    pub fn run(self) -> Result<ServeMetrics> {
+        // Destructure so our own sender drops here — rx then disconnects
+        // as soon as every ServerHandle is gone.
+        let Server {
+            mut batcher,
+            rx,
+            tx,
+        } = self;
+        drop(tx);
         let t0 = Instant::now();
         let mut pending: VecDeque<Job> = VecDeque::new();
         let mut responses: Vec<Response> = Vec::new();
@@ -1058,14 +1075,14 @@ impl<'b> Server<'b> {
 
         loop {
             // intake: block only when idle, otherwise just drain
-            if self.batcher.active_count() == 0 && pending.is_empty() && !disconnected {
-                match self.rx.recv() {
+            if batcher.active_count() == 0 && pending.is_empty() && !disconnected {
+                match rx.recv() {
                     Ok(job) => pending.push_back(job),
                     Err(_) => disconnected = true,
                 }
             }
             loop {
-                match self.rx.try_recv() {
+                match rx.try_recv() {
                     Ok(job) => pending.push_back(job),
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
@@ -1078,12 +1095,7 @@ impl<'b> Server<'b> {
             // session slots in one batched round; retired responses
             // stream straight to their own channel via Active::respond
             metrics.queue_depth.record(pending.len());
-            let mut free = self
-                .batcher
-                .slots
-                .iter()
-                .filter(|s| s.is_none())
-                .count();
+            let mut free = batcher.slots.iter().filter(|s| s.is_none()).count();
             let mut admits = Vec::new();
             while free > 0 {
                 match pending.pop_front() {
@@ -1094,22 +1106,20 @@ impl<'b> Server<'b> {
                     None => break,
                 }
             }
-            swap_stall += self
-                .batcher
-                .admit_round(admits, &mut responses, &mut metrics)?;
-            if self.batcher.active_count() == 0 {
+            swap_stall += batcher.admit_round(admits, &mut responses, &mut metrics)?;
+            if batcher.active_count() == 0 {
                 if disconnected {
                     break;
                 }
                 continue;
             }
-            metrics.occupancy.record(self.batcher.active_count());
-            swap_stall += self.batcher.decode_round(&mut responses, &mut metrics)?;
+            metrics.occupancy.record(batcher.active_count());
+            swap_stall += batcher.decode_round(&mut responses, &mut metrics)?;
         }
 
         metrics.simulated_swap_stall = swap_stall;
-        metrics.finalise(&responses, t0, &self.batcher.store);
-        if let Some(sh) = &self.batcher.shards {
+        metrics.finalise(&responses, t0, &batcher.store);
+        if let Some(sh) = &batcher.shards {
             metrics.attach_shards(sh);
         }
         Ok(metrics)

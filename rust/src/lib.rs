@@ -135,6 +135,43 @@
 //! records shard arms into `BENCH_serve.json` (informational — the perf
 //! gate keeps gating single-engine arms only).
 //!
+//! ## Invariant catalog
+//!
+//! The type system cannot express every architectural contract this
+//! crate relies on, so [`analyze`] enforces the rest as two CI-gated
+//! passes. `stun-lint` (the `stun_lint` binary over [`analyze::lint`])
+//! scans the sources against a versioned rule catalog:
+//!
+//! * **STUN-L001** — concurrency primitives (thread spawning, locks,
+//!   raw channels) stay confined to [`shard`]; everything else is
+//!   single-threaded by construction, which is what makes decode
+//!   determinism cheap to reason about.
+//! * **STUN-L002** — all weight arithmetic goes through the
+//!   [`quant::QuantMat::matmul_acc`] / [`sparse::WeightMat`] seams; no
+//!   ad-hoc f32 multiply-accumulate loops outside `sparse/`, `quant/`,
+//!   and `runtime/native.rs`, so the dense/CSR/quant equivalence tests
+//!   cover every path that touches weights.
+//! * **STUN-L003** — no panicking `Option`/`Result` accessors in the
+//!   hot-path modules (`sparse/`, `quant/`, `shard/`,
+//!   `runtime/session.rs`) outside `#[cfg(test)]`: a poisoned artifact
+//!   surfaces as an error on the request, never a process abort.
+//! * **STUN-L004** — no hash-map iteration feeding a numeric reduction
+//!   (iteration order is unspecified; float sums over it are
+//!   run-to-run nondeterministic).
+//! * **STUN-L005** — no wall-clock reads inside kernels; timing belongs
+//!   to the callers.
+//!
+//! Vetted exceptions live in `rust/lint-allowlist.json`, each with a
+//! mandatory justification; stale entries fail the lint. Run it locally
+//! with `cargo run --bin stun_lint`. The second pass, `stun check
+//! <ckpt.stz>` ([`analyze::validate`]), validates *artifacts*: checkpoint
+//! section bounds are checked against the file size before any
+//! allocation, quant scales must be finite and non-negative, compiled
+//! CSR tensors must be structurally well-formed, dead experts must
+//! store exactly zero bytes, and every tensor's storage must price out
+//! to [`quant::tensor_store_bytes`]. The same validators run at the
+//! compile/placement boundaries under `debug_assertions`.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -146,6 +183,7 @@
 //! # anyhow::Ok(())
 //! ```
 
+pub mod analyze;
 pub mod checkpoint;
 pub mod cluster;
 pub mod coactivation;

@@ -16,6 +16,8 @@
 //!             [--quant f32|u16|u8]           # extra quantized serving arm
 //!             [--shards N]                   # expert-parallel sharded serving
 //!             [--placement round-robin|greedy|refined]   # shard placement
+//! stun check  ckpt.stz [--config NAME]        # validate a checkpoint artifact
+//!             [--quant f32|u16|u8]            # storage width of the strict pass
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
 //! stun sample --n 5                          # show synthetic-corpus samples
 //! ```
@@ -49,6 +51,7 @@ use stun::runtime::Backend;
 use stun::sparse::{CompressionReport, SparseConfig};
 use stun::train::{self, TrainConfig, Trainer};
 use stun::util::args::Args;
+use stun::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -78,6 +81,7 @@ fn run() -> Result<()> {
         "stun" => cmd_stun(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "check" => cmd_check(&args),
         "report" => cmd_report(&args),
         "sample" => cmd_sample(&args),
         "help" | "--help" | "-h" => {
@@ -374,6 +378,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         println!("{}", report::serving_report(&proto, n, quant)?);
     }
+    Ok(())
+}
+
+/// `stun check` — validate a checkpoint artifact end to end: hardened
+/// load (section bounds checked against the file size before any
+/// allocation, finite non-negative quant scales), bind to the config,
+/// compile at the default density threshold under `--quant`, and run
+/// the strict semantic sweep (CSR well-formedness, dead-expert zero
+/// bytes, byte-rule agreement; see `stun::analyze::validate`).
+fn cmd_check(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        bail!("usage: stun check <ckpt.stz> [--config NAME] [--quant f32|u16|u8]");
+    };
+    let ckpt = stun::checkpoint::Checkpoint::load(path)?;
+    // --config wins; otherwise the name the writer recorded in the meta
+    let config_name = args
+        .str_opt("config")
+        .or_else(|| {
+            Json::parse(&ckpt.meta)
+                .ok()
+                .and_then(|j| j.opt("config").and_then(|c| c.as_str().ok().map(String::from)))
+        })
+        .unwrap_or_else(|| "tiny".to_string());
+    let backend = report::load_backend(&config_name)?;
+    let scfg = SparseConfig {
+        quant: quant_from(args)?,
+        ..Default::default()
+    };
+    let r = stun::analyze::validate::check_params(backend.config(), &ckpt, &scfg)?;
+    println!("{path}: OK ({} sections; config {config_name})", r.tensors);
+    println!(
+        "  compiled {} tensors ({} CSR, {} dead experts) at {}: {} dense -> {} stored bytes",
+        r.compiled_tensors,
+        r.csr_tensors,
+        r.experts_dead,
+        scfg.quant.name(),
+        r.bytes_dense,
+        r.bytes_compiled
+    );
     Ok(())
 }
 

@@ -511,6 +511,34 @@ impl QuantDense {
             }
         }
     }
+
+    /// Structural checks the matmul kernel assumes: one finite,
+    /// non-negative scale per row (per-row absmax calibration can never
+    /// produce anything else) and a full `rows × cols` code slab. Run by
+    /// `crate::analyze::validate` over every compiled tensor.
+    pub fn validate(&self) -> Result<()> {
+        use anyhow::ensure;
+        ensure!(
+            self.scale.len() == self.rows,
+            "quant dense slab holds {} scales for {} rows",
+            self.scale.len(),
+            self.rows
+        );
+        for (r, &s) in self.scale.iter().enumerate() {
+            ensure!(
+                s.is_finite() && s >= 0.0,
+                "quant dense scale for row {r} is {s} (must be finite and non-negative)"
+            );
+        }
+        ensure!(
+            self.codes.len() == self.rows * self.cols,
+            "quant dense slab holds {} codes for shape [{}, {}]",
+            self.codes.len(),
+            self.rows,
+            self.cols
+        );
+        Ok(())
+    }
 }
 
 /// Column indices of a [`QuantCsr`], narrowed to u16 when they fit.
@@ -518,6 +546,22 @@ impl QuantDense {
 enum ColIdx {
     U16(Vec<u16>),
     U32(Vec<u32>),
+}
+
+impl ColIdx {
+    fn len(&self) -> usize {
+        match self {
+            ColIdx::U16(v) => v.len(),
+            ColIdx::U32(v) => v.len(),
+        }
+    }
+
+    fn at(&self, i: usize) -> usize {
+        match self {
+            ColIdx::U16(v) => v[i] as usize,
+            ColIdx::U32(v) => v[i] as usize,
+        }
+    }
 }
 
 /// A per-row-quantized CSR matrix: u32 row pointers, narrow column
@@ -613,6 +657,69 @@ impl QuantCsr {
             }
         }
     }
+
+    /// CSR well-formedness plus the quantization invariants: monotone
+    /// `row_ptr` spanning exactly the stored codes, per-row strictly
+    /// increasing in-range column indices, index/code arrays aligned,
+    /// and one finite non-negative scale per row. Mirrors
+    /// `crate::sparse::CsrMatrix::validate` for the quantized layout.
+    pub fn validate(&self) -> Result<()> {
+        use anyhow::ensure;
+        ensure!(
+            self.row_ptr.len() == self.rows + 1,
+            "quant CSR row_ptr holds {} entries for {} rows",
+            self.row_ptr.len(),
+            self.rows
+        );
+        ensure!(self.row_ptr[0] == 0, "quant CSR row_ptr must start at 0");
+        let stored = self.codes.len();
+        ensure!(
+            self.idx.len() == stored,
+            "quant CSR holds {} column indices for {stored} codes",
+            self.idx.len()
+        );
+        ensure!(
+            self.row_ptr[self.rows] as usize == stored,
+            "quant CSR row_ptr ends at {} but {stored} codes are stored",
+            self.row_ptr[self.rows]
+        );
+        ensure!(
+            self.scale.len() == self.rows,
+            "quant CSR holds {} scales for {} rows",
+            self.scale.len(),
+            self.rows
+        );
+        for (r, &s) in self.scale.iter().enumerate() {
+            ensure!(
+                s.is_finite() && s >= 0.0,
+                "quant CSR scale for row {r} is {s} (must be finite and non-negative)"
+            );
+        }
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            ensure!(
+                lo <= hi && hi <= stored,
+                "quant CSR row {r} spans {lo}..{hi} (stored {stored})"
+            );
+            let mut prev: Option<usize> = None;
+            for i in lo..hi {
+                let c = self.idx.at(i);
+                ensure!(
+                    c < self.cols,
+                    "quant CSR row {r} stores column {c} out of range (matrix has {} columns)",
+                    self.cols
+                );
+                if let Some(p) = prev {
+                    ensure!(
+                        c > p,
+                        "quant CSR row {r} columns not strictly increasing ({p} then {c})"
+                    );
+                }
+                prev = Some(c);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// One weight matrix in whichever storage *and width* the compile pass
@@ -703,6 +810,67 @@ impl QuantMat {
             QuantMat::Dense(d) => d.matmul_acc(a, out, m),
             QuantMat::Csr(c) => c.matmul_acc(a, out, m),
         }
+    }
+
+    /// Validate whichever storage arm the compile pass chose: f32 CSR
+    /// gets the structural check, quantized arms additionally check
+    /// scale slabs (finite, non-negative, one per row). Dense f32 slabs
+    /// only need their shape/length agreement checked.
+    pub fn validate(&self) -> Result<()> {
+        use anyhow::ensure;
+        match self {
+            QuantMat::Plain(WeightMat::Dense { rows, cols, data }) => {
+                ensure!(
+                    data.len() == rows * cols,
+                    "dense f32 slab holds {} values for shape [{rows}, {cols}]",
+                    data.len()
+                );
+                Ok(())
+            }
+            QuantMat::Plain(WeightMat::Csr(c)) => c.validate(),
+            QuantMat::Dense(d) => d.validate(),
+            QuantMat::Csr(c) => c.validate(),
+        }
+    }
+
+    /// Strict byte-rule agreement: the stored arm must cost exactly what
+    /// [`tensor_store_bytes`] — THE sizing rule shared by residency
+    /// budgets and compression reports — prices for this tensor, i.e. the
+    /// compile pass picked the cheaper form. Only sound for models
+    /// compiled at the *default* density threshold (a hand-raised
+    /// threshold legitimately stores the larger form, which is why the
+    /// compile-boundary debug check stays lenient and `stun check`
+    /// recompiles under the default config before asserting this).
+    /// Quantized-dense slabs lose the pre-quantization zero count, so
+    /// that arm checks the dense rule directly instead of the min.
+    pub fn validate_store_bytes(&self) -> Result<()> {
+        use anyhow::ensure;
+        let (rows, cols, nnz) = match self {
+            QuantMat::Plain(WeightMat::Dense { rows, cols, data }) => {
+                (*rows, *cols, data.iter().filter(|&&x| x != 0.0).count())
+            }
+            QuantMat::Plain(WeightMat::Csr(c)) => (c.rows(), c.cols(), c.nnz()),
+            QuantMat::Dense(d) => {
+                ensure!(
+                    d.bytes() == dense_store_bytes(d.rows, d.cols, d.codes.scheme()),
+                    "quant dense slab [{}, {}] stores {} bytes but the dense rule prices {}",
+                    d.rows,
+                    d.cols,
+                    d.bytes(),
+                    dense_store_bytes(d.rows, d.cols, d.codes.scheme())
+                );
+                return Ok(());
+            }
+            QuantMat::Csr(c) => (c.rows, c.cols, c.stored()),
+        };
+        let want = tensor_store_bytes(rows, cols, nnz, self.scheme());
+        ensure!(
+            self.bytes() == want,
+            "tensor [{rows}, {cols}] ({nnz} non-zeros, {}) stores {} bytes but the shared rule prices {want}",
+            self.scheme().name(),
+            self.bytes()
+        );
+        Ok(())
     }
 }
 
@@ -912,6 +1080,40 @@ mod tests {
                 let bound = (scheme.error_bound() as f32) * 4.0; // max absmax
                 assert!((a - b).abs() <= bound, "span elem {i}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn validate_accepts_quantized_output_and_rejects_nan_scale() {
+        let data = sparse_slab(8, 10, 0.4, 29);
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let dq = QuantDense::quantize(&data, 8, 10, scheme);
+            dq.validate().unwrap();
+            let cq = QuantCsr::quantize(&data, 8, 10, scheme);
+            cq.validate().unwrap();
+
+            // NaN scale — the corruption a bit-flipped checkpoint or a
+            // bad calibration path would produce
+            let mut bad = dq.clone();
+            bad.scale[3] = f32::NAN;
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("finite"), "{err}");
+            let mut bad = cq.clone();
+            bad.scale[0] = f32::NEG_INFINITY;
+            assert!(bad.validate().is_err());
+
+            // negative scale is equally impossible under absmax calibration
+            let mut bad = dq.clone();
+            bad.scale[0] = -1.0;
+            assert!(bad.validate().is_err());
+
+            // out-of-range column index in the quantized CSR arm
+            let mut bad = cq.clone();
+            if let ColIdx::U16(ix) = &mut bad.idx {
+                ix[0] = 10;
+            }
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("out of range"), "{err}");
         }
     }
 

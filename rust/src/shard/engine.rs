@@ -33,7 +33,7 @@ use crate::sparse::{
     MoeScratch, SparseConfig,
 };
 use crate::tensor::{IntTensor, Tensor};
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -250,6 +250,13 @@ impl ShardedEngine {
     /// the (replicated) trunk, fan each non-empty expert group out to its
     /// primary shard, collect every shard's gate-scaled rows into their
     /// disjoint `slot_out` cells, and reduce in fixed slot order.
+    ///
+    /// A dead engine thread (send or recv on a disconnected channel)
+    /// surfaces as an error on the round — the serving loop gets an
+    /// `Err` to retire instead of a process abort. The routed groups are
+    /// *moved* out of the scratch (`mem::take`; `moe_route` clears and
+    /// refills them next round), so fan-out allocates no per-round group
+    /// clones.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_gather(
         &self,
@@ -260,17 +267,17 @@ impl ShardedEngine {
         n: usize,
         h: &mut [f32],
         scr: &mut MoeScratch,
-    ) {
+    ) -> Result<()> {
         let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
         moe_route(layer, cfg, x, n, scr);
 
         let mut work: Vec<Vec<(usize, Vec<(usize, usize, f32)>)>> =
             (0..self.placement.n_shards).map(|_| Vec::new()).collect();
-        for (ei, group) in scr.groups.iter().enumerate() {
+        for (ei, group) in scr.groups.iter_mut().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            work[self.placement.primary_shard(l, ei)].push((ei, group.clone()));
+            work[self.placement.primary_shard(l, ei)].push((ei, std::mem::take(group)));
         }
 
         match &self.workers {
@@ -288,14 +295,18 @@ impl ShardedEngine {
                             x: Arc::clone(&xs),
                             groups,
                         })
-                        .expect("shard engine thread disconnected");
+                        .map_err(|_| {
+                            anyhow!("shard {s} engine thread died before layer {l} dispatch")
+                        })?;
                     sent[s] = true;
                 }
                 for (s, &was_sent) in sent.iter().enumerate() {
                     if !was_sent {
                         continue;
                     }
-                    let out = w.rxs[s].recv().expect("shard engine thread disconnected");
+                    let out = w.rxs[s].recv().map_err(|_| {
+                        anyhow!("shard {s} engine thread died serving layer {l}")
+                    })?;
                     for (cell, row) in out.cells {
                         scr.slot_out[cell * d..cell * d + d].copy_from_slice(&row);
                     }
@@ -329,6 +340,7 @@ impl ShardedEngine {
         }
 
         moe_reduce(cfg, n, h, scr);
+        Ok(())
     }
 }
 

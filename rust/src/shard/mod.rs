@@ -262,11 +262,20 @@ impl Placement {
             bytes.len() == n_layers && bytes.iter().all(|row| row.len() == n_experts),
             "byte table shape does not match the coactivation matrices"
         );
-        Ok(match strategy {
+        let p = match strategy {
             PlacementStrategy::RoundRobin => Placement::round_robin(n_layers, n_experts, n_shards),
             PlacementStrategy::Greedy => Placement::greedy(coact, bytes, n_shards),
             PlacementStrategy::Refined => Placement::refined(coact, bytes, n_shards, budget, seed),
-        })
+        };
+        // debug builds re-check placement well-formedness at the
+        // construction boundary (see Placement::validate): in-range
+        // primaries, disjoint duplicate-free replica sets, no replicas
+        // on zero-byte (dead) experts
+        #[cfg(debug_assertions)]
+        if let Err(e) = p.validate(Some(bytes)) {
+            panic!("{strategy:?} placement construction produced an invalid placement: {e}");
+        }
+        Ok(p)
     }
 
     /// The anytime loop: random swap (two experts in one layer trade
@@ -428,6 +437,76 @@ impl Placement {
             }
         }
     }
+
+    /// Placement well-formedness — what the sharded engine assumes when
+    /// it indexes `primary`/`replicas` without checking: the tables
+    /// cover every `(layer, expert)` cell, every primary names an
+    /// existing shard (an out-of-range primary orphans the expert — no
+    /// engine would ever serve it), and replicas are in-range, distinct,
+    /// and disjoint from the primary (a duplicated copy would double-count
+    /// bytes in [`Placement::shard_bytes`]). When a byte table is given,
+    /// its shape must match and dead experts (zero bytes) must carry no
+    /// replicas — replicating storage that does not exist is always a
+    /// placement-construction bug. Run by `crate::analyze::validate`.
+    pub fn validate(&self, bytes: Option<&[Vec<usize>]>) -> Result<()> {
+        let cells = self.n_layers * self.n_experts;
+        ensure!(
+            self.primary.len() == cells && self.replicas.len() == cells,
+            "placement tables hold {} primaries / {} replica sets for {} layers x {} experts",
+            self.primary.len(),
+            self.replicas.len(),
+            self.n_layers,
+            self.n_experts
+        );
+        ensure!(self.n_shards >= 1, "placement must name at least one shard");
+        for l in 0..self.n_layers {
+            for e in 0..self.n_experts {
+                let ix = self.idx(l, e);
+                let prim = self.primary[ix];
+                ensure!(
+                    prim < self.n_shards,
+                    "expert (layer {l}, expert {e}) is orphaned: primary shard {prim} \
+                     does not exist ({} shards)",
+                    self.n_shards
+                );
+                let reps = &self.replicas[ix];
+                for (i, &s) in reps.iter().enumerate() {
+                    ensure!(
+                        s < self.n_shards,
+                        "replica of (layer {l}, expert {e}) names missing shard {s}"
+                    );
+                    ensure!(
+                        s != prim,
+                        "replica of (layer {l}, expert {e}) duplicates its primary shard {s}"
+                    );
+                    ensure!(
+                        !reps[..i].contains(&s),
+                        "replicas of (layer {l}, expert {e}) list shard {s} twice"
+                    );
+                }
+            }
+        }
+        if let Some(bytes) = bytes {
+            ensure!(
+                bytes.len() == self.n_layers
+                    && bytes.iter().all(|row| row.len() == self.n_experts),
+                "byte table shape does not match the placement ({} layers x {} experts)",
+                self.n_layers,
+                self.n_experts
+            );
+            for l in 0..self.n_layers {
+                for e in 0..self.n_experts {
+                    if bytes[l][e] == 0 {
+                        ensure!(
+                            self.replicas[self.idx(l, e)].is_empty(),
+                            "dead expert (layer {l}, expert {e}) carries replicas"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// The `bytes[layer][expert]` table every placement is balanced by: the
@@ -483,6 +562,44 @@ mod tests {
                 assert!(p.replica_shards(l, e).is_empty());
             }
         }
+    }
+
+    #[test]
+    fn validate_rejects_orphaned_experts_and_broken_replica_sets() {
+        let coact = block_coact(2, 4);
+        let bytes = uniform_bytes(2, 4, 256);
+        let mut p = Placement::greedy(&coact, &bytes, 2);
+        p.validate(Some(&bytes)).unwrap();
+
+        // orphaned expert: primary names a shard that does not exist
+        let mut orphan = p.clone();
+        orphan.primary[3] = 5;
+        let err = orphan.validate(None).unwrap_err().to_string();
+        assert!(err.contains("orphaned"), "{err}");
+
+        // replica duplicating the primary
+        let mut dup = p.clone();
+        let prim = dup.primary[0];
+        dup.replicas[0] = vec![prim];
+        assert!(dup.validate(None).is_err());
+
+        // replica listed twice
+        let mut twice = p.clone();
+        let other = 1 - p.primary[0];
+        twice.replicas[0] = vec![other, other];
+        assert!(twice.validate(None).is_err());
+
+        // dead expert (zero bytes) carrying a replica
+        let mut dead = bytes.clone();
+        dead[0][1] = 0;
+        let ix = p.idx(0, 1);
+        p.replicas[ix] = vec![1 - p.primary[ix]];
+        assert!(p.validate(Some(&dead)).is_err());
+
+        // byte table of the wrong shape
+        let q = Placement::round_robin(2, 4, 2);
+        assert!(q.validate(Some(&uniform_bytes(2, 3, 256))).is_err());
+        q.validate(Some(&bytes)).unwrap();
     }
 
     #[test]

@@ -131,6 +131,60 @@ impl CsrMatrix {
             }
         }
     }
+
+    /// CSR well-formedness — the structural contract every kernel above
+    /// assumes without checking: `row_ptr` holds `rows + 1` monotonically
+    /// non-decreasing entries from 0 to `nnz`, each row's column indices
+    /// are strictly increasing (sorted, unique) and within `0..cols`, and
+    /// the value array is index-aligned. [`CsrMatrix::from_dense`]
+    /// produces this by construction; the artifact validator
+    /// (`crate::analyze::validate`, surfaced as `stun check`) re-checks
+    /// it on every compiled CSR tensor so a corrupted or hand-built
+    /// matrix is rejected with a diagnostic instead of indexing wild.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::{bail, ensure};
+        ensure!(
+            self.row_ptr.len() == self.rows + 1,
+            "CSR row_ptr holds {} entries for {} rows",
+            self.row_ptr.len(),
+            self.rows
+        );
+        ensure!(self.row_ptr[0] == 0, "CSR row_ptr must start at 0");
+        ensure!(
+            self.vals.len() == self.col_idx.len(),
+            "CSR holds {} values but {} column indices",
+            self.vals.len(),
+            self.col_idx.len()
+        );
+        let nnz = self.col_idx.len();
+        ensure!(
+            self.row_ptr[self.rows] as usize == nnz,
+            "CSR row_ptr ends at {} but {nnz} entries are stored",
+            self.row_ptr[self.rows]
+        );
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            if s > e || e > nnz {
+                bail!("CSR row {r} spans {s}..{e} (stored nnz {nnz})");
+            }
+            let mut prev: Option<u32> = None;
+            for &c in &self.col_idx[s..e] {
+                if c as usize >= self.cols {
+                    bail!(
+                        "CSR row {r} stores column {c} out of range (matrix has {} columns)",
+                        self.cols
+                    );
+                }
+                if let Some(p) = prev {
+                    if c <= p {
+                        bail!("CSR row {r} columns not strictly increasing ({p} then {c})");
+                    }
+                }
+                prev = Some(c);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +248,36 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn validate_accepts_from_dense_and_rejects_corruption() {
+        let good = CsrMatrix::from_dense(&sparse_slab(6, 9, 0.4, 8), 6, 9);
+        good.validate().unwrap();
+
+        // out-of-range column index → diagnostic, not a wild index
+        let mut bad = good.clone();
+        if let Some(c) = bad.col_idx.first_mut() {
+            *c = 9;
+        }
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // non-monotone row_ptr
+        let mut bad = good.clone();
+        bad.row_ptr[1] = bad.row_ptr[bad.rows] + 7;
+        assert!(bad.validate().is_err());
+
+        // duplicate (non-increasing) columns within a row
+        let mut dup = CsrMatrix::from_dense(&[1.0, 2.0, 3.0, 4.0], 1, 4);
+        dup.col_idx[1] = dup.col_idx[0];
+        let err = dup.validate().unwrap_err().to_string();
+        assert!(err.contains("strictly increasing"), "{err}");
+
+        // value/index arrays out of step
+        let mut bad = good.clone();
+        bad.vals.pop();
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -511,7 +511,9 @@ pub struct CompileStats {
 /// `(layer_index, layer, cfg, x, n, h, scr)`. The default executes
 /// [`moe_gather`] on the layer's own expert slabs;
 /// `crate::shard::ShardedEngine` substitutes a partitioned gather that
-/// serves each routed expert group from its hosting shard.
+/// serves each routed expert group from its hosting shard. Fallible so
+/// a partitioned dispatch can surface a dead engine thread as an error
+/// on the round instead of aborting the process.
 pub(crate) type MoeDispatch<'a> = &'a mut dyn FnMut(
     usize,
     &CompiledLayer,
@@ -520,7 +522,7 @@ pub(crate) type MoeDispatch<'a> = &'a mut dyn FnMut(
     usize,
     &mut [f32],
     &mut MoeScratch,
-);
+) -> Result<()>;
 
 /// A [`ParamSet`] compiled for decode: per-tensor dense/CSR storage plus a
 /// forward pass that matches the dense path within 1e-5. Fields are
@@ -614,7 +616,7 @@ impl CompiledModel {
             &mut stats,
             d * cfg.vocab,
         );
-        CompiledModel {
+        let model = CompiledModel {
             embed: params.get("embed").unwrap().data().to_vec(),
             pos: params.get("pos_embed").unwrap().data().to_vec(),
             ln_f: params.get("ln_f").unwrap().data().to_vec(),
@@ -622,7 +624,18 @@ impl CompiledModel {
             lm_head,
             stats,
             config: cfg,
+        };
+        // debug builds re-check the structural invariants (CSR
+        // well-formedness, finite scales, dead-expert zero bytes) at the
+        // compile boundary, so a kernel refactor cannot ship a model the
+        // validator would reject; byte-rule equality stays lenient here
+        // because a non-default density_threshold legitimately stores the
+        // larger form (see `stun check` for the strict mode)
+        #[cfg(debug_assertions)]
+        if let Err(e) = crate::analyze::validate::validate_compiled(&model, false) {
+            panic!("compile pass produced an invalid model: {e}");
         }
+        model
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -648,7 +661,8 @@ impl CompiledModel {
         want_routing: bool,
     ) -> Result<(Tensor, Option<IntTensor>)> {
         self.forward_with(tokens, want_routing, &mut |_l, layer, cfg, x, n, h, scr| {
-            moe_gather(layer, cfg, x, n, h, scr)
+            moe_gather(layer, cfg, x, n, h, scr);
+            Ok(())
         })
     }
 
@@ -691,7 +705,7 @@ impl CompiledModel {
             }
 
             let x = rmsnorm_fwd(&h, &layer.ln2, d);
-            gather(l, layer, cfg, &x, t_total, &mut h, &mut scr);
+            gather(l, layer, cfg, &x, t_total, &mut h, &mut scr)?;
             if want_routing {
                 routing[l * t_total * k..(l + 1) * t_total * k]
                     .copy_from_slice(&scr.sel[..t_total * k]);
@@ -748,7 +762,10 @@ impl CompiledModel {
             state,
             slots,
             &mut scr,
-            &mut |_l, layer, cfg, x, n, h, moe| moe_gather(layer, cfg, x, n, h, moe),
+            &mut |_l, layer, cfg, x, n, h, moe| {
+                moe_gather(layer, cfg, x, n, h, moe);
+                Ok(())
+            },
         );
         state.put_scratch(scr);
         res
@@ -878,7 +895,7 @@ impl CompiledModel {
             rmsnorm_into(h, &layer.ln2, d, a);
             // one cross-slot gather: tokens from different slots that
             // picked the same expert share that expert's weight streaming
-            gather(l, layer, cfg, a, total, h, moe);
+            gather(l, layer, cfg, a, total, h, moe)?;
             // routing is reported for each slot's last new position only —
             // the position the serving loop samples and accounts
             for (oi, &(_slot, row0, _pos0, n)) in plans.iter().enumerate() {
