@@ -21,20 +21,171 @@
 //! artifacts present measure the AOT executable path instead
 //! (`STUN_BACKEND` forces the choice). The per-contract latencies are the
 //! unit costs behind every report/figure wall-clock.
+//!
+//! A **kernel micro-bench** section runs first: the raw `matmul_acc`
+//! kernel family (dense/CSR × {f32, u16, u8}) in scalar, panel, and
+//! SIMD-dispatch variants on one 0.7-sparse slab, reporting GFLOP/s and
+//! weight-stream bytes/s per variant to `BENCH_kernels.json`
+//! (`BENCH_KERNELS_OUT` overrides the path). `STUN_KERNELS_ONLY=1`
+//! runs just this section — the quick CI profile for the kernel
+//! artifact.
 
 use stun::data::{CorpusConfig, CorpusGenerator};
 use stun::model::ParamSet;
 use stun::pruning::unstructured;
-use stun::quant::QuantScheme;
+use stun::quant::{QuantCsr, QuantDense, QuantScheme};
 use stun::runtime::session::{greedy_token, recompute_step};
+use stun::runtime::vecmath::{set_simd_override, simd_active};
 use stun::runtime::{Backend, CompiledForward as _, DecodeState, TrainState};
-use stun::sparse::SparseConfig;
+use stun::sparse::{CsrMatrix, SparseConfig, WeightMat};
 use stun::tensor::Tensor;
 use stun::util::bench::Bench;
+use stun::util::json::Json;
 use stun::util::rng::Rng;
+
+type KernelFn = Box<dyn Fn(&[f32], &mut [f32], usize)>;
+
+struct KernelArm {
+    kernel: &'static str,
+    quant: &'static str,
+    variant: &'static str,
+    flops: f64,
+    wbytes: f64,
+    mm: KernelFn,
+}
+
+/// Raw kernel micro-bench: every `matmul_acc` storage family on one
+/// 0.7-sparse slab at m = 8 (the weight-stationary branch), in three
+/// variants — `scalar` (forced-scalar dispatch, no panels), `panel`
+/// (panel layout, forced-scalar dispatch; CSR only), and `simd` (panel
+/// layout + auto dispatch, which takes the `std::arch` bodies when the
+/// `simd` feature is compiled and the CPU qualifies). GFLOP/s counts
+/// 2·m·nnz for CSR and 2·m·k·n for dense; bytes/s streams the resident
+/// weight bytes once per call (the weight-stationary traversal cost).
+fn kernel_microbench(bench: &Bench) {
+    const K: usize = 192;
+    const N: usize = 256;
+    const M: usize = 8;
+
+    let mut rng = Rng::new(41);
+    let data: Vec<f32> = (0..K * N)
+        .map(|_| if rng.below(10) < 3 { rng.normal() } else { 0.0 })
+        .collect();
+    let acts: Vec<f32> = (0..M * K).map(|_| rng.normal()).collect();
+    let nnz = data.iter().filter(|v| **v != 0.0).count();
+    let dense_flops = (2 * M * K * N) as f64;
+    let csr_flops = (2 * M * nnz) as f64;
+
+    let mut arms: Vec<KernelArm> = Vec::new();
+
+    // dense f32: scalar vs simd (panels are a CSR-only structure)
+    for variant in ["scalar", "simd"] {
+        let w = WeightMat::Dense {
+            rows: K,
+            cols: N,
+            data: data.clone(),
+        };
+        arms.push(KernelArm {
+            kernel: "dense",
+            quant: "f32",
+            variant,
+            flops: dense_flops,
+            wbytes: (K * N * 4) as f64,
+            mm: Box::new(move |a, o, m| w.matmul_acc(a, o, m)),
+        });
+    }
+    // CSR f32: scalar (scatter), panel (blocked, scalar axpy), simd
+    for variant in ["scalar", "panel", "simd"] {
+        let mut c = CsrMatrix::from_dense(&data, K, N);
+        if variant != "scalar" {
+            c.build_panels();
+            assert!(c.has_panels(), "0.3-dense slab must clear the panel gate");
+        }
+        arms.push(KernelArm {
+            kernel: "csr",
+            quant: "f32",
+            variant,
+            flops: csr_flops,
+            wbytes: c.bytes() as f64,
+            mm: Box::new(move |a, o, m| c.matmul_acc(a, o, m)),
+        });
+    }
+    for scheme in [QuantScheme::U16, QuantScheme::U8] {
+        for variant in ["scalar", "simd"] {
+            let q = QuantDense::quantize(&data, K, N, scheme);
+            arms.push(KernelArm {
+                kernel: "dense",
+                quant: scheme.name(),
+                variant,
+                flops: dense_flops,
+                wbytes: q.bytes() as f64,
+                mm: Box::new(move |a, o, m| q.matmul_acc(a, o, m)),
+            });
+        }
+        for variant in ["scalar", "panel", "simd"] {
+            let mut q = QuantCsr::quantize(&data, K, N, scheme);
+            if variant != "scalar" {
+                q.build_panels();
+                assert!(q.has_panels(), "0.3-dense slab must clear the panel gate");
+            }
+            arms.push(KernelArm {
+                kernel: "csr",
+                quant: scheme.name(),
+                variant,
+                flops: csr_flops,
+                wbytes: q.bytes() as f64,
+                mm: Box::new(move |a, o, m| q.matmul_acc(a, o, m)),
+            });
+        }
+    }
+
+    println!("== kernel micro-bench (k={K}, n={N}, m={M}, 0.7-sparse slab) ==");
+    let mut rows: Vec<Json> = Vec::new();
+    for arm in &arms {
+        set_simd_override(if arm.variant == "simd" { None } else { Some(false) });
+        let mut out = vec![0f32; M * N];
+        let r = bench.run(
+            &format!("kernel {}/{}/{} m={M}", arm.kernel, arm.quant, arm.variant),
+            || {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                (arm.mm)(&acts, &mut out, M);
+            },
+        );
+        let gflops = arm.flops / r.mean_secs() / 1e9;
+        let bytes_s = arm.wbytes / r.mean_secs();
+        println!("    -> {gflops:.2} GFLOP/s, {:.2} GB/s weight stream", bytes_s / 1e9);
+        rows.push(Json::obj(vec![
+            ("kernel", Json::Str(arm.kernel.into())),
+            ("quant", Json::Str(arm.quant.into())),
+            ("variant", Json::Str(arm.variant.into())),
+            ("m", Json::Num(M as f64)),
+            ("rows", Json::Num(K as f64)),
+            ("cols", Json::Num(N as f64)),
+            ("nnz", Json::Num(nnz as f64)),
+            ("gflops", Json::Num(gflops)),
+            ("bytes_per_sec", Json::Num(bytes_s)),
+        ]));
+    }
+    set_simd_override(None);
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("runtime_hotpath/kernels".into())),
+        ("simd", Json::Bool(simd_active())),
+        ("kernels", Json::Arr(rows)),
+    ]);
+    let path =
+        std::env::var("BENCH_KERNELS_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("write BENCH_kernels.json");
+    println!("wrote {path}");
+}
 
 fn main() {
     let bench = Bench::from_env();
+
+    kernel_microbench(&bench);
+    if std::env::var("STUN_KERNELS_ONLY").is_ok() {
+        return;
+    }
 
     for config in ["tiny", "moe-8x"] {
         let backend = stun::report::load_backend(config).expect("backend");

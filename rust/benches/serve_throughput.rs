@@ -9,8 +9,12 @@
 //! staggered-arrival workload (queue-depth effects under honored arrival
 //! offsets), a heavy-tail **Poisson-arrival** workload (exponential
 //! inter-arrival gaps, so admission bursts and lulls exercise the
-//! mixed prefill+decode batched rounds), and the dense-vs-compiled
-//! `EvalHarness` arms on the same grid.
+//! mixed prefill+decode batched rounds), the dense-vs-compiled
+//! `EvalHarness` arms on the same grid, and a **batch-scaling section**
+//! at the serving sparsity (0.7): B ∈ {1, 8} incremental layer-major
+//! rounds per storage scheme, recorded with a `simd` flag so `perf_gate`
+//! can hold the u8 B=8 arm to the f32 B=8 rate when the vectorized
+//! panel kernels are compiled in.
 //!
 //! The {executor × sparsity × quant} surface (and the staggered and
 //! poisson rows, each with its RNG seeds and queue-depth/occupancy
@@ -35,7 +39,8 @@ use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
 use stun::quant::QuantScheme;
 use stun::report::{self, Protocol};
-use stun::runtime::Backend;
+use stun::runtime::session::greedy_token;
+use stun::runtime::{Backend, CompiledForward as _};
 use stun::sparse::SparseConfig;
 use stun::util::bench::Bench;
 use stun::util::json::Json;
@@ -115,6 +120,7 @@ fn main() {
     );
     let mut arm_rows: Vec<Json> = Vec::new();
     let mut eval_rows = Vec::new();
+    let mut ps07: Option<ParamSet> = None;
     for s in [0.0f64, 0.4, 0.7, 0.9] {
         let mut ps = params.clone();
         if s > 0.0 {
@@ -129,6 +135,9 @@ fn main() {
             }
             .run(backend, &mut ps, &mut gen)
             .expect("stun");
+        }
+        if (s - 0.7).abs() < 1e-9 {
+            ps07 = Some(ps.clone());
         }
         let capacity = ExpertStore::working_set_bytes(&ps, QuantScheme::F32).max(1);
         // (label, use_compiled, incremental)
@@ -227,6 +236,65 @@ fn main() {
             eval_rows.push((s, dense_r.mean_secs(), compiled_r.mean_secs(), executor));
         }
     }
+
+    // batch-scaling rounds at the serving sparsity (0.7): the pruned
+    // model compiled per storage scheme, driven through B ∈ {1, 8}
+    // incremental layer-major `session_round` sweeps. The u8 B=8 row is
+    // the acceptance arm for the vectorized panel kernels — with the
+    // `simd` feature active the integer-widened panel dequant amortizes
+    // across the batch and must reach the f32 B=8 rate — so the record
+    // carries a `simd` flag for perf_gate to condition that check on.
+    let batch = {
+        let cfg = backend.config().clone();
+        let ps07 = ps07.expect("0.7 is always on the sparsity grid");
+        let (btok, _) = gen.batch(1);
+        let prompt: Vec<i32> = btok.row(0)[..cfg.seq / 2].to_vec();
+        let n_steps = (cfg.seq / 2).saturating_sub(2).max(1);
+        let mut batch_arms: Vec<Json> = Vec::new();
+        println!("\n### batch rounds at s=0.7 (tiny): incremental tok/s");
+        for quant in [QuantScheme::F32, QuantScheme::U16, QuantScheme::U8] {
+            let scfg = SparseConfig {
+                quant,
+                ..Default::default()
+            };
+            let Some(qc) = backend.compile_with(&ps07, &scfg).expect("compile") else {
+                continue;
+            };
+            for bsz in [1usize, 8] {
+                let slots: Vec<usize> = (0..bsz).collect();
+                let r = bench.run(&format!("batch round {} B={bsz}", quant.name()), || {
+                    let mut st = qc.new_session(bsz);
+                    for slot in 0..bsz {
+                        st.begin(slot, &prompt);
+                    }
+                    let out = qc.session_round(&mut st, &slots).unwrap();
+                    let mut toks: Vec<i32> =
+                        (0..bsz).map(|i| greedy_token(out.logits.row(i))).collect();
+                    for _ in 0..n_steps {
+                        for (slot, &t) in toks.iter().enumerate() {
+                            st.push(slot, t);
+                        }
+                        let out = qc.session_round(&mut st, &slots).unwrap();
+                        for (i, t) in toks.iter_mut().enumerate() {
+                            *t = greedy_token(out.logits.row(i));
+                        }
+                    }
+                });
+                let tok_s = (bsz * (n_steps + 1)) as f64 / r.mean_secs();
+                println!("    {} B={bsz}: {tok_s:.1} tok/s aggregate", quant.name());
+                batch_arms.push(Json::obj(vec![
+                    ("quant", Json::Str(quant.name().into())),
+                    ("b", Json::Num(bsz as f64)),
+                    ("incremental_tok_s", Json::Num(tok_s)),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("sparsity", Json::Num(0.7)),
+            ("simd", Json::Bool(stun::runtime::vecmath::simd_active())),
+            ("arms", Json::Arr(batch_arms)),
+        ])
+    };
 
     // staggered arrivals: offsets honored by the serve loop, so queueing
     // (and hence Response::queued) is real rather than the all-at-t0 stamp
@@ -431,6 +499,7 @@ fn main() {
         ("bench", Json::Str("serve_throughput".into())),
         ("config", Json::Str("tiny".into())),
         ("arms", Json::Arr(arm_rows)),
+        ("batch", batch),
         ("staggered", staggered),
         ("poisson", poisson),
         ("shards", Json::Arr(shard_rows)),

@@ -42,8 +42,10 @@ use anyhow::{ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Bumped whenever a rule is added, removed, or materially re-scoped, so
-/// report consumers can detect catalog drift.
-pub const CATALOG_VERSION: u64 = 1;
+/// report consumers can detect catalog drift. Version 2: the vectorized
+/// kernel seam (`runtime/vecmath.rs`, `sparse/panel.rs`) joined the
+/// L002 exemption and the L005 kernel scope.
+pub const CATALOG_VERSION: u64 = 2;
 
 /// One lint hit: where, which rule, and the offending line.
 #[derive(Clone, Debug)]
@@ -147,8 +149,14 @@ fn l001_applies(file: &str) -> bool {
 }
 
 /// L002 scope: everywhere weight arithmetic is *not* supposed to live.
+/// The sanctioned kernel seam is `sparse/` (incl. `sparse/panel.rs`),
+/// `quant/`, `runtime/native.rs`, and the vectorized primitive module
+/// `runtime/vecmath.rs`.
 fn l002_applies(file: &str) -> bool {
-    !in_dir(file, "sparse/") && !in_dir(file, "quant/") && file != "runtime/native.rs"
+    !in_dir(file, "sparse/")
+        && !in_dir(file, "quant/")
+        && file != "runtime/native.rs"
+        && file != "runtime/vecmath.rs"
 }
 
 /// L003 scope: the decode hot path.
@@ -159,9 +167,14 @@ fn l003_applies(file: &str) -> bool {
         || file == "runtime/session.rs"
 }
 
-/// L005 scope: kernel modules.
+/// L005 scope: kernel modules, including the vectorized primitives in
+/// `runtime/vecmath.rs` (`sparse/panel.rs` is covered by the `sparse/`
+/// directory rule).
 fn l005_applies(file: &str) -> bool {
-    in_dir(file, "sparse/") || in_dir(file, "quant/") || file == "runtime/native.rs"
+    in_dir(file, "sparse/")
+        || in_dir(file, "quant/")
+        || file == "runtime/native.rs"
+        || file == "runtime/vecmath.rs"
 }
 
 /// Strip every `[...]` index expression (depth-tracked) so a `*` inside
@@ -418,6 +431,9 @@ mod tests {
         // the kernel seams keep their loops
         assert!(scan_source("runtime/native.rs", matmul).is_empty());
         assert!(scan_source("sparse/csr.rs", matmul).is_empty());
+        // v2 seam additions: the SIMD primitives and the panel layout
+        assert!(scan_source("runtime/vecmath.rs", matmul).is_empty());
+        assert!(scan_source("sparse/panel.rs", matmul).is_empty());
         // a * that only computes the index is not an accumulation
         let stats = "        acc[k] += data[i * d + k];\n";
         assert!(scan_source("pruning/unstructured.rs", stats).is_empty());
@@ -445,6 +461,9 @@ mod tests {
         assert_eq!(scan_source("report/mod.rs", &red)[0].rule, "STUN-L004");
         let clock = format!("    let t0 = {};\n", concat!("Instant", "::now()"));
         assert_eq!(scan_source("quant/mod.rs", &clock)[0].rule, "STUN-L005");
+        // v2: the vectorized primitive module counts as a kernel
+        assert_eq!(scan_source("runtime/vecmath.rs", &clock)[0].rule, "STUN-L005");
+        assert_eq!(scan_source("sparse/panel.rs", &clock)[0].rule, "STUN-L005");
         assert!(scan_source("coordinator/mod.rs", &clock).is_empty());
     }
 

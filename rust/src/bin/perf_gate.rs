@@ -5,10 +5,17 @@
 //!
 //! The gated arm is the **0.7-sparsity** row — the serving operating
 //! point — on two executors: the f32 `compiled_incremental_tok_s`
-//! column and the u16 quant arm's `incremental_tok_s`. A measured
-//! value more than 15% below its baseline fails the gate (exit 1);
-//! everything else, including improvements, passes and is reported so
-//! the trajectory stays on the record. The baseline numbers are
+//! column and the u16 quant arm's `incremental_tok_s`, plus the u8 B=8
+//! row of the **batch** section (layer-major `session_round` sweeps at
+//! the same sparsity). A measured value more than 15% below its
+//! baseline fails the gate (exit 1); everything else, including
+//! improvements, passes and is reported so the trajectory stays on the
+//! record. When the record's `batch.simd` flag is true (the bench ran
+//! with the vectorized panel kernels compiled in and active), one
+//! *relative* check joins the absolute floors: the u8 B=8 arm must
+//! reach the f32 B=8 arm within the same tolerance — the
+//! integer-accumulation panel path is required to close the dequant
+//! gap, not merely avoid regressing. The baseline numbers are
 //! deliberately conservative (well below what a warm run produces) so
 //! machine-to-machine variance does not trip the gate — it exists to
 //! catch real hot-path regressions (an accidental O(window) step, a
@@ -39,6 +46,17 @@ fn quant_tok_s(arm: &Json, name: &str) -> Result<f64> {
         }
     }
     bail!("no '{name}' quant arm")
+}
+
+fn batch_tok_s(doc: &Json, quant: &str, b: u64) -> Result<f64> {
+    for arm in doc.get("batch")?.get("arms")?.as_arr()? {
+        if arm.get("quant")?.as_str()? == quant
+            && (arm.get("b")?.as_f64()? - b as f64).abs() < 1e-9
+        {
+            return arm.get("incremental_tok_s")?.as_f64();
+        }
+    }
+    bail!("no batch arm quant={quant} B={b}")
 }
 
 fn load(path: &str) -> Result<Json> {
@@ -76,6 +94,13 @@ fn main() -> Result<()> {
             quant_tok_s(base_arm, "u16")
                 .with_context(|| format!("in {baseline_path}"))?,
         ),
+        (
+            "batch round u8 B=8 s=0.7",
+            batch_tok_s(&current, "u8", 8)
+                .with_context(|| format!("in {current_path}"))?,
+            batch_tok_s(&baseline, "u8", 8)
+                .with_context(|| format!("in {baseline_path}"))?,
+        ),
     ];
 
     println!(
@@ -93,6 +118,31 @@ fn main() -> Result<()> {
         );
         failed |= !ok;
     }
+
+    // relative check, active only on SIMD-built records: the u8 B=8
+    // batch arm must reach the f32 B=8 arm. Scalar-only builds skip it
+    // (the per-element dequant multiply is a real cost there); the
+    // record's own `simd` flag says which world produced it.
+    let simd_record = current
+        .get("batch")
+        .and_then(|b| b.get("simd"))
+        .and_then(|j| j.as_bool())
+        .unwrap_or(false);
+    if simd_record {
+        let u8_b8 = batch_tok_s(&current, "u8", 8)?;
+        let f32_b8 = batch_tok_s(&current, "f32", 8)?;
+        let floor = f32_b8 * (1.0 - tol);
+        let ok = u8_b8 >= floor;
+        println!(
+            "  {} batch u8 B=8 vs f32 B=8 (simd): {u8_b8:.1} vs {f32_b8:.1} \
+             tok/s (floor {floor:.1})",
+            if ok { "PASS" } else { "FAIL" },
+        );
+        failed |= !ok;
+    } else {
+        println!("  SKIP batch u8-vs-f32 relative check (scalar-only record)");
+    }
+
     if failed {
         bail!("serving throughput regressed past the {:.0}% gate", tol * 100.0);
     }

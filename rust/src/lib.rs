@@ -113,6 +113,47 @@
 //! grid to `BENCH_serve.json`, gated against `BENCH_baseline.json` by
 //! `src/bin/perf_gate.rs` in CI.
 //!
+//! ## Kernel architecture — panels, SIMD, and the parity contract
+//!
+//! Every weight multiply in the crate funnels through one `matmul_acc`
+//! entry point per storage family (dense f32, CSR f32, quant dense,
+//! quant CSR), and each family picks its traversal order from the batch
+//! height alone: the i-outer (row-major) loop at `m = 1` and
+//! `m > WS_MAX_M = 16`, the p-outer (weight-stationary) loop in
+//! between. Both orders accumulate each output cell over ascending `p`
+//! with identical terms, so the branch switch is *bit-exact* —
+//! `tests/kernel_boundary.rs` pins all four families at
+//! m ∈ {1, 2, 16, 17}. On top of that seam sit two acceleration
+//! layers, both observationally invisible:
+//!
+//! * **Panel layout** ([`sparse::panel`]) — the compile pass
+//!   ([`sparse::WeightMat`] / [`quant::QuantMat`]) blocks CSR rows into
+//!   8-column panels (zero-padded, built only at density ≥ 0.15) so the
+//!   inner loop runs contiguous multiply-adds instead of per-entry
+//!   scatter. Padded lanes add `s · ±0.0`, which never changes
+//!   accumulator bits, so paneled and plain kernels are bit-identical.
+//!   Panels are derived structures: excluded from byte accounting,
+//!   ignored by `PartialEq`, and re-checked against the stored entries
+//!   by `validate()`.
+//! * **SIMD dispatch** ([`runtime::vecmath`], cargo feature `simd`) —
+//!   the scalar kernel bodies are always compiled; with the feature on,
+//!   `std::arch` AVX2 (runtime-detected) / NEON bodies are dispatched
+//!   per call. Lanes are assigned along the output row (each lane owns
+//!   one cell's ascending-p stream) and every path uses *unfused*
+//!   multiply-then-add — never FMA — so SIMD, scalar, panel, and
+//!   scatter all produce the same bits. The u8/u16 paths widen codes to
+//!   i32, subtract the zero-point in integer, and fold the row scale
+//!   into one multiply per element group, eliminating the per-element
+//!   dequant multiply.
+//!
+//! The parity suites (`sparse_exec`, `eval_parity`, `decode_session`,
+//! `quant_parity`, `shard_parity`) are the contract and run with the
+//! feature on and off in CI; `benches/runtime_hotpath.rs` records
+//! scalar/panel/simd GFLOP/s per kernel to `BENCH_kernels.json`. The
+//! decode hot loop also fuses RMSNorm into the QKV traversal
+//! (`session_round` normalizes and consumes each activation row in one
+//! pass) — same ordering, same bits.
+//!
 //! ## Expert-parallel sharded serving
 //!
 //! One engine tops out at one machine; [`shard`] partitions the experts
@@ -149,8 +190,9 @@
 //! * **STUN-L002** — all weight arithmetic goes through the
 //!   [`quant::QuantMat::matmul_acc`] / [`sparse::WeightMat`] seams; no
 //!   ad-hoc f32 multiply-accumulate loops outside `sparse/`, `quant/`,
-//!   and `runtime/native.rs`, so the dense/CSR/quant equivalence tests
-//!   cover every path that touches weights.
+//!   `runtime/native.rs`, and `runtime/vecmath.rs` (the vectorized
+//!   kernel bodies behind those seams), so the dense/CSR/quant
+//!   equivalence tests cover every path that touches weights.
 //! * **STUN-L003** — no panicking `Option`/`Result` accessors in the
 //!   hot-path modules (`sparse/`, `quant/`, `shard/`,
 //!   `runtime/session.rs`) outside `#[cfg(test)]`: a poisoned artifact
@@ -158,8 +200,9 @@
 //! * **STUN-L004** — no hash-map iteration feeding a numeric reduction
 //!   (iteration order is unspecified; float sums over it are
 //!   run-to-run nondeterministic).
-//! * **STUN-L005** — no wall-clock reads inside kernels; timing belongs
-//!   to the callers.
+//! * **STUN-L005** — no wall-clock reads inside kernels (including the
+//!   vectorized bodies in `runtime/vecmath.rs` and the panel layout in
+//!   `sparse/panel.rs`); timing belongs to the callers.
 //!
 //! Vetted exceptions live in `rust/lint-allowlist.json`, each with a
 //! mandatory justification; stale entries fail the lint. Run it locally

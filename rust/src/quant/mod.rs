@@ -41,6 +41,8 @@
 //! costs.
 
 use crate::runtime::native::WS_MAX_M;
+use crate::runtime::vecmath;
+use crate::sparse::panel::{build_panels_with, PANEL_MIN_DENSITY, PANEL_W};
 use crate::sparse::{csr_bytes, SparseConfig, WeightMat};
 use anyhow::{bail, Result};
 use std::cell::RefCell;
@@ -171,6 +173,9 @@ pub fn tensor_store_bytes(rows: usize, cols: usize, nnz: usize, scheme: QuantSch
 trait Code: Copy {
     /// The code every exact zero maps to (midpoint of the unsigned range).
     const ZP: i32;
+    /// [`Code::ZP`] as a storable code — the fill value for panel padding
+    /// (dequantizes to exactly `0.0`).
+    const ZP_CODE: Self;
     /// Largest representable magnitude in code units.
     const QMAX: f32;
     /// Largest valid code (`2·ZP − 1`).
@@ -178,10 +183,19 @@ trait Code: Copy {
     fn from_f32(x: f32, inv_scale: f32) -> Self;
     /// `(code − ZP) as f32` — multiply by the row scale to dequantize.
     fn centered(self) -> f32;
+    /// Panel update `out[j] += s * centered(codes[j])`, centering done in
+    /// widened integer (i32) before one exact convert — the vectorized
+    /// form of the scalar `*o += s * c.centered()`, bit-identical to it
+    /// (see [`crate::runtime::vecmath`]).
+    fn axpy_centered(out: &mut [f32], s: f32, codes: &[Self]);
+    /// Vectorized `dst[j] = centered(codes[j])` for the weight-stationary
+    /// dequant temp row.
+    fn centered_into(dst: &mut [f32], codes: &[Self]);
 }
 
 impl Code for u16 {
     const ZP: i32 = 32768;
+    const ZP_CODE: u16 = 32768;
     const QMAX: f32 = 32767.0;
     const CODE_MAX: i32 = 65535;
     #[inline]
@@ -192,10 +206,19 @@ impl Code for u16 {
     fn centered(self) -> f32 {
         (self as i32 - Self::ZP) as f32
     }
+    #[inline]
+    fn axpy_centered(out: &mut [f32], s: f32, codes: &[u16]) {
+        vecmath::axpy_centered_u16(out, s, codes, Self::ZP);
+    }
+    #[inline]
+    fn centered_into(dst: &mut [f32], codes: &[u16]) {
+        vecmath::centered_u16_into(dst, codes, Self::ZP);
+    }
 }
 
 impl Code for u8 {
     const ZP: i32 = 128;
+    const ZP_CODE: u8 = 128;
     const QMAX: f32 = 127.0;
     const CODE_MAX: i32 = 255;
     #[inline]
@@ -205,6 +228,14 @@ impl Code for u8 {
     #[inline]
     fn centered(self) -> f32 {
         (self as i32 - Self::ZP) as f32
+    }
+    #[inline]
+    fn axpy_centered(out: &mut [f32], s: f32, codes: &[u8]) {
+        vecmath::axpy_centered_u8(out, s, codes, Self::ZP);
+    }
+    #[inline]
+    fn centered_into(dst: &mut [f32], codes: &[u8]) {
+        vecmath::centered_u8_into(dst, codes, Self::ZP);
     }
 }
 
@@ -314,7 +345,8 @@ pub fn dequantize_spans(scales: &[f32], codes: &QuantCodes, span_lens: &[usize])
 /// `out += a @ Q`, dense quantized `Q: [rows, cols]`. Same i→p→j
 /// traversal (and zero-activation skip) as the f32 kernels; the per-row
 /// scale is folded into the activation once per row, so the inner loop
-/// is one int→float convert and one fma per element. Small batches
+/// is one int→float convert and one unfused multiply-add per element
+/// (vectorized via [`Code::axpy_centered`]). Small batches
 /// (1 < m ≤ [`WS_MAX_M`]) flip to p-outer and convert each code row once
 /// into a temp row shared by all m activation rows, amortizing the
 /// dequant traversal m× with bit-identical results.
@@ -339,9 +371,7 @@ fn dense_q_matmul_acc<C: Code>(
                     continue;
                 }
                 let qrow = &codes[p * cols..(p + 1) * cols];
-                for (t, &c) in temp.iter_mut().zip(qrow) {
-                    *t = c.centered();
-                }
+                C::centered_into(&mut temp, qrow);
                 for i in 0..m {
                     let av = a[i * rows + p];
                     if av == 0.0 {
@@ -351,10 +381,7 @@ fn dense_q_matmul_acc<C: Code>(
                     if s == 0.0 {
                         continue;
                     }
-                    let orow = &mut out[i * cols..(i + 1) * cols];
-                    for (o, &t) in orow.iter_mut().zip(temp.iter()) {
-                        *o += s * t;
-                    }
+                    vecmath::axpy(&mut out[i * cols..(i + 1) * cols], s, &temp);
                 }
             }
         });
@@ -373,9 +400,7 @@ fn dense_q_matmul_acc<C: Code>(
                 continue;
             }
             let qrow = &codes[p * cols..(p + 1) * cols];
-            for (o, &c) in orow.iter_mut().zip(qrow) {
-                *o += s * c.centered();
-            }
+            C::axpy_centered(orow, s, qrow);
         }
     }
 }
@@ -426,9 +451,7 @@ fn csr_q_matmul_acc<C: Code, I: ColId>(
                 }
                 let (lo, hi) = (row_ptr[p] as usize, row_ptr[p + 1] as usize);
                 temp.resize(hi - lo, 0.0);
-                for (t, c) in temp.iter_mut().zip(&codes[lo..hi]) {
-                    *t = c.centered();
-                }
+                C::centered_into(&mut temp, &codes[lo..hi]);
                 for i in 0..m {
                     let av = a[i * rows + p];
                     if av == 0.0 {
@@ -461,6 +484,98 @@ fn csr_q_matmul_acc<C: Code, I: ColId>(
             let (lo, hi) = (row_ptr[p] as usize, row_ptr[p + 1] as usize);
             for (ci, c) in idx[lo..hi].iter().zip(&codes[lo..hi]) {
                 orow[ci.at()] += s * c.centered();
+            }
+        }
+    }
+}
+
+/// Panel layout of a [`QuantCsr`]: the same blocking as
+/// [`crate::sparse::panel::PanelLayout`], but the panel slabs store the
+/// *codes* (padding slots hold the zero-point code, which dequantizes to
+/// exactly `0.0`), so the kernel widens 8 codes to i32, centers them in
+/// the integer domain, and folds the row scale in exactly once — the
+/// integer-accumulation path that removes the per-element dequant
+/// multiply. Derived, rebuildable, excluded from byte accounting.
+#[derive(Clone, Debug, PartialEq)]
+struct QuantPanels {
+    row_ptr: Vec<u32>,
+    base: Vec<u32>,
+    codes: QuantCodes,
+}
+
+/// `out += a @ Q` over the quantized panel layout. Per output cell this
+/// adds, in ascending-`p` then ascending-panel (ascending-column) order,
+/// exactly the terms `fl(s × centered(code))` the plain quant-CSR kernel
+/// adds, plus `s × 0.0` no-ops from panel padding — so both branches
+/// here and both plain-kernel branches agree bitwise. Full i32
+/// accumulation *across* weight rows is deliberately not done: each row
+/// carries its own scale, so cross-row integer sums would reassociate
+/// the float arithmetic and break the zero-tolerance stream-parity pins.
+#[allow(clippy::too_many_arguments)]
+fn csr_q_panel_matmul_acc<C: Code>(
+    prow_ptr: &[u32],
+    pbase: &[u32],
+    pcodes: &[C],
+    scale: &[f32],
+    rows: usize,
+    cols: usize,
+    a: &[f32],
+    out: &mut [f32],
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), m * rows);
+    debug_assert_eq!(out.len(), m * cols);
+    if m > 1 && m <= WS_MAX_M {
+        DEQ_ROW.with(|t| {
+            let mut temp = t.borrow_mut();
+            for p in 0..rows {
+                let sp = scale[p];
+                if sp == 0.0 || (0..m).all(|i| a[i * rows + p] == 0.0) {
+                    continue;
+                }
+                let (lo, hi) = (prow_ptr[p] as usize, prow_ptr[p + 1] as usize);
+                temp.resize((hi - lo) * PANEL_W, 0.0);
+                C::centered_into(&mut temp, &pcodes[lo * PANEL_W..hi * PANEL_W]);
+                for i in 0..m {
+                    let av = a[i * rows + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let s = av * sp;
+                    if s == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out[i * cols..(i + 1) * cols];
+                    for (pi, tpanel) in (lo..hi).zip(temp.chunks_exact(PANEL_W)) {
+                        let b = pbase[pi] as usize;
+                        let end = cols.min(b + PANEL_W);
+                        vecmath::axpy(&mut orow[b..end], s, &tpanel[..end - b]);
+                    }
+                }
+            }
+        });
+        return;
+    }
+    for i in 0..m {
+        let arow = &a[i * rows..(i + 1) * rows];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let s = av * scale[p];
+            if s == 0.0 {
+                continue;
+            }
+            let (lo, hi) = (prow_ptr[p] as usize, prow_ptr[p + 1] as usize);
+            for pi in lo..hi {
+                let b = pbase[pi] as usize;
+                let end = cols.min(b + PANEL_W);
+                C::axpy_centered(
+                    &mut orow[b..end],
+                    s,
+                    &pcodes[pi * PANEL_W..pi * PANEL_W + (end - b)],
+                );
             }
         }
     }
@@ -565,7 +680,10 @@ impl ColIdx {
 }
 
 /// A per-row-quantized CSR matrix: u32 row pointers, narrow column
-/// indices, quantized values, per-row scales.
+/// indices, quantized values, per-row scales. May carry a derived
+/// [`QuantPanels`] acceleration layout (see [`QuantCsr::build_panels`]);
+/// like the f32 panel layout it never changes results and is excluded
+/// from [`QuantCsr::bytes`].
 #[derive(Clone, Debug)]
 pub struct QuantCsr {
     rows: usize,
@@ -575,6 +693,7 @@ pub struct QuantCsr {
     /// `[rows]` dequantization scales (absmax over the row's stored values).
     scale: Vec<f32>,
     codes: QuantCodes,
+    panels: Option<QuantPanels>,
 }
 
 impl QuantCsr {
@@ -609,7 +728,57 @@ impl QuantCsr {
             idx,
             scale,
             codes,
+            panels: None,
         }
+    }
+
+    fn cols_u32(&self) -> Vec<u32> {
+        match &self.idx {
+            ColIdx::U16(v) => v.iter().map(|&c| c as u32).collect(),
+            ColIdx::U32(v) => v.clone(),
+        }
+    }
+
+    fn built_panels(&self) -> QuantPanels {
+        let cols_v = self.cols_u32();
+        match &self.codes {
+            QuantCodes::U16(q) => {
+                let (rp, base, pv) =
+                    build_panels_with(self.rows, &self.row_ptr, &cols_v, q, <u16 as Code>::ZP_CODE);
+                QuantPanels {
+                    row_ptr: rp,
+                    base,
+                    codes: QuantCodes::U16(pv),
+                }
+            }
+            QuantCodes::U8(q) => {
+                let (rp, base, pv) =
+                    build_panels_with(self.rows, &self.row_ptr, &cols_v, q, <u8 as Code>::ZP_CODE);
+                QuantPanels {
+                    row_ptr: rp,
+                    base,
+                    codes: QuantCodes::U8(pv),
+                }
+            }
+        }
+    }
+
+    /// Build the panel acceleration layout when the matrix is dense
+    /// enough for 8-wide panels to pay
+    /// ([`crate::sparse::panel::PANEL_MIN_DENSITY`]); a no-op below the
+    /// gate. Called by [`QuantMat::compile`] on every quantized CSR
+    /// tensor it produces.
+    pub fn build_panels(&mut self) {
+        let total = (self.rows * self.cols).max(1);
+        if (self.stored() as f64) / (total as f64) < PANEL_MIN_DENSITY {
+            return;
+        }
+        self.panels = Some(self.built_panels());
+    }
+
+    /// Whether the panel acceleration layout is present.
+    pub fn has_panels(&self) -> bool {
+        self.panels.is_some()
     }
 
     /// Stored entries (structural non-zeros of the source slab).
@@ -642,6 +811,19 @@ impl QuantCsr {
 
     pub fn matmul_acc(&self, a: &[f32], out: &mut [f32], m: usize) {
         let (rp, sc, r, c) = (&self.row_ptr, &self.scale, self.rows, self.cols);
+        if let Some(p) = &self.panels {
+            // panel path (both m branches): numerically identical to the
+            // scatter path below — padding terms are exact zeros
+            match &p.codes {
+                QuantCodes::U16(q) => {
+                    csr_q_panel_matmul_acc(&p.row_ptr, &p.base, q, sc, r, c, a, out, m)
+                }
+                QuantCodes::U8(q) => {
+                    csr_q_panel_matmul_acc(&p.row_ptr, &p.base, q, sc, r, c, a, out, m)
+                }
+            }
+            return;
+        }
         match (&self.idx, &self.codes) {
             (ColIdx::U16(ix), QuantCodes::U16(q)) => {
                 csr_q_matmul_acc(rp, ix, q, sc, r, c, a, out, m)
@@ -718,6 +900,12 @@ impl QuantCsr {
                 prev = Some(c);
             }
         }
+        if let Some(p) = &self.panels {
+            ensure!(
+                *p == self.built_panels(),
+                "quant CSR panel layout out of sync with stored codes"
+            );
+        }
         Ok(())
     }
 }
@@ -752,7 +940,10 @@ impl QuantMat {
             && csr_store_bytes(rows, cols, nnz, scfg.quant)
                 < dense_store_bytes(rows, cols, scfg.quant)
         {
-            QuantMat::Csr(QuantCsr::quantize(data, rows, cols, scfg.quant))
+            let mut q = QuantCsr::quantize(data, rows, cols, scfg.quant);
+            // compile-time panel build, mirroring WeightMat::compile
+            q.build_panels();
+            QuantMat::Csr(q)
         } else {
             QuantMat::Dense(QuantDense::quantize(data, rows, cols, scfg.quant))
         }
@@ -1005,6 +1196,55 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{}", scheme.name());
             }
         }
+    }
+
+    #[test]
+    fn quant_panel_path_is_bit_identical_to_scatter_path() {
+        let (rows, cols) = (14, 22);
+        let data = sparse_slab(rows, cols, 0.35, 31);
+        let mut rng = Rng::new(33);
+        let a: Vec<f32> = (0..17 * rows).map(|_| rng.normal()).collect();
+        for scheme in [QuantScheme::U16, QuantScheme::U8] {
+            let plain = QuantCsr::quantize(&data, rows, cols, scheme);
+            let mut paneled = plain.clone();
+            paneled.build_panels();
+            assert!(paneled.has_panels(), "{}", scheme.name());
+            paneled.validate().unwrap();
+            assert_eq!(plain.bytes(), paneled.bytes());
+            assert_eq!(plain.to_dense(), paneled.to_dense());
+            // both dispatch branches: weight-stationary (m=2) and
+            // row-major (m=1, m=17)
+            for m in [1usize, 2, 17] {
+                let (mut op, mut oq) = (vec![0f32; m * cols], vec![0f32; m * cols]);
+                plain.matmul_acc(&a[..m * rows], &mut op, m);
+                paneled.matmul_acc(&a[..m * rows], &mut oq, m);
+                for (x, y) in op.iter().zip(&oq) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{} m={m}", scheme.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_panel_build_gates_on_density_and_validate_catches_desync() {
+        // 10% density: below the panel gate
+        let mut sparse =
+            QuantCsr::quantize(&sparse_slab(32, 32, 0.1, 35), 32, 32, QuantScheme::U8);
+        sparse.build_panels();
+        assert!(!sparse.has_panels());
+
+        // mutate a stored code after building → stale layout is rejected
+        let mut q = QuantCsr::quantize(&sparse_slab(8, 16, 0.6, 36), 8, 16, QuantScheme::U8);
+        q.build_panels();
+        assert!(q.has_panels());
+        q.validate().unwrap();
+        if let QuantCodes::U8(codes) = &mut q.codes {
+            if let Some(c) = codes.first_mut() {
+                *c = c.wrapping_add(1);
+            }
+        }
+        let err = q.validate().unwrap_err().to_string();
+        assert!(err.contains("panel layout out of sync"), "{err}");
     }
 
     #[test]

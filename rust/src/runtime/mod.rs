@@ -34,6 +34,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod session;
+pub mod vecmath;
 
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]

@@ -708,7 +708,8 @@ impl ParamIdx {
 }
 
 // ---------------------------------------------------------------------------
-// Kernels (cache-friendly scalar loops; shapes are small testbed models).
+// Kernels (cache-friendly loops; the forward matmul's inner panel updates
+// go through runtime::vecmath for the runtime-dispatched SIMD bodies).
 // ---------------------------------------------------------------------------
 
 /// out += a @ b, a: [m,k], b: [k,n] (ikj ordering, skips zero a-entries —
@@ -719,6 +720,7 @@ impl ParamIdx {
 /// streamed once for all m rows; per output cell the accumulation order
 /// over p is unchanged, keeping both orders bit-identical.
 pub(crate) fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    use crate::runtime::vecmath::axpy;
     if m > 1 && m <= WS_MAX_M {
         for p in 0..k {
             let brow = &b[p * n..p * n + n];
@@ -727,10 +729,7 @@ pub(crate) fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, 
                 if av == 0.0 {
                     continue;
                 }
-                let orow = &mut out[i * n..i * n + n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
+                axpy(&mut out[i * n..i * n + n], av, brow);
             }
         }
         return;
@@ -742,10 +741,7 @@ pub(crate) fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, 
             if av == 0.0 {
                 continue;
             }
-            let brow = &b[p * n..p * n + n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
+            axpy(orow, av, &b[p * n..p * n + n]);
         }
     }
 }
@@ -871,16 +867,23 @@ pub(crate) fn rmsnorm_fwd(x: &[f32], g: &[f32], d: usize) -> Vec<f32> {
 pub(crate) fn rmsnorm_into(x: &[f32], g: &[f32], d: usize, out: &mut [f32]) {
     let rows = x.len() / d;
     for r in 0..rows {
-        let xr = &x[r * d..r * d + d];
-        let mut ms = 0f32;
-        for &v in xr {
-            ms += v * v;
-        }
-        let rinv = 1.0 / (ms / d as f32 + RMS_EPS).sqrt();
-        let yr = &mut out[r * d..r * d + d];
-        for i in 0..d {
-            yr[i] = xr[i] * rinv * g[i];
-        }
+        rmsnorm_row(&x[r * d..r * d + d], g, &mut out[r * d..r * d + d]);
+    }
+}
+
+/// One row of [`rmsnorm_into`] (`xr.len() == out.len() == d`). Split out
+/// so the fused RMSNorm→matmul path in `sparse::session_round` can
+/// produce each normalized row and consume it immediately, without
+/// changing the arithmetic of the all-rows form.
+pub(crate) fn rmsnorm_row(xr: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = xr.len();
+    let mut ms = 0f32;
+    for &v in xr {
+        ms += v * v;
+    }
+    let rinv = 1.0 / (ms / d as f32 + RMS_EPS).sqrt();
+    for i in 0..d {
+        out[i] = xr[i] * rinv * g[i];
     }
 }
 

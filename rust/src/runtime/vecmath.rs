@@ -1,0 +1,544 @@
+//! Vectorized kernel primitives shared by the dense, CSR, and quantized
+//! matmul families (STUN-L002's sanctioned kernel seam).
+//!
+//! Every primitive here is an `out[j] += s * w[j]`-shaped panel update (or
+//! the centered-code materialization feeding one). The SIMD bodies are
+//! bit-identical to the scalar bodies by construction:
+//!
+//! - Lanes are assigned along `j` (output columns), so each output cell
+//!   still receives its terms in the pinned ascending-`p` order — no
+//!   cross-lane reduction ever happens.
+//! - Multiplies and adds stay **unfused** (`mul` then `add`, never `fma`):
+//!   Rust does not contract `*o += s * x` into a fused multiply-add, so a
+//!   fused SIMD path would round differently and break the zero-tolerance
+//!   weight-stationary ↔ row-major stream parity pins.
+//! - Quantized codes are widened to `i32` and re-centered in the integer
+//!   domain (`code - ZP` is exact, and `i32 → f32` is exact for any value
+//!   that fits in 16 bits), matching the scalar `centered()` exactly. The
+//!   per-row scale is folded into `s` once by the caller, which is what
+//!   removes the per-element dequant multiply from the inner loop.
+//!
+//! Dispatch: the `simd` cargo feature compiles the `std::arch` paths
+//! alongside the scalar ones (the scalar path is always compiled and is
+//! the only path without the feature). At runtime, x86_64 requires AVX2
+//! (checked once via [`std::arch::is_x86_feature_detected!`] and cached);
+//! aarch64 uses baseline NEON. [`set_simd_override`] pins dispatch for
+//! A/B benchmarking and parity tests.
+
+#[cfg(feature = "simd")]
+use std::sync::atomic::{AtomicU8, Ordering};
+
+// ---- dispatch ------------------------------------------------------------
+
+/// Cached runtime capability: 0 = unprobed, 1 = scalar, 2 = simd.
+#[cfg(feature = "simd")]
+static SIMD_CAP: AtomicU8 = AtomicU8::new(0);
+
+/// Operator override: 0 = auto, 1 = force scalar, 2 = force simd-if-able.
+#[cfg(feature = "simd")]
+static SIMD_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+#[cfg(feature = "simd")]
+fn probe() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return 2;
+        }
+        1
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline; no runtime probe needed.
+        2
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        1
+    }
+}
+
+/// Whether the vectorized kernel paths are live for this process.
+///
+/// `false` whenever the `simd` feature is off, the CPU lacks the required
+/// ISA (AVX2 on x86_64), or [`set_simd_override`] forced scalar.
+#[cfg(feature = "simd")]
+pub fn simd_active() -> bool {
+    if SIMD_OVERRIDE.load(Ordering::Relaxed) == 1 {
+        return false;
+    }
+    let mut cap = SIMD_CAP.load(Ordering::Relaxed);
+    if cap == 0 {
+        cap = probe();
+        SIMD_CAP.store(cap, Ordering::Relaxed);
+    }
+    cap == 2
+}
+
+/// Whether the vectorized kernel paths are live for this process.
+///
+/// Always `false` without the `simd` cargo feature: only the scalar
+/// bodies are compiled into the binary.
+#[cfg(not(feature = "simd"))]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// Pin kernel dispatch for benchmarking and parity tests.
+///
+/// `Some(false)` forces the scalar bodies even when SIMD is available;
+/// `Some(true)` or `None` restores auto-detection. A no-op without the
+/// `simd` feature (dispatch is already permanently scalar).
+pub fn set_simd_override(force: Option<bool>) {
+    #[cfg(feature = "simd")]
+    SIMD_OVERRIDE.store(
+        match force {
+            Some(false) => 1,
+            Some(true) => 2,
+            None => 0,
+        },
+        Ordering::Relaxed,
+    );
+    #[cfg(not(feature = "simd"))]
+    let _ = force;
+}
+
+// ---- scalar bodies (always compiled; the reference semantics) ------------
+
+fn axpy_scalar(out: &mut [f32], s: f32, w: &[f32]) {
+    for (o, &x) in out.iter_mut().zip(w) {
+        *o += s * x;
+    }
+}
+
+fn axpy_centered_u16_scalar(out: &mut [f32], s: f32, codes: &[u16], zp: i32) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o += s * ((c as i32 - zp) as f32);
+    }
+}
+
+fn axpy_centered_u8_scalar(out: &mut [f32], s: f32, codes: &[u8], zp: i32) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o += s * ((c as i32 - zp) as f32);
+    }
+}
+
+fn centered_u16_into_scalar(dst: &mut [f32], codes: &[u16], zp: i32) {
+    for (d, &c) in dst.iter_mut().zip(codes) {
+        *d = (c as i32 - zp) as f32;
+    }
+}
+
+fn centered_u8_into_scalar(dst: &mut [f32], codes: &[u8], zp: i32) {
+    for (d, &c) in dst.iter_mut().zip(codes) {
+        *d = (c as i32 - zp) as f32;
+    }
+}
+
+// ---- public entry points (runtime-dispatched) ----------------------------
+
+/// `out[j] += s * w[j]` over a panel. `out` and `w` must be equal length.
+pub fn axpy(out: &mut [f32], s: f32, w: &[f32]) {
+    debug_assert_eq!(out.len(), w.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support on this CPU.
+        unsafe { x86::axpy(out, s, w) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        neon::axpy(out, s, w);
+        return;
+    }
+    axpy_scalar(out, s, w);
+}
+
+/// `out[j] += s * (codes[j] - zp)` with the centering done in widened
+/// integer (i32) before one exact convert — the integer-accumulation
+/// panel update for u16 codes. Equal-length slices.
+pub fn axpy_centered_u16(out: &mut [f32], s: f32, codes: &[u16], zp: i32) {
+    debug_assert_eq!(out.len(), codes.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support on this CPU.
+        unsafe { x86::axpy_centered_u16(out, s, codes, zp) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        neon::axpy_centered_u16(out, s, codes, zp);
+        return;
+    }
+    axpy_centered_u16_scalar(out, s, codes, zp);
+}
+
+/// u8 twin of [`axpy_centered_u16`].
+pub fn axpy_centered_u8(out: &mut [f32], s: f32, codes: &[u8], zp: i32) {
+    debug_assert_eq!(out.len(), codes.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support on this CPU.
+        unsafe { x86::axpy_centered_u8(out, s, codes, zp) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        neon::axpy_centered_u8(out, s, codes, zp);
+        return;
+    }
+    axpy_centered_u8_scalar(out, s, codes, zp);
+}
+
+/// `dst[j] = (codes[j] - zp) as f32` — vectorized `centered()` for the
+/// weight-stationary dequant temp row. Equal-length slices.
+pub fn centered_u16_into(dst: &mut [f32], codes: &[u16], zp: i32) {
+    debug_assert_eq!(dst.len(), codes.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support on this CPU.
+        unsafe { x86::centered_u16_into(dst, codes, zp) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        neon::centered_u16_into(dst, codes, zp);
+        return;
+    }
+    centered_u16_into_scalar(dst, codes, zp);
+}
+
+/// u8 twin of [`centered_u16_into`].
+pub fn centered_u8_into(dst: &mut [f32], codes: &[u8], zp: i32) {
+    debug_assert_eq!(dst.len(), codes.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support on this CPU.
+        unsafe { x86::centered_u8_into(dst, codes, zp) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        neon::centered_u8_into(dst, codes, zp);
+        return;
+    }
+    centered_u8_into_scalar(dst, codes, zp);
+}
+
+// ---- AVX2 bodies ---------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], s: f32, w: &[f32]) {
+        let n = out.len();
+        let sv = _mm256_set1_ps(s);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+            // unfused mul + add: same rounding as the scalar `*o += s * x`
+            let sum = _mm256_add_ps(ov, _mm256_mul_ps(sv, wv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), sum);
+            j += 8;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) += s * *w.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_centered_u16(out: &mut [f32], s: f32, codes: &[u16], zp: i32) {
+        let n = out.len();
+        let sv = _mm256_set1_ps(s);
+        let zpv = _mm256_set1_epi32(zp);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            // 8×u16 → widen to i32 → center in the integer domain → exact convert
+            let cv = _mm_loadu_si128(codes.as_ptr().add(j) as *const __m128i);
+            let wide = _mm256_cvtepu16_epi32(cv);
+            let centered = _mm256_cvtepi32_ps(_mm256_sub_epi32(wide, zpv));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+            let sum = _mm256_add_ps(ov, _mm256_mul_ps(sv, centered));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), sum);
+            j += 8;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) += s * ((*codes.get_unchecked(j) as i32 - zp) as f32);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_centered_u8(out: &mut [f32], s: f32, codes: &[u8], zp: i32) {
+        let n = out.len();
+        let sv = _mm256_set1_ps(s);
+        let zpv = _mm256_set1_epi32(zp);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let cv = _mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i);
+            let wide = _mm256_cvtepu8_epi32(cv);
+            let centered = _mm256_cvtepi32_ps(_mm256_sub_epi32(wide, zpv));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+            let sum = _mm256_add_ps(ov, _mm256_mul_ps(sv, centered));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), sum);
+            j += 8;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) += s * ((*codes.get_unchecked(j) as i32 - zp) as f32);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn centered_u16_into(dst: &mut [f32], codes: &[u16], zp: i32) {
+        let n = dst.len();
+        let zpv = _mm256_set1_epi32(zp);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let cv = _mm_loadu_si128(codes.as_ptr().add(j) as *const __m128i);
+            let wide = _mm256_cvtepu16_epi32(cv);
+            let centered = _mm256_cvtepi32_ps(_mm256_sub_epi32(wide, zpv));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), centered);
+            j += 8;
+        }
+        while j < n {
+            *dst.get_unchecked_mut(j) = (*codes.get_unchecked(j) as i32 - zp) as f32;
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn centered_u8_into(dst: &mut [f32], codes: &[u8], zp: i32) {
+        let n = dst.len();
+        let zpv = _mm256_set1_epi32(zp);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let cv = _mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i);
+            let wide = _mm256_cvtepu8_epi32(cv);
+            let centered = _mm256_cvtepi32_ps(_mm256_sub_epi32(wide, zpv));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), centered);
+            j += 8;
+        }
+        while j < n {
+            *dst.get_unchecked_mut(j) = (*codes.get_unchecked(j) as i32 - zp) as f32;
+            j += 1;
+        }
+    }
+}
+
+// ---- NEON bodies ---------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub fn axpy(out: &mut [f32], s: f32, w: &[f32]) {
+        let n = out.len();
+        // SAFETY: NEON is baseline on aarch64; all loads/stores are within
+        // the slice bounds checked by the loop conditions.
+        unsafe {
+            let sv = vdupq_n_f32(s);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let wv = vld1q_f32(w.as_ptr().add(j));
+                let ov = vld1q_f32(out.as_ptr().add(j));
+                // vmulq + vaddq, never vfmaq: keep the scalar rounding
+                let sum = vaddq_f32(ov, vmulq_f32(sv, wv));
+                vst1q_f32(out.as_mut_ptr().add(j), sum);
+                j += 4;
+            }
+            while j < n {
+                *out.get_unchecked_mut(j) += s * *w.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+
+    pub fn axpy_centered_u16(out: &mut [f32], s: f32, codes: &[u16], zp: i32) {
+        let n = out.len();
+        // SAFETY: NEON is baseline on aarch64; loads/stores stay in bounds.
+        unsafe {
+            let sv = vdupq_n_f32(s);
+            let zpv = vdupq_n_s32(zp);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let cv = vld1_u16(codes.as_ptr().add(j));
+                let wide = vreinterpretq_s32_u32(vmovl_u16(cv));
+                let centered = vcvtq_f32_s32(vsubq_s32(wide, zpv));
+                let ov = vld1q_f32(out.as_ptr().add(j));
+                let sum = vaddq_f32(ov, vmulq_f32(sv, centered));
+                vst1q_f32(out.as_mut_ptr().add(j), sum);
+                j += 4;
+            }
+            while j < n {
+                *out.get_unchecked_mut(j) += s * ((*codes.get_unchecked(j) as i32 - zp) as f32);
+                j += 1;
+            }
+        }
+    }
+
+    pub fn axpy_centered_u8(out: &mut [f32], s: f32, codes: &[u8], zp: i32) {
+        let n = out.len();
+        // SAFETY: NEON is baseline on aarch64; loads/stores stay in bounds.
+        unsafe {
+            let sv = vdupq_n_f32(s);
+            let zpv = vdupq_n_s32(zp);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let cv = vmovl_u8(vld1_u8(codes.as_ptr().add(j)));
+                let lo = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(cv)));
+                let hi = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(cv)));
+                let clo = vcvtq_f32_s32(vsubq_s32(lo, zpv));
+                let chi = vcvtq_f32_s32(vsubq_s32(hi, zpv));
+                let olo = vld1q_f32(out.as_ptr().add(j));
+                let ohi = vld1q_f32(out.as_ptr().add(j + 4));
+                vst1q_f32(out.as_mut_ptr().add(j), vaddq_f32(olo, vmulq_f32(sv, clo)));
+                vst1q_f32(
+                    out.as_mut_ptr().add(j + 4),
+                    vaddq_f32(ohi, vmulq_f32(sv, chi)),
+                );
+                j += 8;
+            }
+            while j < n {
+                *out.get_unchecked_mut(j) += s * ((*codes.get_unchecked(j) as i32 - zp) as f32);
+                j += 1;
+            }
+        }
+    }
+
+    pub fn centered_u16_into(dst: &mut [f32], codes: &[u16], zp: i32) {
+        let n = dst.len();
+        // SAFETY: NEON is baseline on aarch64; loads/stores stay in bounds.
+        unsafe {
+            let zpv = vdupq_n_s32(zp);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let cv = vld1_u16(codes.as_ptr().add(j));
+                let wide = vreinterpretq_s32_u32(vmovl_u16(cv));
+                vst1q_f32(dst.as_mut_ptr().add(j), vcvtq_f32_s32(vsubq_s32(wide, zpv)));
+                j += 4;
+            }
+            while j < n {
+                *dst.get_unchecked_mut(j) = (*codes.get_unchecked(j) as i32 - zp) as f32;
+                j += 1;
+            }
+        }
+    }
+
+    pub fn centered_u8_into(dst: &mut [f32], codes: &[u8], zp: i32) {
+        let n = dst.len();
+        // SAFETY: NEON is baseline on aarch64; loads/stores stay in bounds.
+        unsafe {
+            let zpv = vdupq_n_s32(zp);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let cv = vmovl_u8(vld1_u8(codes.as_ptr().add(j)));
+                let lo = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(cv)));
+                let hi = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(cv)));
+                vst1q_f32(dst.as_mut_ptr().add(j), vcvtq_f32_s32(vsubq_s32(lo, zpv)));
+                vst1q_f32(
+                    dst.as_mut_ptr().add(j + 4),
+                    vcvtq_f32_s32(vsubq_s32(hi, zpv)),
+                );
+                j += 8;
+            }
+            while j < n {
+                *dst.get_unchecked_mut(j) = (*codes.get_unchecked(j) as i32 - zp) as f32;
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn axpy_matches_scalar_reference_bitwise() {
+        for n in [0usize, 1, 3, 7, 8, 9, 31, 64, 65] {
+            let w = slab(n, 7 + n as u64);
+            let mut out = slab(n, 100 + n as u64);
+            let mut want = out.clone();
+            axpy_scalar(&mut want, 0.37, &w);
+            axpy(&mut out, 0.37, &w);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy drifted from scalar at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn centered_paths_match_scalar_reference_bitwise() {
+        for n in [0usize, 1, 5, 8, 13, 16, 33] {
+            let codes16: Vec<u16> = (0..n).map(|i| (i * 4099 % 65536) as u16).collect();
+            let codes8: Vec<u8> = (0..n).map(|i| (i * 37 % 256) as u8).collect();
+            let base = slab(n, 9 + n as u64);
+
+            let mut out = base.clone();
+            let mut want = base.clone();
+            axpy_centered_u16_scalar(&mut want, -1.25, &codes16, 32768);
+            axpy_centered_u16(&mut out, -1.25, &codes16, 32768);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+
+            let mut out = base.clone();
+            let mut want = base;
+            axpy_centered_u8_scalar(&mut want, 0.002, &codes8, 128);
+            axpy_centered_u8(&mut out, 0.002, &codes8, 128);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+
+            let mut dst = vec![0f32; n];
+            let mut wdst = vec![0f32; n];
+            centered_u16_into_scalar(&mut wdst, &codes16, 32768);
+            centered_u16_into(&mut dst, &codes16, 32768);
+            assert_eq!(dst, wdst);
+            centered_u8_into_scalar(&mut wdst, &codes8, 128);
+            centered_u8_into(&mut dst, &codes8, 128);
+            assert_eq!(dst, wdst);
+        }
+    }
+
+    #[test]
+    fn override_forces_scalar_dispatch() {
+        set_simd_override(Some(false));
+        assert!(!simd_active());
+        let w = slab(40, 3);
+        let mut a = slab(40, 4);
+        let mut b = a.clone();
+        axpy(&mut a, 1.5, &w);
+        set_simd_override(None);
+        axpy(&mut b, 1.5, &w);
+        // scalar and auto dispatch must agree bitwise
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -10,6 +10,8 @@
 //! zero weights contribute exactly `+0.0` there, so dense and CSR paths
 //! agree to the last ulp (the equivalence tests pin this at 1e-5).
 
+use crate::sparse::panel::{PanelLayout, PANEL_MIN_DENSITY};
+
 /// Bytes of a CSR matrix with `rows` rows and `nnz` stored entries —
 /// THE sizing rule for CSR storage, shared by [`CsrMatrix::bytes`], the
 /// compile pass, `CompressionReport`, and `ParamSet::expert_bytes_csr`
@@ -21,13 +23,32 @@ pub fn csr_bytes(rows: usize, nnz: usize) -> usize {
 
 /// One sparse matrix in CSR layout: `row_ptr[r]..row_ptr[r+1]` indexes the
 /// (column, value) pairs of row `r`.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// May additionally carry a [`PanelLayout`] — a derived, rebuildable
+/// blocking of the same entries into dense 8-wide column panels that the
+/// kernels prefer when present (see [`crate::sparse::panel`]). The panel
+/// layout never changes results (its padding terms are exact zeros), is
+/// ignored by equality, and is excluded from [`CsrMatrix::bytes`].
+#[derive(Clone, Debug)]
 pub struct CsrMatrix {
     rows: usize,
     cols: usize,
     row_ptr: Vec<u32>,
     col_idx: Vec<u32>,
     vals: Vec<f32>,
+    panels: Option<PanelLayout>,
+}
+
+/// Structural equality only: two matrices storing the same entries are
+/// equal whether or not either has built its panel acceleration layout.
+impl PartialEq for CsrMatrix {
+    fn eq(&self, other: &CsrMatrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.row_ptr == other.row_ptr
+            && self.col_idx == other.col_idx
+            && self.vals == other.vals
+    }
 }
 
 impl CsrMatrix {
@@ -55,7 +76,31 @@ impl CsrMatrix {
             row_ptr,
             col_idx,
             vals,
+            panels: None,
         }
+    }
+
+    /// Build the panel acceleration layout when the matrix is dense
+    /// enough for 8-wide panels to pay ([`PANEL_MIN_DENSITY`]); a no-op
+    /// below the gate. Called by the compile pass
+    /// (`sparse::CompiledModel`) on every f32 CSR tensor it produces.
+    pub fn build_panels(&mut self) {
+        let total = (self.rows * self.cols).max(1);
+        if (self.nnz() as f64) / (total as f64) < PANEL_MIN_DENSITY {
+            return;
+        }
+        self.panels = Some(PanelLayout::build(
+            self.rows,
+            self.cols,
+            &self.row_ptr,
+            &self.col_idx,
+            &self.vals,
+        ));
+    }
+
+    /// Whether the panel acceleration layout is present.
+    pub fn has_panels(&self) -> bool {
+        self.panels.is_some()
     }
 
     pub fn rows(&self) -> usize {
@@ -88,9 +133,17 @@ impl CsrMatrix {
     }
 
     /// `out[0..cols] += alpha · row(r)` — the axpy primitive every sparse
-    /// matmul reduces to.
+    /// matmul reduces to. Uses contiguous panel updates when the panel
+    /// layout is built (numerically identical — panel padding adds exact
+    /// zeros), per-entry scatter otherwise. Both `matmul_acc` branches go
+    /// through here, so panel presence can never split the
+    /// weight-stationary and row-major paths onto different arithmetic.
     #[inline]
     pub fn axpy_row(&self, r: usize, alpha: f32, out: &mut [f32]) {
+        if let Some(p) = &self.panels {
+            p.axpy_row(r, alpha, out);
+            return;
+        }
         let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
         let idx = &self.col_idx[s..e];
         let vals = &self.vals[s..e];
@@ -182,6 +235,14 @@ impl CsrMatrix {
                 }
                 prev = Some(c);
             }
+        }
+        if let Some(p) = &self.panels {
+            let rebuilt =
+                PanelLayout::build(self.rows, self.cols, &self.row_ptr, &self.col_idx, &self.vals);
+            ensure!(
+                *p == rebuilt,
+                "CSR panel layout out of sync with stored entries"
+            );
         }
         Ok(())
     }
@@ -278,6 +339,49 @@ mod tests {
         let mut bad = good.clone();
         bad.vals.pop();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn panels_change_nothing_observable() {
+        let (m, k, n) = (3, 10, 19);
+        let data = sparse_slab(k, n, 0.5, 21);
+        let plain = CsrMatrix::from_dense(&data, k, n);
+        let mut paneled = plain.clone();
+        paneled.build_panels();
+        assert!(paneled.has_panels());
+        paneled.validate().unwrap();
+        assert_eq!(plain, paneled);
+        assert_eq!(plain.bytes(), paneled.bytes());
+        assert_eq!(plain.to_dense(), paneled.to_dense());
+        let mut rng = Rng::new(22);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        for mm in [1, m, 17] {
+            let aa: Vec<f32> = a.iter().cycle().take(mm * k).copied().collect();
+            let mut got_plain = vec![0f32; mm * n];
+            let mut got_panel = vec![0f32; mm * n];
+            plain.matmul_acc(&aa, &mut got_plain, mm);
+            paneled.matmul_acc(&aa, &mut got_panel, mm);
+            assert_eq!(got_plain, got_panel, "m={mm}");
+        }
+    }
+
+    #[test]
+    fn panel_build_respects_density_gate_and_validate_catches_desync() {
+        // 10% density: below the gate, so build_panels is a no-op
+        let mut sparse = CsrMatrix::from_dense(&sparse_slab(32, 32, 0.1, 23), 32, 32);
+        sparse.build_panels();
+        assert!(!sparse.has_panels());
+
+        // a mutated value after build → validator rejects the stale layout
+        let mut dense = CsrMatrix::from_dense(&sparse_slab(8, 16, 0.6, 24), 8, 16);
+        dense.build_panels();
+        assert!(dense.has_panels());
+        dense.validate().unwrap();
+        if let Some(v) = dense.vals.first_mut() {
+            *v += 1.0;
+        }
+        let err = dense.validate().unwrap_err().to_string();
+        assert!(err.contains("panel layout out of sync"), "{err}");
     }
 
     #[test]

@@ -65,6 +65,7 @@
 //! quantization is off.
 
 pub mod csr;
+pub mod panel;
 
 pub use csr::{csr_bytes, CsrMatrix};
 
@@ -72,7 +73,7 @@ use crate::model::{ModelConfig, ParamSet};
 use crate::quant::{self, QuantMat, QuantScheme};
 use crate::runtime::native::{
     attention_fwd, attn_ctx_row, embed_fwd, masked_loss, matmul, rmsnorm_fwd, rmsnorm_into,
-    route_token,
+    rmsnorm_row, route_token, WS_MAX_M,
 };
 use crate::runtime::{
     check_tokens, count_execution, CompiledForward, DecodeState, LossOutput, StepOutput,
@@ -126,7 +127,11 @@ impl WeightMat {
         let nnz = data.iter().filter(|&&x| x != 0.0).count();
         let density = nnz as f64 / (rows * cols).max(1) as f64;
         if density <= cfg.density_threshold && csr_bytes(rows, nnz) < rows * cols * 4 {
-            WeightMat::Csr(CsrMatrix::from_dense(data, rows, cols))
+            let mut c = CsrMatrix::from_dense(data, rows, cols);
+            // compile-time panel build: the kernels prefer the blocked
+            // layout when the density gate admits it (see sparse::panel)
+            c.build_panels();
+            WeightMat::Csr(c)
         } else {
             WeightMat::Dense {
                 rows,
@@ -163,6 +168,37 @@ impl WeightMat {
             WeightMat::Dense { rows, cols, data } => matmul(a, data, out, m, *rows, *cols),
             WeightMat::Csr(c) => c.matmul_acc(a, out, m),
         }
+    }
+}
+
+/// Fused RMSNorm → matmul: normalize `h` (`[m, d]`, row-major) by `gain`
+/// into the scratch `a`, then accumulate `a @ w` into `out` — the QKV
+/// entry of the layer-major round. Weight-stationary batches
+/// (1 < m ≤ [`WS_MAX_M`]) need every normalized row in place before the
+/// single p-outer weight traversal, so there the two passes stay
+/// separate. Row-major batches (m = 1 or m > `WS_MAX_M`) produce each
+/// normalized row and consume it while it is still hot: the i-outer
+/// kernels are row-independent, so m per-row calls accumulate identical
+/// terms in identical order as one m-row call. `a` is fully written
+/// either way — later stages reuse it as scratch.
+pub(crate) fn rmsnorm_matmul_acc(
+    w: &QuantMat,
+    h: &[f32],
+    gain: &[f32],
+    d: usize,
+    a: &mut [f32],
+    out: &mut [f32],
+    m: usize,
+) {
+    if m > 1 && m <= WS_MAX_M {
+        rmsnorm_into(h, gain, d, a);
+        w.matmul_acc(a, out, m);
+        return;
+    }
+    let cols = out.len() / m.max(1);
+    for i in 0..m {
+        rmsnorm_row(&h[i * d..(i + 1) * d], gain, &mut a[i * d..(i + 1) * d]);
+        w.matmul_acc(&a[i * d..(i + 1) * d], &mut out[i * cols..(i + 1) * cols], 1);
     }
 }
 
@@ -849,9 +885,10 @@ impl CompiledModel {
         let mut logits = vec![0f32; n_out * v];
         let mut sel_out = vec![-1i32; cfg.n_layers * n_out * k];
         for (l, layer) in self.layers.iter().enumerate() {
-            rmsnorm_into(h, &layer.ln1, d, a);
             qkv.fill(0.0);
-            layer.wqkv.matmul_acc(a, qkv, total);
+            // fused: each normalized activation row is produced and
+            // consumed in one pass (see rmsnorm_matmul_acc)
+            rmsnorm_matmul_acc(&layer.wqkv, h, &layer.ln1, d, a, qkv, total);
             // per slot: append its new K/V rows to its own cache, then
             // attend each of its new queries over every cached position
             // (incl. the new ones — a multi-token prefill is causal

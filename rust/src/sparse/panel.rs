@@ -1,0 +1,197 @@
+//! Panel (blocked-column) acceleration layout for CSR kernels.
+//!
+//! A CSR row's stored entries scatter into `out` one column at a time —
+//! index-chasing the SIMD units can't help with. The panel layout
+//! re-blocks each row's entries into dense [`PANEL_W`]-wide column
+//! panels aligned to multiples of `PANEL_W`: every panel that holds at
+//! least one stored entry is materialized in full, with explicit zeros
+//! in the unstored slots. A row update then becomes a handful of
+//! contiguous `out[base..base+8] += alpha * panel` vector ops
+//! ([`crate::runtime::vecmath::axpy`]) instead of per-entry scatters.
+//!
+//! Numerics: the extra zero slots contribute `alpha * 0.0 = ±0.0` to
+//! cells the plain CSR walk never touched, and `x + ±0.0` compares
+//! equal to `x` for every f32 (only the sign of an exact-zero result
+//! can differ, and `-0.0 == 0.0`), so panel and plain-CSR results are
+//! equal under both `==` and every tolerance gate. Entries stay in
+//! ascending-column order within a row and the row order is untouched,
+//! so the pinned ascending-`p` accumulation contract holds.
+//!
+//! The layout is a **derived acceleration structure**: it is rebuilt
+//! from the CSR arrays at compile time (see `sparse::CompiledModel`)
+//! and is deliberately excluded from the stored-byte accounting that
+//! residency budgets and the `stun check` byte rules govern. Below
+//! [`PANEL_MIN_DENSITY`] it is not built at all — at 0.9 sparsity a
+//! panel averages less than one stored entry, so padding would inflate
+//! the traversal instead of vectorizing it.
+
+use crate::runtime::vecmath;
+
+/// Panel width in columns. Matches the widest SIMD lane count in use
+/// (AVX2: 8 × f32); NEON consumes each panel as two 4-lane halves.
+pub const PANEL_W: usize = 8;
+
+/// Minimum stored-entry density (`nnz / (rows * cols)`) at which the
+/// panel layout pays for its padding. Below this, panels average ~1
+/// stored entry each and the plain per-entry scatter is faster.
+pub const PANEL_MIN_DENSITY: f64 = 0.15;
+
+/// Re-block one CSR-shaped index structure into `PANEL_W`-wide panels.
+///
+/// Returns `(panel_row_ptr, panel_base, panel_vals)`: row `r` owns
+/// panels `panel_row_ptr[r]..panel_row_ptr[r+1]`; panel `p` covers
+/// columns `panel_base[p] .. panel_base[p] + PANEL_W` and stores its
+/// slab at `panel_vals[p * PANEL_W ..]` with `fill` in unstored slots.
+/// Generic over the stored value type so the f32 CSR and the quantized
+/// code CSR share one builder (quant fills with the zero-point code,
+/// which dequantizes to exactly 0.0).
+pub(crate) fn build_panels_with<T: Copy>(
+    rows: usize,
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    vals: &[T],
+    fill: T,
+) -> (Vec<u32>, Vec<u32>, Vec<T>) {
+    let mut prow_ptr = Vec::with_capacity(rows + 1);
+    let mut base: Vec<u32> = Vec::new();
+    let mut pvals: Vec<T> = Vec::new();
+    prow_ptr.push(0u32);
+    for r in 0..rows {
+        let (s, e) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+        let mut cur: Option<usize> = None;
+        // columns ascend within a row, so one pass groups by panel
+        for i in s..e {
+            let c = col_idx[i] as usize;
+            let b = c - c % PANEL_W;
+            if cur != Some(b) {
+                base.push(b as u32);
+                pvals.resize(pvals.len() + PANEL_W, fill);
+                cur = Some(b);
+            }
+            let slab = pvals.len() - PANEL_W;
+            pvals[slab + (c - b)] = vals[i];
+        }
+        prow_ptr.push(base.len() as u32);
+    }
+    (prow_ptr, base, pvals)
+}
+
+/// The f32 panel layout carried by [`crate::sparse::CsrMatrix`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PanelLayout {
+    cols: usize,
+    row_ptr: Vec<u32>,
+    base: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl PanelLayout {
+    pub(crate) fn build(
+        rows: usize,
+        cols: usize,
+        row_ptr: &[u32],
+        col_idx: &[u32],
+        vals: &[f32],
+    ) -> PanelLayout {
+        let (prow_ptr, base, pvals) = build_panels_with(rows, row_ptr, col_idx, vals, 0.0f32);
+        PanelLayout {
+            cols,
+            row_ptr: prow_ptr,
+            base,
+            vals: pvals,
+        }
+    }
+
+    /// Number of materialized panels across all rows.
+    pub fn panels(&self) -> usize {
+        self.base.len()
+    }
+
+    /// Resident bytes of the acceleration structure (informational only —
+    /// excluded from the stored-byte rules; see the module docs).
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.base.len() * 4 + self.vals.len() * 4
+    }
+
+    /// `out[0..cols] += alpha · row(r)` via contiguous panel updates.
+    #[inline]
+    pub(crate) fn axpy_row(&self, r: usize, alpha: f32, out: &mut [f32]) {
+        let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        for p in s..e {
+            let b = self.base[p] as usize;
+            let end = self.cols.min(b + PANEL_W);
+            vecmath::axpy(
+                &mut out[b..end],
+                alpha,
+                &self.vals[p * PANEL_W..p * PANEL_W + (end - b)],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrMatrix;
+    use crate::util::rng::Rng;
+
+    fn slab(rows: usize, cols: usize, keep: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * cols)
+            .map(|_| {
+                if (rng.below(1000) as f64) < keep * 1000.0 {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn panel_axpy_matches_plain_csr_axpy() {
+        // cols deliberately not a multiple of PANEL_W: exercises the
+        // clipped trailing panel
+        let (rows, cols) = (9, 21);
+        for keep in [0.3, 0.5, 1.0] {
+            let data = slab(rows, cols, keep, 11);
+            let plain_csr = CsrMatrix::from_dense(&data, rows, cols);
+            let mut panel_csr = plain_csr.clone();
+            panel_csr.build_panels();
+            assert!(panel_csr.has_panels(), "keep {keep} clears the density gate");
+            assert_eq!(plain_csr, panel_csr, "panels must not affect equality");
+            for r in 0..rows {
+                let mut plain = slab(1, cols, 1.0, 50 + r as u64);
+                let mut paneled = plain.clone();
+                plain_csr.axpy_row(r, 0.73, &mut plain);
+                panel_csr.axpy_row(r, 0.73, &mut paneled);
+                assert_eq!(plain, paneled, "row {r} keep {keep}");
+            }
+        }
+    }
+
+    #[test]
+    fn builder_pads_with_fill_and_aligns_bases() {
+        // one row, entries in columns 1 and 9 → two panels based at 0 and 8
+        let row_ptr = [0u32, 2];
+        let col_idx = [1u32, 9];
+        let vals = [5.0f32, 7.0];
+        let (prp, base, pv) = build_panels_with(1, &row_ptr, &col_idx, &vals, 0.0f32);
+        assert_eq!(prp, vec![0, 2]);
+        assert_eq!(base, vec![0, 8]);
+        assert_eq!(pv.len(), 2 * PANEL_W);
+        assert_eq!(pv[1], 5.0);
+        assert_eq!(pv[PANEL_W + 1], 7.0);
+        assert_eq!(pv.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn adjacent_entries_share_a_panel() {
+        let row_ptr = [0u32, 3];
+        let col_idx = [8u32, 9, 15];
+        let vals = [1.0f32, 2.0, 3.0];
+        let (_, base, pv) = build_panels_with(1, &row_ptr, &col_idx, &vals, 0.0f32);
+        assert_eq!(base, vec![8]);
+        assert_eq!(pv, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 3.0]);
+    }
+}

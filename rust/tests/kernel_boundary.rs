@@ -1,0 +1,181 @@
+//! WS_MAX_M boundary parity: `matmul_acc` at m ∈ {1, 2, 16, 17} across
+//! dense/CSR × {f32, u16, u8}, pinning the weight-stationary ↔ row-major
+//! seam exactly at the dispatch edges.
+//!
+//! Every kernel family behind the single `matmul_acc` entry point flips
+//! from the i-outer (row-major) traversal to the p-outer
+//! (weight-stationary) traversal when `1 < m ≤ WS_MAX_M = 16`. The two
+//! orders must be *bit-identical*: per output cell both accumulate the
+//! same terms in the same ascending-p order. These tests compare every
+//! m against the per-row m=1 decomposition (always i-outer, and
+//! row-independent by construction), so m = 2 and m = 16 pin the
+//! weight-stationary branch while m = 1 and m = 17 pin the row-major
+//! branch on either side of the dispatch edge. The same grid also pins
+//! the panel acceleration layout (panels on vs off) and SIMD dispatch
+//! (forced scalar vs auto) as observationally equivalent.
+
+use stun::quant::{QuantCsr, QuantDense, QuantScheme};
+use stun::runtime::vecmath::set_simd_override;
+use stun::sparse::{CsrMatrix, WeightMat};
+use stun::util::rng::Rng;
+
+const ROWS: usize = 24;
+const COLS: usize = 40;
+/// Both edges of the WS_MAX_M = 16 dispatch window.
+const MS: [usize; 4] = [1, 2, 16, 17];
+
+fn sparse_slab(rows: usize, cols: usize, keep: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..rows * cols)
+        .map(|_| {
+            if (rng.below(1000) as f64) < keep * 1000.0 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+type MatmulFn = Box<dyn Fn(&[f32], &mut [f32], usize)>;
+
+struct Arm {
+    name: String,
+    mm: MatmulFn,
+}
+
+/// The full dense/CSR × {f32, u16, u8} grid, with panel-bearing CSR
+/// twins (the compile pass builds panels; `quantize`/`from_dense` alone
+/// do not).
+fn arms(data: &[f32], rows: usize, cols: usize) -> Vec<Arm> {
+    let mut arms: Vec<Arm> = Vec::new();
+
+    let dense = WeightMat::Dense {
+        rows,
+        cols,
+        data: data.to_vec(),
+    };
+    arms.push(Arm {
+        name: "dense/f32".into(),
+        mm: Box::new(move |a, out, m| dense.matmul_acc(a, out, m)),
+    });
+
+    let csr = CsrMatrix::from_dense(data, rows, cols);
+    let mut csr_p = csr.clone();
+    csr_p.build_panels();
+    assert!(csr_p.has_panels());
+    arms.push(Arm {
+        name: "csr/f32".into(),
+        mm: Box::new(move |a, out, m| csr.matmul_acc(a, out, m)),
+    });
+    arms.push(Arm {
+        name: "csr+panels/f32".into(),
+        mm: Box::new(move |a, out, m| csr_p.matmul_acc(a, out, m)),
+    });
+
+    for scheme in [QuantScheme::U16, QuantScheme::U8] {
+        let qd = QuantDense::quantize(data, rows, cols, scheme);
+        arms.push(Arm {
+            name: format!("dense/{}", scheme.name()),
+            mm: Box::new(move |a, out, m| qd.matmul_acc(a, out, m)),
+        });
+        let qc = QuantCsr::quantize(data, rows, cols, scheme);
+        let mut qc_p = qc.clone();
+        qc_p.build_panels();
+        assert!(qc_p.has_panels());
+        arms.push(Arm {
+            name: format!("csr/{}", scheme.name()),
+            mm: Box::new(move |a, out, m| qc.matmul_acc(a, out, m)),
+        });
+        arms.push(Arm {
+            name: format!("csr+panels/{}", scheme.name()),
+            mm: Box::new(move |a, out, m| qc_p.matmul_acc(a, out, m)),
+        });
+    }
+    arms
+}
+
+fn activations(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut a: Vec<f32> = (0..17 * ROWS).map(|_| rng.normal()).collect();
+    // sprinkle exact zeros so the zero-activation skip paths are live
+    for i in (0..a.len()).step_by(7) {
+        a[i] = 0.0;
+    }
+    a
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], label: &str) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{label}: cell {i} diverges ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn every_arm_matches_its_rowwise_decomposition_at_the_dispatch_edges() {
+    let data = sparse_slab(ROWS, COLS, 0.4, 101);
+    let a = activations(102);
+    for arm in arms(&data, ROWS, COLS) {
+        for m in MS {
+            let mut full = vec![0f32; m * COLS];
+            (arm.mm)(&a[..m * ROWS], &mut full, m);
+            // the m=1 call is always i-outer; i-outer is row-independent,
+            // so the per-row decomposition is the reference semantics
+            let mut rowwise = vec![0f32; m * COLS];
+            for i in 0..m {
+                (arm.mm)(
+                    &a[i * ROWS..(i + 1) * ROWS],
+                    &mut rowwise[i * COLS..(i + 1) * COLS],
+                    1,
+                );
+            }
+            assert_bits_eq(&full, &rowwise, &format!("{} m={m}", arm.name));
+        }
+    }
+}
+
+#[test]
+fn panel_layout_is_observationally_equivalent_across_the_grid() {
+    let data = sparse_slab(ROWS, COLS, 0.4, 103);
+    let a = activations(104);
+    let all = arms(&data, ROWS, COLS);
+    for pair in [
+        ("csr/f32", "csr+panels/f32"),
+        ("csr/u16", "csr+panels/u16"),
+        ("csr/u8", "csr+panels/u8"),
+    ] {
+        let plain = all.iter().find(|x| x.name == pair.0).unwrap();
+        let paneled = all.iter().find(|x| x.name == pair.1).unwrap();
+        for m in MS {
+            let mut op = vec![0f32; m * COLS];
+            let mut oq = vec![0f32; m * COLS];
+            (plain.mm)(&a[..m * ROWS], &mut op, m);
+            (paneled.mm)(&a[..m * ROWS], &mut oq, m);
+            assert_bits_eq(&op, &oq, &format!("{} m={m}", pair.1));
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_and_auto_dispatch_agree_bitwise() {
+    // without the `simd` feature both calls take the scalar bodies and
+    // this pins trivially; with it, it pins the SIMD ↔ scalar contract
+    let data = sparse_slab(ROWS, COLS, 0.4, 105);
+    let a = activations(106);
+    for arm in arms(&data, ROWS, COLS) {
+        for m in MS {
+            set_simd_override(Some(false));
+            let mut scalar = vec![0f32; m * COLS];
+            (arm.mm)(&a[..m * ROWS], &mut scalar, m);
+            set_simd_override(None);
+            let mut auto = vec![0f32; m * COLS];
+            (arm.mm)(&a[..m * ROWS], &mut auto, m);
+            assert_bits_eq(&auto, &scalar, &format!("{} m={m}", arm.name));
+        }
+    }
+    set_simd_override(None);
+}
