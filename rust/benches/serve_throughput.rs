@@ -23,10 +23,15 @@
 //! so CI can archive the perf trajectory as a machine-readable artifact.
 //! `STUN_SERVE_ARMS_ONLY=1` skips the trained-model headline and the
 //! eval arms — the quick CI profile. `STUN_SERVE_SHARDS=2,4` adds
-//! expert-parallel sharded serving arms (round-robin vs refined
-//! placement, cross-shard routing fraction, per-shard resident bytes);
-//! the shard arms are informational — `perf_gate` keeps gating the
-//! single-engine arms only.
+//! expert-parallel sharded serving arms: each (shards, placement) pair
+//! serves the same burst twice — once on the free in-process transport
+//! (`net_model: "zero"`; the stabilized 2-shard zero-net rows are
+//! **gated** by `perf_gate` against `BENCH_baseline.json` floors) and
+//! once under a nonuniform grouped `SimulatedLink` model, where the
+//! row additionally records transfer bytes and deterministic virtual
+//! transfer time (simulated-network rows stay informational). Refined
+//! placement must beat round-robin on virtual transfer time under the
+//! nonuniform link — the locality win the JSON artifact documents.
 
 use std::time::Duration;
 use stun::coordinator::{
@@ -34,6 +39,7 @@ use stun::coordinator::{
 };
 use stun::eval::EvalHarness;
 use stun::model::ParamSet;
+use stun::net::NetModelSpec;
 use stun::pruning::expert::ExpertPruneConfig;
 use stun::pruning::unstructured::UnstructuredConfig;
 use stun::pruning::StunPipeline;
@@ -404,74 +410,106 @@ fn main() {
         let bytes = stun::shard::expert_bytes_table(&ps, QuantScheme::F32);
         let scfg = SparseConfig::default();
         let workload_seed = 5u64;
+        // one activation row each way per crossing — the metering unit
+        let msg_bytes = 2 * backend.config().d_model as u64 * 4;
+        // zero-net rows are the gated ones; the grouped model (near
+        // pairs fast, far pairs slow and laggy) is deliberately
+        // nonuniform so refined placement has a transfer-time edge to win
+        let nets = [
+            NetModelSpec::Zero,
+            NetModelSpec::Grouped {
+                group: 2,
+                lat_us: 40.0,
+                mbps: 10.0,
+                far_lat_us: 200.0,
+                far_mbps: 2.0,
+            },
+        ];
         println!("\n### sharded serving arms (tiny, 0.7-sparse)");
         println!(
-            "{:>7} {:>12} {:>11} {:>12} {:>12}",
-            "shards", "placement", "tok/s", "cross-shard", "exp-cross"
+            "{:>7} {:>12} {:>24} {:>11} {:>12} {:>12} {:>10}",
+            "shards", "placement", "net", "tok/s", "cross-shard", "exp-cross", "virt(ms)"
         );
         for &n_shards in &shard_counts {
             for strategy in [
                 stun::shard::PlacementStrategy::RoundRobin,
                 stun::shard::PlacementStrategy::Refined,
             ] {
-                let placement = stun::shard::Placement::build(
-                    strategy,
-                    &coact,
-                    &bytes,
-                    n_shards,
-                    Duration::from_millis(20),
-                    17,
-                )
-                .expect("placement");
-                let expected_cross = placement.expected_cross_cost(&coact);
-                let cap = placement
-                    .shard_bytes(&bytes)
-                    .into_iter()
-                    .max()
-                    .unwrap_or(0)
-                    .max(1);
-                let mut batcher = Batcher::with_shards(
-                    backend,
-                    &ps,
-                    &scfg,
-                    placement,
-                    cap,
-                    Duration::from_micros(200),
-                )
-                .expect("sharded batcher");
-                let (_r, m) = batcher
-                    .serve(burst_workload(backend.config(), 8, 6, workload_seed))
-                    .expect("sharded serve");
-                println!(
-                    "{:>7} {:>12} {:>11.1} {:>11.1}% {:>12.3}",
-                    n_shards,
-                    strategy.name(),
-                    m.tokens_per_sec(),
-                    m.cross_shard_fraction() * 100.0,
-                    expected_cross
-                );
-                let lanes: Vec<Json> = m
-                    .per_shard
-                    .iter()
-                    .map(|l| {
-                        Json::obj(vec![
-                            ("shard", Json::Num(l.shard as f64)),
-                            ("tokens", Json::Num(l.tokens as f64)),
-                            ("expert_hits", Json::Num(l.expert_hits as f64)),
-                            ("resident_bytes", Json::Num(l.resident_bytes as f64)),
-                            ("swaps", Json::Num(l.swaps as f64)),
-                        ])
-                    })
-                    .collect();
-                shard_rows.push(Json::obj(vec![
-                    ("shards", Json::Num(n_shards as f64)),
-                    ("placement", Json::Str(strategy.name().into())),
-                    ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
-                    ("cross_shard_frac", Json::Num(m.cross_shard_fraction())),
-                    ("expected_cross_cost", Json::Num(expected_cross)),
-                    ("workload_seed", Json::Num(workload_seed as f64)),
-                    ("per_shard", Json::Arr(lanes)),
-                ]));
+                for net in nets {
+                    let link = net.link_model(n_shards);
+                    let placement = stun::shard::Placement::build_net(
+                        strategy,
+                        &coact,
+                        &bytes,
+                        n_shards,
+                        &link,
+                        msg_bytes,
+                        Duration::from_millis(20),
+                        17,
+                    )
+                    .expect("placement");
+                    let expected_cross = placement.expected_cross_cost(&coact);
+                    let expected_transfer =
+                        placement.expected_transfer_time(&coact, &link, msg_bytes);
+                    let cap = placement
+                        .shard_bytes(&bytes)
+                        .into_iter()
+                        .max()
+                        .unwrap_or(0)
+                        .max(1);
+                    let mut batcher = Batcher::with_shards_net(
+                        backend,
+                        &ps,
+                        &scfg,
+                        placement,
+                        cap,
+                        Duration::from_micros(200),
+                        net.transport(n_shards),
+                        None,
+                    )
+                    .expect("sharded batcher");
+                    let (_r, m) = batcher
+                        .serve(burst_workload(backend.config(), 8, 6, workload_seed))
+                        .expect("sharded serve");
+                    let virt_s = m.virtual_transfer_time().as_secs_f64();
+                    let moved = m.net.as_ref().map_or(0, |n| n.total_bytes());
+                    println!(
+                        "{:>7} {:>12} {:>24} {:>11.1} {:>11.1}% {:>12.3} {:>10.3}",
+                        n_shards,
+                        strategy.name(),
+                        net.label(),
+                        m.tokens_per_sec(),
+                        m.cross_shard_fraction() * 100.0,
+                        expected_cross,
+                        virt_s * 1e3
+                    );
+                    let lanes: Vec<Json> = m
+                        .per_shard
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("shard", Json::Num(l.shard as f64)),
+                                ("tokens", Json::Num(l.tokens as f64)),
+                                ("expert_hits", Json::Num(l.expert_hits as f64)),
+                                ("resident_bytes", Json::Num(l.resident_bytes as f64)),
+                                ("swaps", Json::Num(l.swaps as f64)),
+                            ])
+                        })
+                        .collect();
+                    shard_rows.push(Json::obj(vec![
+                        ("shards", Json::Num(n_shards as f64)),
+                        ("placement", Json::Str(strategy.name().into())),
+                        ("net_model", Json::Str(net.label())),
+                        ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
+                        ("cross_shard_frac", Json::Num(m.cross_shard_fraction())),
+                        ("expected_cross_cost", Json::Num(expected_cross)),
+                        ("expected_transfer_time_s", Json::Num(expected_transfer)),
+                        ("transfer_bytes", Json::Num(moved as f64)),
+                        ("virtual_transfer_time_s", Json::Num(virt_s)),
+                        ("workload_seed", Json::Num(workload_seed as f64)),
+                        ("per_shard", Json::Arr(lanes)),
+                    ]));
+                }
             }
         }
     }

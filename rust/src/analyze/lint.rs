@@ -5,9 +5,11 @@
 //! Versioned rule catalog (`STUN-L001`..`STUN-L005`):
 //!
 //! * **L001** — concurrency primitives (thread spawning, locks, raw
-//!   channels) are confined to `shard/`. The one vetted exception, the
-//!   coordinator's request-intake channel, is carried by the checked-in
-//!   allowlist with its justification.
+//!   channels) are confined to `shard/`. This explicitly covers `net/`:
+//!   the transport layer *prices* cross-shard transfers (a pure cost
+//!   model) and must never carry them itself. The one vetted exception,
+//!   the coordinator's request-intake channel, is carried by the
+//!   checked-in allowlist with its justification.
 //! * **L002** — no ad-hoc multiply-accumulate matmul loops outside
 //!   `sparse/`, `quant/`, and `runtime/native.rs`: all weight arithmetic
 //!   goes through the `QuantMat::matmul_acc` / `WeightMat` seams, so the
@@ -21,8 +23,11 @@
 //!   iteration order is unspecified, so float sums over it are
 //!   non-deterministic across runs (sort keys or use an indexed Vec).
 //! * **L005** — no wall-clock reads inside kernels (`sparse/`, `quant/`,
-//!   `runtime/native.rs`): timing belongs to the callers (bench harness,
-//!   coordinator metrics), not the arithmetic.
+//!   `runtime/native.rs`) or the network model (`net/`): timing belongs
+//!   to the callers (bench harness, coordinator metrics), not the
+//!   arithmetic. `net/`'s virtual clock is exempt by construction — it
+//!   only *sums* modeled `Duration`s and never reads the host clock, so
+//!   the rule holds without an allowlist entry.
 //!
 //! The scanner is deliberately line-local and token-level: it skips
 //! comment-only lines and `#[cfg(test)]` item regions (tracked by brace
@@ -44,8 +49,12 @@ use std::path::{Path, PathBuf};
 /// Bumped whenever a rule is added, removed, or materially re-scoped, so
 /// report consumers can detect catalog drift. Version 2: the vectorized
 /// kernel seam (`runtime/vecmath.rs`, `sparse/panel.rs`) joined the
-/// L002 exemption and the L005 kernel scope.
-pub const CATALOG_VERSION: u64 = 2;
+/// L002 exemption and the L005 kernel scope. Version 3: the `net/`
+/// transport model joined the L005 no-wall-clock scope (its virtual
+/// clock sums modeled durations, never the host clock) and is
+/// documented as L001-confined (a cost model carries no concurrency
+/// primitives).
+pub const CATALOG_VERSION: u64 = 3;
 
 /// One lint hit: where, which rule, and the offending line.
 #[derive(Clone, Debug)]
@@ -143,7 +152,8 @@ fn in_dir(file: &str, dir: &str) -> bool {
     file.starts_with(dir)
 }
 
-/// L001 scope: everything except `shard/`.
+/// L001 scope: everything except `shard/` — including `net/`, whose
+/// transports model transfer cost and must never spawn or lock.
 fn l001_applies(file: &str) -> bool {
     !in_dir(file, "shard/")
 }
@@ -169,10 +179,12 @@ fn l003_applies(file: &str) -> bool {
 
 /// L005 scope: kernel modules, including the vectorized primitives in
 /// `runtime/vecmath.rs` (`sparse/panel.rs` is covered by the `sparse/`
-/// directory rule).
+/// directory rule), and — v3 — the `net/` transport model, whose
+/// deterministic virtual clock must never read the host clock.
 fn l005_applies(file: &str) -> bool {
     in_dir(file, "sparse/")
         || in_dir(file, "quant/")
+        || in_dir(file, "net/")
         || file == "runtime/native.rs"
         || file == "runtime/vecmath.rs"
 }
@@ -407,6 +419,9 @@ mod tests {
         assert_eq!(hits[0].rule, "STUN-L001");
         assert_eq!(hits[0].line, 2);
         assert!(scan_source("shard/engine.rs", &src).is_empty());
+        // v3: the transport model is a cost model, not a message carrier —
+        // concurrency primitives in net/ are violations like anywhere else
+        assert_eq!(scan_source("net/mod.rs", &src)[0].rule, "STUN-L001");
     }
 
     #[test]
@@ -464,6 +479,9 @@ mod tests {
         // v2: the vectorized primitive module counts as a kernel
         assert_eq!(scan_source("runtime/vecmath.rs", &clock)[0].rule, "STUN-L005");
         assert_eq!(scan_source("sparse/panel.rs", &clock)[0].rule, "STUN-L005");
+        // v3: the virtual clock in net/ must stay virtual — a host-clock
+        // read there is exactly the bug L005 exists to catch
+        assert_eq!(scan_source("net/mod.rs", &clock)[0].rule, "STUN-L005");
         assert!(scan_source("coordinator/mod.rs", &clock).is_empty());
     }
 

@@ -7,7 +7,12 @@
 //! point — on two executors: the f32 `compiled_incremental_tok_s`
 //! column and the u16 quant arm's `incremental_tok_s`, plus the u8 B=8
 //! row of the **batch** section (layer-major `session_round` sweeps at
-//! the same sparsity). A measured value more than 15% below its
+//! the same sparsity), plus the stabilized **2-shard zero-net** rows of
+//! the **shards** section (round-robin and refined placement on the
+//! free in-process transport; rows are matched by shard count +
+//! placement with `net_model` `"zero"` or absent, so pre-network
+//! records still gate). Simulated-network shard rows (nonzero
+//! `net_model`) remain informational. A measured value more than 15% below its
 //! baseline fails the gate (exit 1); everything else, including
 //! improvements, passes and is reported so the trajectory stays on the
 //! record. When the record's `batch.simd` flag is true (the bench ran
@@ -59,6 +64,25 @@ fn batch_tok_s(doc: &Json, quant: &str, b: u64) -> Result<f64> {
     bail!("no batch arm quant={quant} B={b}")
 }
 
+/// The zero-net sharded serving row for `n_shards` × `placement`.
+/// Pre-network records carry no `net_model` field — those rows all ran
+/// on the free in-process transport, so a missing field matches too.
+fn shard_tok_s(doc: &Json, n_shards: u64, placement: &str) -> Result<f64> {
+    for row in doc.get("shards")?.as_arr()? {
+        let zero_net = match row.get("net_model") {
+            Ok(j) => j.as_str()? == "zero",
+            Err(_) => true,
+        };
+        if zero_net
+            && (row.get("shards")?.as_f64()? - n_shards as f64).abs() < 1e-9
+            && row.get("placement")?.as_str()? == placement
+        {
+            return row.get("tokens_per_sec")?.as_f64();
+        }
+    }
+    bail!("no zero-net shard arm shards={n_shards} placement={placement}")
+}
+
 fn load(path: &str) -> Result<Json> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
@@ -99,6 +123,20 @@ fn main() -> Result<()> {
             batch_tok_s(&current, "u8", 8)
                 .with_context(|| format!("in {current_path}"))?,
             batch_tok_s(&baseline, "u8", 8)
+                .with_context(|| format!("in {baseline_path}"))?,
+        ),
+        (
+            "sharded 2x round-robin zero-net s=0.7",
+            shard_tok_s(&current, 2, "round-robin")
+                .with_context(|| format!("in {current_path}"))?,
+            shard_tok_s(&baseline, 2, "round-robin")
+                .with_context(|| format!("in {baseline_path}"))?,
+        ),
+        (
+            "sharded 2x refined zero-net s=0.7",
+            shard_tok_s(&current, 2, "refined")
+                .with_context(|| format!("in {current_path}"))?,
+            shard_tok_s(&baseline, 2, "refined")
                 .with_context(|| format!("in {baseline_path}"))?,
         ),
     ];

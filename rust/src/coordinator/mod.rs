@@ -48,6 +48,7 @@
 
 use crate::data::{PAD, SEMI};
 use crate::model::ParamSet;
+use crate::net::{FaultPlan, InProcess, NetMeter, RecoveryEvent, Transport};
 use crate::quant::QuantScheme;
 use crate::runtime::session::{greedy_token, recompute_step};
 use crate::runtime::{Backend, CompiledForward, DecodeState, StepOutput};
@@ -379,6 +380,16 @@ pub struct ServeMetrics {
     /// One lane per shard under [`Batcher::with_shards`]; empty on
     /// single-engine serving.
     pub per_shard: Vec<ShardLane>,
+    /// Cross-shard transfer meter drained from the engine at
+    /// finalisation: per-pair bytes/messages/virtual-time lanes plus the
+    /// virtual-clock total. `None` on single-engine serving.
+    pub net: Option<NetMeter>,
+    /// Label of the transport that priced the transfers (empty on
+    /// single-engine serving).
+    pub transport: String,
+    /// Shard failures the engine survived during the window, in firing
+    /// order (empty when no fault fired).
+    pub recoveries: Vec<RecoveryEvent>,
 }
 
 impl ServeMetrics {
@@ -407,6 +418,13 @@ impl ServeMetrics {
     /// the common serve wall-clock.
     pub fn shard_tokens_per_sec(&self, lane: &ShardLane) -> f64 {
         lane.tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Total virtual time the window's cross-shard transfers spent on
+    /// the modeled wire (zero single-engine or under the in-process
+    /// transport, which prices every transfer at zero).
+    pub fn virtual_transfer_time(&self) -> Duration {
+        self.net.as_ref().map_or(Duration::ZERO, |n| n.virtual_time)
     }
 
     fn finalise(&mut self, responses: &[Response], t0: Instant, store: &ExpertStore) {
@@ -438,6 +456,9 @@ impl ServeMetrics {
             })
             .collect();
         self.expert_swaps += sh.stores.iter().map(|st| st.swaps).sum::<u64>();
+        self.net = Some(sh.engine.take_net_meter());
+        self.transport = sh.engine.transport_label();
+        self.recoveries = sh.recoveries.clone();
     }
 }
 
@@ -463,10 +484,17 @@ struct Active {
 }
 
 /// Sharded-serving bookkeeping carried by a [`Batcher::with_shards`]
-/// batcher: the placement the engine was split by, one [`ExpertStore`]
-/// residency lane per shard, and the per-round routing-locality tallies
-/// that become [`ShardLane`]s at finalisation.
+/// batcher: the engine itself, the live placement it was split by, one
+/// [`ExpertStore`] residency lane per shard, and the per-round
+/// routing-locality tallies that become [`ShardLane`]s at finalisation.
 struct ShardState {
+    /// The sharded executor. Held here (not in `Batcher::compiled`) so
+    /// the serve loop can poll its transfer meter, recovery events, and
+    /// live placement through the concrete API.
+    engine: ShardedEngine,
+    /// Snapshot of [`ShardedEngine::placement`], refreshed after every
+    /// failover promotion so the locality accounting follows the
+    /// post-recovery primaries.
     placement: Placement,
     stores: Vec<ExpertStore>,
     /// Compiled slab bytes per shard, from
@@ -478,6 +506,12 @@ struct ShardState {
     hits_by_shard: Vec<u64>,
     cross_hits: u64,
     total_hits: u64,
+    /// Observed routed touches per `[layer][expert]` — the load signal
+    /// adaptive replication feeds back into
+    /// [`Placement::replicate_hottest`] between serving windows.
+    expert_load: Vec<Vec<u64>>,
+    /// Failover events drained from the engine so far.
+    recoveries: Vec<RecoveryEvent>,
 }
 
 /// Continuous batcher over a single model, built on the incremental
@@ -642,8 +676,40 @@ impl<'b> Batcher<'b> {
         per_shard_capacity: usize,
         swap_penalty: Duration,
     ) -> Result<Batcher<'b>> {
+        Self::with_shards_net(
+            backend,
+            params,
+            scfg,
+            placement,
+            per_shard_capacity,
+            swap_penalty,
+            Box::new(InProcess),
+            None,
+        )
+    }
+
+    /// [`Batcher::with_shards`] with an explicit transport model and an
+    /// optional fault plan — the `stun serve --net-model/--fault` path.
+    /// The transport only *prices* cross-shard activation transfers
+    /// (bytes + virtual time, drained into [`ServeMetrics::net`]); the
+    /// served logits are identical under every transport. An armed
+    /// [`FaultPlan`] kills its shard at the planned round: replicas are
+    /// promoted to primaries (recorded in [`ServeMetrics::recoveries`],
+    /// stream bit-identical), and an uncovered kill turns every later
+    /// round into an explicit degraded-mode error.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_shards_net(
+        backend: &'b dyn Backend,
+        params: &ParamSet,
+        scfg: &SparseConfig,
+        placement: Placement,
+        per_shard_capacity: usize,
+        swap_penalty: Duration,
+        transport: Box<dyn Transport>,
+        fault: Option<FaultPlan>,
+    ) -> Result<Batcher<'b>> {
         let n_shards = placement.n_shards;
-        let engine = ShardedEngine::new(params, scfg, placement)?;
+        let engine = ShardedEngine::with_transport(params, scfg, placement, transport, fault)?;
         let shard_state = ShardState {
             placement: engine.placement().clone(),
             stores: (0..n_shards)
@@ -654,9 +720,12 @@ impl<'b> Batcher<'b> {
             hits_by_shard: vec![0; n_shards],
             cross_hits: 0,
             total_hits: 0,
+            expert_load: vec![vec![0; params.config.n_experts]; params.config.n_layers],
+            recoveries: Vec::new(),
+            engine,
         };
         let b = backend.config().eval_batch;
-        let state = engine.new_session(b);
+        let state = shard_state.engine.new_session(b);
         Ok(Batcher {
             backend,
             params_alive: (0..params.config.n_layers)
@@ -673,7 +742,7 @@ impl<'b> Batcher<'b> {
             // the global store is idle under sharded serving — residency
             // is budgeted per shard lane in `shards`
             store: ExpertStore::new(0, Duration::ZERO),
-            compiled: Some(Box::new(engine)),
+            compiled: None,
             incremental: true,
             state,
             slots: (0..b).map(|_| None).collect(),
@@ -683,6 +752,9 @@ impl<'b> Batcher<'b> {
 
     /// Label of the executor the decode loop actually uses.
     pub fn exec_name(&self) -> String {
+        if let Some(sh) = &self.shards {
+            return sh.engine.name();
+        }
         match &self.compiled {
             Some(c) => c.name(),
             None => self.backend.name(),
@@ -692,10 +764,33 @@ impl<'b> Batcher<'b> {
     /// How the session is stepped: `"incremental"` (KV-cached) or
     /// `"recompute"` (full window re-prefilled every step).
     pub fn step_mode(&self) -> &'static str {
-        if self.compiled.is_some() && self.incremental {
+        if self.shards.is_some() || (self.compiled.is_some() && self.incremental) {
             "incremental"
         } else {
             "recompute"
+        }
+    }
+
+    /// The live placement of a sharded batcher (reflecting failover
+    /// promotions and any replica spill), `None` single-engine. The
+    /// adaptive-replication flow reads this between serving windows,
+    /// spills replicas with [`Placement::replicate_hottest`] fed by
+    /// [`Batcher::observed_expert_load`], and rebuilds.
+    pub fn shard_placement(&self) -> Option<Placement> {
+        self.shards.as_ref().map(|sh| sh.placement.clone())
+    }
+
+    /// Observed routed-touch counts per `[layer][expert]` under sharded
+    /// serving (empty single-engine) — the load signal `--replicate`
+    /// feeds into [`Placement::replicate_hottest`].
+    pub fn observed_expert_load(&self) -> Vec<Vec<f64>> {
+        match &self.shards {
+            Some(sh) => sh
+                .expert_load
+                .iter()
+                .map(|row| row.iter().map(|&c| c as f64).collect())
+                .collect(),
+            None => Vec::new(),
         }
     }
 
@@ -715,6 +810,18 @@ impl<'b> Batcher<'b> {
     /// accepted tokens); the executor plans, sweeps the layer stack once
     /// for the whole slot set, and commits.
     fn sess_round(&mut self, slots: &[usize]) -> Result<StepOutput> {
+        if let Some(sh) = self.shards.as_mut() {
+            let out = sh.engine.session_round(&mut self.state, slots);
+            // a fault may have fired inside the round: drain the recovery
+            // record and refresh the placement snapshot so the locality
+            // accounting follows the promoted primaries
+            let events = sh.engine.take_recovery_events();
+            if !events.is_empty() {
+                sh.placement = sh.engine.placement().clone();
+                sh.recoveries.extend(events);
+            }
+            return out;
+        }
         match (&self.compiled, self.incremental) {
             (Some(c), true) => c.session_round(&mut self.state, slots),
             (Some(c), false) => recompute_step(self.backend.config(), &self.state, slots, |t| {
@@ -775,6 +882,7 @@ impl<'b> Batcher<'b> {
                                 let serving = sh.placement.primary_shard(layer, e);
                                 sh.hits_by_shard[serving] += 1;
                                 sh.total_hits += 1;
+                                sh.expert_load[layer][e] += 1;
                                 if !sh.placement.is_host(layer, e, home) {
                                     sh.cross_hits += 1;
                                 }
@@ -1765,5 +1873,139 @@ mod tests {
             outputs.push(responses.into_iter().map(|r| r.tokens).collect::<Vec<_>>());
         }
         assert_eq!(outputs[0], outputs[1], "sharded greedy decode must not diverge");
+    }
+
+    #[test]
+    fn sharded_serve_meters_transfer_lanes_at_zero_cost() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 109);
+        let cfg = backend.config();
+        let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let mut batcher = Batcher::with_shards(
+            &backend,
+            &params,
+            &SparseConfig::default(),
+            placement,
+            usize::MAX / 2,
+            Duration::ZERO,
+        )
+        .unwrap();
+        let queue = burst_workload(cfg, 4, 4, 59);
+        let (_responses, metrics) = batcher.serve(queue).unwrap();
+        let net = metrics.net.as_ref().expect("sharded serving meters transfers");
+        // top-k = 2 over two round-robin shards must move activations…
+        assert!(net.total_bytes() > 0);
+        assert!(net.total_messages() > 0);
+        // …each transfer being one f32 activation row out and one back
+        let row = 2 * cfg.d_model as u64 * 4;
+        assert_eq!(net.total_bytes() % row, 0);
+        // the in-process transport prices all of it at zero virtual time
+        assert_eq!(metrics.virtual_transfer_time(), Duration::ZERO);
+        assert_eq!(metrics.transport, "in-process");
+        assert!(metrics.recoveries.is_empty());
+        // the observed load table tallies exactly the routed touches
+        let load: f64 = batcher.observed_expert_load().iter().flatten().sum();
+        assert_eq!(load as u64, metrics.shard_hits);
+    }
+
+    #[test]
+    fn simulated_link_prices_time_without_changing_the_stream() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 110);
+        let cfg = backend.config();
+        let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let mut base = Batcher::with_shards(
+            &backend,
+            &params,
+            &SparseConfig::default(),
+            placement.clone(),
+            usize::MAX / 2,
+            Duration::ZERO,
+        )
+        .unwrap();
+        let (mut r0, _m0) = base.serve(burst_workload(cfg, 4, 5, 61)).unwrap();
+        let spec = crate::net::NetModelSpec::parse("uniform:5:100").unwrap();
+        let mut modeled = Batcher::with_shards_net(
+            &backend,
+            &params,
+            &SparseConfig::default(),
+            placement,
+            usize::MAX / 2,
+            Duration::ZERO,
+            spec.transport(2),
+            None,
+        )
+        .unwrap();
+        let (mut r1, m1) = modeled.serve(burst_workload(cfg, 4, 5, 61)).unwrap();
+        r0.sort_by_key(|r| r.id);
+        r1.sort_by_key(|r| r.id);
+        let t0: Vec<Vec<i32>> = r0.into_iter().map(|r| r.tokens).collect();
+        let t1: Vec<Vec<i32>> = r1.into_iter().map(|r| r.tokens).collect();
+        assert_eq!(t0, t1, "transport pricing must not change decode");
+        assert!(m1.virtual_transfer_time() > Duration::ZERO);
+        assert!(m1.transport.contains("uniform"), "{}", m1.transport);
+        let net_json = m1.net.as_ref().unwrap().to_json().to_string();
+        assert!(net_json.contains("virtual_transfer_time_s"), "{net_json}");
+        assert!(net_json.contains("lanes"), "{net_json}");
+    }
+
+    #[test]
+    fn covered_fault_mid_serve_recovers_bit_identically() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 111);
+        let cfg = backend.config();
+        let mut placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        // full replication: every expert hosted on both shards
+        let load = vec![vec![1.0; cfg.n_experts]; cfg.n_layers];
+        placement.replicate_hottest(&load, cfg.n_experts);
+        let serve = |fault: Option<FaultPlan>| {
+            let mut b = Batcher::with_shards_net(
+                &backend,
+                &params,
+                &SparseConfig::default(),
+                placement.clone(),
+                usize::MAX / 2,
+                Duration::ZERO,
+                Box::new(InProcess),
+                fault,
+            )
+            .unwrap();
+            let (mut r, m) = b.serve(burst_workload(cfg, 4, 6, 67)).unwrap();
+            r.sort_by_key(|x| x.id);
+            (r.into_iter().map(|x| x.tokens).collect::<Vec<_>>(), m)
+        };
+        let (clean, m_clean) = serve(None);
+        let (failed, m_failed) = serve(Some(FaultPlan { shard: 1, round: 3 }));
+        assert_eq!(clean, failed, "covered shard kill must not change the stream");
+        assert!(m_clean.recoveries.is_empty());
+        assert_eq!(m_failed.recoveries.len(), 1);
+        let ev = &m_failed.recoveries[0];
+        assert_eq!(ev.dead_shard, 1);
+        assert!(ev.covered());
+        assert!(ev.promoted > 0);
+    }
+
+    #[test]
+    fn uncovered_fault_mid_serve_surfaces_a_diagnostic() {
+        let backend = NativeBackend::new(ModelConfig::test_tiny());
+        let params = ParamSet::init(backend.config(), 112);
+        let cfg = backend.config();
+        let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let mut b = Batcher::with_shards_net(
+            &backend,
+            &params,
+            &SparseConfig::default(),
+            placement,
+            usize::MAX / 2,
+            Duration::ZERO,
+            Box::new(InProcess),
+            Some(FaultPlan { shard: 0, round: 2 }),
+        )
+        .unwrap();
+        let err = match b.serve(burst_workload(cfg, 3, 6, 71)) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("an uncovered kill must fail the serve"),
+        };
+        assert!(err.contains("degraded"), "{err}");
     }
 }

@@ -154,7 +154,7 @@
 //! (`session_round` normalizes and consumes each activation row in one
 //! pass) — same ordering, same bits.
 //!
-//! ## Expert-parallel sharded serving
+//! ## Expert-parallel sharded serving — the transport seam
 //!
 //! One engine tops out at one machine; [`shard`] partitions the experts
 //! of a compiled model across N engines. A [`shard::Placement`] maps
@@ -169,12 +169,36 @@
 //! layer's routed groups from their primary shard — one engine thread
 //! per shard — merging into the same fixed slot-order reduction as
 //! single-engine, so logits are bit-identical regardless of shard count
-//! (pinned by `tests/shard_parity.rs`). `stun serve --shards N
-//! --placement {round-robin,greedy,refined}` drives it through the
-//! coordinator, which reports per-shard tokens/s, resident bytes, and
-//! the cross-shard routing fraction; `benches/serve_throughput.rs`
-//! records shard arms into `BENCH_serve.json` (informational — the perf
-//! gate keeps gating single-engine arms only).
+//! (pinned by `tests/shard_parity.rs`).
+//!
+//! Under the engine's dispatch/reduce seam sits a [`net::Transport`]:
+//! a *cost model* for the activation traffic, not a message carrier.
+//! Every routed (token, expert) touch served off the token's home shard
+//! is metered in bytes on a [`net::NetMeter`] and priced on a
+//! deterministic **virtual clock** — [`net::InProcess`] prices
+//! everything at zero (today's engine, bit-identical baseline), while
+//! [`net::SimulatedLink`] prices each ordered shard pair by a
+//! [`net::LinkSpec`] (propagation latency + payload bandwidth +
+//! per-message overhead; links run in parallel, so a layer costs its
+//! slowest pair). The link table feeds back into placement:
+//! [`shard::Placement::build_net`] scores moves by *expected transfer
+//! time* under the model instead of raw coactivation mass, and
+//! `Placement::replicate_hottest` can spill replicas from the
+//! *observed* per-expert routing load a serving window measured. A
+//! [`net::FaultPlan`] (`kill:<shard>@<round>`) injects a mid-stream
+//! shard loss: the engine promotes the lowest-id replica of every
+//! orphaned expert to primary ([`shard::Placement::fail_shard`]),
+//! records a [`net::RecoveryEvent`], and keeps the greedy stream
+//! bit-identical when replicas cover the dead shard — or degrades to an
+//! explicit per-round error naming the uncovered (layer, expert) cells
+//! when they don't. `stun serve --shards N --placement
+//! {round-robin,greedy,refined} [--net-model M] [--fault kill:1@8]
+//! [--replicate N]` drives all of it through the coordinator, whose
+//! `ServeMetrics` now carries per-shard-pair transfer lanes (bytes +
+//! virtual-time histograms) and recovery events next to the cross-shard
+//! routing fraction; `benches/serve_throughput.rs` records shard arms
+//! into `BENCH_serve.json` — the 2-shard zero-net arms are gated by
+//! `perf_gate`, the simulated-network rows stay informational.
 //!
 //! ## Invariant catalog
 //!
@@ -184,9 +208,10 @@
 //! scans the sources against a versioned rule catalog:
 //!
 //! * **STUN-L001** — concurrency primitives (thread spawning, locks,
-//!   raw channels) stay confined to [`shard`]; everything else is
-//!   single-threaded by construction, which is what makes decode
-//!   determinism cheap to reason about.
+//!   raw channels) stay confined to [`shard`]; everything else —
+//!   explicitly including [`net`], which models transport cost without
+//!   carrying messages — is single-threaded by construction, which is
+//!   what makes decode determinism cheap to reason about.
 //! * **STUN-L002** — all weight arithmetic goes through the
 //!   [`quant::QuantMat::matmul_acc`] / [`sparse::WeightMat`] seams; no
 //!   ad-hoc f32 multiply-accumulate loops outside `sparse/`, `quant/`,
@@ -202,7 +227,10 @@
 //!   run-to-run nondeterministic).
 //! * **STUN-L005** — no wall-clock reads inside kernels (including the
 //!   vectorized bodies in `runtime/vecmath.rs` and the panel layout in
-//!   `sparse/panel.rs`); timing belongs to the callers.
+//!   `sparse/panel.rs`) **or** inside [`net`]: the transport clock is
+//!   virtual by construction — pure `Duration` arithmetic over byte
+//!   counts — so metered runs are exactly reproducible; timing belongs
+//!   to the callers.
 //!
 //! Vetted exceptions live in `rust/lint-allowlist.json`, each with a
 //! mandatory justification; stale entries fail the lint. Run it locally
@@ -234,6 +262,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod model;
+pub mod net;
 pub mod pruning;
 pub mod quant;
 pub mod report;
@@ -252,6 +281,10 @@ pub mod prelude {
     pub use crate::data::{CorpusConfig, CorpusGenerator, Tokenizer};
     pub use crate::eval::{EvalHarness, EvalReport, TaskKind, TaskSuite};
     pub use crate::model::{ModelConfig, ParamSet};
+    pub use crate::net::{
+        FaultPlan, InProcess, LinkModel, LinkSpec, NetMeter, NetModelSpec, RecoveryEvent,
+        SimulatedLink, Transport,
+    };
     pub use crate::pruning::expert::{ExpertPruneConfig, ExpertPruner};
     pub use crate::pruning::unstructured::{UnstructuredConfig, UnstructuredMethod};
     pub use crate::pruning::StunPipeline;

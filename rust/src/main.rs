@@ -16,6 +16,12 @@
 //!             [--quant f32|u16|u8]           # extra quantized serving arm
 //!             [--shards N]                   # expert-parallel sharded serving
 //!             [--placement round-robin|greedy|refined]   # shard placement
+//!             [--net-model zero|uniform:LAT_US:MBPS|grouped:G:LAT:MBPS:FLAT:FMBPS]
+//!                                            # price cross-shard transfers
+//!             [--fault kill:SHARD@ROUND]     # inject a shard kill mid-serve
+//!             [--replicate N]                # spill N observed-hottest
+//!                                            # experts/layer, serve 2nd window
+//!             [--net-json lanes.json]        # dump transfer-lane JSON
 //! stun check  ckpt.stz [--config NAME]        # validate a checkpoint artifact
 //!             [--quant f32|u16|u8]            # storage width of the strict pass
 //! stun report fig1|fig2|fig3|table1|table2|table3|kurtosis|serving
@@ -371,11 +377,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.usize_or("shards", 1)?;
     if shards > 1 {
         let strategy = stun::shard::PlacementStrategy::parse(&args.str_or("placement", "refined"))?;
+        let opts = report::ShardNetOpts {
+            net: stun::net::NetModelSpec::parse(&args.str_or("net-model", "zero"))?,
+            fault: args
+                .str_opt("fault")
+                .map(stun::net::FaultPlan::parse)
+                .transpose()?,
+            replicate: args.usize_or("replicate", 0)?,
+            net_json: args.str_opt("net-json").map(String::from),
+        };
         println!(
             "{}",
-            report::sharded_serving_report(&proto, n, quant, shards, strategy)?
+            report::sharded_serving_report(&proto, n, quant, shards, strategy, &opts)?
         );
     } else {
+        for flag in ["net-model", "fault", "replicate", "net-json"] {
+            if args.str_opt(flag).is_some() {
+                bail!("--{flag} requires --shards 2 or more");
+            }
+        }
         println!("{}", report::serving_report(&proto, n, quant)?);
     }
     Ok(())

@@ -1,0 +1,693 @@
+//! Physical cross-shard transport — the network model under the
+//! sharded engine's dispatch/reduce seam.
+//!
+//! PR 7's [`crate::shard::ShardedEngine`] *accounts* the cross-shard
+//! routing tax (which fraction of routed (token, expert) touches leave
+//! the token's home shard) without ever pricing it. This module makes
+//! that tax physical while keeping execution bit-identical: a
+//! [`Transport`] is a **cost model**, not a message carrier. The engine
+//! keeps serving groups exactly as before; every activation row that
+//! *would* cross an engine boundary is metered in bytes and **virtual
+//! time** on a deterministic clock ([`NetMeter`]) priced by the
+//! transport. Two implementations:
+//!
+//! * [`InProcess`] — today's in-process channel engine: every transfer
+//!   is free. This is the zero-cost baseline; with it, logits, greedy
+//!   streams, and throughput are untouched (`tests/shard_parity.rs`).
+//! * [`SimulatedLink`] — a per-shard-pair [`LinkModel`]: each ordered
+//!   pair `(from, to)` has a [`LinkSpec`] (propagation latency, payload
+//!   bandwidth, fixed per-message overhead). One *message* is the
+//!   aggregate of a layer's activation rows between one shard pair;
+//!   links run in parallel, so a layer's dispatch costs the **max**
+//!   over its pair messages, and the virtual clock accumulates that
+//!   critical path across layers and rounds.
+//!
+//! The clock is *virtual* by construction — pure [`Duration`]
+//! arithmetic over byte counts, no wall-clock reads — so the invariant
+//! analyzer's no-wall-clock rule (STUN-L005) covers this module
+//! verbatim, and a metered run is exactly reproducible.
+//!
+//! Failure injection rides the same seam: a [`FaultPlan`] kills one
+//! shard at a given round; the engine survives by promoting replicas
+//! to primaries ([`crate::shard::Placement::fail_shard`]) and records a
+//! [`RecoveryEvent`]. When the dead shard hosted an expert no replica
+//! covers, the engine enters degraded mode and every subsequent round
+//! returns a diagnostic error instead of wrong logits.
+
+use crate::coordinator::CountHist;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Transport: the cost model trait.
+// ---------------------------------------------------------------------------
+
+/// Prices one cross-shard message on the virtual clock. Implementations
+/// must be pure functions of `(from, to, bytes)` — the determinism of
+/// metered runs (and the L005 no-wall-clock invariant) depends on it.
+pub trait Transport {
+    /// Human-readable model label, recorded in reports and
+    /// `BENCH_serve.json` rows.
+    fn label(&self) -> String;
+
+    /// Virtual time to move one `bytes`-sized message from shard `from`
+    /// to shard `to`.
+    fn transfer_cost(&self, from: usize, to: usize, bytes: u64) -> Duration;
+
+    /// `true` when every transfer costs zero virtual time (the
+    /// in-process baseline) — lets reports label the run honestly.
+    fn is_free(&self) -> bool {
+        false
+    }
+}
+
+/// The zero-cost baseline: shards share one address space, transfers
+/// are pointer hand-offs. Bytes are still metered (the traffic is
+/// real); virtual time never advances.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcess;
+
+impl Transport for InProcess {
+    fn label(&self) -> String {
+        "in-process".to_string()
+    }
+
+    fn transfer_cost(&self, _from: usize, _to: usize, _bytes: u64) -> Duration {
+        Duration::ZERO
+    }
+
+    fn is_free(&self) -> bool {
+        true
+    }
+}
+
+/// One directed link's parameters: a message costs
+/// `latency + per_msg_overhead + bytes / bytes_per_sec`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Propagation latency paid by every message.
+    pub latency: Duration,
+    /// Payload bandwidth in bytes per second (`<= 0` = infinite).
+    pub bytes_per_sec: f64,
+    /// Fixed serialization/framing overhead per message.
+    pub per_msg_overhead: Duration,
+}
+
+impl LinkSpec {
+    /// A free link (the diagonal of every [`LinkModel`]).
+    pub const FREE: LinkSpec = LinkSpec {
+        latency: Duration::ZERO,
+        bytes_per_sec: 0.0,
+        per_msg_overhead: Duration::ZERO,
+    };
+
+    /// A wire parameterized the CLI way: latency in microseconds,
+    /// bandwidth in MB/s, with a fixed 1µs per-message overhead.
+    pub fn wire(lat_us: f64, mbps: f64) -> LinkSpec {
+        LinkSpec {
+            latency: Duration::from_secs_f64(lat_us.max(0.0) * 1e-6),
+            bytes_per_sec: mbps.max(0.0) * 1e6,
+            per_msg_overhead: Duration::from_micros(1),
+        }
+    }
+
+    /// Virtual cost of one `bytes`-sized message over this link.
+    pub fn cost(&self, bytes: u64) -> Duration {
+        let mut t = self.latency + self.per_msg_overhead;
+        if self.bytes_per_sec > 0.0 {
+            t += Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        }
+        t
+    }
+
+    fn is_free(&self) -> bool {
+        self.latency == Duration::ZERO
+            && self.per_msg_overhead == Duration::ZERO
+            && self.bytes_per_sec <= 0.0
+    }
+}
+
+/// Per-ordered-pair link table for `n_shards` shards. The diagonal is
+/// always [`LinkSpec::FREE`]; off-diagonal entries default to whatever
+/// the constructor sets and can be overridden per pair — the
+/// nonuniform models the network-aware placement optimizes against.
+#[derive(Clone, Debug)]
+pub struct LinkModel {
+    n_shards: usize,
+    links: Vec<LinkSpec>,
+}
+
+impl LinkModel {
+    /// All links free — the [`InProcess`] topology as a table.
+    pub fn zero(n_shards: usize) -> LinkModel {
+        LinkModel {
+            n_shards,
+            links: vec![LinkSpec::FREE; n_shards * n_shards],
+        }
+    }
+
+    /// Every distinct ordered pair gets the same `spec`.
+    pub fn uniform(n_shards: usize, spec: LinkSpec) -> LinkModel {
+        let mut m = LinkModel::zero(n_shards);
+        for from in 0..n_shards {
+            for to in 0..n_shards {
+                if from != to {
+                    m.links[from * n_shards + to] = spec;
+                }
+            }
+        }
+        m
+    }
+
+    /// Two-tier topology: shards in the same group of `group_size`
+    /// consecutive ids (same host / same rack) talk over `near`, shards
+    /// in different groups over `far`. `group_size = 0` means one group.
+    pub fn grouped(n_shards: usize, group_size: usize, near: LinkSpec, far: LinkSpec) -> LinkModel {
+        let g = group_size.max(1).min(n_shards.max(1));
+        let mut m = LinkModel::zero(n_shards);
+        for from in 0..n_shards {
+            for to in 0..n_shards {
+                if from == to {
+                    continue;
+                }
+                m.links[from * n_shards + to] = if from / g == to / g { near } else { far };
+            }
+        }
+        m
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The directed link `(from, to)`; out-of-range pairs are free.
+    pub fn spec(&self, from: usize, to: usize) -> LinkSpec {
+        if from >= self.n_shards || to >= self.n_shards || from == to {
+            LinkSpec::FREE
+        } else {
+            self.links[from * self.n_shards + to]
+        }
+    }
+
+    /// Override one directed link (no-op on the diagonal).
+    pub fn set_link(&mut self, from: usize, to: usize, spec: LinkSpec) {
+        if from < self.n_shards && to < self.n_shards && from != to {
+            self.links[from * self.n_shards + to] = spec;
+        }
+    }
+
+    /// Round-trip seconds for a `bytes`-sized activation row shipped
+    /// `a → b` and its result shipped back `b → a` — the per-pair figure
+    /// the network-aware placement objective weighs coactivation by.
+    pub fn roundtrip_secs(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        let fwd = self.spec(a, b).cost(bytes);
+        let back = self.spec(b, a).cost(bytes);
+        (fwd + back).as_secs_f64()
+    }
+
+    /// `true` when every link is free (degenerates to [`InProcess`]).
+    pub fn is_free(&self) -> bool {
+        self.links.iter().all(|l| l.is_free())
+    }
+}
+
+/// A [`LinkModel`] as a [`Transport`]: one message between a shard pair
+/// costs that pair's [`LinkSpec::cost`].
+#[derive(Clone, Debug)]
+pub struct SimulatedLink {
+    model: LinkModel,
+    label: String,
+}
+
+impl SimulatedLink {
+    pub fn new(model: LinkModel, label: impl Into<String>) -> SimulatedLink {
+        SimulatedLink {
+            model,
+            label: label.into(),
+        }
+    }
+
+    pub fn model(&self) -> &LinkModel {
+        &self.model
+    }
+}
+
+impl Transport for SimulatedLink {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn transfer_cost(&self, from: usize, to: usize, bytes: u64) -> Duration {
+        self.model.spec(from, to).cost(bytes)
+    }
+
+    fn is_free(&self) -> bool {
+        self.model.is_free()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI grammar: --net-model and --fault.
+// ---------------------------------------------------------------------------
+
+/// Parsed `--net-model` value. Grammar:
+///
+/// ```text
+/// zero                                         in-process, free
+/// uniform:<lat_us>:<mbps>                      same wire everywhere
+/// grouped:<group>:<lat_us>:<mbps>:<far_lat_us>:<far_mbps>
+///                                              near wire inside groups of
+///                                              <group> shards, far wire
+///                                              across groups
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum NetModelSpec {
+    #[default]
+    Zero,
+    Uniform {
+        lat_us: f64,
+        mbps: f64,
+    },
+    Grouped {
+        group: usize,
+        lat_us: f64,
+        mbps: f64,
+        far_lat_us: f64,
+        far_mbps: f64,
+    },
+}
+
+fn num(part: Option<&str>, what: &str, src: &str) -> Result<f64> {
+    part.ok_or_else(|| anyhow!("net model '{src}' is missing its {what} field"))?
+        .trim()
+        .parse::<f64>()
+        .map_err(|_| anyhow!("net model '{src}' has a non-numeric {what} field"))
+}
+
+impl NetModelSpec {
+    pub fn parse(s: &str) -> Result<NetModelSpec> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let spec = match head {
+            "zero" | "in-process" | "none" => NetModelSpec::Zero,
+            "uniform" => NetModelSpec::Uniform {
+                lat_us: num(parts.next(), "latency (µs)", s)?,
+                mbps: num(parts.next(), "bandwidth (MB/s)", s)?,
+            },
+            "grouped" => NetModelSpec::Grouped {
+                group: num(parts.next(), "group size", s)? as usize,
+                lat_us: num(parts.next(), "near latency (µs)", s)?,
+                mbps: num(parts.next(), "near bandwidth (MB/s)", s)?,
+                far_lat_us: num(parts.next(), "far latency (µs)", s)?,
+                far_mbps: num(parts.next(), "far bandwidth (MB/s)", s)?,
+            },
+            other => bail!(
+                "unknown net model '{other}' \
+                 (zero | uniform:<lat_us>:<mbps> | \
+                 grouped:<group>:<lat_us>:<mbps>:<far_lat_us>:<far_mbps>)"
+            ),
+        };
+        if let Some(extra) = parts.next() {
+            bail!("net model '{s}' has a trailing field '{extra}'");
+        }
+        Ok(spec)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        matches!(self, NetModelSpec::Zero)
+    }
+
+    /// Canonical label, round-trippable through [`NetModelSpec::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            NetModelSpec::Zero => "zero".to_string(),
+            NetModelSpec::Uniform { lat_us, mbps } => format!("uniform:{lat_us}:{mbps}"),
+            NetModelSpec::Grouped {
+                group,
+                lat_us,
+                mbps,
+                far_lat_us,
+                far_mbps,
+            } => format!("grouped:{group}:{lat_us}:{mbps}:{far_lat_us}:{far_mbps}"),
+        }
+    }
+
+    /// The per-pair link table this spec describes for `n_shards`.
+    pub fn link_model(&self, n_shards: usize) -> LinkModel {
+        match *self {
+            NetModelSpec::Zero => LinkModel::zero(n_shards),
+            NetModelSpec::Uniform { lat_us, mbps } => {
+                LinkModel::uniform(n_shards, LinkSpec::wire(lat_us, mbps))
+            }
+            NetModelSpec::Grouped {
+                group,
+                lat_us,
+                mbps,
+                far_lat_us,
+                far_mbps,
+            } => LinkModel::grouped(
+                n_shards,
+                group,
+                LinkSpec::wire(lat_us, mbps),
+                LinkSpec::wire(far_lat_us, far_mbps),
+            ),
+        }
+    }
+
+    /// The transport the sharded engine meters against.
+    pub fn transport(&self, n_shards: usize) -> Box<dyn Transport> {
+        match self {
+            NetModelSpec::Zero => Box::new(InProcess),
+            _ => Box::new(SimulatedLink::new(self.link_model(n_shards), self.label())),
+        }
+    }
+}
+
+/// Parsed `--fault` value: kill shard `shard` once the engine has run
+/// `round` top-level rounds (prefill and decode rounds both count, as
+/// do whole-forward calls). `kill:1@8` kills shard 1 at round 8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub shard: usize,
+    pub round: u64,
+}
+
+impl FaultPlan {
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let rest = s
+            .strip_prefix("kill:")
+            .ok_or_else(|| anyhow!("unknown fault plan '{s}' (kill:<shard>@<round>)"))?;
+        let (shard, round) = rest
+            .split_once('@')
+            .ok_or_else(|| anyhow!("fault plan '{s}' is missing '@<round>'"))?;
+        Ok(FaultPlan {
+            shard: shard
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("fault plan '{s}' has a non-numeric shard"))?,
+            round: round
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| anyhow!("fault plan '{s}' has a non-numeric round"))?,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        format!("kill:{}@{}", self.shard, self.round)
+    }
+}
+
+/// One survived shard failure, recorded by the engine at the round the
+/// fault fired and surfaced through `ServeMetrics`.
+#[derive(Clone, Debug)]
+pub struct RecoveryEvent {
+    /// Round counter value at which the shard died.
+    pub round: u64,
+    /// The shard that was killed.
+    pub dead_shard: usize,
+    /// Experts whose primary moved to a promoted replica.
+    pub promoted: u64,
+    /// `(layer, expert)` cells the dead shard hosted with no replica —
+    /// non-empty exactly when the engine entered degraded mode.
+    pub orphaned: Vec<(usize, usize)>,
+}
+
+impl RecoveryEvent {
+    pub fn covered(&self) -> bool {
+        self.orphaned.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NetMeter: per-pair lanes + the deterministic virtual clock.
+// ---------------------------------------------------------------------------
+
+/// One directed shard pair's transfer totals: aggregate bytes and
+/// messages, summed virtual link time, and power-of-two histograms of
+/// per-message payload bytes and per-message virtual microseconds.
+#[derive(Clone, Debug, Default)]
+pub struct TransferLane {
+    pub from: usize,
+    pub to: usize,
+    pub bytes: u64,
+    pub messages: u64,
+    pub virtual_time: Duration,
+    pub bytes_hist: CountHist,
+    pub time_us_hist: CountHist,
+}
+
+/// The engine-side transfer meter: per-layer pair byte tallies flushed
+/// into per-pair [`TransferLane`]s, plus the deterministic virtual
+/// clock. Per layer, each ordered pair with nonzero bytes is one
+/// message; pairs transfer in parallel, so the layer advances the
+/// clock by the **max** pair cost. Never reads wall-clock time.
+#[derive(Clone, Debug, Default)]
+pub struct NetMeter {
+    n_shards: usize,
+    lanes: Vec<TransferLane>,
+    /// Per-layer scratch: bytes queued on each ordered pair.
+    scratch: Vec<u64>,
+    /// Accumulated critical-path transfer time across layers and rounds.
+    pub virtual_time: Duration,
+    /// Layers metered (across all rounds).
+    pub layers_metered: u64,
+}
+
+impl NetMeter {
+    pub fn new(n_shards: usize) -> NetMeter {
+        let mut lanes = Vec::with_capacity(n_shards * n_shards);
+        for from in 0..n_shards {
+            for to in 0..n_shards {
+                lanes.push(TransferLane {
+                    from,
+                    to,
+                    ..TransferLane::default()
+                });
+            }
+        }
+        NetMeter {
+            n_shards,
+            lanes,
+            scratch: vec![0; n_shards * n_shards],
+            virtual_time: Duration::ZERO,
+            layers_metered: 0,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Start metering one layer: clear the pair scratch.
+    pub fn begin_layer(&mut self) {
+        self.scratch.iter_mut().for_each(|b| *b = 0);
+    }
+
+    /// Queue `bytes` on the ordered pair `(from, to)` for this layer.
+    pub fn add(&mut self, from: usize, to: usize, bytes: u64) {
+        if from == to || from >= self.n_shards || to >= self.n_shards {
+            return;
+        }
+        self.scratch[from * self.n_shards + to] += bytes;
+    }
+
+    /// Flush the layer: one message per nonzero pair, priced by
+    /// `transport`; the clock advances by the slowest pair (links run
+    /// in parallel).
+    pub fn end_layer(&mut self, transport: &dyn Transport) {
+        let n = self.n_shards;
+        let mut layer_max = Duration::ZERO;
+        for from in 0..n {
+            for to in 0..n {
+                if from == to {
+                    continue;
+                }
+                let b = self.scratch[from * n + to];
+                if b == 0 {
+                    continue;
+                }
+                let cost = transport.transfer_cost(from, to, b);
+                let lane = &mut self.lanes[from * n + to];
+                lane.bytes += b;
+                lane.messages += 1;
+                lane.virtual_time += cost;
+                lane.bytes_hist.record(b as usize);
+                lane.time_us_hist.record(cost.as_micros() as usize);
+                if cost > layer_max {
+                    layer_max = cost;
+                }
+            }
+        }
+        self.virtual_time += layer_max;
+        self.layers_metered += 1;
+    }
+
+    /// Lanes that actually moved bytes, `(from, to)` ascending.
+    pub fn active_lanes(&self) -> impl Iterator<Item = &TransferLane> {
+        self.lanes.iter().filter(|l| l.bytes > 0)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.bytes).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.lanes.iter().map(|l| l.messages).sum()
+    }
+
+    /// The `BENCH_serve.json` / `--net-json` encoding: totals plus one
+    /// entry per active lane with both histograms.
+    pub fn to_json(&self) -> Json {
+        let lanes: Vec<Json> = self
+            .active_lanes()
+            .map(|l| {
+                Json::obj(vec![
+                    ("from", Json::Num(l.from as f64)),
+                    ("to", Json::Num(l.to as f64)),
+                    ("bytes", Json::Num(l.bytes as f64)),
+                    ("messages", Json::Num(l.messages as f64)),
+                    ("virtual_time_s", Json::Num(l.virtual_time.as_secs_f64())),
+                    ("bytes_hist", l.bytes_hist.to_json()),
+                    ("time_us_hist", l.time_us_hist.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("shards", Json::Num(self.n_shards as f64)),
+            ("total_bytes", Json::Num(self.total_bytes() as f64)),
+            ("total_messages", Json::Num(self.total_messages() as f64)),
+            (
+                "virtual_transfer_time_s",
+                Json::Num(self.virtual_time.as_secs_f64()),
+            ),
+            ("layers_metered", Json::Num(self.layers_metered as f64)),
+            ("lanes", Json::Arr(lanes)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_spec_prices_latency_overhead_and_bandwidth() {
+        let s = LinkSpec::wire(50.0, 100.0); // 50µs + 1µs, 100 MB/s
+        // 1 MB over 100 MB/s = 10ms of payload time
+        let c = s.cost(1_000_000);
+        assert_eq!(c, Duration::from_micros(51) + Duration::from_millis(10));
+        // zero-byte messages still pay latency + overhead
+        assert_eq!(s.cost(0), Duration::from_micros(51));
+        assert_eq!(LinkSpec::FREE.cost(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn link_model_topologies() {
+        let near = LinkSpec::wire(5.0, 400.0);
+        let far = LinkSpec::wire(50.0, 40.0);
+        let m = LinkModel::grouped(4, 2, near, far);
+        assert_eq!(m.spec(0, 1), near, "same group of 2");
+        assert_eq!(m.spec(2, 3), near);
+        assert_eq!(m.spec(1, 2), far, "across groups");
+        assert_eq!(m.spec(0, 3), far);
+        assert_eq!(m.spec(2, 2), LinkSpec::FREE, "diagonal is free");
+        assert!(!m.is_free());
+        assert!(LinkModel::zero(4).is_free());
+        // uniform model: every off-diagonal pair identical
+        let u = LinkModel::uniform(3, near);
+        assert_eq!(u.spec(0, 2), u.spec(2, 1));
+        // roundtrip sums both directions
+        let mut asym = LinkModel::zero(2);
+        asym.set_link(0, 1, near);
+        asym.set_link(1, 0, far);
+        let rt = asym.roundtrip_secs(0, 1, 1000);
+        let expect = (near.cost(1000) + far.cost(1000)).as_secs_f64();
+        assert!((rt - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn net_model_spec_parses_and_round_trips() {
+        assert!(NetModelSpec::parse("zero").unwrap().is_zero());
+        let u = NetModelSpec::parse("uniform:50:100").unwrap();
+        assert_eq!(
+            u,
+            NetModelSpec::Uniform {
+                lat_us: 50.0,
+                mbps: 100.0
+            }
+        );
+        let g = NetModelSpec::parse("grouped:2:5:400:50:40").unwrap();
+        assert_eq!(NetModelSpec::parse(&g.label()).unwrap(), g);
+        assert_eq!(NetModelSpec::parse(&u.label()).unwrap(), u);
+        for bad in [
+            "nope",
+            "uniform:50",
+            "uniform:x:100",
+            "grouped:2:5:400:50",
+            "uniform:50:100:7",
+        ] {
+            assert!(NetModelSpec::parse(bad).is_err(), "{bad}");
+        }
+        // the zero spec builds a free transport, nonzero specs do not
+        assert!(NetModelSpec::Zero.transport(4).is_free());
+        assert!(!u.transport(4).is_free());
+        assert_eq!(u.link_model(3).n_shards(), 3);
+    }
+
+    #[test]
+    fn fault_plan_parses() {
+        let f = FaultPlan::parse("kill:1@8").unwrap();
+        assert_eq!(f, FaultPlan { shard: 1, round: 8 });
+        assert_eq!(FaultPlan::parse(&f.label()).unwrap(), f);
+        for bad in ["kill:1", "stop:1@8", "kill:x@8", "kill:1@y"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn meter_accumulates_lanes_and_critical_path() {
+        let near = LinkSpec::wire(0.0, 1.0); // 1µs overhead + 1 B/µs
+        let t = SimulatedLink::new(LinkModel::uniform(3, near), "test");
+        let mut m = NetMeter::new(3);
+        // layer 1: 0→1 carries 4 bytes (two adds), 1→0 carries 2
+        m.begin_layer();
+        m.add(0, 1, 2);
+        m.add(0, 1, 2);
+        m.add(1, 0, 2);
+        m.add(2, 2, 999); // diagonal: ignored
+        m.end_layer(&t);
+        assert_eq!(m.total_bytes(), 6);
+        assert_eq!(m.total_messages(), 2);
+        // parallel links: the layer costs the slower pair (4 B → 5µs)
+        assert_eq!(m.virtual_time, Duration::from_micros(5));
+        // layer 2: only 2→0
+        m.begin_layer();
+        m.add(2, 0, 9);
+        m.end_layer(&t);
+        assert_eq!(m.virtual_time, Duration::from_micros(15));
+        assert_eq!(m.layers_metered, 2);
+        let lanes: Vec<_> = m.active_lanes().collect();
+        assert_eq!(lanes.len(), 3);
+        let l01 = lanes.iter().find(|l| l.from == 0 && l.to == 1).unwrap();
+        assert_eq!(l01.bytes, 4);
+        assert_eq!(l01.messages, 1);
+        assert_eq!(l01.bytes_hist.max_seen(), 4);
+        let txt = m.to_json().to_string();
+        assert!(txt.contains("\"total_bytes\":6"), "{txt}");
+        assert!(txt.contains("\"lanes\""), "{txt}");
+    }
+
+    #[test]
+    fn free_transport_meters_bytes_but_never_time() {
+        let mut m = NetMeter::new(2);
+        for _ in 0..5 {
+            m.begin_layer();
+            m.add(0, 1, 128);
+            m.end_layer(&InProcess);
+        }
+        assert_eq!(m.total_bytes(), 5 * 128);
+        assert_eq!(m.virtual_time, Duration::ZERO);
+        assert!(InProcess.is_free());
+    }
+}

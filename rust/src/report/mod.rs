@@ -658,19 +658,43 @@ pub fn serving_report(
     ))
 }
 
+/// Network/fault knobs for [`sharded_serving_report`] — everything the
+/// `stun serve --net-model/--fault/--replicate/--net-json` flags carry.
+#[derive(Clone, Debug, Default)]
+pub struct ShardNetOpts {
+    /// Transport model cross-shard transfers are priced under.
+    pub net: crate::net::NetModelSpec,
+    /// Optional shard kill, injected in the *last* serving window — so
+    /// with `replicate > 0` the spilled replicas are in place to cover
+    /// it, and without replication the kill exercises the degraded-mode
+    /// diagnostic.
+    pub fault: Option<crate::net::FaultPlan>,
+    /// Adaptive replica spill: after the first window, replicate this
+    /// many hottest experts per layer (by *observed* routing load) onto
+    /// every shard and serve a second window for comparison.
+    pub replicate: usize,
+    /// Write the final window's transfer-lane JSON here.
+    pub net_json: Option<String>,
+}
+
 /// Expert-parallel serving demo: prune with the paper pipeline, place
 /// the surviving experts across `n_shards` engines by `strategy` (the
 /// coactivation statistics collected on calibration traffic drive the
-/// greedy/refined partitioners), serve a burst through
-/// [`Batcher::with_shards`], and report one lane per shard plus the
-/// cross-shard routing fraction — the serving-side number placement
-/// quality buys down.
+/// greedy/refined partitioners — against the link model's expected
+/// transfer time when `opts.net` is nonzero), serve a burst through
+/// [`Batcher::with_shards_net`], and report one lane per shard, the
+/// cross-shard routing fraction, and the per-pair transfer lanes the
+/// engine metered. With `opts.replicate > 0` a second window re-serves
+/// after spilling the observed-hottest experts onto every shard; with
+/// `opts.fault` set, the first window kills that shard mid-stream and
+/// the report records the recovery.
 pub fn sharded_serving_report(
     proto: &Protocol,
     n_requests: usize,
     quant: crate::quant::QuantScheme,
     n_shards: usize,
     strategy: crate::shard::PlacementStrategy,
+    opts: &ShardNetOpts,
 ) -> Result<String> {
     let (backend, base) = ensure_trained("moe-8x", proto)?;
     let backend = backend.as_ref();
@@ -689,73 +713,170 @@ pub fn sharded_serving_report(
 
     // placement inputs: the same coactivation statistic STUN prunes by
     // (collected on held-out calibration traffic) + the authoritative
-    // byte table under the serving quant scheme
+    // byte table under the serving quant scheme. Under a nonzero link
+    // model the partitioners score expected transfer *time* instead of
+    // raw coactivation mass.
     let mut gen = calib_gen(backend.config());
     let coact = crate::coactivation::collect(backend, &pruned, &mut gen, proto.calib_batches)?
         .normalized();
     let bytes = crate::shard::expert_bytes_table(&pruned, quant);
-    let placement = crate::shard::Placement::build(
+    let link = opts.net.link_model(n_shards);
+    let msg_bytes = 2 * backend.config().d_model as u64 * 4;
+    let mut placement = crate::shard::Placement::build_net(
         strategy,
         &coact,
         &bytes,
         n_shards,
+        &link,
+        msg_bytes,
         std::time::Duration::from_millis(50),
         17,
     )?;
-    let expected_cross = placement.expected_cross_cost(&coact);
-    // each shard lane is sized to its placed slab: everything fits, so
-    // swaps measure placement churn rather than an artificial budget
-    let per_shard_cap = placement
-        .shard_bytes(&bytes)
-        .into_iter()
-        .max()
-        .unwrap_or(0)
-        .max(1);
     let scfg = crate::sparse::SparseConfig {
         quant,
         ..Default::default()
     };
-    let mut batcher = Batcher::with_shards(
-        backend,
-        &pruned,
-        &scfg,
-        placement,
-        per_shard_cap,
-        std::time::Duration::from_micros(200),
-    )?;
-    let engine = batcher.exec_name();
-    let queue = burst_workload(backend.config(), n_requests, 6, 17);
-    let (_resp, m) = batcher.serve(queue)?;
+    let windows = if opts.replicate > 0 { 2 } else { 1 };
+    let mut out = String::new();
+    for w in 0..windows {
+        let expected_cross = placement.expected_cross_cost(&coact);
+        // each shard lane is sized to its placed slab: everything fits,
+        // so swaps measure placement churn, not an artificial budget
+        let per_shard_cap = placement
+            .shard_bytes(&bytes)
+            .into_iter()
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        let mut batcher = Batcher::with_shards_net(
+            backend,
+            &pruned,
+            &scfg,
+            placement.clone(),
+            per_shard_cap,
+            std::time::Duration::from_micros(200),
+            opts.net.transport(n_shards),
+            if w + 1 == windows { opts.fault } else { None },
+        )?;
+        let engine = batcher.exec_name();
+        let queue = burst_workload(backend.config(), n_requests, 6, 17);
+        let (_resp, m) = batcher.serve(queue)?;
 
-    let rows: Vec<Vec<String>> = m
-        .per_shard
-        .iter()
-        .map(|lane| {
-            vec![
-                format!("shard{}", lane.shard),
-                format!("{:.0}", lane.resident_bytes as f64 / 1024.0),
-                format!("{:.1}", m.shard_tokens_per_sec(lane)),
-                format!("{}", lane.tokens),
-                format!("{}", lane.expert_hits),
-                format!("{}", lane.swaps),
-            ]
-        })
-        .collect();
-    let table = render_table(
-        &["shard", "mem(KB)", "tok/s", "tokens", "hits", "swaps"],
-        &rows,
-    );
-    Ok(format!(
-        "{engine}\n{:.1} tok/s total | cross-shard {:.1}% of {} routed hits | \
-         expected cross-cost {:.4} | occupancy max {}/{} | queue max {}\n{table}",
-        m.tokens_per_sec(),
-        m.cross_shard_fraction() * 100.0,
-        m.shard_hits,
-        expected_cross,
-        m.occupancy.max_seen(),
-        backend.config().eval_batch,
-        m.queue_depth.max_seen(),
-    ))
+        let rows: Vec<Vec<String>> = m
+            .per_shard
+            .iter()
+            .map(|lane| {
+                vec![
+                    format!("shard{}", lane.shard),
+                    format!("{:.0}", lane.resident_bytes as f64 / 1024.0),
+                    format!("{:.1}", m.shard_tokens_per_sec(lane)),
+                    format!("{}", lane.tokens),
+                    format!("{}", lane.expert_hits),
+                    format!("{}", lane.swaps),
+                ]
+            })
+            .collect();
+        let table = render_table(
+            &["shard", "mem(KB)", "tok/s", "tokens", "hits", "swaps"],
+            &rows,
+        );
+        if w > 0 {
+            out.push_str(&format!(
+                "\n-- window 2: after replicating the {} observed-hottest \
+                 experts/layer onto every shard --\n",
+                opts.replicate
+            ));
+        }
+        out.push_str(&format!(
+            "{engine}\n{:.1} tok/s total | cross-shard {:.1}% of {} routed hits | \
+             expected cross-cost {:.4} | occupancy max {}/{} | queue max {}\n{table}",
+            m.tokens_per_sec(),
+            m.cross_shard_fraction() * 100.0,
+            m.shard_hits,
+            expected_cross,
+            m.occupancy.max_seen(),
+            backend.config().eval_batch,
+            m.queue_depth.max_seen(),
+        ));
+        // transfer lanes: what the engine metered through the transport,
+        // printed next to the cross-shard fraction it prices
+        if let Some(net) = &m.net {
+            let lane_rows: Vec<Vec<String>> = net
+                .active_lanes()
+                .map(|l| {
+                    vec![
+                        format!("{}->{}", l.from, l.to),
+                        format!("{:.1}", l.bytes as f64 / 1024.0),
+                        format!("{}", l.messages),
+                        format!("{:.3}", l.virtual_time.as_secs_f64() * 1e3),
+                        format!("{}", l.bytes_hist.max_seen()),
+                        format!("{}", l.time_us_hist.max_seen()),
+                    ]
+                })
+                .collect();
+            if !lane_rows.is_empty() {
+                out.push_str(&format!(
+                    "transport {} | {:.1} KB moved in {} messages | \
+                     virtual transfer time {:.3} ms\n{}",
+                    m.transport,
+                    net.total_bytes() as f64 / 1024.0,
+                    net.total_messages(),
+                    net.virtual_time.as_secs_f64() * 1e3,
+                    render_table(
+                        &["lane", "KB", "msgs", "virt(ms)", "max B/msg", "max µs/msg"],
+                        &lane_rows,
+                    ),
+                ));
+            }
+            if let Some(path) = &opts.net_json {
+                use crate::util::json::Json;
+                let recoveries: Vec<Json> = m
+                    .recoveries
+                    .iter()
+                    .map(|ev| {
+                        Json::obj(vec![
+                            ("round", Json::Num(ev.round as f64)),
+                            ("dead_shard", Json::Num(ev.dead_shard as f64)),
+                            ("promoted", Json::Num(ev.promoted as f64)),
+                            ("covered", Json::Bool(ev.covered())),
+                        ])
+                    })
+                    .collect();
+                let doc = Json::obj(vec![
+                    ("transport", Json::Str(m.transport.clone())),
+                    ("net", net.to_json()),
+                    ("recoveries", Json::Arr(recoveries)),
+                ]);
+                std::fs::write(path, doc.to_string())?;
+            }
+        }
+        for ev in &m.recoveries {
+            out.push_str(&format!(
+                "recovered: shard {} died at round {}; {} replica(s) promoted, \
+                 stream continued\n",
+                ev.dead_shard, ev.round, ev.promoted
+            ));
+        }
+        // adaptive replica spill between windows: feed the *observed*
+        // per-expert routing load back into the placement. Live experts
+        // the window never routed to get an epsilon floor so they
+        // tie-break last instead of never — a full-width --replicate
+        // sweep then reaches complete coverage, which is what lets the
+        // last-window fault injection promote its way out of the kill.
+        if w + 1 < windows {
+            let mut load = batcher.observed_expert_load();
+            for (l, row) in load.iter_mut().enumerate() {
+                for (e, v) in row.iter_mut().enumerate() {
+                    if bytes[l][e] > 0 && *v <= 0.0 {
+                        *v = 1e-6;
+                    }
+                }
+            }
+            placement = batcher.shard_placement().unwrap_or(placement);
+            placement.replicate_hottest(&load, opts.replicate);
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -20,11 +20,43 @@
 //!
 //! Replicas never change execution: groups always run on the primary
 //! shard. They exist for the *coordinator's* locality accounting (a hit
-//! is local when the token's home shard hosts the expert) and cost their
-//! bytes once per hosting shard in [`ShardedEngine::shard_resident_bytes`].
+//! is local when the token's home shard hosts the expert), cost their
+//! bytes once per hosting shard in [`ShardedEngine::shard_resident_bytes`],
+//! and double as failure domains (below).
+//!
+//! ## The transport seam
+//!
+//! Under the dispatch/reduce seam sits a [`Transport`] — a *cost model*
+//! for the activation traffic, not a message carrier. Per MoE layer the
+//! engine meters, on a [`NetMeter`], every routed (token, slot) entry
+//! whose expert is served off the token's **home shard** (the primary
+//! of its slot-0 expert): one activation row (`d_model · 4` bytes) out
+//! and one gate-scaled result row back. A hosted replica on the home
+//! shard makes the touch local — replicas buy traffic down exactly as
+//! they buy the coordinator's cross-shard fraction down. Each ordered
+//! shard pair's layer total is one *message*, priced by the transport
+//! on a deterministic virtual clock; pairs transfer in parallel, so a
+//! layer costs its slowest pair. With [`InProcess`] every price is zero
+//! and nothing else changes — the metered engine is the PR 7 engine.
+//!
+//! ## Fault injection and replica promotion
+//!
+//! A [`FaultPlan`] kills one shard when the engine's round counter
+//! (top-level forwards and session rounds both count) reaches the
+//! planned round. The engine fails over *between* rounds:
+//! [`Placement::fail_shard`] promotes the lowest-id replica of every
+//! expert the dead shard served (replica slabs hold bit-identical clones
+//! and [`crate::sparse::expert_group_forward`] is shard-agnostic, so the
+//! stream continues bit-for-bit), the dead engine thread's job channel
+//! closes, and a [`RecoveryEvent`] is recorded. If the dead shard hosted
+//! an expert with no replica, the engine enters **degraded mode**: every
+//! subsequent round returns the same diagnostic error naming the
+//! uncovered (layer, expert) cells — never a panic, a hang, or wrong
+//! logits.
 
 use super::Placement;
 use crate::model::{ModelConfig, ParamSet};
+use crate::net::{FaultPlan, InProcess, NetMeter, RecoveryEvent, Transport};
 use crate::quant::QuantMat;
 use crate::runtime::native::masked_loss;
 use crate::runtime::{CompiledForward, DecodeState, LossOutput, StepOutput};
@@ -34,6 +66,7 @@ use crate::sparse::{
 };
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{anyhow, ensure, Result};
+use std::cell::{Cell, Ref, RefCell};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -63,8 +96,11 @@ struct ShardOut {
     cells: Vec<(usize, Vec<f32>)>,
 }
 
+/// Per-shard job senders are individually closable: failover retires a
+/// dead shard by dropping its sender (the worker loop exits), while the
+/// survivors keep serving.
 struct Workers {
-    txs: Vec<Sender<ShardJob>>,
+    txs: Vec<Option<Sender<ShardJob>>>,
     rxs: Vec<Receiver<ShardOut>>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -130,19 +166,32 @@ fn worker_loop(
 ///
 /// Implements [`CompiledForward`], so everything downstream — the
 /// coordinator's round loop, the eval harness, the benches — drives it
-/// exactly like the single-engine executor.
+/// exactly like the single-engine executor. The transfer meter, round
+/// counter, and failover state live in interior-mutable cells: the
+/// engine mutates them behind the immutable `CompiledForward` calls,
+/// always on the coordinator thread (worker threads only ever hold
+/// `Arc<ShardSlab>`).
 pub struct ShardedEngine {
     trunk: CompiledModel,
-    placement: Placement,
+    placement: RefCell<Placement>,
     slabs: Vec<Arc<ShardSlab>>,
-    workers: Option<Workers>,
+    workers: RefCell<Option<Workers>>,
+    transport: Box<dyn Transport>,
+    meter: RefCell<NetMeter>,
+    /// Per-token home shard, recomputed per layer (reused allocation).
+    home_scratch: RefCell<Vec<usize>>,
+    fault: Cell<Option<FaultPlan>>,
+    rounds: Cell<u64>,
+    degraded: RefCell<Option<String>>,
+    events: RefCell<Vec<RecoveryEvent>>,
     label: String,
 }
 
 impl ShardedEngine {
     /// Compile `params` and split the expert slabs per `placement`.
     /// Engine threads (one per shard) are spawned whenever the placement
-    /// has more than one shard.
+    /// has more than one shard. In-process transport, no fault plan —
+    /// exactly the PR 7 engine.
     pub fn new(
         params: &ParamSet,
         scfg: &SparseConfig,
@@ -151,14 +200,45 @@ impl ShardedEngine {
         ShardedEngine::from_compiled(CompiledModel::compile(params, scfg), placement, true)
     }
 
+    /// Compile `params` and serve through `transport`, optionally with a
+    /// fault plan to inject — the `stun serve --net-model/--fault` path.
+    pub fn with_transport(
+        params: &ParamSet,
+        scfg: &SparseConfig,
+        placement: Placement,
+        transport: Box<dyn Transport>,
+        fault: Option<FaultPlan>,
+    ) -> Result<ShardedEngine> {
+        ShardedEngine::from_compiled_with(
+            CompiledModel::compile(params, scfg),
+            placement,
+            true,
+            transport,
+            fault,
+        )
+    }
+
     /// Split an already-compiled model. `parallel = false` keeps every
     /// shard slab in-process and serves them serially on the caller's
     /// thread — same partition, same arithmetic, no threads (the parity
     /// tests use it to pin threaded == serial == single-engine).
     pub fn from_compiled(
+        model: CompiledModel,
+        placement: Placement,
+        parallel: bool,
+    ) -> Result<ShardedEngine> {
+        ShardedEngine::from_compiled_with(model, placement, parallel, Box::new(InProcess), None)
+    }
+
+    /// The general constructor: split `model` per `placement`, meter
+    /// cross-shard traffic through `transport`, and optionally arm a
+    /// fault plan (which must name an existing shard).
+    pub fn from_compiled_with(
         mut model: CompiledModel,
         placement: Placement,
         parallel: bool,
+        transport: Box<dyn Transport>,
+        fault: Option<FaultPlan>,
     ) -> Result<ShardedEngine> {
         let cfg = model.config().clone();
         ensure!(
@@ -171,12 +251,23 @@ impl ShardedEngine {
             cfg.n_experts
         );
         ensure!(placement.n_shards >= 1, "placement has no shards");
-        let label = format!(
+        if let Some(plan) = fault {
+            ensure!(
+                plan.shard < placement.n_shards,
+                "fault plan kills shard {} but the placement has only {} shards",
+                plan.shard,
+                placement.n_shards
+            );
+        }
+        let mut label = format!(
             "sharded({}× {}, {})",
             placement.n_shards,
             placement.strategy().name(),
             CompiledForward::name(&model)
         );
+        if !transport.is_free() {
+            label = format!("{} @ {}", label, transport.label());
+        }
 
         let n_shards = placement.n_shards;
         let mut slabs: Vec<ShardSlab> = (0..n_shards)
@@ -215,7 +306,7 @@ impl ShardedEngine {
                 handles.push(std::thread::spawn(move || {
                     worker_loop(slab, d, f, k, rx_job, tx_out)
                 }));
-                txs.push(tx_job);
+                txs.push(Some(tx_job));
                 rxs.push(rx_out);
             }
             Some(Workers { txs, rxs, handles })
@@ -225,19 +316,27 @@ impl ShardedEngine {
 
         Ok(ShardedEngine {
             trunk: model,
-            placement,
+            placement: RefCell::new(placement),
             slabs,
-            workers,
+            workers: RefCell::new(workers),
+            transport,
+            meter: RefCell::new(NetMeter::new(n_shards)),
+            home_scratch: RefCell::new(Vec::new()),
+            fault: Cell::new(fault),
+            rounds: Cell::new(0),
+            degraded: RefCell::new(None),
+            events: RefCell::new(Vec::new()),
             label,
         })
     }
 
-    pub fn placement(&self) -> &Placement {
-        &self.placement
+    /// The live placement — reflects any failover promotions to date.
+    pub fn placement(&self) -> Ref<'_, Placement> {
+        self.placement.borrow()
     }
 
     pub fn n_shards(&self) -> usize {
-        self.placement.n_shards
+        self.placement.borrow().n_shards
     }
 
     /// Compiled weight bytes resident per shard (each hosted expert copy
@@ -246,8 +345,104 @@ impl ShardedEngine {
         self.slabs.iter().map(|s| s.bytes).collect()
     }
 
+    /// The transport label this engine prices transfers with.
+    pub fn transport_label(&self) -> String {
+        self.transport.label()
+    }
+
+    /// Does the transport price every transfer at zero (in-process)?
+    pub fn transport_is_free(&self) -> bool {
+        self.transport.is_free()
+    }
+
+    /// The transfer meter accumulated so far.
+    pub fn net_meter(&self) -> Ref<'_, NetMeter> {
+        self.meter.borrow()
+    }
+
+    /// Take the transfer meter, leaving a fresh one — how the
+    /// coordinator extracts per-window transfer lanes.
+    pub fn take_net_meter(&self) -> NetMeter {
+        let n = self.placement.borrow().n_shards;
+        self.meter.replace(NetMeter::new(n))
+    }
+
+    /// Drain recovery events recorded since the last call.
+    pub fn take_recovery_events(&self) -> Vec<RecoveryEvent> {
+        std::mem::take(&mut *self.events.borrow_mut())
+    }
+
+    /// The degraded-mode diagnostic, if a fault orphaned live experts.
+    pub fn degraded(&self) -> Option<String> {
+        self.degraded.borrow().clone()
+    }
+
+    /// Top-level rounds executed (forwards + session rounds).
+    pub fn rounds(&self) -> u64 {
+        self.rounds.get()
+    }
+
+    /// Tick the round counter, firing the armed fault plan when its
+    /// round arrives. Runs strictly *between* rounds (no dispatch in
+    /// flight). In degraded mode every call returns the same diagnostic.
+    fn advance_round(&self) -> Result<()> {
+        if let Some(msg) = self.degraded.borrow().as_deref() {
+            return Err(anyhow!("{msg}"));
+        }
+        let r = self.rounds.get();
+        self.rounds.set(r + 1);
+        if let Some(plan) = self.fault.get() {
+            if r >= plan.round {
+                self.fault.set(None);
+                self.fail_over(plan.shard, r)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill shard `dead`: promote replicas ([`Placement::fail_shard`]),
+    /// retire the dead engine thread, record the recovery event, and —
+    /// when live experts are left uncovered — enter degraded mode with a
+    /// diagnostic naming them.
+    fn fail_over(&self, dead: usize, round: u64) -> Result<()> {
+        let slab = Arc::clone(&self.slabs[dead]);
+        let report = self
+            .placement
+            .borrow_mut()
+            .fail_shard(dead, &|l, e| slab.experts[l][e].is_some());
+        if let Some(w) = self.workers.borrow_mut().as_mut() {
+            // closing the job channel ends worker_loop; the handle is
+            // joined on engine drop
+            w.txs[dead] = None;
+        }
+        self.events.borrow_mut().push(RecoveryEvent {
+            round,
+            dead_shard: dead,
+            promoted: report.promoted.len() as u64,
+            orphaned: report.orphaned.clone(),
+        });
+        if report.orphaned.is_empty() {
+            return Ok(());
+        }
+        let cells: Vec<String> = report
+            .orphaned
+            .iter()
+            .map(|&(l, e)| format!("(layer {l}, expert {e})"))
+            .collect();
+        let msg = format!(
+            "degraded: shard {dead} died at round {round} leaving {} expert(s) with no \
+             surviving copy — {} — the stream cannot be completed exactly; replicate \
+             hot experts (e.g. --replicate) to survive this fault",
+            cells.len(),
+            cells.join(", ")
+        );
+        *self.degraded.borrow_mut() = Some(msg.clone());
+        Err(anyhow!(msg))
+    }
+
     /// The partitioned phase 2 plugged into the shared sweeps: route on
-    /// the (replicated) trunk, fan each non-empty expert group out to its
+    /// the (replicated) trunk, meter every off-home activation transfer
+    /// on the virtual clock, fan each non-empty expert group out to its
     /// primary shard, collect every shard's gate-scaled rows into their
     /// disjoint `slot_out` cells, and reduce in fixed slot order.
     ///
@@ -269,44 +464,82 @@ impl ShardedEngine {
         scr: &mut MoeScratch,
     ) -> Result<()> {
         let (d, f, k) = (cfg.d_model, cfg.d_ff, cfg.top_k);
+        let placement = self.placement.borrow();
+        let n_shards = placement.n_shards;
         moe_route(layer, cfg, x, n, scr);
 
+        if n_shards > 1 {
+            // meter the layer's cross-shard traffic before the groups are
+            // moved out: each token's home is its slot-0 expert's primary;
+            // a touch served off a shard the home does not host pays one
+            // activation row out and one result row back
+            let mut home = self.home_scratch.borrow_mut();
+            home.clear();
+            home.resize(n, 0);
+            for (ei, group) in scr.groups.iter().enumerate() {
+                for &(t, slot, _) in group.iter() {
+                    if slot == 0 {
+                        home[t] = placement.primary_shard(l, ei);
+                    }
+                }
+            }
+            let row_bytes = (d * 4) as u64;
+            let mut meter = self.meter.borrow_mut();
+            meter.begin_layer();
+            for (ei, group) in scr.groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let serving = placement.primary_shard(l, ei);
+                for &(t, _, _) in group.iter() {
+                    if !placement.is_host(l, ei, home[t]) {
+                        meter.add(home[t], serving, row_bytes);
+                        meter.add(serving, home[t], row_bytes);
+                    }
+                }
+            }
+            meter.end_layer(self.transport.as_ref());
+        }
+
         let mut work: Vec<Vec<(usize, Vec<(usize, usize, f32)>)>> =
-            (0..self.placement.n_shards).map(|_| Vec::new()).collect();
+            (0..n_shards).map(|_| Vec::new()).collect();
         for (ei, group) in scr.groups.iter_mut().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            work[self.placement.primary_shard(l, ei)].push((ei, std::mem::take(group)));
+            work[placement.primary_shard(l, ei)].push((ei, std::mem::take(group)));
         }
 
-        match &self.workers {
+        let workers = self.workers.borrow();
+        match workers.as_ref() {
             Some(w) => {
                 let xs = Arc::new(x[..n * d].to_vec());
-                let mut sent = vec![false; self.placement.n_shards];
+                let mut sent = vec![false; n_shards];
                 for (s, groups) in work.into_iter().enumerate() {
                     if groups.is_empty() {
                         continue;
                     }
-                    w.txs[s]
-                        .send(ShardJob {
-                            layer: l,
-                            n,
-                            x: Arc::clone(&xs),
-                            groups,
-                        })
-                        .map_err(|_| {
-                            anyhow!("shard {s} engine thread died before layer {l} dispatch")
-                        })?;
+                    let tx = w.txs[s].as_ref().ok_or_else(|| {
+                        anyhow!("shard {s} engine thread is retired but was routed layer {l} work")
+                    })?;
+                    tx.send(ShardJob {
+                        layer: l,
+                        n,
+                        x: Arc::clone(&xs),
+                        groups,
+                    })
+                    .map_err(|_| {
+                        anyhow!("shard {s} engine thread died before layer {l} dispatch")
+                    })?;
                     sent[s] = true;
                 }
                 for (s, &was_sent) in sent.iter().enumerate() {
                     if !was_sent {
                         continue;
                     }
-                    let out = w.rxs[s].recv().map_err(|_| {
-                        anyhow!("shard {s} engine thread died serving layer {l}")
-                    })?;
+                    let out = w.rxs[s]
+                        .recv()
+                        .map_err(|_| anyhow!("shard {s} engine thread died serving layer {l}"))?;
                     for (cell, row) in out.cells {
                         scr.slot_out[cell * d..cell * d + d].copy_from_slice(&row);
                     }
@@ -338,15 +571,27 @@ impl ShardedEngine {
                 }
             }
         }
+        drop(workers);
 
         moe_reduce(cfg, n, h, scr);
         Ok(())
+    }
+
+    /// The full forward without the round tick — shared by
+    /// `fwd_logits` and `fwd_loss` so a loss never double-counts.
+    fn logits_inner(&self, tokens: &IntTensor) -> Result<Tensor> {
+        Ok(self
+            .trunk
+            .forward_with(tokens, false, &mut |l, layer, cfg, x, n, h, scr| {
+                self.dispatch_gather(l, layer, cfg, x, n, h, scr)
+            })?
+            .0)
     }
 }
 
 impl Drop for ShardedEngine {
     fn drop(&mut self) {
-        if let Some(w) = self.workers.take() {
+        if let Some(w) = self.workers.borrow_mut().take() {
             drop(w.txs); // disconnect the job channels
             for h in w.handles {
                 let _ = h.join();
@@ -365,15 +610,12 @@ impl CompiledForward for ShardedEngine {
     }
 
     fn fwd_logits(&self, tokens: &IntTensor) -> Result<Tensor> {
-        Ok(self
-            .trunk
-            .forward_with(tokens, false, &mut |l, layer, cfg, x, n, h, scr| {
-                self.dispatch_gather(l, layer, cfg, x, n, h, scr)
-            })?
-            .0)
+        self.advance_round()?;
+        self.logits_inner(tokens)
     }
 
     fn fwd_logits_routed(&self, tokens: &IntTensor) -> Result<(Tensor, Option<IntTensor>)> {
+        self.advance_round()?;
         self.trunk
             .forward_with(tokens, true, &mut |l, layer, cfg, x, n, h, scr| {
                 self.dispatch_gather(l, layer, cfg, x, n, h, scr)
@@ -381,7 +623,8 @@ impl CompiledForward for ShardedEngine {
     }
 
     fn fwd_loss(&self, tokens: &IntTensor, targets: &IntTensor) -> Result<LossOutput> {
-        let logits = self.fwd_logits(tokens)?;
+        self.advance_round()?;
+        let logits = self.logits_inner(tokens)?;
         let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
         Ok(masked_loss(
             logits.data(),
@@ -396,6 +639,7 @@ impl CompiledForward for ShardedEngine {
     /// same trunk sweep as [`CompiledModel`]'s override, so sharded
     /// decode streams replay the single-engine streams bit for bit.
     fn session_round(&self, state: &mut DecodeState, slots: &[usize]) -> Result<StepOutput> {
+        self.advance_round()?;
         let mut scr = state.take_scratch();
         let res = self
             .trunk
@@ -431,6 +675,11 @@ mod tests {
             .sum()
     }
 
+    fn probe_tokens(vocab: usize) -> IntTensor {
+        let toks: Vec<i32> = (0..8).map(|i| (i * 7 % vocab as i32).max(1)).collect();
+        IntTensor::new(&[1, 8], toks).unwrap()
+    }
+
     #[test]
     fn slabs_conserve_expert_bytes() {
         let (ps, scfg) = tiny_pruned();
@@ -454,13 +703,144 @@ mod tests {
         let p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
         let eng =
             ShardedEngine::from_compiled(CompiledModel::compile(&ps, &scfg), p, false).unwrap();
-        let toks: Vec<i32> = (0..8).map(|i| (i * 7 % cfg.vocab as i32).max(1)).collect();
-        let t = IntTensor::new(&[1, 8], toks).unwrap();
+        let t = probe_tokens(cfg.vocab);
         let a = single.fwd_logits(&t).unwrap();
         let b = eng.fwd_logits(&t).unwrap();
         assert_eq!(a.shape(), b.shape());
         for (x, y) in a.data().iter().zip(b.data()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn in_process_transport_meters_bytes_at_zero_virtual_time() {
+        let (ps, scfg) = tiny_pruned();
+        let cfg = ps.config.clone();
+        let p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let eng =
+            ShardedEngine::from_compiled(CompiledModel::compile(&ps, &scfg), p, false).unwrap();
+        assert!(eng.transport_is_free());
+        eng.fwd_logits(&probe_tokens(cfg.vocab)).unwrap();
+        let meter = eng.take_net_meter();
+        // round-robin at top_k >= 2 must cross shards somewhere, every
+        // transfer is one activation row out + one result row back
+        assert!(meter.total_bytes() > 0, "no cross-shard traffic metered");
+        assert_eq!(meter.total_bytes() % (2 * cfg.d_model as u64 * 4), 0);
+        assert_eq!(meter.virtual_time, std::time::Duration::ZERO);
+        assert_eq!(meter.layers_metered as usize, cfg.n_layers);
+        // the meter was taken: a fresh one starts at zero
+        assert_eq!(eng.net_meter().total_bytes(), 0);
+    }
+
+    #[test]
+    fn full_replication_meters_zero_transfer_bytes() {
+        let (ps, scfg) = tiny_pruned();
+        let cfg = ps.config.clone();
+        let mut p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        // replicate every live expert everywhere: all touches are local
+        let load: Vec<Vec<f64>> = (0..cfg.n_layers)
+            .map(|l| {
+                (0..cfg.n_experts)
+                    .map(|e| if l == 0 && e == 2 { 0.0 } else { 1.0 })
+                    .collect()
+            })
+            .collect();
+        p.replicate_hottest(&load, cfg.n_experts);
+        let eng =
+            ShardedEngine::from_compiled(CompiledModel::compile(&ps, &scfg), p, false).unwrap();
+        eng.fwd_logits(&probe_tokens(cfg.vocab)).unwrap();
+        assert_eq!(eng.net_meter().total_bytes(), 0);
+    }
+
+    #[test]
+    fn covered_fault_promotes_and_stays_bit_identical() {
+        let (ps, scfg) = tiny_pruned();
+        let cfg = ps.config.clone();
+        let single = CompiledModel::compile(&ps, &scfg);
+        let mut p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let load: Vec<Vec<f64>> = (0..cfg.n_layers)
+            .map(|l| {
+                (0..cfg.n_experts)
+                    .map(|e| if l == 0 && e == 2 { 0.0 } else { 1.0 })
+                    .collect()
+            })
+            .collect();
+        p.replicate_hottest(&load, cfg.n_experts);
+        let eng = ShardedEngine::from_compiled_with(
+            CompiledModel::compile(&ps, &scfg),
+            p,
+            false,
+            Box::new(InProcess),
+            Some(FaultPlan { shard: 1, round: 1 }),
+        )
+        .unwrap();
+        let t = probe_tokens(cfg.vocab);
+        // round 0 runs on the intact placement
+        eng.fwd_logits(&t).unwrap();
+        assert!(eng.take_recovery_events().is_empty());
+        // round 1 fires the fault; full replication covers shard 1
+        let b = eng.fwd_logits(&t).unwrap();
+        let a = single.fwd_logits(&t).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let events = eng.take_recovery_events();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].covered());
+        assert_eq!(events[0].dead_shard, 1);
+        assert!(events[0].promoted > 0);
+        // shard 1 serves nothing anymore
+        let placement = eng.placement();
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                assert_ne!(placement.primary_shard(l, e), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn uncovered_fault_degrades_with_a_diagnostic() {
+        let (ps, scfg) = tiny_pruned();
+        let cfg = ps.config.clone();
+        let p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let eng = ShardedEngine::from_compiled_with(
+            CompiledModel::compile(&ps, &scfg),
+            p,
+            false,
+            Box::new(InProcess),
+            Some(FaultPlan { shard: 0, round: 1 }),
+        )
+        .unwrap();
+        let t = probe_tokens(cfg.vocab);
+        eng.fwd_logits(&t).unwrap();
+        let diag = |r: Result<Tensor>| match r {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("degraded engine must error"),
+        };
+        let err = diag(eng.fwd_logits(&t));
+        assert!(err.contains("degraded"), "{err}");
+        assert!(err.contains("layer"), "{err}");
+        // degraded mode is sticky and deterministic — no panic, no hang
+        let again = diag(eng.fwd_logits(&t));
+        assert_eq!(err, again);
+        assert!(eng.degraded().is_some());
+        let events = eng.take_recovery_events();
+        assert_eq!(events.len(), 1);
+        assert!(!events[0].covered());
+    }
+
+    #[test]
+    fn fault_plan_must_name_an_existing_shard() {
+        let (ps, scfg) = tiny_pruned();
+        let cfg = ps.config.clone();
+        let p = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+        let res = ShardedEngine::from_compiled_with(
+            CompiledModel::compile(&ps, &scfg),
+            p,
+            false,
+            Box::new(InProcess),
+            Some(FaultPlan { shard: 7, round: 0 }),
+        );
+        assert!(res.is_err());
     }
 }

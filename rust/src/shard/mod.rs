@@ -36,6 +36,16 @@
 //! *local* whenever the token's primary shard hosts the expert, so
 //! replicas directly buy down the cross-shard routing fraction the
 //! coordinator reports. Bytes are accounted once per hosting shard.
+//!
+//! With a [`crate::net::LinkModel`] in play the objective gets physical:
+//! [`Placement::expected_transfer_time`] weighs every cut coactivation
+//! pair by the round-trip cost of the link between its primaries, so
+//! [`Placement::build_net`] (greedy + refined variants) packs hot pairs
+//! onto *cheap* links, not just onto the same shard. Replicas double as
+//! failure domains: [`Placement::fail_shard`] survives a shard loss by
+//! promoting the lowest-id replica of every expert the dead shard
+//! served (deterministic, so every engine re-derives the same
+//! placement), reporting any uncovered experts as orphans.
 
 pub mod engine;
 
@@ -43,6 +53,7 @@ pub use engine::ShardedEngine;
 
 use crate::cluster::DistMatrix;
 use crate::model::ParamSet;
+use crate::net::LinkModel;
 use crate::quant::QuantScheme;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Result};
@@ -292,12 +303,23 @@ impl Placement {
         budget: Duration,
         seed: u64,
     ) -> u64 {
+        self.refine_by(budget, seed, &|p| p.search_cost(coact, bytes))
+    }
+
+    /// The anytime loop under an arbitrary objective — shared by the
+    /// coactivation-mass and network-model refinements.
+    fn refine_by(
+        &mut self,
+        budget: Duration,
+        seed: u64,
+        cost_of: &dyn Fn(&Placement) -> f64,
+    ) -> u64 {
         if self.n_shards < 2 || self.n_layers == 0 || self.n_experts < 2 {
             return 0;
         }
         let mut rng = Rng::new(seed);
         let start = Instant::now();
-        let mut cost = self.search_cost(coact, bytes);
+        let mut cost = cost_of(self);
         let mut accepted = 0u64;
         let mut iters = 0u64;
         while start.elapsed() < budget && iters < MAX_SEARCH_ITERS {
@@ -313,7 +335,7 @@ impl Placement {
                     continue;
                 }
                 self.primary[ix] = s;
-                let c = self.search_cost(coact, bytes);
+                let c = cost_of(self);
                 if c < cost {
                     cost = c;
                     accepted += 1;
@@ -330,7 +352,7 @@ impl Placement {
                 }
                 self.primary[ix] = old2;
                 self.primary[ix2] = old;
-                let c = self.search_cost(coact, bytes);
+                let c = cost_of(self);
                 if c < cost {
                     cost = c;
                     accepted += 1;
@@ -394,21 +416,251 @@ impl Placement {
         out
     }
 
+    /// The byte-imbalance term of both search objectives:
+    /// `max_shard_bytes / ideal − 1`, zero when perfectly balanced.
+    fn byte_imbalance(&self, bytes: &[Vec<usize>]) -> f64 {
+        let loads = self.shard_bytes(bytes);
+        let total: usize = loads.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let ideal = total as f64 / self.n_shards as f64;
+        let max = loads.iter().copied().max().unwrap_or(0) as f64;
+        (max / ideal - 1.0).max(0.0)
+    }
+
     /// The local-search objective: expected cross-shard cost plus a
     /// byte-imbalance penalty (`max_shard_bytes / ideal − 1`, zero when
     /// perfectly balanced), so the search cannot trade all balance away
     /// for cut quality.
     pub fn search_cost(&self, coact: &[DistMatrix], bytes: &[Vec<usize>]) -> f64 {
-        let loads = self.shard_bytes(bytes);
-        let total: usize = loads.iter().sum();
-        let imbalance = if total > 0 {
-            let ideal = total as f64 / self.n_shards as f64;
-            let max = loads.iter().copied().max().unwrap_or(0) as f64;
-            (max / ideal - 1.0).max(0.0)
+        self.expected_cross_cost(coact) + BALANCE_WEIGHT * self.byte_imbalance(bytes)
+    }
+
+    /// Expected activation-transfer time (seconds of virtual link time)
+    /// under a [`LinkModel`]: every cut coactivation pair is weighted by
+    /// the **round-trip** cost of one `msg_bytes`-sized activation row
+    /// between its primaries, instead of counting each unit of cut mass
+    /// the same. Pairs a replica colocates cost nothing, exactly as in
+    /// [`Placement::expected_cross_cost`]. With a uniform link model
+    /// this is `expected_cross_cost × const`, so the net objective
+    /// strictly generalizes the plain one.
+    pub fn expected_transfer_time(
+        &self,
+        coact: &[DistMatrix],
+        link: &LinkModel,
+        msg_bytes: u64,
+    ) -> f64 {
+        let mut secs = 0.0;
+        for (l, m) in coact.iter().enumerate().take(self.n_layers) {
+            let n = m.n.min(self.n_experts);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let a = m.get(i, j);
+                    if a > 0.0 && !self.colocated(l, i, j) {
+                        let si = self.primary[self.idx(l, i)];
+                        let sj = self.primary[self.idx(l, j)];
+                        let w = a * link.roundtrip_secs(si, sj, msg_bytes);
+                        secs += w;
+                    }
+                }
+            }
+        }
+        secs
+    }
+
+    /// The network-aware local-search objective: expected transfer time
+    /// normalized by the mean nonzero pair round-trip (so a uniform
+    /// model scores identically to [`Placement::search_cost`] and the
+    /// imbalance weight keeps its meaning), plus the byte-imbalance
+    /// penalty. A free link model degenerates to the plain objective.
+    pub fn search_cost_net(
+        &self,
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        link: &LinkModel,
+        msg_bytes: u64,
+    ) -> f64 {
+        let mut pairs = 0u64;
+        let mut sum = 0.0;
+        for a in 0..self.n_shards {
+            for b in (a + 1)..self.n_shards {
+                let rt = link.roundtrip_secs(a, b, msg_bytes);
+                if rt > 0.0 {
+                    sum += rt;
+                    pairs += 1;
+                }
+            }
+        }
+        if pairs == 0 {
+            return self.search_cost(coact, bytes);
+        }
+        let mean = sum / pairs as f64;
+        let transfer = self.expected_transfer_time(coact, link, msg_bytes) / mean;
+        transfer + BALANCE_WEIGHT * self.byte_imbalance(bytes)
+    }
+
+    /// Network-aware greedy partitioner: same hottest-first order and
+    /// byte-feasibility cap as [`Placement::greedy`], but each expert
+    /// goes to the shard minimizing its *incremental expected transfer
+    /// time* to the experts already placed (coactivation × round-trip
+    /// link cost), tie-broken toward the least-loaded shard. Under a
+    /// uniform link model this coincides with the affinity rule.
+    pub fn greedy_net(
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        n_shards: usize,
+        link: &LinkModel,
+        msg_bytes: u64,
+    ) -> Placement {
+        let n_layers = coact.len();
+        let n_experts = coact.first().map(|m| m.n).unwrap_or(0);
+        let mut p = Placement::round_robin(n_layers, n_experts, n_shards);
+        p.strategy = PlacementStrategy::Greedy;
+        if n_shards < 2 || n_experts == 0 {
+            return p;
+        }
+        let total: usize = bytes.iter().flatten().sum();
+        let max_expert = bytes.iter().flatten().copied().max().unwrap_or(0);
+        let ideal = total as f64 / n_shards as f64;
+        let cap = ideal * 1.05 + max_expert as f64;
+        let mut load = vec![0usize; n_shards];
+        for (l, m) in coact.iter().enumerate() {
+            let mass: Vec<f64> = (0..n_experts)
+                .map(|e| (0..n_experts).filter(|&j| j != e).map(|j| m.get(e, j)).sum())
+                .collect();
+            let mut order: Vec<usize> = (0..n_experts).collect();
+            order.sort_by(|&a, &b| {
+                mass[b]
+                    .partial_cmp(&mass[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut shard_of: Vec<Option<usize>> = vec![None; n_experts];
+            for &e in &order {
+                let b = bytes[l][e];
+                let mut best: Option<(usize, f64)> = None;
+                for s in 0..n_shards {
+                    if (load[s] + b) as f64 > cap {
+                        continue;
+                    }
+                    let mut transfer = 0.0;
+                    for (j, placed) in shard_of.iter().enumerate() {
+                        if let Some(sj) = *placed {
+                            if sj != s && j != e {
+                                let w = m.get(e, j) * link.roundtrip_secs(s, sj, msg_bytes);
+                                transfer += w;
+                            }
+                        }
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((bs, bc)) => {
+                            transfer < bc || (transfer == bc && load[s] < load[bs])
+                        }
+                    };
+                    if better {
+                        best = Some((s, transfer));
+                    }
+                }
+                let s = match best {
+                    Some((s, _)) => s,
+                    // unreachable with the pigeonhole cap, but stay total
+                    None => (0..n_shards).min_by_key(|&s| load[s]).unwrap_or(0),
+                };
+                let ix = l * n_experts + e;
+                p.primary[ix] = s;
+                shard_of[e] = Some(s);
+                load[s] += b;
+            }
+        }
+        p
+    }
+
+    /// Network-aware anytime refinement: multi-start from
+    /// [`Placement::greedy_net`] **and** round-robin, refine each under
+    /// [`Placement::search_cost_net`] (only improving moves), keep the
+    /// better. Because round-robin is a start and moves only improve,
+    /// the result's net objective never exceeds round-robin's — and
+    /// with a uniform byte table (round-robin imbalance = 0) its
+    /// expected transfer time is never higher than round-robin's either.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refined_net(
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        n_shards: usize,
+        link: &LinkModel,
+        msg_bytes: u64,
+        budget: Duration,
+        seed: u64,
+    ) -> Placement {
+        let n_layers = coact.len();
+        let n_experts = coact.first().map(|m| m.n).unwrap_or(0);
+        let mut a = Placement::greedy_net(coact, bytes, n_shards, link, msg_bytes);
+        a.strategy = PlacementStrategy::Refined;
+        let mut b = Placement::round_robin(n_layers, n_experts, n_shards);
+        b.strategy = PlacementStrategy::Refined;
+        let half = budget / 2;
+        a.refine_by(half, seed, &|p| {
+            p.search_cost_net(coact, bytes, link, msg_bytes)
+        });
+        b.refine_by(half, seed ^ 0x9E37_79B9, &|p| {
+            p.search_cost_net(coact, bytes, link, msg_bytes)
+        });
+        if b.search_cost_net(coact, bytes, link, msg_bytes)
+            < a.search_cost_net(coact, bytes, link, msg_bytes)
+        {
+            b
         } else {
-            0.0
+            a
+        }
+    }
+
+    /// [`Placement::build`] under a link model: the same strategy names,
+    /// scored by expected transfer time instead of raw cut mass. With a
+    /// free model this is exactly `build` (the objectives coincide), so
+    /// callers can thread the link model unconditionally.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_net(
+        strategy: PlacementStrategy,
+        coact: &[DistMatrix],
+        bytes: &[Vec<usize>],
+        n_shards: usize,
+        link: &LinkModel,
+        msg_bytes: u64,
+        budget: Duration,
+        seed: u64,
+    ) -> Result<Placement> {
+        ensure!(n_shards >= 1, "--shards must be at least 1");
+        let n_layers = coact.len();
+        let n_experts = coact.first().map(|m| m.n).unwrap_or(0);
+        ensure!(
+            bytes.len() == n_layers && bytes.iter().all(|row| row.len() == n_experts),
+            "byte table shape does not match the coactivation matrices"
+        );
+        ensure!(
+            link.n_shards() == n_shards,
+            "link model covers {} shards, placement wants {}",
+            link.n_shards(),
+            n_shards
+        );
+        if link.is_free() {
+            return Placement::build(strategy, coact, bytes, n_shards, budget, seed);
+        }
+        let p = match strategy {
+            PlacementStrategy::RoundRobin => Placement::round_robin(n_layers, n_experts, n_shards),
+            PlacementStrategy::Greedy => {
+                Placement::greedy_net(coact, bytes, n_shards, link, msg_bytes)
+            }
+            PlacementStrategy::Refined => {
+                Placement::refined_net(coact, bytes, n_shards, link, msg_bytes, budget, seed)
+            }
         };
-        self.expected_cross_cost(coact) + BALANCE_WEIGHT * imbalance
+        #[cfg(debug_assertions)]
+        if let Err(e) = p.validate(Some(bytes)) {
+            panic!("{strategy:?} net placement construction produced an invalid placement: {e}");
+        }
+        Ok(p)
     }
 
     /// Replicate the `per_layer` hottest experts of each layer (by load
@@ -507,6 +759,75 @@ impl Placement {
         }
         Ok(())
     }
+
+    /// Remove shard `dead` from the placement, promoting replicas to
+    /// primaries. `hosted(layer, expert)` says whether the expert
+    /// actually owns weights (pruned experts host nothing and can be
+    /// re-pinned freely). Deterministic: every expert the dead shard
+    /// served promotes its **lowest-id** surviving replica, so every
+    /// observer of the same placement derives the same failover.
+    ///
+    /// Experts the dead shard served with no replica and live weights
+    /// are **orphans** — they stay pinned (the placement remains
+    /// well-formed) and are returned in
+    /// [`FailoverReport::orphaned`]; the engine uses a non-empty orphan
+    /// list to enter degraded mode rather than serve wrong logits.
+    pub fn fail_shard(
+        &mut self,
+        dead: usize,
+        hosted: &dyn Fn(usize, usize) -> bool,
+    ) -> FailoverReport {
+        let mut rep = FailoverReport {
+            dead_shard: dead,
+            promoted: Vec::new(),
+            orphaned: Vec::new(),
+        };
+        if dead >= self.n_shards {
+            return rep;
+        }
+        for l in 0..self.n_layers {
+            for e in 0..self.n_experts {
+                let ix = l * self.n_experts + e;
+                if self.primary[ix] != dead {
+                    self.replicas[ix].retain(|&s| s != dead);
+                    continue;
+                }
+                let promo = self.replicas[ix].iter().copied().filter(|&s| s != dead).min();
+                match promo {
+                    Some(s) => {
+                        self.primary[ix] = s;
+                        self.replicas[ix].retain(|&r| r != s && r != dead);
+                        rep.promoted.push((l, e, s));
+                    }
+                    None if hosted(l, e) => {
+                        // uncovered live expert: leave it pinned where it
+                        // was (still a well-formed placement) and report
+                        self.replicas[ix].clear();
+                        rep.orphaned.push((l, e));
+                    }
+                    None => {
+                        // pruned expert: owns no weights anywhere, so any
+                        // surviving shard can nominally serve it
+                        self.replicas[ix].clear();
+                        self.primary[ix] = (0..self.n_shards).find(|&s| s != dead).unwrap_or(dead);
+                    }
+                }
+            }
+        }
+        rep
+    }
+}
+
+/// What [`Placement::fail_shard`] did: which experts were promoted onto
+/// which surviving shard, and which live experts the dead shard served
+/// alone (non-empty ⇒ the stream can no longer be completed exactly).
+#[derive(Clone, Debug)]
+pub struct FailoverReport {
+    pub dead_shard: usize,
+    /// `(layer, expert, new_primary)` per promoted replica.
+    pub promoted: Vec<(usize, usize, usize)>,
+    /// Live experts with no surviving copy.
+    pub orphaned: Vec<(usize, usize)>,
 }
 
 /// The `bytes[layer][expert]` table every placement is balanced by: the
@@ -680,5 +1001,131 @@ mod tests {
             assert_eq!(PlacementStrategy::parse(s).unwrap().name(), s);
         }
         assert!(PlacementStrategy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn fail_shard_promotes_lowest_replica_and_reports_orphans() {
+        // round-robin over 1 layer x 4 experts x 2 shards:
+        // experts 0,2 -> shard 0; experts 1,3 -> shard 1
+        let mut p = Placement::round_robin(1, 4, 2);
+        let load = vec![vec![0.9, 0.0, 0.0, 0.0]];
+        p.replicate_hottest(&load, 1); // expert 0 gains replica on shard 1
+        let rep = p.fail_shard(0, &|_, _| true);
+        assert_eq!(rep.dead_shard, 0);
+        // covered expert 0 promotes its only replica (shard 1)
+        assert_eq!(rep.promoted, vec![(0, 0, 1)]);
+        assert_eq!(p.primary_shard(0, 0), 1);
+        assert!(p.replica_shards(0, 0).is_empty());
+        // uncovered live expert 2 is orphaned but stays well-formed
+        assert_eq!(rep.orphaned, vec![(0, 2)]);
+        p.validate(None).unwrap();
+        // survivors keep their primaries
+        assert_eq!(p.primary_shard(0, 1), 1);
+        assert_eq!(p.primary_shard(0, 3), 1);
+    }
+
+    #[test]
+    fn fail_shard_repins_pruned_experts_without_orphaning() {
+        let mut p = Placement::round_robin(1, 4, 2);
+        // expert 2 (primary shard 0) is pruned: hosts no weights
+        let rep = p.fail_shard(0, &|_, e| e != 2);
+        assert_eq!(rep.orphaned, vec![(0, 0)], "only the live expert orphans");
+        assert_eq!(p.primary_shard(0, 2), 1, "pruned expert re-pins to a survivor");
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn fail_shard_strips_dead_replicas_everywhere() {
+        let mut p = Placement::round_robin(1, 4, 3);
+        let load = vec![vec![0.5, 0.5, 0.0, 0.0]];
+        p.replicate_hottest(&load, 2); // experts 0,1 replicated on all others
+        let rep = p.fail_shard(2, &|_, _| true);
+        assert!(rep.orphaned.contains(&(0, 2)), "expert 2 lived on shard 2 alone");
+        for e in [0usize, 1] {
+            assert!(!p.replica_shards(0, e).contains(&2), "expert {e} still lists shard 2");
+            assert_ne!(p.primary_shard(0, e), 2);
+        }
+        p.validate(None).unwrap();
+    }
+
+    #[test]
+    fn free_links_reduce_net_objective_to_plain_objective() {
+        let coact = block_coact(2, 8);
+        let bytes = uniform_bytes(2, 8, 512);
+        let p = Placement::greedy(&coact, &bytes, 2);
+        let free = LinkModel::zero(2);
+        assert_eq!(
+            p.search_cost_net(&coact, &bytes, &free, 256),
+            p.search_cost(&coact, &bytes)
+        );
+        assert_eq!(p.expected_transfer_time(&coact, &free, 256), 0.0);
+        // and build_net with a free model is exactly build
+        let a = Placement::build_net(
+            PlacementStrategy::Greedy,
+            &coact,
+            &bytes,
+            2,
+            &free,
+            256,
+            Duration::from_millis(5),
+            17,
+        )
+        .unwrap();
+        let b = Placement::build(
+            PlacementStrategy::Greedy,
+            &coact,
+            &bytes,
+            2,
+            Duration::from_millis(5),
+            17,
+        )
+        .unwrap();
+        for e in 0..8 {
+            assert_eq!(a.primary_shard(0, e), b.primary_shard(0, e));
+        }
+    }
+
+    #[test]
+    fn greedy_net_prefers_cheap_links_for_forced_cuts() {
+        // two coactivated experts that cannot colocate (byte cap), three
+        // shards: the 0<->2 link is cheap, 0<->1 expensive. The network-
+        // aware greedy must pay the cut over the cheap link.
+        let mut m = DistMatrix::new(2);
+        m.set(0, 1, 1.0);
+        let coact = vec![m];
+        let bytes = uniform_bytes(1, 2, 1000);
+        let cheap = crate::net::LinkSpec::wire(1.0, 1000.0);
+        let dear = crate::net::LinkSpec::wire(500.0, 1.0);
+        let mut link = LinkModel::zero(3);
+        link.set_link(0, 1, dear);
+        link.set_link(1, 0, dear);
+        link.set_link(0, 2, cheap);
+        link.set_link(2, 0, cheap);
+        let p = Placement::greedy_net(&coact, &bytes, 3, &link, 64);
+        assert_eq!(p.primary_shard(0, 0), 0);
+        assert_eq!(p.primary_shard(0, 1), 2, "cut must ride the cheap link");
+    }
+
+    #[test]
+    fn refined_net_transfer_time_never_exceeds_round_robin() {
+        let coact = block_coact(2, 8);
+        let bytes = uniform_bytes(2, 8, 512); // rr is perfectly balanced
+        let near = crate::net::LinkSpec::wire(5.0, 400.0);
+        let far = crate::net::LinkSpec::wire(50.0, 40.0);
+        let link = LinkModel::grouped(4, 2, near, far);
+        let rr = Placement::round_robin(2, 8, 4);
+        let p = Placement::refined_net(
+            &coact,
+            &bytes,
+            4,
+            &link,
+            256,
+            Duration::from_millis(20),
+            17,
+        );
+        assert_eq!(p.strategy(), PlacementStrategy::Refined);
+        let t_rr = rr.expected_transfer_time(&coact, &link, 256);
+        let t_p = p.expected_transfer_time(&coact, &link, 256);
+        assert!(t_p <= t_rr, "{t_p} > {t_rr}");
     }
 }

@@ -12,11 +12,15 @@
 //! the numerics, placement quality (refined never costs more than
 //! round-robin on coactivation fixtures) and byte accounting (per-shard
 //! residency sums to the single-engine total; replicas pay once per
-//! hosting shard) are pinned here too.
+//! hosting shard) are pinned here too, along with the failure contract:
+//! a mid-stream shard kill with full replica coverage replays the
+//! unfailed stream bit for bit, and an uncovered kill is a diagnostic,
+//! never a panic or a hang.
 
 use std::time::Duration;
 use stun::cluster::DistMatrix;
 use stun::model::{ModelConfig, ParamSet};
+use stun::net::{FaultPlan, InProcess, LinkModel, LinkSpec};
 use stun::pruning::unstructured;
 use stun::quant::QuantScheme;
 use stun::runtime::session::greedy_token;
@@ -239,4 +243,162 @@ fn replicated_experts_pay_once_per_hosting_shard() {
     let (got, got_logits) = stream(&engine, &prompt, 6);
     assert_eq!(got, want, "replication changed the decode stream");
     assert_logits_close(&got_logits, &want_logits, "replicated");
+}
+
+/// Replicate every *live* expert onto every other shard — the dead
+/// expert owns no weights and must stay replica-free.
+fn full_coverage(placement: &mut Placement, bytes: &[Vec<usize>], n_experts: usize) {
+    let load: Vec<Vec<f64>> = bytes
+        .iter()
+        .map(|row| row.iter().map(|&b| if b > 0 { 1.0 } else { 0.0 }).collect())
+        .collect();
+    placement.replicate_hottest(&load, n_experts);
+}
+
+#[test]
+fn covered_mid_stream_kill_replays_the_unfailed_stream() {
+    // satellite failure-recovery contract: with every live expert
+    // replicated on both shards, killing shard 1 between decode rounds
+    // promotes its replicas to primaries and the greedy stream finishes
+    // bit-identically to a run that never saw the fault
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    let bytes = expert_bytes_table(&ps, QuantScheme::F32);
+    let mut placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+    full_coverage(&mut placement, &bytes, cfg.n_experts);
+    let prompt: Vec<i32> = (0..10).map(|i| 2 + (i % 31)).collect();
+    let unfailed = ShardedEngine::new(&ps, &scfg(QuantScheme::F32), placement.clone()).unwrap();
+    let (want, want_logits) = stream(&unfailed, &prompt, 8);
+    let failed = ShardedEngine::with_transport(
+        &ps,
+        &scfg(QuantScheme::F32),
+        placement,
+        Box::new(InProcess),
+        Some(FaultPlan { shard: 1, round: 3 }),
+    )
+    .unwrap();
+    let (got, got_logits) = stream(&failed, &prompt, 8);
+    assert_eq!(got, want, "covered kill changed the decode stream");
+    assert_logits_close(&got_logits, &want_logits, "covered-kill");
+    assert!(failed.degraded().is_none(), "full coverage must not degrade");
+    let events = failed.take_recovery_events();
+    assert_eq!(events.len(), 1, "exactly one recovery event");
+    assert_eq!(events[0].dead_shard, 1);
+    assert!(events[0].covered(), "all of shard 1's experts had replicas");
+    assert!(events[0].promoted > 0, "promotion must have happened");
+    // after failover no primary may still point at the dead shard
+    let p = failed.placement();
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            assert_ne!(p.primary_shard(l, e), 1, "(layer {l}, expert {e}) still on dead shard");
+        }
+    }
+}
+
+#[test]
+fn uncovered_mid_stream_kill_is_a_diagnostic_not_a_hang() {
+    // no replicas anywhere: killing shard 0 orphans its live experts.
+    // The stream must stop with an actionable error — and keep
+    // returning that same error — rather than panicking or hanging.
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+    let engine = ShardedEngine::with_transport(
+        &ps,
+        &scfg(QuantScheme::F32),
+        placement,
+        Box::new(InProcess),
+        Some(FaultPlan { shard: 0, round: 2 }),
+    )
+    .unwrap();
+    let prompt: Vec<i32> = (0..10).map(|i| 2 + (i % 31)).collect();
+    let mut state = engine.new_session(1);
+    let out = engine.prefill(&mut state, 0, &prompt).unwrap();
+    let mut tok = greedy_token(out.logits.row(0));
+    let mut first_err = None;
+    for _ in 0..8 {
+        match engine.decode(&mut state, &[(0, tok)]) {
+            Ok(out) => tok = greedy_token(out.logits.row(0)),
+            Err(e) => {
+                first_err = Some(e.to_string());
+                break;
+            }
+        }
+    }
+    let msg = first_err.expect("uncovered kill must surface an error mid-stream");
+    assert!(msg.contains("degraded"), "diagnostic lacks mode: {msg}");
+    assert!(msg.contains("shard 0"), "diagnostic lacks the dead shard: {msg}");
+    assert!(msg.contains("--replicate"), "diagnostic lacks the remedy: {msg}");
+    // degraded mode is sticky: the next round repeats the same diagnostic
+    let again = engine
+        .decode(&mut state, &[(0, tok)])
+        .err()
+        .expect("degraded mode must persist")
+        .to_string();
+    assert_eq!(again, msg, "degraded diagnostic drifted between rounds");
+    let events = engine.take_recovery_events();
+    assert_eq!(events.len(), 1);
+    assert!(!events[0].covered(), "uncovered kill must report orphans");
+}
+
+#[test]
+fn network_aware_refinement_beats_round_robin_under_nonuniform_links() {
+    // acceptance criterion: under a nonuniform link model the
+    // network-aware refined placement achieves strictly lower expected
+    // transfer time than round-robin on the separable block fixture —
+    // here the two blocks split cleanly, so refined pays nothing at all
+    let coact = block_coact(2, 8);
+    let bytes = vec![vec![1000usize; 8]; 2];
+    let mut link = LinkModel::zero(2);
+    link.set_link(0, 1, LinkSpec::wire(50.0, 10.0));
+    link.set_link(1, 0, LinkSpec::wire(200.0, 2.5));
+    let msg_bytes = 4096u64;
+    let rr = Placement::round_robin(2, 8, 2);
+    let refined = Placement::build_net(
+        PlacementStrategy::Refined,
+        &coact,
+        &bytes,
+        2,
+        &link,
+        msg_bytes,
+        Duration::from_millis(30),
+        17,
+    )
+    .unwrap();
+    let t_rr = rr.expected_transfer_time(&coact, &link, msg_bytes);
+    let t_refined = refined.expected_transfer_time(&coact, &link, msg_bytes);
+    assert!(t_rr > 0.0, "round-robin must pay for cross-block coactivation");
+    assert!(
+        t_refined <= t_rr,
+        "refined placement transfers slower than round-robin: {t_refined} vs {t_rr}"
+    );
+    assert_eq!(t_refined, 0.0, "separable blocks must refine to zero transfer");
+}
+
+#[test]
+fn transfer_meter_counts_activation_bytes_without_spending_time() {
+    // structural byte accounting on the serving path: every cross-shard
+    // expert activation moves one d_model-float row each way, so the
+    // metered total is a whole multiple of 2 * d_model * 4 bytes — and
+    // the in-process transport never advances the virtual clock
+    let ps = serving_model();
+    let cfg = ps.config.clone();
+    let placement = Placement::round_robin(cfg.n_layers, cfg.n_experts, 2);
+    let engine = ShardedEngine::new(&ps, &scfg(QuantScheme::F32), placement).unwrap();
+    let prompt: Vec<i32> = (0..10).map(|i| 2 + (i % 31)).collect();
+    let _ = stream(&engine, &prompt, 6);
+    let meter = engine.net_meter();
+    assert!(meter.total_bytes() > 0, "2-shard round-robin serving must cross shards");
+    let quantum = 2 * cfg.d_model as u64 * 4;
+    assert_eq!(
+        meter.total_bytes() % quantum,
+        0,
+        "transfer bytes are not a multiple of one round-trip activation row"
+    );
+    assert_eq!(meter.virtual_time, Duration::ZERO, "in-process transport must be free");
+    assert!(meter.layers_metered > 0);
+    for lane in meter.active_lanes() {
+        assert_ne!(lane.from, lane.to, "diagonal lane metered");
+        assert!(lane.messages > 0 && lane.bytes > 0);
+    }
 }
